@@ -1,0 +1,114 @@
+//! End-to-end driver: the full three-layer system on a real small
+//! workload.
+//!
+//! This example proves the layers compose:
+//!   L1/L2 — the Phase-1 analytical sweep authored in JAX/Pallas,
+//!           AOT-compiled to `artifacts/sweep.hlo.txt` (`make artifacts`),
+//!   runtime — loaded and executed here through the PJRT C API,
+//!   L3   — the rust coordinator generates candidates, ranks them through
+//!          the artifact, DES-verifies the winners, applies
+//!          reliability-aware sizing, and sweeps growth headroom.
+//!
+//! Run:  make artifacts && cargo run --release --example capacity_plan_e2e
+//!
+//! Falls back to the native evaluator (with a warning) if artifacts are
+//! missing, so the example always runs.
+
+use fleet_sim::gpu::catalog::GpuCatalog;
+use fleet_sim::optimizer::analytic::{NativeSweep, SweepEval};
+use fleet_sim::optimizer::planner::FleetOptimizer;
+use fleet_sim::optimizer::reliability::NodeAvail;
+use fleet_sim::optimizer::whatif::WhatIfSweep;
+use fleet_sim::runtime::sweep::AotSweep;
+use fleet_sim::util::table::{dollars, millis, Table};
+use fleet_sim::workload::spec::{BuiltinTrace, WorkloadSpec};
+
+fn main() -> anyhow::Result<()> {
+    let workload = WorkloadSpec::builtin(BuiltinTrace::Azure, 100.0);
+    let slo = 500.0;
+    println!(
+        "== inference-fleet-sim end-to-end ==\nworkload: {} (λ = {} req/s, \
+         prompt fraction {:.2}, max ctx {} tokens), SLO: P99 TTFT <= {slo} ms\n",
+        workload.name,
+        workload.lambda_rps,
+        workload.input_fraction,
+        workload.cdf.max_len()
+    );
+
+    // Phase-1 evaluator: AOT artifact via PJRT if present.
+    let aot = AotSweep::load(&AotSweep::default_dir());
+    let evaluator: Box<dyn SweepEval> = match aot {
+        Ok(a) => {
+            println!(
+                "Phase-1 backend: AOT JAX/Pallas artifact ({}) on PJRT \
+                 platform '{}'",
+                a.artifact_path.display(),
+                a.platform()
+            );
+            Box::new(a)
+        }
+        Err(e) => {
+            eprintln!(
+                "WARNING: artifacts missing ({e}); falling back to the \
+                 native evaluator. Run `make artifacts` for the full \
+                 three-layer path."
+            );
+            Box::new(NativeSweep)
+        }
+    };
+
+    let mut opt = FleetOptimizer::new(GpuCatalog::standard(), slo);
+    opt.gen.allow_mixed = true;
+    opt.node_avail = NodeAvail::hard_failure();
+    opt.des.n_requests = 15_000;
+
+    let t0 = std::time::Instant::now();
+    let plan = opt.plan_with(&workload, evaluator.as_ref())?;
+    let elapsed = t0.elapsed();
+
+    println!(
+        "\nPhase 1 [{}]: {} candidates evaluated, {} analytically feasible.",
+        plan.backend, plan.n_candidates, plan.n_phase1_feasible
+    );
+    println!("Phase 2 [DES]: verified the top {} by cost:\n",
+             plan.verified.len());
+    let mut t = Table::new(&["Candidate", "$/yr", "DES P99 TTFT", "verdict"]);
+    for e in &plan.verified {
+        let v = e.verification.as_ref().unwrap();
+        t.row(&[
+            e.candidate.label(),
+            dollars(e.analytic.cost_yr),
+            millis(v.p99_ttft_ms),
+            if v.passed { "pass".into() } else { "fail".into() },
+        ]);
+    }
+    println!("{}", t.render());
+
+    let chosen = plan
+        .chosen
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("no feasible configuration"))?;
+    println!(
+        "\nChosen: {} at {} per year.",
+        chosen.candidate.label(),
+        dollars(chosen.analytic.cost_yr)
+    );
+    println!(
+        "Reliability-aware production sizing (hard-failure node_avail = \
+         {:.4}): {} short + {} long GPUs.",
+        opt.node_avail.a, plan.production_n_s, plan.production_n_l
+    );
+
+    // Growth headroom for the chosen GPU type.
+    let sweep = WhatIfSweep::new(GpuCatalog::standard(), slo)
+        .for_gpu(&chosen.candidate.gpu_s);
+    let headroom = sweep.headroom(&workload, &chosen.candidate,
+                                  workload.lambda_rps, 2_000.0);
+    println!(
+        "Headroom: this fleet holds until λ ≈ {headroom:.0} req/s — \
+         provision more before then."
+    );
+    println!("\n[total planning time {:.2} s, {} DES-verified candidates]",
+             elapsed.as_secs_f64(), plan.verified.len());
+    Ok(())
+}

@@ -1,0 +1,44 @@
+//! Disaggregated prefill/decode planning (Puzzle 7, §4.7): sweep the
+//! (prefill GPU, decode GPU) pairings on Azure at 100 req/s, verify the
+//! winner with the two-stage DES.
+//!
+//!     cargo run --release --example disagg_planner
+
+use fleet_sim::gpu::catalog::GpuCatalog;
+use fleet_sim::optimizer::disagg::{simulate_disagg, DisaggFleetOptimizer};
+use fleet_sim::workload::spec::{BuiltinTrace, WorkloadSpec};
+
+fn main() {
+    let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 100.0);
+    let o = DisaggFleetOptimizer::new(GpuCatalog::standard(), 500.0, 100.0);
+    println!("Disaggregated configs (TTFT SLO 500 ms, TPOT SLO 100 ms):");
+    for (cfg, a) in o.sweep(&w) {
+        let (des_ttft, des_e2e, occ) = simulate_disagg(&w, &cfg, 10_000, 42);
+        println!(
+            "  {:28} ${:>6.0}K/yr  TTFT {:>4.0} ms (DES {:>4.0}) TPOT \
+             {:>3.0} ms  decode occ {:>3.0}%  {}",
+            cfg.label(),
+            a.cost_yr / 1e3,
+            a.ttft99_ms,
+            des_ttft,
+            a.tpot_ms,
+            occ * 100.0,
+            if a.feasible { "ok" } else { "infeasible" },
+        );
+        let _ = des_e2e;
+    }
+    for name in ["A100", "H100"] {
+        let cat = GpuCatalog::standard();
+        if let Some((n, cost, ttft)) =
+            o.aggregated_baseline(&w, cat.get(name).unwrap())
+        {
+            println!(
+                "  aggregated all-{name:5}: {n} GPUs, ${:.0}K/yr, TTFT \
+                 {ttft:.0} ms",
+                cost / 1e3
+            );
+        }
+    }
+    println!("\nInsight 7: the premium GPU earns its cost in decode, not \
+              prefill.");
+}

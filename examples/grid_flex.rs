@@ -1,0 +1,36 @@
+//! Grid demand-response analysis (Puzzle 8, §4.8): how much power can a
+//! 40x H100 fleet shed before breaching its SLO?
+//!
+//!     cargo run --release --example grid_flex
+
+use fleet_sim::gpu::catalog::GpuCatalog;
+use fleet_sim::optimizer::gridflex::{grid_flex_analysis, GridFlexConfig};
+use fleet_sim::workload::spec::{BuiltinTrace, WorkloadSpec};
+
+fn main() {
+    let gpu = GpuCatalog::standard().get("H100").unwrap().clone();
+    let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 200.0);
+    let cfg = GridFlexConfig::default();
+    println!(
+        "Grid flexibility, {} H100s at λ = {} req/s (SLO {} ms):",
+        cfg.n_gpus, w.lambda_rps, cfg.slo_ms
+    );
+    println!("{:>5} {:>6} {:>7} {:>9} {:>11} {:>9} {:>10}  verdicts",
+             "flex", "n_max", "W/GPU", "fleet kW", "P99 anal.", "P99 DES",
+             "P99 event");
+    for r in grid_flex_analysis(&w, &gpu, &cfg) {
+        println!(
+            "{:>4.0}% {:>6} {:>6.0}W {:>8.1} {:>10.1} {:>9.0} {:>10.0}  \
+             steady:{} event:{}",
+            r.flex * 100.0,
+            r.n_max,
+            r.w_per_gpu,
+            r.fleet_kw,
+            r.p99_analytic_ms,
+            r.p99_des_ms,
+            r.p99_event_ms,
+            if r.steady_ok { "ok" } else { "NO" },
+            if r.event_ok { "ok" } else { "NO" },
+        );
+    }
+}

@@ -1,0 +1,24 @@
+//! Quickstart: plan a minimum-cost fleet for the Azure trace at
+//! 100 req/s with a 500 ms P99 TTFT SLO.
+//!
+//!     cargo run --release --example quickstart
+
+use fleet_sim::prelude::*;
+
+fn main() {
+    let workload = WorkloadSpec::builtin(BuiltinTrace::Azure, 100.0);
+    let optimizer = FleetOptimizer::new(GpuCatalog::standard(), 500.0);
+    let plan = optimizer.plan(&workload);
+    println!("{}", plan.summary());
+    if let Some(chosen) = &plan.chosen {
+        let v = chosen.verification.as_ref().unwrap();
+        println!(
+            "\nPhase 1 ranked {} candidates ({} feasible); the winner was \
+             verified by DES at P99 TTFT = {:.0} ms (short pool {:.0} ms).",
+            plan.n_candidates,
+            plan.n_phase1_feasible,
+            v.p99_ttft_ms,
+            v.p99_ttft_short_ms,
+        );
+    }
+}

@@ -1,0 +1,22 @@
+//! Regenerate every paper case study (Tables 1-9 of §4) plus the §3.2
+//! model-fidelity table. This is the driver behind EXPERIMENTS.md.
+//!
+//!     cargo run --release --example reproduce_all [-- --fast]
+
+use fleet_sim::gpu::catalog::GpuCatalog;
+use fleet_sim::report::fidelity::fidelity_table;
+use fleet_sim::scenarios::{self, ScenarioOpts};
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let opts = if fast { ScenarioOpts::fast() } else { ScenarioOpts::default() };
+    let t0 = std::time::Instant::now();
+    for report in scenarios::run_all(&opts) {
+        println!("{}", report.render());
+    }
+    let gpu = GpuCatalog::standard().get("H100").unwrap().clone();
+    println!("=== Model fidelity (paper §3.2) ===");
+    println!("{}", fidelity_table(&gpu, opts.n_requests).render());
+    eprintln!("[reproduce_all completed in {:.1} s]",
+              t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,69 @@
+"""AOT compile path: lower the L2 sweep to HLO text for the rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+bundled XLA (xla_extension 0.5.1) rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out ../artifacts/sweep.hlo.txt
+Also writes sweep.meta.json next to it (static shapes + field order) so the
+rust side can validate its packing against the artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from jax._src.lib import xla_client as xc
+
+from .model import (CANDIDATE_FIELDS, K_BINS, N_CAND, OUTPUT_COLUMNS,
+                    lower_sweep)
+from .kernels.ref import C_MAX
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def build(out_path: str, n: int = N_CAND, k: int = K_BINS) -> dict:
+    lowered = lower_sweep(n=n, k=k, interpret=True)
+    text = to_hlo_text(lowered)
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        f.write(text)
+    meta = {
+        "n_cand": n,
+        "k_bins": k,
+        "c_max": C_MAX,
+        "candidate_fields": list(CANDIDATE_FIELDS),
+        "output_columns": list(OUTPUT_COLUMNS),
+        "hlo_bytes": len(text),
+    }
+    meta_path = os.path.splitext(out_path)[0]
+    meta_path = meta_path[:-4] if meta_path.endswith(".hlo") else meta_path
+    meta_path += ".meta.json"
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/sweep.hlo.txt")
+    ap.add_argument("--n-cand", type=int, default=N_CAND)
+    ap.add_argument("--k-bins", type=int, default=K_BINS)
+    args = ap.parse_args()
+    meta = build(args.out, n=args.n_cand, k=args.k_bins)
+    print(f"wrote {meta['hlo_bytes']} chars to {args.out} "
+          f"(N={meta['n_cand']}, K={meta['k_bins']})")
+
+
+if __name__ == "__main__":
+    main()

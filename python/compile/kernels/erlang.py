@@ -1,0 +1,81 @@
+"""L1 Pallas kernel: batched Erlang-C waiting probability (paper Eq. 1).
+
+The Phase-1 analytical sweep evaluates Erlang-C for every candidate fleet
+configuration. This kernel vectorizes the numerically stable Erlang-B
+recurrence across a tile of candidates (lane dimension) and runs the
+k = 1..C_MAX recurrence as the sequential dimension:
+
+    B_0 = 1,   B_k = a B_{k-1} / (k + a B_{k-1}),   a = c * rho
+    C(c, rho) = B_c / (1 - rho (1 - B_c))
+
+Each lane freezes its output once k reaches its own server count c, so one
+fixed-length loop serves the whole batch.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): candidates live in the
+128-wide lane dimension of the VPU; the recurrence is the sequential axis.
+A tile of TILE=256 f32 candidates uses < 8 KB of VMEM — the kernel is
+compute-bound on the VPU, which is the right place for it (no MXU work
+here; the moment reductions in moments.py are the MXU-shaped half).
+
+On CPU we lower with interpret=True (Mosaic custom-calls cannot execute on
+the CPU PJRT plugin) so the kernel folds into plain HLO.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import C_MAX
+
+TILE = 256
+
+
+def _erlang_kernel(rho_ref, c_ref, out_ref, *, c_max: int):
+    rho = rho_ref[...]
+    c = c_ref[...]
+    a = rho * c
+
+    def body(k, carry):
+        b, out = carry
+        kf = k.astype(jnp.float32)
+        b = a * b / (kf + a * b)
+        out = jnp.where(kf == c, b, out)
+        return b, out
+
+    b0 = jnp.ones_like(a)
+    _, b_at_c = jax.lax.fori_loop(1, c_max + 1, body, (b0, b0))
+
+    denom = 1.0 - rho * (1.0 - b_at_c)
+    cc = jnp.where(denom > 0, b_at_c / jnp.maximum(denom, 1e-30), 1.0)
+    cc = jnp.where(rho < 1.0, cc, 1.0)
+    out_ref[...] = jnp.clip(cc, 0.0, 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("c_max", "interpret"))
+def erlang_c(rho, c, c_max: int = C_MAX, interpret: bool = True):
+    """Batched Erlang-C C(c, rho) over 1-D arrays of candidates.
+
+    rho: [N] per-server utilization; c: [N] server counts (float-typed
+    integers, clamped to c_max by the caller). Unstable lanes (rho >= 1)
+    return 1.0. N must be a multiple of TILE (the L2 model pads).
+    """
+    rho = jnp.asarray(rho, jnp.float32)
+    c = jnp.asarray(c, jnp.float32)
+    (n,) = rho.shape
+    assert n % TILE == 0, f"N={n} must be a multiple of TILE={TILE}"
+    grid = (n // TILE,)
+    return pl.pallas_call(
+        functools.partial(_erlang_kernel, c_max=c_max),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        interpret=interpret,
+    )(rho, c)

@@ -1,0 +1,119 @@
+"""L1 Pallas kernel: per-candidate pool iteration moments + P99 lengths.
+
+Phase-1 step 2 of the paper (§3.1): for each candidate split threshold
+B_short, integrate the per-request slot-hold iteration count (Eq. 4
+numerator) over the workload CDF restricted to each pool's length range,
+producing
+
+    alpha_s            traffic fraction routed short
+    E[I], E[I^2]       conditional iteration-count moments per pool
+    p99_len_{s,l}      conditional 99th-pct token budget per pool
+                       (feeds the T_prefill term of Eq. 5)
+
+Iteration counts (not service times) are the right kernel output: the L2
+model converts them to service times at the pool's *equilibrium*
+concurrency (Little's law on the linear t_iter), which depends on lambda
+and the pool's own moments — a scalar epilogue, not a per-bin integral.
+
+The kernel tiles candidates (TILE per block) and keeps the full K-bin
+histogram resident per block; the inner products are (TILE x K) masked
+weighted reductions.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the (TILE x K) working set at
+TILE=128, K=256 is 128 KB of f32 — comfortably VMEM-resident; the weighted
+reductions are contractions over K that the MXU executes as masked matmuls
+(weights-as-diagonal trick), while the ceil/where preludes run on the VPU.
+On CPU we lower with interpret=True so everything folds into plain HLO.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 128
+BIG = 3.0e7  # sentinel larger than any token budget (300K max in traces)
+
+
+def _moments_kernel(hist_p_ref, hist_len_ref, b_ref, frac_ref,
+                    chunk_s_ref, chunk_l_ref,
+                    alpha_ref, i1_s_ref, i2_s_ref, i1_l_ref, i2_l_ref,
+                    p99s_ref, p99l_ref):
+    hist_p = hist_p_ref[...][None, :]      # [1,K]
+    hist_len = hist_len_ref[...][None, :]  # [1,K]
+    b = b_ref[...][:, None]                # [T,1]
+    frac = frac_ref[...][:, None]          # [T,1] input fraction
+    chunk_s = chunk_s_ref[...][:, None]
+    chunk_l = chunk_l_ref[...][:, None]
+
+    mask_s = (hist_len <= b).astype(jnp.float32)   # [T,K]
+    mask_l = 1.0 - mask_s
+
+    l_in = jnp.ceil(hist_len * frac)
+    l_out = jnp.maximum(hist_len - l_in, 1.0)
+    iters_s = jnp.ceil(l_in / chunk_s) + l_out
+    iters_l = jnp.ceil(l_in / chunk_l) + l_out
+
+    eps = 1e-12
+    w_s = hist_p * mask_s
+    w_l = hist_p * mask_l
+    alpha_s = jnp.sum(w_s, axis=1)
+    alpha_l = jnp.sum(w_l, axis=1)
+
+    i1_s = jnp.sum(w_s * iters_s, axis=1) / jnp.maximum(alpha_s, eps)
+    i2_s = jnp.sum(w_s * iters_s * iters_s, axis=1) / jnp.maximum(alpha_s, eps)
+    i1_l = jnp.sum(w_l * iters_l, axis=1) / jnp.maximum(alpha_l, eps)
+    i2_l = jnp.sum(w_l * iters_l * iters_l, axis=1) / jnp.maximum(alpha_l, eps)
+
+    # Conditional P99 token budget per pool: first bin whose pool-local
+    # cumulative probability reaches 0.99 * alpha.
+    cum_s = jnp.cumsum(w_s, axis=1)
+    cum_l = jnp.cumsum(w_l, axis=1)
+    tgt_s = (0.99 * alpha_s)[:, None]
+    tgt_l = (0.99 * alpha_l)[:, None]
+    cand_s = jnp.where((cum_s >= tgt_s) & (mask_s > 0), hist_len, BIG)
+    cand_l = jnp.where((cum_l >= tgt_l) & (mask_l > 0), hist_len, BIG)
+    p99_s = jnp.min(cand_s, axis=1)
+    p99_l = jnp.min(cand_l, axis=1)
+    # Empty pools report 0 so downstream TTFT terms vanish.
+    p99_s = jnp.where(alpha_s > eps, p99_s, 0.0)
+    p99_l = jnp.where(alpha_l > eps, p99_l, 0.0)
+
+    alpha_ref[...] = alpha_s
+    i1_s_ref[...] = i1_s
+    i2_s_ref[...] = i2_s
+    i1_l_ref[...] = i1_l
+    i2_l_ref[...] = i2_l
+    p99s_ref[...] = p99_s
+    p99l_ref[...] = p99_l
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pool_moments(hist_p, hist_len, b_short, input_frac, chunk_s, chunk_l,
+                 interpret: bool = True):
+    """Batched pool iteration moments. Candidate args are [N] f32
+    (N % TILE == 0); hist_p/hist_len are [K] f32. Returns a tuple of seven
+    [N] arrays: (alpha_s, i1_s, i2_s, i1_l, i2_l, p99_len_s, p99_len_l).
+    """
+    hist_p = jnp.asarray(hist_p, jnp.float32)
+    hist_len = jnp.asarray(hist_len, jnp.float32)
+    args = [jnp.asarray(a, jnp.float32) for a in
+            (b_short, input_frac, chunk_s, chunk_l)]
+    (n,) = args[0].shape
+    (k,) = hist_p.shape
+    assert n % TILE == 0, f"N={n} must be a multiple of TILE={TILE}"
+    grid = (n // TILE,)
+    hist_spec = pl.BlockSpec((k,), lambda i: (0,))
+    cand_spec = pl.BlockSpec((TILE,), lambda i: (i,))
+    out = jax.ShapeDtypeStruct((n,), jnp.float32)
+    return pl.pallas_call(
+        _moments_kernel,
+        out_shape=(out,) * 7,
+        grid=grid,
+        in_specs=[hist_spec, hist_spec] + [cand_spec] * 4,
+        out_specs=(cand_spec,) * 7,
+        interpret=interpret,
+    )(hist_p, hist_len, *args)

@@ -1,0 +1,157 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its `ref_*` counterpart to float32 tolerance under pytest +
+hypothesis sweeps (python/tests/).
+
+The two kernels implement the numeric hot loop of the Phase-1 analytical
+sweep (paper §3.1):
+
+* ``ref_erlang_c`` — Erlang-C waiting probability C(c, rho) (paper Eq. 1)
+  for a batch of candidate pools, computed with the numerically stable
+  Erlang-B recurrence:
+
+      B_0 = 1,   B_k = a * B_{k-1} / (k + a * B_{k-1}),   a = c * rho
+      C(c, rho) = B_c / (1 - rho * (1 - B_c))
+
+  The recurrence runs a fixed C_MAX iterations with a mask that freezes the
+  value once k == c, so the whole batch shares one loop (SIMD/VPU friendly —
+  this is what the Pallas kernel vectorizes over lanes).
+
+* ``ref_pool_moments`` — per-candidate service-time moments of the two pools
+  induced by a split threshold B_short over a discretized token-length
+  histogram (paper §3.1 step 2): traffic fraction alpha_s, E[S] and E[S^2]
+  restricted to each pool, where the per-request slot-hold time follows
+  Eq. 4 of the paper.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Maximum server count supported by the fixed-length Erlang-B recurrence.
+# Fleet sizes above this are clamped (the planner never sweeps beyond it).
+C_MAX = 512
+
+
+def ref_erlang_b(a, c, c_max: int = C_MAX):
+    """Erlang-B blocking probability B(c, a) in log space.
+
+    Deliberately a *different algorithm* from the Pallas kernel (which uses
+    the Erlang-B recurrence): here we evaluate the closed form
+
+        B(c, a) = (a^c / c!) / sum_{k=0..c} a^k / k!
+
+    via log-space terms log t_k = k log a - lgamma(k+1) and a masked
+    logsumexp over k = 0..c_max, so kernel-vs-ref agreement genuinely
+    cross-checks two independent derivations.
+
+    a: offered load (= c * rho); c: server counts (float-typed integers).
+    """
+    a = jnp.asarray(a, jnp.float32)
+    c = jnp.asarray(c, jnp.float32)
+    shape = jnp.broadcast_shapes(a.shape, c.shape)
+    a = jnp.broadcast_to(a, shape).reshape(-1)[:, None]       # [N,1]
+    c_col = jnp.broadcast_to(c, shape).reshape(-1)[:, None]   # [N,1]
+    k = jnp.arange(c_max + 1, dtype=jnp.float32)[None, :]     # [1,K]
+    log_a = jnp.log(jnp.maximum(a, 1e-30))
+    log_t = k * log_a - _gammaln(k + 1.0)                     # [N,K]
+    log_t = jnp.where(k <= c_col, log_t, -jnp.inf)
+    m = jnp.max(log_t, axis=1, keepdims=True)
+    log_den = m[:, 0] + jnp.log(jnp.sum(jnp.exp(log_t - m), axis=1))
+    log_num = (c_col[:, 0]) * log_a[:, 0] - _gammaln(c_col[:, 0] + 1.0)
+    b = jnp.exp(log_num - log_den)
+    return jnp.asarray(b.reshape(shape), jnp.float32)
+
+
+def _gammaln(x):
+    from jax.scipy.special import gammaln
+    return gammaln(x)
+
+
+def ref_erlang_c(rho, c, c_max: int = C_MAX):
+    """Erlang-C waiting probability C(c, rho) (paper Eq. 1).
+
+    rho: per-server utilization; c: server counts. Returns 1.0 for
+    unstable lanes (rho >= 1) — the planner treats that as an automatic
+    SLO failure.
+    """
+    rho = jnp.asarray(rho, jnp.float32)
+    c = jnp.asarray(c, jnp.float32)
+    a = rho * c
+    b = ref_erlang_b(a, c, c_max)
+    denom = 1.0 - rho * (1.0 - b)
+    cc = jnp.where(denom > 0, b / jnp.maximum(denom, 1e-30), 1.0)
+    cc = jnp.where(rho < 1.0, cc, 1.0)
+    return jnp.clip(cc, 0.0, 1.0)
+
+
+def ref_slot_hold_iters(lengths, input_frac, chunk):
+    """Iterations a request of total token budget L occupies a KV slot.
+
+    iters(L) = ceil(L_in / C_chunk) + L_out,   L_in = input_frac * L,
+    L_out = L - L_in (at least 1)  — paper Eq. 4 numerator.
+    """
+    l_in = jnp.ceil(lengths * input_frac)
+    l_out = jnp.maximum(lengths - l_in, 1.0)
+    return jnp.ceil(l_in / chunk) + l_out
+
+
+def ref_pool_moments(hist_p, hist_len, b_short, input_frac, chunk_s, chunk_l):
+    """Iteration moments for both pools of each candidate (§3.1 step 2).
+
+    Args (all jnp arrays):
+      hist_p:   [K] bin probabilities (sum to 1)
+      hist_len: [K] bin centers — total token budget per request
+      b_short:  [N] candidate split thresholds
+      input_frac: scalar or [N] — fraction of the budget that is prompt
+      chunk_s/chunk_l: [N] prefill chunk size of the GPU type in each pool
+
+    Returns dict of [N] arrays: alpha_s, i1_s, i2_s, i1_l, i2_l (mean and
+    second moment of the slot-hold iteration count, Eq. 4 numerator,
+    conditioned on the pool) plus p99_len_{s,l}.
+    """
+    hist_p = jnp.asarray(hist_p, jnp.float32)[None, :]      # [1,K]
+    hist_len = jnp.asarray(hist_len, jnp.float32)[None, :]  # [1,K]
+    b = jnp.asarray(b_short, jnp.float32)[:, None]          # [N,1]
+    # input_frac may be a scalar or a per-candidate [N] array.
+    frac = jnp.asarray(input_frac, jnp.float32).reshape(-1)[:, None]
+
+    mask_s = (hist_len <= b).astype(jnp.float32)            # [N,K]
+    mask_l = 1.0 - mask_s
+
+    iters_s = ref_slot_hold_iters(hist_len, frac, chunk_s[:, None])
+    iters_l = ref_slot_hold_iters(hist_len, frac, chunk_l[:, None])
+
+    alpha_s = jnp.sum(hist_p * mask_s, axis=1)
+    alpha_l = jnp.sum(hist_p * mask_l, axis=1)  # exact-zero for empty pools
+    eps = 1e-12
+
+    def cond_moments(s, mask, alpha):
+        w = hist_p * mask
+        m1 = jnp.sum(w * s, axis=1) / jnp.maximum(alpha, eps)
+        m2 = jnp.sum(w * s * s, axis=1) / jnp.maximum(alpha, eps)
+        return m1, m2
+
+    es_s, es2_s = cond_moments(iters_s, mask_s, alpha_s)
+    es_l, es2_l = cond_moments(iters_l, mask_l, alpha_l)
+
+    # Conditional P99 token budget per pool (independent formulation from
+    # the kernel: searchsorted over the pool-local CDF).
+    big = 3.0e7
+    cum_s = jnp.cumsum(hist_p * mask_s, axis=1)
+    cum_l = jnp.cumsum(hist_p * mask_l, axis=1)
+    tgt_s = (0.99 * alpha_s)[:, None]
+    tgt_l = (0.99 * alpha_l)[:, None]
+    p99_s = jnp.min(jnp.where((cum_s >= tgt_s) & (mask_s > 0), hist_len, big),
+                    axis=1)
+    p99_l = jnp.min(jnp.where((cum_l >= tgt_l) & (mask_l > 0), hist_len, big),
+                    axis=1)
+    p99_s = jnp.where(alpha_s > eps, p99_s, 0.0)
+    p99_l = jnp.where(alpha_l > eps, p99_l, 0.0)
+    return {
+        "alpha_s": alpha_s,
+        "i1_s": es_s, "i2_s": es2_s,
+        "i1_l": es_l, "i2_l": es2_l,
+        "p99_len_s": p99_s, "p99_len_l": p99_l,
+    }

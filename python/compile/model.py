@@ -1,0 +1,162 @@
+"""L2: the Phase-1 analytical sweep as one JAX computation (paper §3.1).
+
+``sweep_eval`` evaluates every candidate fleet configuration in a single
+batched pass:
+
+  1. pool iteration moments from the workload histogram (L1 moments kernel),
+  2. equilibrium concurrency per pool (Little's law on the linear t_iter —
+     the "recalibrated service rate" of paper §4.8),
+  3. Erlang-C waiting probability per pool (L1 erlang kernel),
+  4. Kimura two-moment P99 wait (paper Eq. 2),
+  5. TTFT decomposition (paper Eq. 5) with the conditional-P99 prefill term,
+  6. utilization cap rho <= RHO_MAX, cost, and feasibility.
+
+This function is AOT-lowered once by aot.py to artifacts/sweep.hlo.txt and
+executed from the rust coordinator (rust/src/runtime/) via PJRT — python is
+never on the planning path. It is numerically mirrored by the pure-rust
+evaluator in rust/src/optimizer/analytic.rs; rust/tests/runtime_parity.rs
+asserts the two agree.
+
+Candidate encoding (all f32, shape [N]):
+  b_short     split threshold in tokens (>= max token -> single pool)
+  n_s, n_l    GPU counts per pool (n_l == 0 -> homogeneous candidate)
+  chunk_s/l   prefill chunk size of the pool's GPU type
+  nmax_s/l    effective KV-slot count (min(n_max(ctx), max_num_seqs))
+  w_s/l       GPU baseline compute W (ms)
+  h_s/l       GPU per-slot cost H (ms/slot)
+  cost_s/l    $/yr per GPU of the pool's type
+  input_frac  prompt fraction of the token budget
+  lam         total arrival rate in req/ms
+  slo         P99 TTFT SLO in ms
+
+Output (f32 [N, 8]) columns:
+  0 rho_s   1 rho_l   2 ttft99_s   3 ttft99_l
+  4 w99_s   5 w99_l   6 cost_yr    7 feasible (1.0 / 0.0)
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.erlang import erlang_c
+from .kernels.moments import pool_moments
+from .kernels.ref import C_MAX
+
+RHO_MAX = 0.85       # queueing-stability utilization cap (paper §3.1)
+LN_100 = math.log(100.0)
+
+# Static sweep shape baked into the AOT artifact. The rust side pads.
+N_CAND = 4096
+K_BINS = 256
+
+CANDIDATE_FIELDS = (
+    "b_short", "n_s", "n_l", "chunk_s", "chunk_l", "nmax_s", "nmax_l",
+    "w_s", "h_s", "w_l", "h_l", "cost_s", "cost_l", "input_frac", "lam",
+    "slo",
+)
+OUTPUT_COLUMNS = (
+    "rho_s", "rho_l", "ttft99_s", "ttft99_l", "w99_s", "w99_l",
+    "cost_yr", "feasible",
+)
+
+
+def equilibrium_batch(w, h, n_eff, tokens_per_ms_per_gpu):
+    """Little's-law equilibrium concurrency under t_iter(n) = W + H n.
+
+    n̄ = a W / (1 - a H) clamped to [1, n_eff]; saturates at n_eff when the
+    demanded token rate a reaches the 1/H ceiling. Mirrors
+    rust queueing::mgc::equilibrium_batch.
+    """
+    a = tokens_per_ms_per_gpu
+    sat = a * h >= 1.0
+    denom = jnp.maximum(1.0 - a * h, 1e-9)
+    n_bar = jnp.clip(a * w / denom, 1.0, n_eff)
+    return jnp.where(sat, n_eff, n_bar)
+
+
+def kimura_w99(erl_c, c, es, es2_over_es1_sq, rho):
+    """Kimura two-moment M/G/c P99 queue wait (paper Eq. 2), in ms.
+
+    W99 = C(c, rho) / (c mu (1 - rho)) * (1 + Cs^2)/2 * ln(100),
+    with mu = 1 / E[S]. `es2_over_es1_sq` is E[S^2]/E[S]^2 (= 1 + Cs^2).
+    Unstable lanes (rho >= 1) return +inf.
+    """
+    eps = 1e-9
+    cs2 = jnp.maximum(es2_over_es1_sq - 1.0, 0.0)
+    c_mu = c / jnp.maximum(es, eps)
+    w = erl_c / jnp.maximum(c_mu * (1.0 - rho), eps)
+    w99 = w * (1.0 + cs2) * 0.5 * LN_100
+    return jnp.where(rho < 1.0, w99, jnp.inf)
+
+
+def _pool_eval(alpha, i1, i2, p99_len, n_eff, w, h, chunk, n_gpus,
+               input_frac, lam, empty, interpret):
+    """Evaluate one pool's rho / W99 / TTFT given its iteration moments."""
+    eps = 1e-9
+    c = jnp.clip(n_gpus, 1.0, float(C_MAX))
+    lam_pool = lam * alpha
+    a = lam_pool * i1 / c                      # demanded tokens/ms/GPU
+    n_bar = equilibrium_batch(w, h, n_eff, a)
+    t_bar = w + h * n_bar
+    es = i1 * t_bar / jnp.maximum(n_eff, 1.0)
+    rho = jnp.where(empty, 0.0, lam_pool * es / c)
+    ratio = i2 / jnp.maximum(i1 * i1, eps)     # E[S²]/E[S]² (t̄ cancels)
+    erl = erlang_c(rho, c, interpret=interpret)
+    w99 = jnp.where(empty, 0.0, kimura_w99(erl, c, es, ratio, rho))
+    l_in99 = jnp.ceil(p99_len * input_frac)
+    prefill = jnp.ceil(l_in99 / chunk) * t_bar
+    ttft = jnp.where(empty, 0.0, w99 + prefill + t_bar)
+    return rho, w99, ttft
+
+
+def sweep_eval(hist_p, hist_len, b_short, n_s, n_l, chunk_s, chunk_l,
+               nmax_s, nmax_l, w_s, h_s, w_l, h_l, cost_s, cost_l,
+               input_frac, lam, slo, interpret: bool = True):
+    """Evaluate [N] candidates against a [K]-bin workload histogram."""
+    (alpha_s, i1_s, i2_s, i1_l, i2_l, p99_s, p99_l) = pool_moments(
+        hist_p, hist_len, b_short, input_frac, chunk_s, chunk_l,
+        interpret=interpret)
+
+    alpha_l = 1.0 - alpha_s
+    empty_s = alpha_s <= 1e-9
+    empty_l = (alpha_l <= 1e-9) | (n_l < 0.5)
+
+    rho_s, w99_s, ttft_s = _pool_eval(
+        alpha_s, i1_s, i2_s, p99_s, nmax_s, w_s, h_s, chunk_s, n_s,
+        input_frac, lam, empty_s, interpret)
+    rho_l, w99_l, ttft_l = _pool_eval(
+        alpha_l, i1_l, i2_l, p99_l, nmax_l, w_l, h_l, chunk_l, n_l,
+        input_frac, lam, empty_l, interpret)
+
+    cost = n_s * cost_s + n_l * cost_l
+
+    ok_s = empty_s | ((rho_s <= RHO_MAX) & (ttft_s <= slo))
+    ok_l = empty_l | ((rho_l <= RHO_MAX) & (ttft_l <= slo))
+    # A candidate that routes traffic long but has no long pool is invalid.
+    dangling = (alpha_l > 1e-9) & (n_l < 0.5)
+    feasible = (ok_s & ok_l & ~dangling).astype(jnp.float32)
+
+    return jnp.stack(
+        [rho_s, rho_l, ttft_s, ttft_l, w99_s, w99_l, cost, feasible], axis=1)
+
+
+def sweep_eval_flat(hist, cand, interpret: bool = True):
+    """Flat-tensor entry point used for AOT lowering.
+
+    hist: [2, K]  — row 0 = bin probabilities, row 1 = bin token budgets
+    cand: [F, N]  — rows ordered per CANDIDATE_FIELDS
+    returns [N, 8] per OUTPUT_COLUMNS.
+    """
+    fields = [cand[i] for i in range(len(CANDIDATE_FIELDS))]
+    return sweep_eval(hist[0], hist[1], *fields, interpret=interpret)
+
+
+def lower_sweep(n: int = N_CAND, k: int = K_BINS, interpret: bool = True):
+    """jax.jit-lower sweep_eval_flat at the static artifact shape."""
+    hist = jax.ShapeDtypeStruct((2, k), jnp.float32)
+    cand = jax.ShapeDtypeStruct((len(CANDIDATE_FIELDS), n), jnp.float32)
+    fn = lambda h, c: (sweep_eval_flat(h, c, interpret=interpret),)
+    return jax.jit(fn).lower(hist, cand)

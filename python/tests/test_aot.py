@@ -1,0 +1,51 @@
+"""AOT artifact emission tests: HLO text round-trip prerequisites."""
+
+import json
+import os
+
+import pytest
+
+from compile.aot import build
+from compile.model import CANDIDATE_FIELDS, OUTPUT_COLUMNS
+
+
+@pytest.fixture(scope="module")
+def artifact(tmp_path_factory):
+    out = tmp_path_factory.mktemp("aot") / "sweep.hlo.txt"
+    meta = build(str(out), n=512, k=64)
+    return str(out), meta
+
+
+def test_writes_hlo_text(artifact):
+    path, meta = artifact
+    assert os.path.exists(path)
+    text = open(path).read()
+    assert text.startswith("HloModule")
+    assert meta["hlo_bytes"] == len(text)
+
+
+def test_entry_layout_matches_shapes(artifact):
+    path, _ = artifact
+    head = open(path).readline()
+    assert "f32[2,64]" in head           # histogram input
+    assert f"f32[{len(CANDIDATE_FIELDS)},512]" in head  # candidate input
+    assert "f32[512,8]" in head          # output
+
+
+def test_meta_sidecar(artifact):
+    path, meta = artifact
+    meta_path = path.replace(".hlo.txt", ".meta.json")
+    assert os.path.exists(meta_path)
+    loaded = json.load(open(meta_path))
+    assert loaded["candidate_fields"] == list(CANDIDATE_FIELDS)
+    assert loaded["output_columns"] == list(OUTPUT_COLUMNS)
+    assert loaded["n_cand"] == 512
+    assert loaded["k_bins"] == 64
+
+
+def test_no_custom_calls(artifact):
+    # interpret=True must fold the Pallas kernels into plain HLO: a Mosaic
+    # custom-call would be unloadable by the CPU PJRT client.
+    path, _ = artifact
+    text = open(path).read()
+    assert "custom-call" not in text

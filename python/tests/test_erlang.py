@@ -1,0 +1,108 @@
+"""Kernel-vs-oracle tests for the Erlang-C Pallas kernel (paper Eq. 1).
+
+The kernel uses the Erlang-B recurrence; the oracle (ref.py) uses a
+log-space closed form — agreement cross-checks two independent derivations.
+"""
+
+import math
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.erlang import erlang_c, TILE
+from compile.kernels.ref import ref_erlang_c, ref_erlang_b, C_MAX
+
+
+def _pad(a, fill):
+    n = ((len(a) + TILE - 1) // TILE) * TILE
+    return np.concatenate([a, np.full(n - len(a), fill, np.float32)])
+
+
+def kernel_erlang(rho, c):
+    rho = np.asarray(rho, np.float32)
+    c = np.asarray(c, np.float32)
+    n = len(rho)
+    out = erlang_c(jnp.array(_pad(rho, 0.5)), jnp.array(_pad(c, 1.0)))
+    return np.asarray(out)[:n]
+
+
+# ---------------------------------------------------------------- closed forms
+
+def erlang_c_closed(rho, c):
+    """Textbook Erlang-C via direct summation (float64, small c only)."""
+    a = rho * c
+    s = sum(a**k / math.factorial(k) for k in range(c))
+    top = a**c / (math.factorial(c) * (1 - rho))
+    return top / (s + top)
+
+
+@pytest.mark.parametrize("rho", [0.1, 0.3, 0.5, 0.7, 0.85, 0.95, 0.99])
+def test_mm1_equals_rho(rho):
+    # For c=1, Erlang-C reduces to P(wait) = rho exactly.
+    out = kernel_erlang([rho], [1.0])
+    assert out[0] == pytest.approx(rho, rel=1e-5)
+
+
+@pytest.mark.parametrize("c", [2, 3, 5, 10, 24, 40])
+@pytest.mark.parametrize("rho", [0.2, 0.5, 0.8, 0.95])
+def test_matches_textbook_closed_form(c, rho):
+    out = kernel_erlang([rho], [float(c)])
+    assert out[0] == pytest.approx(erlang_c_closed(rho, c), rel=1e-4, abs=1e-7)
+
+
+def test_unstable_lanes_return_one():
+    out = kernel_erlang([1.0, 1.5, 10.0], [4.0, 4.0, 4.0])
+    assert np.all(out == 1.0)
+
+
+def test_zero_load():
+    out = kernel_erlang([0.0], [8.0])
+    assert out[0] == pytest.approx(0.0, abs=1e-7)
+
+
+def test_monotone_in_rho():
+    rhos = np.linspace(0.05, 0.95, 19, dtype=np.float32)
+    out = kernel_erlang(rhos, np.full(19, 16.0, np.float32))
+    assert np.all(np.diff(out) > 0)
+
+
+def test_monotone_decreasing_in_c():
+    # At fixed rho, more servers -> lower waiting probability.
+    cs = np.array([1, 2, 4, 8, 16, 32, 64, 128, 256, 512], np.float32)
+    out = kernel_erlang(np.full(len(cs), 0.8, np.float32), cs)
+    assert np.all(np.diff(out) < 0)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    rho=st.floats(0.0, 1.2),
+    c=st.integers(1, C_MAX),
+)
+def test_hypothesis_kernel_vs_oracle(rho, c):
+    got = kernel_erlang([rho], [float(c)])[0]
+    want = float(ref_erlang_c(jnp.float32(rho), jnp.float32(c)))
+    assert got == pytest.approx(want, rel=1e-3, abs=5e-5)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    n=st.integers(1, 3),          # batches of TILE-multiples
+    seed=st.integers(0, 2**31),
+)
+def test_hypothesis_batched_shapes(n, seed):
+    rng = np.random.default_rng(seed)
+    size = n * TILE
+    rho = rng.uniform(0, 1.1, size).astype(np.float32)
+    c = rng.integers(1, C_MAX + 1, size).astype(np.float32)
+    got = np.asarray(erlang_c(jnp.array(rho), jnp.array(c)))
+    want = np.asarray(ref_erlang_c(jnp.array(rho), jnp.array(c)))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=5e-5)
+
+
+def test_erlang_b_recurrence_identity():
+    # Spot-check the oracle itself: B(1, a) = a / (1 + a).
+    for a in [0.1, 0.5, 1.0, 3.0]:
+        b = float(ref_erlang_b(jnp.float32(a), jnp.float32(1.0)))
+        assert b == pytest.approx(a / (1 + a), rel=1e-5)

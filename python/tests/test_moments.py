@@ -1,0 +1,116 @@
+"""Kernel-vs-oracle and invariant tests for the pool-moments Pallas kernel."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.moments import pool_moments, TILE
+from compile.kernels.ref import ref_pool_moments
+
+NAMES = ["alpha_s", "i1_s", "i2_s", "i1_l", "i2_l",
+         "p99_len_s", "p99_len_l"]
+
+
+def make_hist(rng, k):
+    lens = np.sort(rng.uniform(16, 65536, k)).astype(np.float32)
+    p = rng.uniform(0.05, 1.0, k).astype(np.float32)
+    p /= p.sum()
+    return p, lens
+
+
+def run_both(p, lens, b, frac, cs, cl):
+    n = len(b)
+    pad = ((n + TILE - 1) // TILE) * TILE - n
+
+    def padded(a, fill):
+        return jnp.array(np.concatenate(
+            [np.asarray(a, np.float32), np.full(pad, fill, np.float32)]))
+
+    args = [padded(b, 1.0), padded(frac, 0.5), padded(cs, 512),
+            padded(cl, 512)]
+    out = pool_moments(jnp.array(p), jnp.array(lens), *args)
+    got = {nm: np.asarray(o)[:n] for nm, o in zip(NAMES, out)}
+    ref = ref_pool_moments(p, lens, jnp.array(b, jnp.float32),
+                           jnp.array(frac, jnp.float32),
+                           jnp.array(cs, jnp.float32),
+                           jnp.array(cl, jnp.float32))
+    want = {nm: np.asarray(ref[nm])[:n] for nm in NAMES}
+    return got, want
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    seed=st.integers(0, 2**31),
+    k=st.sampled_from([16, 64, 128, 256]),
+    frac=st.floats(0.05, 0.95),
+)
+def test_hypothesis_kernel_vs_oracle(seed, k, frac):
+    rng = np.random.default_rng(seed)
+    p, lens = make_hist(rng, k)
+    n = 32
+    b = rng.choice([256, 512, 1024, 4096, 8192, 32768, 70000], n)
+    fr = np.full(n, frac, np.float32)
+    cs = rng.choice([256, 512, 1024], n).astype(np.float32)
+    cl = rng.choice([256, 512, 1024], n).astype(np.float32)
+    got, want = run_both(p, lens, b, fr, cs, cl)
+    for nm in NAMES:
+        np.testing.assert_allclose(got[nm], want[nm], rtol=1e-5, atol=1e-6,
+                                   err_msg=nm)
+
+
+def _simple_case(b_vals, k=64, seed=3, frac=0.7):
+    rng = np.random.default_rng(seed)
+    p, lens = make_hist(rng, k)
+    n = len(b_vals)
+    ones = np.ones(n, np.float32)
+    got, _ = run_both(p, lens, np.asarray(b_vals, np.float32),
+                      np.full(n, frac, np.float32),
+                      512 * ones, 1024 * ones)
+    return p, lens, got
+
+
+def test_alpha_monotone_in_threshold():
+    bs = [256, 512, 1024, 4096, 8192, 32768, 70000]
+    _, _, got = _simple_case(bs)
+    assert np.all(np.diff(got["alpha_s"]) >= 0)
+    assert got["alpha_s"][-1] == pytest.approx(1.0)
+
+
+def test_second_moment_dominates_mean_square():
+    _, _, got = _simple_case([512, 4096, 8192, 32768])
+    for side in ["s", "l"]:
+        i1 = got[f"i1_{side}"]
+        i2 = got[f"i2_{side}"]
+        mask = i1 > 0
+        assert np.all(i2[mask] >= i1[mask] ** 2 * (1 - 1e-5))
+
+
+def test_empty_long_pool_zeroed():
+    _, _, got = _simple_case([70000])
+    assert got["alpha_s"][0] == pytest.approx(1.0)
+    assert got["i1_l"][0] == 0.0
+    assert got["p99_len_l"][0] == 0.0
+
+
+def test_p99_length_bounds():
+    p, lens, got = _simple_case([4096])
+    # Short-pool P99 must lie inside the short range; long above threshold.
+    assert got["p99_len_s"][0] <= 4096
+    assert got["p99_len_l"][0] > 4096
+    assert got["p99_len_l"][0] <= lens.max()
+
+
+def test_mean_iters_match_hand_computation():
+    # Two-bin histogram with all mass short: E[S] is exactly computable.
+    p = np.array([0.75, 0.25], np.float32)
+    lens = np.array([1000.0, 2000.0], np.float32)
+    one = np.ones(1, np.float32)
+    got, _ = run_both(p, lens, np.array([4096.0], np.float32),
+                      np.array([0.5], np.float32), 512 * one, 512 * one)
+    # L=1000: L_in=500, L_out=500, iters = ceil(500/512)+500 = 501
+    # L=2000: L_in=1000, L_out=1000, iters = 2+1000 = 1002
+    want = 0.75 * 501 + 0.25 * 1002
+    assert got["i1_s"][0] == pytest.approx(want, rel=1e-6)
+    assert got["i2_s"][0] == pytest.approx(0.75 * 501**2 + 0.25 * 1002**2,
+                                           rel=1e-6)

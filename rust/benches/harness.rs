@@ -1,0 +1,52 @@
+// Shared micro-bench harness (criterion is unavailable offline).
+//
+// Each table bench (1) regenerates its paper table via the scenario
+// library and prints it — the reproduction artifact — and (2) times the
+// core computation with warmup + repeated samples, reporting
+// min/mean/p50/max like criterion's summary line.
+//
+// Used via `include!("harness.rs")` from each bench target.
+
+use std::time::Instant;
+
+pub struct BenchStats {
+    pub name: String,
+    pub samples_ms: Vec<f64>,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        let mut s = self.samples_ms.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = s.iter().sum::<f64>() / s.len() as f64;
+        format!(
+            "bench {:<40} min {:>9.3} ms  mean {:>9.3} ms  p50 {:>9.3} ms  \
+             max {:>9.3} ms  ({} samples)",
+            self.name,
+            s[0],
+            mean,
+            s[s.len() / 2],
+            s[s.len() - 1],
+            s.len()
+        )
+    }
+}
+
+/// Time `f` with one warmup call and `samples` measured calls.
+pub fn bench<F: FnMut()>(name: &str, samples: usize, mut f: F) -> BenchStats {
+    f(); // warmup
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let stats = BenchStats { name: name.to_string(), samples_ms: out };
+    println!("{}", stats.report());
+    stats
+}
+
+/// Standard banner for table-regeneration benches.
+pub fn banner(table: &str) {
+    println!("\n================ {table} ================");
+}

@@ -1,0 +1,58 @@
+//! Hot-path micro-benchmarks for the performance pass (EXPERIMENTS.md
+//! §Perf): Phase-1 sweep (native + AOT), DES event loop, Erlang kernel.
+include!("harness.rs");
+
+use fleet_sim::des::engine::{DesConfig, SimPool, Simulator};
+use fleet_sim::gpu::catalog::GpuCatalog;
+use fleet_sim::optimizer::analytic::{NativeSweep, SweepEval};
+use fleet_sim::optimizer::candidates::{generate, GenOptions};
+use fleet_sim::queueing::erlang::erlang_c;
+use fleet_sim::router::RoutingPolicy;
+use fleet_sim::runtime::sweep::AotSweep;
+use fleet_sim::workload::spec::{BuiltinTrace, WorkloadSpec};
+
+fn main() {
+    banner("Perf hot paths");
+    let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 100.0);
+    let mut opts = GenOptions::default();
+    opts.allow_mixed = true;
+    opts.headroom = 7;
+    let cands = generate(&w, &GpuCatalog::standard(), &opts);
+    println!("candidate grid: {} configurations", cands.len());
+
+    bench("phase1_native_sweep", 20, || {
+        let _ = NativeSweep.eval(&w, &cands, 500.0).unwrap();
+    });
+    match AotSweep::load(&AotSweep::default_dir()) {
+        Ok(aot) => {
+            bench("phase1_aot_pjrt_sweep", 20, || {
+                let _ = aot.eval(&w, &cands, 500.0).unwrap();
+            });
+        }
+        Err(e) => println!("phase1_aot_pjrt_sweep SKIPPED: {e}"),
+    }
+
+    let gpu = GpuCatalog::standard().get("H100").unwrap().clone();
+    bench("des_10k_requests_two_pool", 20, || {
+        let pools = vec![
+            SimPool { gpu: gpu.clone(), n_gpus: 3, ctx_budget: 4096.0,
+                      batch_cap: None },
+            SimPool { gpu: gpu.clone(), n_gpus: 4, ctx_budget: 8192.0,
+                      batch_cap: None },
+        ];
+        let sim = Simulator::new(
+            w.clone(), pools, RoutingPolicy::Length { b_short: 4096.0 },
+            DesConfig { n_requests: 10_000, ..Default::default() },
+        );
+        let _ = sim.run();
+    });
+
+    bench("erlang_c_native_4096_lanes", 50, || {
+        let mut acc = 0.0;
+        for i in 0..4096 {
+            acc += erlang_c(0.5 + (i % 45) as f64 * 0.01,
+                            1 + (i % 512));
+        }
+        std::hint::black_box(acc);
+    });
+}

@@ -1,0 +1,15 @@
+//! Table 1 (§4.1): B_short Pareto frontier. Regenerates the table and
+//! times one full threshold sweep (Phase 1 + DES verification per row).
+include!("harness.rs");
+
+use fleet_sim::scenarios::{self, ScenarioOpts};
+
+fn main() {
+    banner("Table 1 — B_short Pareto frontier");
+    let opts = ScenarioOpts::fast();
+    let report = scenarios::run(1, &opts).unwrap();
+    println!("{}", report.render());
+    bench("puzzle1_full_sweep", 3, || {
+        let _ = scenarios::run(1, &opts).unwrap();
+    });
+}

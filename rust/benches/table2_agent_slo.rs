@@ -1,0 +1,28 @@
+//! Table 2 (§4.2): agent fleet SLO analysis. Regenerates the table and
+//! times the 15K-request heavy-tail DES run.
+include!("harness.rs");
+
+use fleet_sim::des::engine::{DesConfig, SimPool, Simulator};
+use fleet_sim::gpu::catalog::GpuCatalog;
+use fleet_sim::router::RoutingPolicy;
+use fleet_sim::scenarios::{self, ScenarioOpts};
+use fleet_sim::workload::spec::{BuiltinTrace, WorkloadSpec};
+
+fn main() {
+    banner("Table 2 — agent fleet SLO analysis");
+    let opts = ScenarioOpts::fast();
+    println!("{}", scenarios::run(2, &opts).unwrap().render());
+    let gpu = GpuCatalog::standard().get("H100").unwrap().clone();
+    let w = WorkloadSpec::builtin(BuiltinTrace::Agent, 20.0);
+    let ctx = w.cdf.max_len();
+    bench("agent_des_15k_requests", 5, || {
+        let sim = Simulator::new(
+            w.clone(),
+            vec![SimPool { gpu: gpu.clone(), n_gpus: 64, ctx_budget: ctx,
+                           batch_cap: None }],
+            RoutingPolicy::Random { n_pools: 1 },
+            DesConfig { n_requests: 15_000, ..Default::default() },
+        );
+        let _ = sim.run();
+    });
+}

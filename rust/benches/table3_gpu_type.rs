@@ -1,0 +1,14 @@
+//! Table 3 (§4.3): GPU type vs layout. Regenerates the table and times
+//! the per-type minimal-fleet search.
+include!("harness.rs");
+
+use fleet_sim::scenarios::{self, puzzle3_gpu_type, ScenarioOpts};
+
+fn main() {
+    banner("Table 3 — GPU type vs layout");
+    let opts = ScenarioOpts::fast();
+    println!("{}", scenarios::run(3, &opts).unwrap().render());
+    bench("gpu_type_layout_search", 3, || {
+        let _ = puzzle3_gpu_type::evaluate(&opts);
+    });
+}

@@ -1,0 +1,22 @@
+//! Table 4 (§4.4): GPU step thresholds. Regenerates the table and times
+//! the whatif λ sweep including the headroom bisection.
+include!("harness.rs");
+
+use fleet_sim::gpu::catalog::GpuCatalog;
+use fleet_sim::optimizer::whatif::WhatIfSweep;
+use fleet_sim::scenarios::{self, ScenarioOpts};
+use fleet_sim::workload::spec::{BuiltinTrace, WorkloadSpec};
+
+fn main() {
+    banner("Table 4 — GPU step thresholds");
+    let opts = ScenarioOpts::fast();
+    println!("{}", scenarios::run(4, &opts).unwrap().render());
+    let cat = GpuCatalog::standard();
+    let h100 = cat.get("H100").unwrap().clone();
+    let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 100.0);
+    bench("whatif_lambda_sweep", 5, || {
+        let s = WhatIfSweep::new(GpuCatalog::standard(), 500.0)
+            .for_gpu(&h100);
+        let _ = s.sweep(&w, &[25.0, 100.0, 400.0]);
+    });
+}

@@ -1,0 +1,14 @@
+//! Table 5 (§4.5): router comparison. Regenerates the table and times one
+//! router's DES pass over the agent fleet.
+include!("harness.rs");
+
+use fleet_sim::scenarios::{self, puzzle5_routers, ScenarioOpts};
+
+fn main() {
+    banner("Table 5 — router comparison");
+    let opts = ScenarioOpts::fast();
+    println!("{}", scenarios::run(5, &opts).unwrap().render());
+    bench("three_router_comparison", 3, || {
+        let _ = puzzle5_routers::evaluate(&opts);
+    });
+}

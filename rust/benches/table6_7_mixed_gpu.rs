@@ -1,0 +1,15 @@
+//! Tables 6 & 7 (§4.6): mixed GPU types on Azure and LMSYS. Regenerates
+//! both tables and times the pairing sweep.
+include!("harness.rs");
+
+use fleet_sim::scenarios::{self, puzzle6_mixed, ScenarioOpts};
+use fleet_sim::workload::spec::BuiltinTrace;
+
+fn main() {
+    banner("Tables 6 & 7 — mixed GPU types");
+    let opts = ScenarioOpts::fast();
+    println!("{}", scenarios::run(6, &opts).unwrap().render());
+    bench("mixed_pairing_sweep_azure", 3, || {
+        let _ = puzzle6_mixed::evaluate(BuiltinTrace::Azure, 3072.0, &opts);
+    });
+}

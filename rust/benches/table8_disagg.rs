@@ -1,0 +1,23 @@
+//! Table 8 (§4.7): disaggregated P/D configurations. Regenerates the
+//! table and times the optimizer sweep + two-stage DES.
+include!("harness.rs");
+
+use fleet_sim::gpu::catalog::GpuCatalog;
+use fleet_sim::optimizer::disagg::{simulate_disagg, DisaggFleetOptimizer};
+use fleet_sim::scenarios::{self, ScenarioOpts};
+use fleet_sim::workload::spec::{BuiltinTrace, WorkloadSpec};
+
+fn main() {
+    banner("Table 8 — disaggregated P/D configurations");
+    let opts = ScenarioOpts::fast();
+    println!("{}", scenarios::run(7, &opts).unwrap().render());
+    let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 100.0);
+    let o = DisaggFleetOptimizer::new(GpuCatalog::standard(), 500.0, 100.0);
+    bench("disagg_sweep", 5, || {
+        let _ = o.sweep(&w);
+    });
+    let best = o.sweep(&w).into_iter().next().unwrap().0;
+    bench("disagg_two_stage_des_10k", 5, || {
+        let _ = simulate_disagg(&w, &best, 10_000, 42);
+    });
+}

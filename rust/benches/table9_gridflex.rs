@@ -1,0 +1,22 @@
+//! Table 9 (§4.8): grid flexibility curve. Regenerates the table and
+//! times the full analysis (power inversion + recalibrated M/G/c + two
+//! DES runs per flex level).
+include!("harness.rs");
+
+use fleet_sim::gpu::catalog::GpuCatalog;
+use fleet_sim::optimizer::gridflex::{grid_flex_analysis, GridFlexConfig};
+use fleet_sim::scenarios::{self, ScenarioOpts};
+use fleet_sim::workload::spec::{BuiltinTrace, WorkloadSpec};
+
+fn main() {
+    banner("Table 9 — grid flexibility curve");
+    let opts = ScenarioOpts::fast();
+    println!("{}", scenarios::run(8, &opts).unwrap().render());
+    let gpu = GpuCatalog::standard().get("H100").unwrap().clone();
+    let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 200.0);
+    let mut cfg = GridFlexConfig::default();
+    cfg.n_requests = 8_000;
+    bench("grid_flex_analysis_6_levels", 3, || {
+        let _ = grid_flex_analysis(&w, &gpu, &cfg);
+    });
+}

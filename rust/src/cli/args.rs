@@ -1,0 +1,142 @@
+//! Minimal argument parser (the `clap` crate is unavailable offline).
+//!
+//! Grammar: `fleet-sim <subcommand> [positional ...] [--key value]
+//! [--flag]`. Flags are distinguished from valued options by the
+//! subcommand's declaration.
+
+use std::collections::BTreeMap;
+
+/// Parsed invocation.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse argv (excluding argv[0]); `flag_names` lists boolean flags.
+    pub fn parse(
+        argv: &[String],
+        flag_names: &[&str],
+    ) -> anyhow::Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(sub) = it.next() {
+            args.subcommand = sub.clone();
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if flag_names.contains(&name) {
+                    args.flags.push(name.to_string());
+                } else if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?;
+                    args.options.insert(name.to_string(), v.clone());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: '{v}' is not a number")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: '{v}' is not an integer")),
+        }
+    }
+
+    pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Comma-separated f64 list.
+    pub fn get_f64_list(&self, name: &str, default: &[f64])
+        -> anyhow::Result<Vec<f64>>
+    {
+        match self.options.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--{name}: bad number '{x}'"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(
+            &sv(&["plan", "--trace", "azure", "--lambda", "100", "--fast",
+                  "3"]),
+            &["fast"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand, "plan");
+        assert_eq!(a.get("trace"), Some("azure"));
+        assert_eq!(a.get_f64("lambda", 0.0).unwrap(), 100.0);
+        assert!(a.flag("fast"));
+        assert_eq!(a.positional, vec!["3"]);
+    }
+
+    #[test]
+    fn equals_syntax_and_defaults() {
+        let a = Args::parse(&sv(&["x", "--slo=250"]), &[]).unwrap();
+        assert_eq!(a.get_f64("slo", 0.0).unwrap(), 250.0);
+        assert_eq!(a.get_f64("missing", 7.5).unwrap(), 7.5);
+        assert_eq!(a.get_str("trace", "lmsys"), "lmsys");
+    }
+
+    #[test]
+    fn rejects_missing_value_and_bad_numbers() {
+        assert!(Args::parse(&sv(&["x", "--slo"]), &[]).is_err());
+        let a = Args::parse(&sv(&["x", "--slo", "abc"]), &[]).unwrap();
+        assert!(a.get_f64("slo", 0.0).is_err());
+    }
+
+    #[test]
+    fn parses_lists() {
+        let a = Args::parse(&sv(&["x", "--lambdas", "25,50, 100"]), &[])
+            .unwrap();
+        assert_eq!(a.get_f64_list("lambdas", &[]).unwrap(),
+                   vec![25.0, 50.0, 100.0]);
+        assert_eq!(a.get_f64_list("other", &[1.0]).unwrap(), vec![1.0]);
+    }
+}

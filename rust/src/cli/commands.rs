@@ -1,0 +1,478 @@
+//! Subcommand implementations for the `fleet-sim` binary.
+
+use crate::cli::args::Args;
+use crate::des::engine::SimPool;
+use crate::gpu::catalog::GpuCatalog;
+use crate::optimizer::analytic::{NativeSweep, SweepEval};
+use crate::optimizer::disagg::{simulate_disagg, DisaggFleetOptimizer};
+use crate::optimizer::gridflex::{grid_flex_analysis, GridFlexConfig};
+use crate::optimizer::planner::FleetOptimizer;
+use crate::optimizer::reliability::NodeAvail;
+use crate::optimizer::whatif::WhatIfSweep;
+use crate::report::fidelity::fidelity_table;
+use crate::router::RoutingPolicy;
+use crate::runtime::sweep::AotSweep;
+use crate::scenarios::{self, ScenarioOpts};
+use crate::util::table::{dollars, millis, Table};
+use crate::workload::builtin::Trace;
+use crate::workload::spec::{BuiltinTrace, WorkloadSpec};
+
+pub const USAGE: &str = "\
+inference-fleet-sim — queueing-theory-grounded LLM fleet capacity planner
+
+USAGE: fleet-sim <command> [options]
+
+COMMANDS:
+  plan        two-phase fleet plan: --trace lmsys|azure|agent|<path.json>
+              --lambda RPS [--slo MS] [--mixed] [--backend native|aot]
+              [--node-avail none|soft|hard|5pct] [--top-k K] [--explain]
+  simulate    DES one layout: --trace T --lambda RPS --gpu NAME
+              --n-short N --n-long N --b-short TOKENS [--requests N]
+              [--router length|compress|random] [--seed S]
+  whatif      λ step thresholds: --trace T --gpu NAME
+              [--lambdas 25,50,...] [--slo MS]
+  disagg      prefill/decode planning: --trace T --lambda RPS
+              [--ttft-slo MS] [--tpot-slo MS]
+  gridflex    demand-response curve: --trace T --lambda RPS [--gpus N]
+              [--slo MS] [--requests N]
+  fidelity    Kimura-vs-DES model fidelity table [--requests N]
+  ablation    service-model ablation (equilibrium vs n_max t_iter)
+  sensitivity synthetic-length sensitivity sweep [--lambda RPS] [--slo MS]
+  substream   sub-stream Poisson approximation check (paper §5)
+              [--trace T] [--lambda RPS] [--b-short TOKENS]
+  multimodel  three-class ModelRouter fleet [--fast]
+  puzzle N    regenerate paper case study N (1..8) [--fast]
+  reproduce-all   all eight puzzles [--fast]
+  profiles    print the GPU catalog and reliability constants
+  selftest-runtime   load artifacts/ and cross-check AOT vs native sweep
+";
+
+fn workload_from(args: &Args) -> anyhow::Result<WorkloadSpec> {
+    let name = args.get_str("trace", "azure");
+    let lambda = args.get_f64("lambda", 100.0)?;
+    let spec = match BuiltinTrace::parse(name) {
+        Ok(t) => WorkloadSpec::builtin(t, lambda),
+        Err(_) => {
+            let t = Trace::load(std::path::Path::new(name))?;
+            WorkloadSpec::from_trace(&t, lambda)
+        }
+    };
+    match args.get("max-ctx") {
+        Some(v) => spec.truncated(v.parse()?),
+        None => Ok(spec),
+    }
+}
+
+fn scenario_opts(args: &Args) -> anyhow::Result<ScenarioOpts> {
+    let mut opts = if args.flag("fast") {
+        ScenarioOpts::fast()
+    } else {
+        ScenarioOpts::default()
+    };
+    opts.n_requests = args.get_usize("requests", opts.n_requests)?;
+    opts.seed = args.get_usize("seed", opts.seed as usize)? as u64;
+    Ok(opts)
+}
+
+pub fn run(args: &Args) -> anyhow::Result<String> {
+    match args.subcommand.as_str() {
+        "plan" => cmd_plan(args),
+        "simulate" => cmd_simulate(args),
+        "whatif" => cmd_whatif(args),
+        "disagg" => cmd_disagg(args),
+        "gridflex" => cmd_gridflex(args),
+        "fidelity" => cmd_fidelity(args),
+        "ablation" => cmd_ablation(args),
+        "sensitivity" => cmd_sensitivity(args),
+        "substream" => cmd_substream(args),
+        "multimodel" => cmd_multimodel(args),
+        "puzzle" => cmd_puzzle(args),
+        "reproduce-all" => cmd_reproduce_all(args),
+        "profiles" => cmd_profiles(),
+        "selftest-runtime" => cmd_selftest(),
+        "" | "help" | "--help" | "-h" => Ok(USAGE.to_string()),
+        other => anyhow::bail!("unknown command '{other}'\n\n{USAGE}"),
+    }
+}
+
+fn cmd_plan(args: &Args) -> anyhow::Result<String> {
+    let w = workload_from(args)?;
+    let slo = args.get_f64("slo", 500.0)?;
+    let mut opt = FleetOptimizer::new(GpuCatalog::standard(), slo);
+    opt.gen.allow_mixed = args.flag("mixed");
+    opt.top_k = args.get_usize("top-k", 8)?;
+    opt.des.n_requests = args.get_usize("requests", 10_000)?;
+    opt.node_avail = match args.get_str("node-avail", "none") {
+        "none" => NodeAvail::default(),
+        "soft" => NodeAvail::soft_failure(),
+        "hard" => NodeAvail::hard_failure(),
+        "5pct" => NodeAvail::five_percent_rule(),
+        other => anyhow::bail!("--node-avail: unknown '{other}'"),
+    };
+    let backend = args.get_str("backend", "native");
+    let plan = match backend {
+        "native" => opt.plan(&w),
+        "aot" => {
+            let aot = AotSweep::load(&AotSweep::default_dir())?;
+            opt.plan_with(&w, &aot)?
+        }
+        other => anyhow::bail!("--backend: 'native' or 'aot', got '{other}'"),
+    };
+    let mut out = String::new();
+    if args.flag("explain") {
+        out.push_str(&format!(
+            "Phase 1 [{}]: {} candidates generated, {} feasible \
+             analytically.\nPhase 2 [DES]: verified top {} by cost:\n",
+            plan.backend,
+            plan.n_candidates,
+            plan.n_phase1_feasible,
+            plan.verified.len()
+        ));
+        let mut t = Table::new(&["Candidate", "$/yr", "rho s/l",
+                                 "DES P99 TTFT", "verdict"]);
+        for e in &plan.verified {
+            let v = e.verification.as_ref().unwrap();
+            t.row(&[
+                e.candidate.label(),
+                dollars(e.analytic.cost_yr),
+                format!("{:.2}/{:.2}", e.analytic.rho_s, e.analytic.rho_l),
+                millis(v.p99_ttft_ms),
+                if v.passed { "pass".into() } else { "fail".into() },
+            ]);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    out.push_str(&plan.summary());
+    out.push('\n');
+    Ok(out)
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<String> {
+    let w = workload_from(args)?;
+    let cat = GpuCatalog::standard();
+    let gpu = cat.require(args.get_str("gpu", "H100"))?.clone();
+    let n_short = args.get_usize("n-short", 2)?;
+    let n_long = args.get_usize("n-long", 4)?;
+    let b_short = args.get_f64("b-short", 4096.0)?;
+    let max_len = w.cdf.max_len();
+    let pools = vec![
+        SimPool { gpu: gpu.clone(), n_gpus: n_short, ctx_budget: b_short,
+                  batch_cap: None },
+        SimPool { gpu, n_gpus: n_long, ctx_budget: max_len, batch_cap: None },
+    ];
+    let router = match args.get_str("router", "length") {
+        "length" => RoutingPolicy::Length { b_short },
+        "compress" => RoutingPolicy::CompressAndRoute {
+            b_short,
+            gamma: args.get_f64("gamma", 1.5)?,
+        },
+        "random" => RoutingPolicy::Random { n_pools: 2 },
+        other => anyhow::bail!("--router: unknown '{other}'"),
+    };
+    let opts = scenario_opts(args)?;
+    let mut r = scenarios::common::simulate(&w, pools, router, &opts);
+    let mut t = Table::new(&["Pool", "requests", "util", "wait99", "TTFT99",
+                             "E2E99", "max queue"]);
+    for (i, p) in r.per_pool.iter_mut().enumerate() {
+        t.row(&[
+            if i == 0 { "short".into() } else { "long".into() },
+            p.stats.count.to_string(),
+            format!("{:.0}%", p.utilization * 100.0),
+            millis(p.stats.wait.p99()),
+            millis(p.stats.ttft.p99()),
+            millis(p.stats.e2e.p99()),
+            p.max_queue_depth.to_string(),
+        ]);
+    }
+    Ok(format!(
+        "{}\noverall P99 TTFT = {} over {} requests ({} compressed)\n",
+        t.render(),
+        millis(r.overall.p99_ttft()),
+        r.n_requests,
+        r.n_compressed
+    ))
+}
+
+fn cmd_whatif(args: &Args) -> anyhow::Result<String> {
+    let w = workload_from(args)?;
+    let cat = GpuCatalog::standard();
+    let gpu = cat.require(args.get_str("gpu", "H100"))?.clone();
+    let slo = args.get_f64("slo", 500.0)?;
+    let lambdas = args.get_f64_list(
+        "lambdas",
+        &[25.0, 50.0, 100.0, 150.0, 200.0, 300.0, 400.0],
+    )?;
+    let sweep = WhatIfSweep::new(cat, slo).for_gpu(&gpu);
+    let rows = sweep.sweep(&w, &lambdas);
+    let mut t = Table::new(&["λ (req/s)", "config", "GPUs", "Cost/yr",
+                             "provision before λ ="]);
+    for r in &rows {
+        t.row(&[
+            format!("{:.0}", r.lambda_rps),
+            r.candidate.label(),
+            r.candidate.total_gpus().to_string(),
+            dollars(r.cost_yr),
+            r.headroom_rps.map(|h| format!("{h:.0}")).unwrap_or("-".into()),
+        ]);
+    }
+    Ok(format!("{}\n", t.render()))
+}
+
+fn cmd_disagg(args: &Args) -> anyhow::Result<String> {
+    let w = workload_from(args)?;
+    let ttft = args.get_f64("ttft-slo", 500.0)?;
+    let tpot = args.get_f64("tpot-slo", 100.0)?;
+    let opts = scenario_opts(args)?;
+    let o = DisaggFleetOptimizer::new(GpuCatalog::standard(), ttft, tpot);
+    let mut t = Table::new(&["Config", "Cost/yr", "TTFT", "TTFT(DES)",
+                             "TPOT", "rho P/D", "feasible"]);
+    for (cfg, a) in o.sweep(&w) {
+        let (des, _, _) = simulate_disagg(&w, &cfg, opts.n_requests, opts.seed);
+        t.row(&[
+            cfg.label(),
+            dollars(a.cost_yr),
+            millis(a.ttft99_ms),
+            millis(des),
+            millis(a.tpot_ms),
+            format!("{:.2}/{:.2}", a.rho_prefill, a.rho_decode),
+            a.feasible.to_string(),
+        ]);
+    }
+    Ok(format!("{}\n", t.render()))
+}
+
+fn cmd_gridflex(args: &Args) -> anyhow::Result<String> {
+    let w = workload_from(args)?;
+    let cat = GpuCatalog::standard();
+    let gpu = cat.require(args.get_str("gpu", "H100"))?.clone();
+    let cfg = GridFlexConfig {
+        n_gpus: args.get_usize("gpus", 40)?,
+        slo_ms: args.get_f64("slo", 500.0)?,
+        n_requests: args.get_usize("requests", 15_000)?,
+        ..Default::default()
+    };
+    let rows = grid_flex_analysis(&w, &gpu, &cfg);
+    let mut t = Table::new(&["Flex", "n_max", "W/GPU", "Fleet kW",
+                             "P99 anal.", "P99 DES", "P99 event", "SLO"]);
+    for r in &rows {
+        t.row(&[
+            format!("{:.0}%", r.flex * 100.0),
+            r.n_max.to_string(),
+            format!("{:.0}", r.w_per_gpu),
+            format!("{:.1}", r.fleet_kw),
+            millis(r.p99_analytic_ms),
+            millis(r.p99_des_ms),
+            millis(r.p99_event_ms),
+            format!(
+                "{}{}",
+                if r.steady_ok { "steady" } else { "-" },
+                if r.event_ok { "+event" } else { "" }
+            ),
+        ]);
+    }
+    Ok(format!("{}\n", t.render()))
+}
+
+fn cmd_fidelity(args: &Args) -> anyhow::Result<String> {
+    let gpu = GpuCatalog::standard().get("H100").unwrap().clone();
+    let n = args.get_usize("requests", 10_000)?;
+    Ok(format!("{}\n", fidelity_table(&gpu, n).render()))
+}
+
+fn cmd_ablation(args: &Args) -> anyhow::Result<String> {
+    let w = workload_from(args)?;
+    let cat = GpuCatalog::standard();
+    let gpu = cat.require(args.get_str("gpu", "H100"))?.clone();
+    let n = args.get_usize("requests", 10_000)?;
+    Ok(format!(
+        "{}\n",
+        crate::report::ablation::table(&w, &gpu, &[8, 10, 14, 20], n)
+            .render()
+    ))
+}
+
+fn cmd_sensitivity(args: &Args) -> anyhow::Result<String> {
+    let lam = args.get_f64("lambda", 50.0)?;
+    let slo = args.get_f64("slo", 1000.0)?;
+    let seed = args.get_usize("seed", 3)? as u64;
+    Ok(format!("{}\n",
+               crate::report::sensitivity::table(lam, slo, seed).render()))
+}
+
+fn cmd_substream(args: &Args) -> anyhow::Result<String> {
+    let w = workload_from(args)?;
+    let cat = GpuCatalog::standard();
+    let gpu = cat.require(args.get_str("gpu", "H100"))?.clone();
+    let b = args.get_f64("b-short", 3072.0)?;
+    let opts = scenario_opts(args)?;
+    let c = crate::report::substream::substream_check(
+        &w, &gpu, args.get_usize("n-short", 6)?,
+        args.get_usize("n-long", 3)?, b, opts.n_requests, 0.9, opts.seed);
+    let mut t = Table::new(&["Quantity", "short pool", "long pool"]);
+    t.row(&["Analytic P99 TTFT (Poisson-split assumption)".into(),
+            millis(c.analytic_short_ms), millis(c.analytic_long_ms)]);
+    t.row(&["DES P99 TTFT (i.i.d. lengths)".into(),
+            millis(c.des_short_ms), millis(c.des_long_ms)]);
+    t.row(&["DES P99 TTFT (length-correlated bursts)".into(),
+            millis(c.bursty_short_ms), millis(c.bursty_long_ms)]);
+    Ok(format!(
+        "{}\nlong-pool inter-arrival SCV under bursts: {:.2} (1 = Poisson)\n\
+         approximation {} at 50% tolerance\n",
+        t.render(), c.long_gap_scv,
+        if c.holds(0.5) { "HOLDS" } else { "BREAKS" }
+    ))
+}
+
+fn cmd_multimodel(args: &Args) -> anyhow::Result<String> {
+    let opts = scenario_opts(args)?;
+    Ok(crate::scenarios::multi_model::run(&opts).render())
+}
+
+fn cmd_puzzle(args: &Args) -> anyhow::Result<String> {
+    let n: usize = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: fleet-sim puzzle <1..8>"))?
+        .parse()?;
+    let opts = scenario_opts(args)?;
+    Ok(scenarios::run(n, &opts)?.render())
+}
+
+fn cmd_reproduce_all(args: &Args) -> anyhow::Result<String> {
+    let opts = scenario_opts(args)?;
+    let mut out = String::new();
+    for report in scenarios::run_all(&opts) {
+        out.push_str(&report.render());
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+fn cmd_profiles() -> anyhow::Result<String> {
+    let cat = GpuCatalog::standard();
+    let mut t = Table::new(&["GPU", "W ms", "H ms/slot", "kv blocks",
+                             "chunk", "max_num_seqs", "VRAM", "$/hr", "$/yr",
+                             "P idle", "P nom"]);
+    for g in cat.profiles() {
+        t.row(&[
+            g.name.clone(),
+            format!("{}", g.w_ms),
+            format!("{}", g.h_ms_per_slot),
+            format!("{}", g.kv_blocks),
+            format!("{}", g.chunk),
+            format!("{}", g.max_num_seqs),
+            format!("{} GB", g.vram_gb),
+            format!("${:.2}", g.cost_per_hr),
+            dollars(g.cost_per_year()),
+            format!("{} W", g.p_idle_w),
+            format!("{} W", g.p_nom_w),
+        ]);
+    }
+    let mut r = Table::new(&["node_avail scenario", "A"]);
+    r.row(&["soft failure (driver reset, ~4h MTTR)".into(),
+            format!("{:.4}", NodeAvail::soft_failure().a)]);
+    r.row(&["hard failure (GPU/NVLink swap, ~48h MTTR)".into(),
+            format!("{:.4}", NodeAvail::hard_failure().a)]);
+    r.row(&["5% overprovisioning rule".into(),
+            format!("{:.4}", NodeAvail::five_percent_rule().a)]);
+    Ok(format!("{}\n{}\n", t.render(), r.render()))
+}
+
+fn cmd_selftest() -> anyhow::Result<String> {
+    let dir = AotSweep::default_dir();
+    let aot = AotSweep::load(&dir)?;
+    let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 100.0);
+    let cands = crate::optimizer::candidates::generate(
+        &w,
+        &GpuCatalog::standard(),
+        &crate::optimizer::candidates::GenOptions::default(),
+    );
+    let native = NativeSweep.eval(&w, &cands, 500.0)?;
+    let aot_res = aot.eval(&w, &cands, 500.0)?;
+    let agree = native
+        .iter()
+        .zip(&aot_res)
+        .filter(|(n, a)| n.feasible == a.feasible)
+        .count();
+    anyhow::ensure!(
+        agree * 100 >= cands.len() * 99,
+        "feasibility agreement {agree}/{} below 99%",
+        cands.len()
+    );
+    Ok(format!(
+        "runtime selftest OK: platform={}, artifact={}, {} candidates, \
+         {}/{} feasibility agreement\n",
+        aot.platform(),
+        aot.artifact_path.display(),
+        cands.len(),
+        agree,
+        cands.len()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_cmd(parts: &[&str]) -> anyhow::Result<String> {
+        let argv: Vec<String> = parts.iter().map(|s| s.to_string()).collect();
+        let args = Args::parse(&argv, &["fast", "mixed", "explain"]).unwrap();
+        run(&args)
+    }
+
+    #[test]
+    fn help_and_unknown() {
+        assert!(run_cmd(&["help"]).unwrap().contains("USAGE"));
+        assert!(run_cmd(&["frobnicate"]).is_err());
+    }
+
+    #[test]
+    fn profiles_lists_catalog() {
+        let out = run_cmd(&["profiles"]).unwrap();
+        for s in ["A10G", "A100", "H100", "0.987"] {
+            assert!(out.contains(s), "{out}");
+        }
+    }
+
+    #[test]
+    fn simulate_produces_table() {
+        let out = run_cmd(&[
+            "simulate", "--trace", "azure", "--lambda", "50", "--gpu",
+            "H100", "--n-short", "2", "--n-long", "2", "--requests", "2000",
+        ])
+        .unwrap();
+        assert!(out.contains("overall P99 TTFT"), "{out}");
+    }
+
+    #[test]
+    fn plan_native_fast() {
+        let out = run_cmd(&[
+            "plan", "--trace", "azure", "--lambda", "50", "--requests",
+            "2000", "--explain",
+        ])
+        .unwrap();
+        assert!(out.contains("Phase 1"), "{out}");
+        assert!(out.contains("$"), "{out}");
+    }
+
+    #[test]
+    fn bad_router_and_gpu_rejected() {
+        assert!(run_cmd(&["simulate", "--router", "psychic"]).is_err());
+        assert!(run_cmd(&["simulate", "--gpu", "B200"]).is_err());
+    }
+
+    #[test]
+    fn extension_commands_produce_tables() {
+        let out = run_cmd(&["multimodel", "--requests", "2000"]).unwrap();
+        assert!(out.contains("ModelRouter"), "{out}");
+        let out = run_cmd(&[
+            "substream", "--trace", "azure", "--lambda", "60", "--requests",
+            "3000",
+        ])
+        .unwrap();
+        assert!(out.contains("approximation"), "{out}");
+        let out = run_cmd(&["ablation", "--requests", "2000"]).unwrap();
+        assert!(out.contains("n_max model"), "{out}");
+    }
+}

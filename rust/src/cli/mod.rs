@@ -1,0 +1,5 @@
+//! Command-line interface: argument parsing (offline substrate for clap)
+//! and subcommand implementations.
+
+pub mod args;
+pub mod commands;

@@ -1,0 +1,497 @@
+//! The DES engine (paper §3.1 Phase 2).
+//!
+//! Semantics (DESIGN.md "DES semantics"):
+//! * requests arrive on a Poisson stream and are routed on arrival;
+//! * each pool is a FIFO queue in front of `n` GPU instances;
+//! * a request holds one KV slot on one instance for
+//!   `iters(L_in, L_out) * t_iter(n_eff)` ms, where `n_eff` is the
+//!   instance's effective slot capacity (KV-limited, possibly batch-capped);
+//! * TTFT = slot wait + chunked prefill + one iteration (paper Eq. 5,
+//!   measured rather than approximated);
+//! * exactly two events per request, so 10^4 requests simulate in
+//!   milliseconds.
+//!
+//! A `CapWindow` models a grid demand-response event (paper §4.8): during
+//! [start, end) the pool's admission capacity drops to `cap` slots per
+//! GPU; in-flight requests are never preempted.
+
+use crate::des::event::{EventKind, EventQueue};
+use crate::des::metrics::{DesResult, LatencyStats, PoolResult};
+use crate::des::pool::DesPool;
+use crate::gpu::profile::GpuProfile;
+use crate::router::{RouteRequest, RoutingPolicy};
+use crate::workload::rng::Pcg64;
+use crate::workload::spec::WorkloadSpec;
+
+/// Pool construction spec for the simulator.
+#[derive(Debug, Clone)]
+pub struct SimPool {
+    pub gpu: GpuProfile,
+    pub n_gpus: usize,
+    /// Context budget the pool's KV cache is provisioned for.
+    pub ctx_budget: f64,
+    /// Steady-state batch cap (vLLM max_num_seqs), None = KV-limited.
+    pub batch_cap: Option<u32>,
+}
+
+/// A temporary batch-cap reduction (demand-response event, §4.8).
+#[derive(Debug, Clone, Copy)]
+pub struct CapWindow {
+    pub start_ms: f64,
+    pub end_ms: f64,
+    pub cap: u32,
+}
+
+/// Simulation parameters.
+#[derive(Debug, Clone)]
+pub struct DesConfig {
+    pub n_requests: usize,
+    pub seed: u64,
+    /// Fraction of initial requests excluded from statistics (0 = paper
+    /// behavior: measure the whole run from the empty state).
+    pub warmup_frac: f64,
+    /// Optional demand-response window applied to every pool.
+    pub cap_window: Option<CapWindow>,
+    /// Semantic-class mix for multi-model fleets (ModelRouter): requests
+    /// draw a class from this distribution; None = single class 0.
+    pub class_probs: Option<Vec<f64>>,
+}
+
+impl Default for DesConfig {
+    fn default() -> Self {
+        DesConfig { n_requests: 10_000, seed: 42, warmup_frac: 0.0,
+                    cap_window: None, class_probs: None }
+    }
+}
+
+struct Req {
+    arrival_ms: f64,
+    l_in: f64,
+    l_out: f64,
+    pool: u16,
+    compressed: bool,
+}
+
+/// The simulator: workload x pools x router -> latency distributions.
+pub struct Simulator {
+    pub workload: WorkloadSpec,
+    pub pools: Vec<SimPool>,
+    pub router: RoutingPolicy,
+    pub config: DesConfig,
+}
+
+impl Simulator {
+    pub fn new(
+        workload: WorkloadSpec,
+        pools: Vec<SimPool>,
+        router: RoutingPolicy,
+        config: DesConfig,
+    ) -> Self {
+        assert!(
+            router.n_pools() <= pools.len(),
+            "router expects {} pools, got {}",
+            router.n_pools(),
+            pools.len()
+        );
+        Simulator { workload, pools, router, config }
+    }
+
+    /// Effective per-instance slot cap for `pool` at time `t`.
+    fn eff_cap(&self, pool: &DesPool, t: f64) -> u32 {
+        let mut cap = pool.slots_per_gpu;
+        if let Some(w) = &self.config.cap_window {
+            if t >= w.start_ms && t < w.end_ms {
+                cap = cap.min(w.cap.max(1));
+            }
+        }
+        cap
+    }
+
+    /// Run the simulation (samples the workload's request stream).
+    pub fn run(&self) -> DesResult {
+        let sampled = self
+            .workload
+            .sample_requests(self.config.n_requests, self.config.seed);
+        self.run_with_requests(sampled)
+    }
+
+    /// Run on an explicit, time-ordered request stream (used by the
+    /// sub-stream Poisson check, §5, to inject length-correlated
+    /// arrivals).
+    pub fn run_with_requests(
+        &self,
+        sampled: Vec<crate::workload::spec::SampledRequest>,
+    ) -> DesResult {
+        let n = sampled.len();
+        debug_assert!(sampled.windows(2)
+            .all(|w| w[0].arrival_ms <= w[1].arrival_ms));
+        let mut route_rng = Pcg64::new(self.config.seed, 3);
+
+        let mut pools: Vec<DesPool> = self
+            .pools
+            .iter()
+            .map(|p| DesPool::new(p.gpu.clone(), p.n_gpus, p.ctx_budget, p.batch_cap))
+            .collect();
+
+        // Perf pass iteration 3: arrivals are already time-sorted, so only
+        // completions (and cap-window drains) live in the heap; arrivals
+        // are merge-consumed from the sorted vector. Halves heap traffic.
+        let mut reqs: Vec<Req> = Vec::with_capacity(n);
+        let mut events = EventQueue::with_capacity(n + 4);
+        for s in sampled.iter() {
+            reqs.push(Req {
+                arrival_ms: s.arrival_ms,
+                l_in: s.l_in,
+                l_out: s.l_out,
+                pool: 0,
+                compressed: false,
+            });
+        }
+        if let Some(w) = &self.config.cap_window {
+            for p in 0..pools.len() {
+                events.push(w.end_ms, EventKind::Drain { pool: p as u16 });
+            }
+        }
+
+        let warmup_cutoff = (self.config.warmup_frac * n as f64) as usize;
+        let mut per_pool: Vec<LatencyStats> = (0..pools.len())
+            .map(|_| LatencyStats::with_capacity(n / pools.len().max(1) + 16))
+            .collect();
+        let mut overall = LatencyStats::with_capacity(n);
+        let mut n_compressed = 0usize;
+        let mut horizon = 0.0f64;
+        let mut next_arrival: usize = 0;
+
+        loop {
+            // Arrivals win ties (matching the previous heap's FIFO seq
+            // ordering, where arrivals were pushed first).
+            let take_arrival = next_arrival < n
+                && events
+                    .peek()
+                    .map_or(true, |e| reqs[next_arrival].arrival_ms <= e.time_ms);
+            if take_arrival {
+                let req = next_arrival as u32;
+                next_arrival += 1;
+                let r = &reqs[req as usize];
+                let now = r.arrival_ms;
+                horizon = horizon.max(now);
+                let class = match &self.config.class_probs {
+                    None => 0,
+                    Some(probs) => {
+                        let u = route_rng.uniform();
+                        let mut cum = 0.0;
+                        let mut cls = probs.len() - 1;
+                        for (i, p) in probs.iter().enumerate() {
+                            cum += p;
+                            if u < cum {
+                                cls = i;
+                                break;
+                            }
+                        }
+                        cls
+                    }
+                };
+                let decision = self.router.route(
+                    RouteRequest { l_in: r.l_in, l_out: r.l_out, class },
+                    &mut route_rng,
+                );
+                let r = &mut reqs[req as usize];
+                r.pool = decision.pool as u16;
+                r.l_in = decision.request.l_in;
+                r.l_out = decision.request.l_out;
+                r.compressed = decision.compressed;
+                if decision.compressed {
+                    n_compressed += 1;
+                }
+                if !self.try_admit(
+                    &mut pools, decision.pool, req, &reqs, now, &mut events,
+                    &mut per_pool, &mut overall, warmup_cutoff,
+                ) {
+                    pools[decision.pool].enqueue(req);
+                }
+                continue;
+            }
+            let Some(ev) = events.pop() else { break };
+            let now = ev.time_ms;
+            horizon = horizon.max(now);
+            match ev.kind {
+                EventKind::Arrival { .. } => unreachable!("arrivals merged"),
+                EventKind::Completion { req: _, pool, instance } => {
+                    pools[pool as usize].release(instance as usize, now);
+                    self.drain_queue(
+                        &mut pools, pool as usize, now, &mut events, &reqs,
+                        &mut per_pool, &mut overall, warmup_cutoff,
+                    );
+                }
+                EventKind::Drain { pool } => {
+                    self.drain_queue(
+                        &mut pools, pool as usize, now, &mut events, &reqs,
+                        &mut per_pool, &mut overall, warmup_cutoff,
+                    );
+                }
+            }
+        }
+
+        DesResult {
+            per_pool: pools
+                .iter()
+                .zip(per_pool)
+                .map(|(p, stats)| PoolResult {
+                    stats,
+                    utilization: p.utilization(horizon),
+                    max_queue_depth: p.max_queue_depth,
+                    slots_per_gpu: p.slots_per_gpu,
+                    n_gpus: p.instances.len(),
+                })
+                .collect(),
+            overall,
+            horizon_ms: horizon,
+            n_requests: n,
+            n_compressed,
+        }
+    }
+
+    /// Try to admit request `req_id` to `pool_idx` at time `now`.
+    ///
+    /// The iteration latency is evaluated at the *admission concurrency*
+    /// (the instance's busy count after this request joins): continuous
+    /// batching runs faster iterations at lower concurrency, which is the
+    /// §4.8 recalibration effect and what produces the paper's low
+    /// lightly-loaded TTFTs. Held for the request's full duration
+    /// (conservative: the batch may shrink later).
+    #[allow(clippy::too_many_arguments)]
+    fn try_admit(
+        &self,
+        pools: &mut [DesPool],
+        pool_idx: usize,
+        req_id: u32,
+        reqs: &[Req],
+        now: f64,
+        events: &mut EventQueue,
+        per_pool: &mut [LatencyStats],
+        overall: &mut LatencyStats,
+        warmup_cutoff: usize,
+    ) -> bool {
+        let eff = self.eff_cap(&pools[pool_idx], now);
+        let pool = &mut pools[pool_idx];
+        // Least-loaded instance with headroom under the effective cap.
+        let mut best: Option<(usize, u32)> = None;
+        for (i, inst) in pool.instances.iter().enumerate() {
+            if inst.busy < eff {
+                let free = eff - inst.busy;
+                if best.map_or(true, |(_, bf)| free > bf) {
+                    best = Some((i, free));
+                }
+            }
+        }
+        let Some((inst, _)) = best else { return false };
+        pool.acquire(inst, now);
+        let req = &reqs[req_id as usize];
+        let n_at_admit = pool.instances[inst].busy as f64;
+        let t_iter = pool.gpu.t_iter(n_at_admit);
+        let hold = pool.gpu.iters(req.l_in, req.l_out) * t_iter;
+        events.push(
+            now + hold,
+            EventKind::Completion {
+                req: req_id,
+                pool: pool_idx as u16,
+                instance: inst as u16,
+            },
+        );
+        // Stats are recorded at admission (wait/TTFT known; E2E = wait +
+        // hold is deterministic given admission).
+        let wait = now - req.arrival_ms;
+        let prefill = (req.l_in / pool.gpu.chunk).ceil() * t_iter;
+        let ttft = wait + prefill + t_iter;
+        let e2e = wait + hold;
+        if req_id as usize >= warmup_cutoff {
+            per_pool[pool_idx].record(wait, ttft, e2e);
+            overall.record(wait, ttft, e2e);
+        }
+        true
+    }
+
+    /// Admit queued requests while capacity allows.
+    #[allow(clippy::too_many_arguments)]
+    fn drain_queue(
+        &self,
+        pools: &mut Vec<DesPool>,
+        pool_idx: usize,
+        now: f64,
+        events: &mut EventQueue,
+        reqs: &Vec<Req>,
+        per_pool: &mut Vec<LatencyStats>,
+        overall: &mut LatencyStats,
+        warmup_cutoff: usize,
+    ) {
+        while let Some(&head) = pools[pool_idx].queue.front() {
+            if !self.try_admit(
+                pools, pool_idx, head, reqs, now, events, per_pool, overall,
+                warmup_cutoff,
+            ) {
+                break;
+            }
+            pools[pool_idx].queue.pop_front();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::catalog::GpuCatalog;
+    use crate::workload::spec::{BuiltinTrace, WorkloadSpec};
+
+    fn h100() -> GpuProfile {
+        GpuCatalog::standard().get("H100").unwrap().clone()
+    }
+
+    fn a100() -> GpuProfile {
+        GpuCatalog::standard().get("A100").unwrap().clone()
+    }
+
+    fn azure(lambda: f64) -> WorkloadSpec {
+        WorkloadSpec::builtin(BuiltinTrace::Azure, lambda)
+    }
+
+    fn two_pool(gpu: GpuProfile, n_s: usize, n_l: usize, b: f64, max: f64)
+        -> (Vec<SimPool>, RoutingPolicy)
+    {
+        (
+            vec![
+                SimPool { gpu: gpu.clone(), n_gpus: n_s, ctx_budget: b,
+                          batch_cap: None },
+                SimPool { gpu, n_gpus: n_l, ctx_budget: max, batch_cap: None },
+            ],
+            RoutingPolicy::Length { b_short: b },
+        )
+    }
+
+    #[test]
+    fn conserves_requests() {
+        let (pools, router) = two_pool(a100(), 4, 4, 4096.0, 8192.0);
+        let sim = Simulator::new(azure(100.0), pools, router,
+                                 DesConfig { n_requests: 5_000, ..Default::default() });
+        let mut r = sim.run();
+        assert_eq!(r.overall.count, 5_000);
+        let pool_sum: usize = r.per_pool.iter().map(|p| p.stats.count).sum();
+        assert_eq!(pool_sum, 5_000);
+        assert!(r.horizon_ms > 0.0);
+        assert!(r.overall.p99_ttft() > 0.0);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let (pools, router) = two_pool(h100(), 2, 2, 4096.0, 8192.0);
+        let cfg = DesConfig { n_requests: 2_000, seed: 7, ..Default::default() };
+        let mut a = Simulator::new(azure(150.0), pools.clone(), router.clone(),
+                                   cfg.clone()).run();
+        let mut b = Simulator::new(azure(150.0), pools, router, cfg).run();
+        assert_eq!(a.overall.p99_ttft(), b.overall.p99_ttft());
+        assert_eq!(a.horizon_ms, b.horizon_ms);
+    }
+
+    #[test]
+    fn light_load_has_no_queueing() {
+        // 5 req/s on 4 H100s: waits should be ~0, TTFT ~ prefill + iter.
+        let (pools, router) = two_pool(h100(), 2, 2, 4096.0, 8192.0);
+        let sim = Simulator::new(azure(5.0), pools, router,
+                                 DesConfig { n_requests: 3_000, ..Default::default() });
+        let mut r = sim.run();
+        assert!(r.overall.wait.p99() < 1e-9, "wait = {}", r.overall.wait.p99());
+        assert!(r.overall.p99_ttft() < 500.0);
+    }
+
+    #[test]
+    fn overload_explodes_wait() {
+        // 400 req/s on 1 A100: queue grows without bound.
+        let pools = vec![SimPool {
+            gpu: a100(), n_gpus: 1, ctx_budget: 8192.0, batch_cap: None,
+        }];
+        let sim = Simulator::new(
+            azure(400.0), pools, RoutingPolicy::Random { n_pools: 1 },
+            DesConfig { n_requests: 8_000, ..Default::default() },
+        );
+        let mut r = sim.run();
+        assert!(r.overall.wait.p99() > 10_000.0, "wait = {}", r.overall.wait.p99());
+        assert!(r.per_pool[0].utilization > 0.9);
+    }
+
+    #[test]
+    fn utilization_scales_with_load() {
+        let mk = |lam| {
+            let (pools, router) = two_pool(h100(), 3, 3, 4096.0, 8192.0);
+            let sim = Simulator::new(azure(lam), pools, router,
+                                     DesConfig { n_requests: 6_000, ..Default::default() });
+            let r = sim.run();
+            (r.per_pool[0].utilization, r.per_pool[1].utilization)
+        };
+        let (lo_s, _) = mk(20.0);
+        let (hi_s, _) = mk(200.0);
+        assert!(hi_s > lo_s * 3.0, "{lo_s} -> {hi_s}");
+    }
+
+    #[test]
+    fn short_pool_receives_expected_fraction() {
+        let (pools, router) = two_pool(a100(), 4, 4, 4096.0, 8192.0);
+        let sim = Simulator::new(azure(100.0), pools, router,
+                                 DesConfig { n_requests: 20_000, ..Default::default() });
+        let r = sim.run();
+        let frac = r.per_pool[0].stats.count as f64 / r.n_requests as f64;
+        // Azure F(4096) = 0.97.
+        assert!((frac - 0.97).abs() < 0.01, "frac = {frac}");
+    }
+
+    #[test]
+    fn cap_window_increases_wait_during_event() {
+        // Strangle a comfortable fleet to 1 slot/GPU for a mid-run window.
+        let pools = vec![SimPool {
+            gpu: h100(), n_gpus: 2, ctx_budget: 8192.0, batch_cap: Some(64),
+        }];
+        let base_cfg = DesConfig { n_requests: 10_000, seed: 3, ..Default::default() };
+        let base = Simulator::new(
+            azure(60.0), pools.clone(), RoutingPolicy::Random { n_pools: 1 },
+            base_cfg.clone(),
+        )
+        .run();
+        let mut capped_cfg = base_cfg;
+        capped_cfg.cap_window = Some(CapWindow {
+            start_ms: 30_000.0, end_ms: 105_000.0, cap: 1,
+        });
+        let capped = Simulator::new(
+            azure(60.0), pools, RoutingPolicy::Random { n_pools: 1 },
+            capped_cfg,
+        )
+        .run();
+        let mut b = base.overall.clone();
+        let mut c = capped.overall.clone();
+        assert!(c.wait.p99() > b.wait.p99() + 100.0,
+                "base {} capped {}", b.wait.p99(), c.wait.p99());
+        // And the queue must fully drain afterwards (same request count).
+        assert_eq!(capped.overall.count, 10_000);
+    }
+
+    #[test]
+    fn compress_and_route_counts_compressions() {
+        let (pools, _) = two_pool(a100(), 4, 4, 2048.0, 8192.0);
+        let sim = Simulator::new(
+            azure(50.0), pools,
+            RoutingPolicy::CompressAndRoute { b_short: 2048.0, gamma: 1.5 },
+            DesConfig { n_requests: 10_000, ..Default::default() },
+        );
+        let r = sim.run();
+        // Azure mass in (2048, 3072] is ~17%.
+        let frac = r.n_compressed as f64 / r.n_requests as f64;
+        assert!((0.10..0.25).contains(&frac), "compressed frac = {frac}");
+    }
+
+    #[test]
+    fn warmup_excludes_early_requests() {
+        let (pools, router) = two_pool(a100(), 2, 2, 4096.0, 8192.0);
+        let cfg = DesConfig {
+            n_requests: 1_000, warmup_frac: 0.2, ..Default::default()
+        };
+        let r = Simulator::new(azure(50.0), pools, router, cfg).run();
+        assert_eq!(r.overall.count, 800);
+    }
+}

@@ -1,0 +1,146 @@
+//! Min-heap event queue for the DES (paper §3.1: "each pool runs n GPU
+//! instances, each simulating continuous batching with a min-heap event
+//! queue").
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Event payloads. Request ids index the simulator's request table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A request hits the router.
+    Arrival { req: u32 },
+    /// A request finishes service and frees its slot.
+    Completion { req: u32, pool: u16, instance: u16 },
+    /// A batch-cap window boundary: re-examine the pool's queue (grid-flex
+    /// short events restore capacity without a completion to trigger it).
+    Drain { pool: u16 },
+}
+
+/// A timestamped event. Earlier `time_ms` pops first; ties break on a
+/// monotonically increasing sequence number so ordering is deterministic.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub time_ms: f64,
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time_ms == other.time_ms && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse for min-heap semantics inside BinaryHeap (a max-heap).
+        other
+            .time_ms
+            .partial_cmp(&self.time_ms)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic min-heap event queue.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Event>,
+    next_seq: u64,
+}
+
+impl EventQueue {
+    pub fn with_capacity(n: usize) -> Self {
+        EventQueue { heap: BinaryHeap::with_capacity(n), next_seq: 0 }
+    }
+
+    pub fn push(&mut self, time_ms: f64, kind: EventKind) {
+        debug_assert!(time_ms.is_finite());
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Event { time_ms, seq, kind });
+    }
+
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop()
+    }
+
+    pub fn peek(&self) -> Option<&Event> {
+        self.heap.peek()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::default();
+        q.push(5.0, EventKind::Arrival { req: 0 });
+        q.push(1.0, EventKind::Arrival { req: 1 });
+        q.push(3.0, EventKind::Arrival { req: 2 });
+        let order: Vec<f64> = std::iter::from_fn(|| q.pop().map(|e| e.time_ms))
+            .collect();
+        assert_eq!(order, vec![1.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::default();
+        q.push(2.0, EventKind::Arrival { req: 10 });
+        q.push(2.0, EventKind::Arrival { req: 11 });
+        q.push(2.0, EventKind::Arrival { req: 12 });
+        let reqs: Vec<u32> = std::iter::from_fn(|| {
+            q.pop().map(|e| match e.kind {
+                EventKind::Arrival { req } => req,
+                _ => unreachable!(),
+            })
+        })
+        .collect();
+        assert_eq!(reqs, vec![10, 11, 12]);
+    }
+
+    #[test]
+    fn interleaved_push_pop() {
+        let mut q = EventQueue::default();
+        q.push(10.0, EventKind::Arrival { req: 0 });
+        q.push(1.0, EventKind::Arrival { req: 1 });
+        assert_eq!(q.pop().unwrap().time_ms, 1.0);
+        q.push(0.5, EventKind::Completion { req: 1, pool: 0, instance: 0 });
+        assert_eq!(q.pop().unwrap().time_ms, 0.5);
+        assert_eq!(q.pop().unwrap().time_ms, 10.0);
+        assert!(q.pop().is_none());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn large_volume_stays_sorted() {
+        let mut q = EventQueue::with_capacity(10_000);
+        let mut rng = crate::workload::rng::Pcg64::new(3, 0);
+        for i in 0..10_000 {
+            q.push(rng.uniform() * 1e6, EventKind::Arrival { req: i });
+        }
+        let mut prev = -1.0;
+        while let Some(e) = q.pop() {
+            assert!(e.time_ms >= prev);
+            prev = e.time_ms;
+        }
+    }
+}

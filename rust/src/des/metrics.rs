@@ -1,0 +1,111 @@
+//! Per-request metric collection for the DES (paper §3.1 Phase 2 step 3:
+//! queue wait, TTFT, end-to-end latency; SLO check is P99 TTFT <= T).
+
+use crate::util::stats::Samples;
+
+/// Latency samples for one pool (or the fleet overall).
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStats {
+    pub wait: Samples,
+    pub ttft: Samples,
+    pub e2e: Samples,
+    pub count: usize,
+}
+
+impl LatencyStats {
+    /// Pre-size the sample buffers (perf pass iteration 2: avoids
+    /// realloc churn in the DES hot loop).
+    pub fn with_capacity(n: usize) -> Self {
+        LatencyStats {
+            wait: Samples::with_capacity(n),
+            ttft: Samples::with_capacity(n),
+            e2e: Samples::with_capacity(n),
+            count: 0,
+        }
+    }
+
+    pub fn record(&mut self, wait_ms: f64, ttft_ms: f64, e2e_ms: f64) {
+        self.wait.push(wait_ms);
+        self.ttft.push(ttft_ms);
+        self.e2e.push(e2e_ms);
+        self.count += 1;
+    }
+
+    pub fn p99_ttft(&mut self) -> f64 {
+        self.ttft.p99()
+    }
+}
+
+/// Full DES output: per-pool and overall stats plus run metadata.
+#[derive(Debug, Clone)]
+pub struct DesResult {
+    pub per_pool: Vec<PoolResult>,
+    pub overall: LatencyStats,
+    /// Simulated horizon, ms (last completion).
+    pub horizon_ms: f64,
+    pub n_requests: usize,
+    /// Requests the router compressed (CompressAndRoute).
+    pub n_compressed: usize,
+}
+
+/// Summary for one pool after the run.
+#[derive(Debug, Clone)]
+pub struct PoolResult {
+    pub stats: LatencyStats,
+    /// Mean slot utilization over the horizon.
+    pub utilization: f64,
+    pub max_queue_depth: usize,
+    pub slots_per_gpu: u32,
+    pub n_gpus: usize,
+}
+
+impl DesResult {
+    /// The paper's SLO check: overall P99 TTFT <= slo.
+    pub fn meets_slo(&mut self, slo_ms: f64) -> bool {
+        self.overall.p99_ttft() <= slo_ms
+    }
+
+    /// Fraction of requests with TTFT <= slo (the "99.98%" style numbers
+    /// in Table 5).
+    pub fn attainment(&self, slo_ms: f64) -> f64 {
+        let v = self.overall.ttft.values();
+        if v.is_empty() {
+            return 1.0;
+        }
+        v.iter().filter(|&&t| t <= slo_ms).count() as f64 / v.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_percentiles() {
+        let mut s = LatencyStats::default();
+        for i in 1..=1000 {
+            s.record(i as f64, 2.0 * i as f64, 3.0 * i as f64);
+        }
+        assert_eq!(s.count, 1000);
+        assert_eq!(s.wait.p99(), 990.0);
+        assert_eq!(s.p99_ttft(), 1980.0);
+    }
+
+    #[test]
+    fn slo_and_attainment() {
+        let mut r = DesResult {
+            per_pool: vec![],
+            overall: LatencyStats::default(),
+            horizon_ms: 1000.0,
+            n_requests: 100,
+            n_compressed: 0,
+        };
+        for i in 0..100 {
+            let ttft = if i < 98 { 10.0 } else { 600.0 };
+            r.overall.record(0.0, ttft, ttft + 5.0);
+        }
+        assert!(!r.meets_slo(500.0)); // p99 = 600
+        assert!(r.meets_slo(700.0));
+        assert!((r.attainment(500.0) - 0.98).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,13 @@
+//! Request-level discrete-event simulation (paper §3.1 Phase 2).
+//!
+//! Each request fires exactly two events — arrival and completion — so
+//! simulating 10^4 requests takes milliseconds. The fidelity lever is the
+//! *slot model*: each GPU instance exposes `n_max` KV slots and a request
+//! holds one slot for its full `iters x t_iter(n_max)` duration. That is
+//! what surfaces the head-of-line blocking Erlang-C misses on heavy-tailed
+//! workloads (paper §4.2).
+
+pub mod engine;
+pub mod event;
+pub mod metrics;
+pub mod pool;

@@ -1,0 +1,202 @@
+//! Pool state for the DES: a FIFO queue in front of `n` GPU instances,
+//! each with a KV-slot budget (paper §2.1 slot math + §3.1 Phase 2).
+
+use crate::gpu::profile::GpuProfile;
+
+/// One GPU instance: `n_max` concurrent KV slots, of which `busy` are held.
+#[derive(Debug, Clone)]
+pub struct GpuInstance {
+    pub busy: u32,
+    /// Slot capacity at the pool's context budget (possibly batch-capped).
+    pub n_max: u32,
+    /// Accumulated busy slot-milliseconds (for utilization reporting).
+    pub busy_slot_ms: f64,
+    last_change_ms: f64,
+}
+
+impl GpuInstance {
+    fn new(n_max: u32) -> Self {
+        GpuInstance { busy: 0, n_max, busy_slot_ms: 0.0, last_change_ms: 0.0 }
+    }
+
+    fn account(&mut self, now_ms: f64) {
+        self.busy_slot_ms += self.busy as f64 * (now_ms - self.last_change_ms);
+        self.last_change_ms = now_ms;
+    }
+
+    fn acquire(&mut self, now_ms: f64) {
+        self.account(now_ms);
+        self.busy += 1;
+        debug_assert!(self.busy <= self.n_max);
+    }
+
+    fn release(&mut self, now_ms: f64) {
+        self.account(now_ms);
+        debug_assert!(self.busy > 0);
+        self.busy -= 1;
+    }
+
+    pub fn free(&self) -> u32 {
+        self.n_max.saturating_sub(self.busy)
+    }
+}
+
+/// A serving pool: GPU type, context budget, FIFO queue, instances.
+#[derive(Debug, Clone)]
+pub struct DesPool {
+    pub gpu: GpuProfile,
+    /// Context budget the KV cache is provisioned for.
+    pub ctx_budget: f64,
+    /// Effective slot count per instance = min(n_max(ctx), batch_cap).
+    pub slots_per_gpu: u32,
+    pub instances: Vec<GpuInstance>,
+    /// FIFO of request ids waiting for a slot.
+    pub queue: std::collections::VecDeque<u32>,
+    /// Peak queue depth observed (reporting).
+    pub max_queue_depth: usize,
+}
+
+impl DesPool {
+    /// Build a pool of `n_gpus` instances. `batch_cap` models vLLM's
+    /// `max_num_seqs` (None = KV-limited only); grid-flex analysis lowers
+    /// it to shed power (paper §4.8).
+    pub fn new(
+        gpu: GpuProfile,
+        n_gpus: usize,
+        ctx_budget: f64,
+        batch_cap: Option<u32>,
+    ) -> Self {
+        let kv_slots = gpu.n_eff(ctx_budget) as u32;
+        let slots = batch_cap.map_or(kv_slots, |c| c.min(kv_slots)).max(1);
+        DesPool {
+            gpu,
+            ctx_budget,
+            slots_per_gpu: slots,
+            instances: (0..n_gpus).map(|_| GpuInstance::new(slots)).collect(),
+            queue: std::collections::VecDeque::new(),
+            max_queue_depth: 0,
+        }
+    }
+
+    /// Index of the instance with the most free slots (least-loaded
+    /// dispatch), or None if every slot in the pool is held.
+    pub fn pick_instance(&self) -> Option<usize> {
+        let (idx, inst) = self
+            .instances
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, inst)| inst.free())?;
+        if inst.free() > 0 {
+            Some(idx)
+        } else {
+            None
+        }
+    }
+
+    pub fn acquire(&mut self, instance: usize, now_ms: f64) {
+        self.instances[instance].acquire(now_ms);
+    }
+
+    pub fn release(&mut self, instance: usize, now_ms: f64) {
+        self.instances[instance].release(now_ms);
+    }
+
+    pub fn enqueue(&mut self, req: u32) {
+        self.queue.push_back(req);
+        self.max_queue_depth = self.max_queue_depth.max(self.queue.len());
+    }
+
+    /// Mean slot utilization over [0, horizon_ms].
+    pub fn utilization(&self, horizon_ms: f64) -> f64 {
+        if horizon_ms <= 0.0 || self.instances.is_empty() {
+            return 0.0;
+        }
+        let total: f64 = self
+            .instances
+            .iter()
+            .map(|i| i.busy_slot_ms + i.busy as f64 * (horizon_ms - i.last_change_ms))
+            .sum();
+        total / (horizon_ms * self.instances.len() as f64 * self.slots_per_gpu as f64)
+    }
+
+    /// Total free slots across the pool.
+    pub fn free_slots(&self) -> u32 {
+        self.instances.iter().map(|i| i.free()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::catalog::GpuCatalog;
+
+    fn a100() -> GpuProfile {
+        GpuCatalog::standard().get("A100").unwrap().clone()
+    }
+
+    #[test]
+    fn slots_follow_ctx_budget() {
+        let p = DesPool::new(a100(), 3, 8192.0, None);
+        assert_eq!(p.slots_per_gpu, 128);
+        assert_eq!(p.free_slots(), 384);
+        let p65k = DesPool::new(a100(), 3, 65536.0, None);
+        assert_eq!(p65k.slots_per_gpu, 16);
+    }
+
+    #[test]
+    fn batch_cap_limits_slots() {
+        let p = DesPool::new(a100(), 1, 4096.0, Some(13));
+        assert_eq!(p.slots_per_gpu, 13);
+        // Cap above KV limit has no effect.
+        let p2 = DesPool::new(a100(), 1, 65536.0, Some(10_000));
+        assert_eq!(p2.slots_per_gpu, 16);
+        // Cap of zero clamps to one slot.
+        let p3 = DesPool::new(a100(), 1, 4096.0, Some(0));
+        assert_eq!(p3.slots_per_gpu, 1);
+    }
+
+    #[test]
+    fn least_loaded_dispatch() {
+        let mut p = DesPool::new(a100(), 2, 65536.0, None);
+        p.acquire(0, 0.0);
+        p.acquire(0, 0.0);
+        assert_eq!(p.pick_instance(), Some(1));
+        p.acquire(1, 0.0);
+        p.acquire(1, 0.0);
+        p.acquire(1, 0.0);
+        assert_eq!(p.pick_instance(), Some(0));
+    }
+
+    #[test]
+    fn full_pool_returns_none() {
+        let mut p = DesPool::new(a100(), 1, 65536.0, Some(2));
+        p.acquire(0, 0.0);
+        p.acquire(0, 0.0);
+        assert_eq!(p.pick_instance(), None);
+        p.release(0, 10.0);
+        assert_eq!(p.pick_instance(), Some(0));
+    }
+
+    #[test]
+    fn utilization_accounting() {
+        let mut p = DesPool::new(a100(), 1, 65536.0, Some(2));
+        // One slot busy for the whole horizon, the other for half.
+        p.acquire(0, 0.0);
+        p.acquire(0, 50.0);
+        p.release(0, 100.0);
+        let u = p.utilization(100.0);
+        // slot-ms = 1*100 + 1*50 = 150 of 200 -> 0.75.
+        assert!((u - 0.75).abs() < 1e-9, "u = {u}");
+    }
+
+    #[test]
+    fn queue_depth_tracking() {
+        let mut p = DesPool::new(a100(), 1, 65536.0, None);
+        for i in 0..5 {
+            p.enqueue(i);
+        }
+        p.queue.pop_front();
+        p.enqueue(99);
+        assert_eq!(p.max_queue_depth, 5);
+    }
+}

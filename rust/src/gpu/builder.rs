@@ -1,0 +1,253 @@
+//! ProfileBuilder: derive (W, H, n_max) from hardware first principles
+//! (paper §3.2: "ProfileBuilder can derive equivalent constants from first
+//! principles using the roofline decomposition from AIConfigurator").
+//!
+//! Decode iterations on a weight-streaming engine are memory-bound:
+//!
+//! * `W` ≈ time to stream this GPU's shard of the model weights from HBM
+//!   once per iteration, plus a fixed kernel-launch overhead;
+//! * `H` ≈ marginal per-sequence cost: the sequence's KV-cache read at the
+//!   working context plus its marginal matmul FLOPs;
+//! * `kv_blocks` ≈ the VRAM left after weights, divided by the KV bytes of
+//!   one 16-token block.
+//!
+//! Raw roofline numbers land within a small factor of measured serving
+//! latency (real engines overlap transfers and fuse kernels), so the
+//! builder supports calibration against one measured reference profile —
+//! the same workflow the paper describes for Vidur-derived ManualProfiles.
+
+use crate::gpu::profile::GpuProfile;
+
+/// Hardware datasheet numbers for a GPU generation.
+#[derive(Debug, Clone)]
+pub struct HardwareSpec {
+    pub name: String,
+    /// Dense bf16 throughput, TFLOP/s.
+    pub tflops_bf16: f64,
+    /// HBM bandwidth, GB/s.
+    pub hbm_gb_s: f64,
+    pub vram_gb: f64,
+    /// Typical board power, watts.
+    pub tdp_w: f64,
+    /// Idle power, watts.
+    pub idle_w: f64,
+    pub cost_per_hr: f64,
+}
+
+impl HardwareSpec {
+    pub fn a10g() -> Self {
+        HardwareSpec {
+            name: "A10G".into(),
+            tflops_bf16: 125.0,
+            hbm_gb_s: 600.0,
+            vram_gb: 24.0,
+            tdp_w: 300.0,
+            idle_w: 60.0,
+            cost_per_hr: 1.0103,
+        }
+    }
+
+    pub fn a100() -> Self {
+        HardwareSpec {
+            name: "A100".into(),
+            tflops_bf16: 312.0,
+            hbm_gb_s: 2039.0,
+            vram_gb: 80.0,
+            tdp_w: 400.0,
+            idle_w: 100.0,
+            cost_per_hr: 2.21,
+        }
+    }
+
+    pub fn h100() -> Self {
+        HardwareSpec {
+            name: "H100".into(),
+            tflops_bf16: 989.0,
+            hbm_gb_s: 3350.0,
+            vram_gb: 80.0,
+            tdp_w: 700.0,
+            idle_w: 300.0,
+            cost_per_hr: 4.02,
+        }
+    }
+}
+
+/// Model-architecture numbers the roofline needs.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub params_b: f64,
+    /// Bytes per parameter (2 = bf16).
+    pub bytes_per_param: f64,
+    /// KV-cache bytes per token (all layers, K+V).
+    pub kv_bytes_per_token: f64,
+    /// Tensor-parallel degree of the serving deployment.
+    pub tp: f64,
+    /// Working context for the H estimate, tokens.
+    pub ref_ctx: f64,
+}
+
+impl ModelSpec {
+    /// Llama-3-70B: 80 layers, 8 KV heads x 128 dim, bf16 -> 320 KB/token.
+    pub fn llama3_70b(tp: f64) -> Self {
+        ModelSpec {
+            name: "llama-3-70b".into(),
+            params_b: 70.0,
+            bytes_per_param: 2.0,
+            kv_bytes_per_token: 327_680.0,
+            tp,
+            ref_ctx: 4096.0,
+        }
+    }
+}
+
+/// Builds GpuProfiles from first principles.
+#[derive(Debug, Clone)]
+pub struct ProfileBuilder {
+    pub model: ModelSpec,
+    /// Fixed kernel overhead per iteration, ms.
+    pub kernel_overhead_ms: f64,
+    /// Calibration multipliers (1.0 = raw roofline).
+    pub w_scale: f64,
+    pub h_scale: f64,
+}
+
+impl ProfileBuilder {
+    pub fn new(model: ModelSpec) -> Self {
+        ProfileBuilder { model, kernel_overhead_ms: 0.5, w_scale: 1.0, h_scale: 1.0 }
+    }
+
+    /// Raw roofline W (ms): weight streaming + kernel overhead.
+    pub fn roofline_w_ms(&self, hw: &HardwareSpec) -> f64 {
+        let weight_gb =
+            self.model.params_b * self.model.bytes_per_param / self.model.tp;
+        weight_gb / hw.hbm_gb_s * 1000.0 + self.kernel_overhead_ms
+    }
+
+    /// Raw roofline H (ms/slot): KV read at the reference context plus
+    /// marginal matmul FLOPs for one sequence's token.
+    pub fn roofline_h_ms(&self, hw: &HardwareSpec) -> f64 {
+        let kv_gb = self.model.kv_bytes_per_token * self.model.ref_ctx
+            / self.model.tp
+            / 1e9;
+        let t_kv = kv_gb / hw.hbm_gb_s * 1000.0;
+        let flops = 2.0 * self.model.params_b * 1e9 / self.model.tp;
+        let t_compute = flops / (hw.tflops_bf16 * 1e12) * 1000.0;
+        t_kv + t_compute
+    }
+
+    /// KV block capacity: VRAM minus the weight shard, over block bytes.
+    pub fn kv_blocks(&self, hw: &HardwareSpec) -> f64 {
+        let weight_gb =
+            self.model.params_b * self.model.bytes_per_param / self.model.tp;
+        let free_gb = (hw.vram_gb - weight_gb).max(hw.vram_gb * 0.1);
+        let block_bytes = self.model.kv_bytes_per_token * 16.0 / self.model.tp;
+        (free_gb * 1e9 / block_bytes).floor()
+    }
+
+    /// Calibrate the builder's scale factors so that `hw` reproduces the
+    /// measured `reference` profile exactly; other GPU types then inherit
+    /// the same engine-efficiency correction.
+    pub fn calibrate(&mut self, hw: &HardwareSpec, reference: &GpuProfile) {
+        self.w_scale = reference.w_ms / self.roofline_w_ms(hw);
+        self.h_scale = reference.h_ms_per_slot / self.roofline_h_ms(hw);
+    }
+
+    /// Build a profile. Chunk size scales with compute throughput.
+    pub fn build(&self, hw: &HardwareSpec) -> GpuProfile {
+        let chunk = if hw.tflops_bf16 >= 800.0 { 1024.0 } else { 512.0 };
+        GpuProfile {
+            name: hw.name.clone(),
+            w_ms: self.roofline_w_ms(hw) * self.w_scale,
+            h_ms_per_slot: self.roofline_h_ms(hw) * self.h_scale,
+            kv_blocks: self.kv_blocks(hw),
+            vram_gb: hw.vram_gb,
+            chunk,
+            max_num_seqs: 128.0,
+            cost_per_hr: hw.cost_per_hr,
+            p_idle_w: hw.idle_w,
+            p_nom_w: hw.tdp_w.min(hw.idle_w + 300.0),
+            power_logistic_k: 1.0,
+            power_logistic_x0: 4.2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::catalog::GpuCatalog;
+
+    fn builder() -> ProfileBuilder {
+        ProfileBuilder::new(ModelSpec::llama3_70b(8.0))
+    }
+
+    #[test]
+    fn raw_roofline_orders_generations_correctly() {
+        let b = builder();
+        let w_a10g = b.roofline_w_ms(&HardwareSpec::a10g());
+        let w_a100 = b.roofline_w_ms(&HardwareSpec::a100());
+        let w_h100 = b.roofline_w_ms(&HardwareSpec::h100());
+        assert!(w_a10g > w_a100 && w_a100 > w_h100);
+        let h_a10g = b.roofline_h_ms(&HardwareSpec::a10g());
+        let h_h100 = b.roofline_h_ms(&HardwareSpec::h100());
+        assert!(h_a10g > h_h100);
+    }
+
+    #[test]
+    fn raw_roofline_near_hand_calibrated_constants() {
+        // The paper's constants should be within a small factor of the raw
+        // roofline (they absorb FlashAttention, overlap, etc.).
+        let b = builder();
+        let cat = GpuCatalog::standard();
+        for (hw, name) in [
+            (HardwareSpec::a100(), "A100"),
+            (HardwareSpec::h100(), "H100"),
+        ] {
+            let manual = cat.get(name).unwrap();
+            let w = b.roofline_w_ms(&hw);
+            let ratio = w / manual.w_ms;
+            assert!(
+                (0.3..3.0).contains(&ratio),
+                "{name}: roofline W {w} vs manual {} (ratio {ratio})",
+                manual.w_ms
+            );
+        }
+    }
+
+    #[test]
+    fn calibration_reproduces_reference_and_transfers() {
+        let mut b = builder();
+        let cat = GpuCatalog::standard();
+        let a100_manual = cat.get("A100").unwrap();
+        b.calibrate(&HardwareSpec::a100(), a100_manual);
+        let rebuilt = b.build(&HardwareSpec::a100());
+        assert!((rebuilt.w_ms - a100_manual.w_ms).abs() < 1e-9);
+        assert!((rebuilt.h_ms_per_slot - a100_manual.h_ms_per_slot).abs() < 1e-9);
+        // Transferred to H100, the derived constants land near the
+        // hand-calibrated ones (within 2x).
+        let h100 = b.build(&HardwareSpec::h100());
+        let manual = cat.get("H100").unwrap();
+        let wr = h100.w_ms / manual.w_ms;
+        let hr = h100.h_ms_per_slot / manual.h_ms_per_slot;
+        assert!((0.5..2.0).contains(&wr), "W ratio {wr}");
+        assert!((0.5..2.0).contains(&hr), "H ratio {hr}");
+    }
+
+    #[test]
+    fn kv_blocks_scale_with_free_vram() {
+        let b = builder();
+        let blocks_a100 = b.kv_blocks(&HardwareSpec::a100());
+        let blocks_a10g = b.kv_blocks(&HardwareSpec::a10g());
+        assert!(blocks_a100 > blocks_a10g * 5.0);
+    }
+
+    #[test]
+    fn built_profile_is_usable() {
+        let g = builder().build(&HardwareSpec::h100());
+        assert!(g.n_max(8192.0) >= 1.0);
+        assert!(g.t_iter(16.0) > 0.0);
+        assert_eq!(g.chunk, 1024.0);
+        assert!(g.power_w(128.0) <= g.p_nom_w);
+    }
+}

@@ -1,0 +1,176 @@
+//! The pre-built GPU profiles (paper §3.2 table + footnote 1 pricing).
+//!
+//! These are the hand-calibrated ManualProfile constants from the paper's
+//! `fleet_sim/gpu_profiles/profiles.py`, targeting Llama-3-70B with
+//! single-node TP serving:
+//!
+//! | GPU        | W (ms) | H (ms/slot) | n_max @ 8K | VRAM | $/hr  |
+//! |------------|--------|-------------|------------|------|-------|
+//! | A10G 24GB  | 12.0   | 0.90        | 64         | 24   | 1.010 |
+//! | A100 80GB  | 8.0    | 0.65        | 128        | 80   | 2.21  |
+//! | H100 80GB  | 4.0    | 0.32        | 256        | 80   | 4.02  |
+//!
+//! `kv_blocks` is derived from the printed `n_max @ 8K` column
+//! (n_max(8192) = kv_blocks / 512). Power constants reproduce the paper's
+//! §4.8 logistic fit for H100 (P(1) ≈ 304 W, P(128) ≈ 583 W against the
+//! ML.ENERGY measurements); A100/A10G use their TDP envelopes.
+
+use crate::gpu::profile::GpuProfile;
+
+/// A set of available GPU types.
+#[derive(Debug, Clone)]
+pub struct GpuCatalog {
+    profiles: Vec<GpuProfile>,
+}
+
+impl GpuCatalog {
+    /// The paper's three pre-built profiles.
+    pub fn standard() -> Self {
+        GpuCatalog {
+            profiles: vec![
+                GpuProfile {
+                    name: "A10G".into(),
+                    w_ms: 12.0,
+                    h_ms_per_slot: 0.90,
+                    kv_blocks: 32_768.0, // n_max(8K) = 64
+                    vram_gb: 24.0,
+                    chunk: 512.0,
+                    max_num_seqs: 128.0,
+                    cost_per_hr: 1.0103, // $8.85K/yr (§4 pricing)
+                    p_idle_w: 60.0,
+                    p_nom_w: 300.0,
+                    power_logistic_k: 1.0,
+                    power_logistic_x0: 4.2,
+                },
+                GpuProfile {
+                    name: "A100".into(),
+                    w_ms: 8.0,
+                    h_ms_per_slot: 0.65,
+                    kv_blocks: 65_536.0, // n_max(8K) = 128
+                    vram_gb: 80.0,
+                    chunk: 512.0,
+                    max_num_seqs: 128.0,
+                    cost_per_hr: 2.21, // $19.4K/yr
+                    p_idle_w: 100.0,
+                    p_nom_w: 400.0,
+                    power_logistic_k: 1.0,
+                    power_logistic_x0: 4.2,
+                },
+                GpuProfile {
+                    name: "H100".into(),
+                    w_ms: 4.0,
+                    h_ms_per_slot: 0.32,
+                    kv_blocks: 131_072.0, // n_max(8K) = 256
+                    vram_gb: 80.0,
+                    chunk: 1024.0,
+                    max_num_seqs: 128.0,
+                    cost_per_hr: 4.02, // $35.2K/yr
+                    p_idle_w: 300.0,
+                    p_nom_w: 600.0,
+                    power_logistic_k: 1.0,
+                    power_logistic_x0: 4.2,
+                },
+            ],
+        }
+    }
+
+    /// Catalog from explicit profiles (ManualProfile path).
+    pub fn from_profiles(profiles: Vec<GpuProfile>) -> Self {
+        GpuCatalog { profiles }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&GpuProfile> {
+        self.profiles
+            .iter()
+            .find(|p| p.name.eq_ignore_ascii_case(name))
+    }
+
+    pub fn require(&self, name: &str) -> anyhow::Result<&GpuProfile> {
+        self.get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown GPU type '{name}'"))
+    }
+
+    pub fn profiles(&self) -> &[GpuProfile] {
+        &self.profiles
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.profiles.iter().map(|p| p.name.as_str()).collect()
+    }
+
+    /// Add or replace a profile (user-supplied ManualProfile overrides).
+    pub fn upsert(&mut self, profile: GpuProfile) {
+        if let Some(slot) = self
+            .profiles
+            .iter_mut()
+            .find(|p| p.name.eq_ignore_ascii_case(&profile.name))
+        {
+            *slot = profile;
+        } else {
+            self.profiles.push(profile);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nmax_at_8k_matches_paper_table() {
+        let cat = GpuCatalog::standard();
+        assert_eq!(cat.require("A10G").unwrap().n_max(8192.0), 64.0);
+        assert_eq!(cat.require("A100").unwrap().n_max(8192.0), 128.0);
+        assert_eq!(cat.require("H100").unwrap().n_max(8192.0), 256.0);
+    }
+
+    #[test]
+    fn yearly_costs_match_case_study_rates() {
+        // §4: "A10G 8.85K/yr, A100 19.4K/yr, H100 35.2K/yr".
+        let cat = GpuCatalog::standard();
+        let a10g = cat.require("A10G").unwrap().cost_per_year();
+        let a100 = cat.require("A100").unwrap().cost_per_year();
+        let h100 = cat.require("H100").unwrap().cost_per_year();
+        assert!((a10g - 8_850.0).abs() < 10.0, "{a10g}");
+        assert!((a100 - 19_400.0).abs() < 50.0, "{a100}");
+        assert!((h100 - 35_200.0).abs() < 50.0, "{h100}");
+    }
+
+    #[test]
+    fn lookup_is_case_insensitive() {
+        let cat = GpuCatalog::standard();
+        assert!(cat.get("h100").is_some());
+        assert!(cat.get("B200").is_none());
+        assert!(cat.require("B200").is_err());
+    }
+
+    #[test]
+    fn upsert_replaces_and_adds() {
+        let mut cat = GpuCatalog::standard();
+        let mut h = cat.get("H100").unwrap().clone();
+        h.cost_per_hr = 9.99;
+        cat.upsert(h);
+        assert_eq!(cat.profiles().len(), 3);
+        assert_eq!(cat.get("H100").unwrap().cost_per_hr, 9.99);
+        let mut b200 = cat.get("H100").unwrap().clone();
+        b200.name = "B200".into();
+        cat.upsert(b200);
+        assert_eq!(cat.profiles().len(), 4);
+    }
+
+    #[test]
+    fn speed_ordering_is_sane() {
+        // Faster generations have lower W and H.
+        let cat = GpuCatalog::standard();
+        let (a10g, a100, h100) = (
+            cat.get("A10G").unwrap(),
+            cat.get("A100").unwrap(),
+            cat.get("H100").unwrap(),
+        );
+        assert!(a10g.w_ms > a100.w_ms && a100.w_ms > h100.w_ms);
+        assert!(a10g.h_ms_per_slot > a100.h_ms_per_slot);
+        assert!(a100.h_ms_per_slot > h100.h_ms_per_slot);
+        assert!(a10g.cost_per_hr < a100.cost_per_hr);
+        assert!(a100.cost_per_hr < h100.cost_per_hr);
+    }
+}

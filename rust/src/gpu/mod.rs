@@ -1,0 +1,8 @@
+//! Physics-informed GPU performance model (paper §2.1, §3.2, §4.8):
+//! profiles, the KV-slot math, the roofline ProfileBuilder, and the
+//! logistic power model used by grid-flex analysis.
+
+pub mod builder;
+pub mod catalog;
+pub mod power;
+pub mod profile;

@@ -1,0 +1,217 @@
+//! GpuProfile: the paper's physics-informed GPU performance model.
+//!
+//! Each GPU type is characterized by `(W, H, n_max, C_chunk)` (paper §3.2):
+//!
+//! * `W` (ms) — baseline compute per continuous-batching iteration,
+//! * `H` (ms/slot) — memory-bandwidth cost per concurrent sequence,
+//! * `kv_blocks` — PagedAttention block capacity; `n_max(B)` follows the
+//!   slot math of §2.1: `n_max(B) = floor(kv_blocks / ceil(B/16))`,
+//! * `C_chunk` — prefill chunk size,
+//! * cost per GPU-hour, and the logistic power-curve parameters of §4.8.
+//!
+//! The constants in [`crate::gpu::catalog`] are the paper's hand-calibrated
+//! ManualProfile values (targeting Llama-3-70B, single-node TP);
+//! [`crate::gpu::builder::ProfileBuilder`] derives equivalents from roofline
+//! first principles, and users can substitute measured constants.
+
+/// Tokens per PagedAttention block (vLLM default, paper §2.1).
+pub const BLOCK_TOKENS: f64 = 16.0;
+
+/// Hours per year used for $/yr conversions.
+pub const HOURS_PER_YEAR: f64 = 8760.0;
+
+/// A GPU type's performance, capacity, cost, and power model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuProfile {
+    pub name: String,
+    /// Baseline compute per iteration, ms.
+    pub w_ms: f64,
+    /// Memory-bandwidth cost per concurrent sequence, ms/slot.
+    pub h_ms_per_slot: f64,
+    /// PagedAttention block capacity (16 tokens each).
+    pub kv_blocks: f64,
+    /// VRAM in GB (drives validity checks for long-context pools).
+    pub vram_gb: f64,
+    /// Prefill chunk size in tokens.
+    pub chunk: f64,
+    /// Engine cap on concurrent sequences (vLLM `max_num_seqs`). The
+    /// effective batch is `n_eff(B) = min(n_max(B), max_num_seqs)`; the
+    /// paper's Table 9 baseline (H100 at 8K ctx running n_max = 128, not
+    /// the KV-limited 256) fixes this at the vLLM default of 128.
+    pub max_num_seqs: f64,
+    /// On-demand cost per GPU-hour, dollars.
+    pub cost_per_hr: f64,
+    /// Idle power draw, watts (logistic curve floor, §4.8).
+    pub p_idle_w: f64,
+    /// Nominal (saturated) power draw, watts.
+    pub p_nom_w: f64,
+    /// Logistic power curve shape (paper: k = 1.0).
+    pub power_logistic_k: f64,
+    /// Logistic power curve midpoint in log2(batch) (paper: x0 = 4.2).
+    pub power_logistic_x0: f64,
+}
+
+impl GpuProfile {
+    /// Maximum concurrent KV slots at context budget `b` tokens
+    /// (paper §2.1): `n_max(B) = floor(kv_blocks / ceil(B/16))`, >= 1.
+    pub fn n_max(&self, b_tokens: f64) -> f64 {
+        let blocks_per_seq = (b_tokens / BLOCK_TOKENS).ceil().max(1.0);
+        (self.kv_blocks / blocks_per_seq).floor().max(1.0)
+    }
+
+    /// Effective concurrent batch at context budget `b`: KV-slot capacity
+    /// clipped by the engine's `max_num_seqs`.
+    pub fn n_eff(&self, b_tokens: f64) -> f64 {
+        self.n_max(b_tokens).min(self.max_num_seqs).max(1.0)
+    }
+
+    /// Iteration latency under continuous batching with `n` concurrent
+    /// sequences (paper Eq. 3): `t_iter(n) = W + H * n`, ms.
+    pub fn t_iter(&self, n: f64) -> f64 {
+        self.w_ms + self.h_ms_per_slot * n
+    }
+
+    /// Slot-hold iterations for a request (paper Eq. 4 numerator):
+    /// `ceil(L_in / C_chunk) + L_out`.
+    pub fn iters(&self, l_in: f64, l_out: f64) -> f64 {
+        (l_in / self.chunk).ceil() + l_out.max(1.0)
+    }
+
+    /// Expected *server-level* service time (paper Eq. 4), ms: the GPU
+    /// amortizes `n_max` concurrent slots, so per-request service time is
+    /// `iters / n_max * t_iter(n_max)`.
+    pub fn service_ms(&self, l_in: f64, l_out: f64, ctx_budget: f64) -> f64 {
+        let n = self.n_eff(ctx_budget);
+        self.iters(l_in, l_out) / n * self.t_iter(n)
+    }
+
+    /// Slot-hold duration for the DES (ms): a request occupies one KV slot
+    /// for its full `iters * t_iter(n_max)` (conservative n = n_max; this
+    /// is what exposes head-of-line blocking, paper §4.2).
+    pub fn slot_hold_ms(&self, l_in: f64, l_out: f64, ctx_budget: f64) -> f64 {
+        let n = self.n_eff(ctx_budget);
+        self.iters(l_in, l_out) * self.t_iter(n)
+    }
+
+    /// Prefill latency (paper Eq. 5 middle term), ms.
+    pub fn prefill_ms(&self, l_in: f64, ctx_budget: f64) -> f64 {
+        let n = self.n_eff(ctx_budget);
+        (l_in / self.chunk).ceil() * self.t_iter(n)
+    }
+
+    /// Time-per-output-token at batch level `n` (decode phase), ms.
+    pub fn tpot_ms(&self, n: f64) -> f64 {
+        self.t_iter(n)
+    }
+
+    /// Sustained token throughput at batch `n`, tokens/ms.
+    pub fn token_rate(&self, n: f64) -> f64 {
+        n / self.t_iter(n)
+    }
+
+    /// Whether this GPU can hold even one sequence of `ctx` tokens in KV
+    /// cache (A10G cannot serve 300K-token contexts, §4.3).
+    pub fn supports_context(&self, ctx: f64) -> bool {
+        self.kv_blocks * BLOCK_TOKENS >= ctx
+    }
+
+    pub fn cost_per_year(&self) -> f64 {
+        self.cost_per_hr * HOURS_PER_YEAR
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::catalog::GpuCatalog;
+
+    fn a100() -> GpuProfile {
+        GpuCatalog::standard().get("A100").unwrap().clone()
+    }
+
+    fn h100() -> GpuProfile {
+        GpuCatalog::standard().get("H100").unwrap().clone()
+    }
+
+    #[test]
+    fn slot_math_matches_paper_section_2_1() {
+        // "An A100-80GB holds 65,536 blocks ... at B=8,192 this is 128; at
+        // B=65,536 it drops to 16. That 8x ratio ..."
+        let g = a100();
+        assert_eq!(g.n_max(8192.0), 128.0);
+        assert_eq!(g.n_max(65536.0), 16.0);
+        assert_eq!(g.n_max(8192.0) / g.n_max(65536.0), 8.0);
+        // At B=4096 the short pool runs 256 slots (§4.1).
+        assert_eq!(g.n_max(4096.0), 256.0);
+    }
+
+    #[test]
+    fn slot_math_rounds_up_blocks() {
+        let g = a100();
+        // 8193 tokens needs 513 blocks -> floor(65536/513) = 127.
+        assert_eq!(g.n_max(8193.0), 127.0);
+        // Tiny contexts: one block per sequence.
+        assert_eq!(g.n_max(10.0), 65536.0);
+    }
+
+    #[test]
+    fn t_iter_matches_paper_example() {
+        // "For Llama-3-70B on A100-80GB: W = 8 ms, H = 0.65 ms/slot."
+        let g = a100();
+        assert!((g.t_iter(16.0) - 18.4).abs() < 1e-9);
+        assert!((g.t_iter(128.0) - 91.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn service_time_formula() {
+        // Eq. 4 hand-check: L_in=1000, L_out=500, B=8192 on A100:
+        // iters = ceil(1000/512) + 500 = 502; E[S] = 502/128 * 91.2.
+        let g = a100();
+        let want = 502.0 / 128.0 * 91.2;
+        assert!((g.service_ms(1000.0, 500.0, 8192.0) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slot_hold_is_nmax_times_service() {
+        let g = h100();
+        let (li, lo, b) = (2000.0, 300.0, 8192.0);
+        let hold = g.slot_hold_ms(li, lo, b);
+        let serv = g.service_ms(li, lo, b);
+        assert!((hold / serv - g.n_eff(b)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prefill_uses_chunks() {
+        let g = h100(); // chunk=1024
+        let t = g.prefill_ms(4096.0, 8192.0);
+        assert!((t - 4.0 * g.t_iter(g.n_eff(8192.0))).abs() < 1e-9);
+        // H100's larger chunk roughly halves prefill time vs A100 (§4.6).
+        let a = a100();
+        let ratio = a.prefill_ms(65536.0, 65536.0) / g.prefill_ms(65536.0, 65536.0);
+        assert!(ratio > 2.0, "A100/H100 prefill ratio = {ratio}");
+    }
+
+    #[test]
+    fn token_rate_saturates_at_inverse_h() {
+        let g = h100();
+        let r = g.token_rate(100_000.0);
+        assert!((r - 1.0 / g.h_ms_per_slot).abs() < 0.01);
+    }
+
+    #[test]
+    fn context_support() {
+        let cat = GpuCatalog::standard();
+        let a10g = cat.get("A10G").unwrap();
+        // A10G: 32768 blocks * 16 = 524288 max tokens; supports 300K ctx
+        // only nominally — VRAM check is separate. But a 1M ctx is out.
+        assert!(!a10g.supports_context(1.0e6));
+        assert!(a10g.supports_context(8192.0));
+    }
+
+    #[test]
+    fn yearly_cost() {
+        let g = a100();
+        // $2.21/hr * 8760 = $19,360/yr ("A100 19.4K/yr", §4).
+        assert!((g.cost_per_year() - 19_359.6).abs() < 1.0);
+    }
+}

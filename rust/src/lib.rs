@@ -1,0 +1,62 @@
+//! # inference-fleet-sim
+//!
+//! A queueing-theory-grounded fleet capacity planner for LLM inference —
+//! a full reproduction of *"inference-fleet-sim: A Queueing-Theory-Grounded
+//! Fleet Capacity Planner for LLM Inference"* (CS.DC 2026) as a
+//! three-layer rust + JAX/Pallas system.
+//!
+//! Given a token-length CDF, an arrival rate λ, a P99-TTFT SLO, and a
+//! catalog of GPU types, the planner finds the minimum-cost fleet
+//! configuration — pool count, split threshold `B_short`, GPU type per
+//! pool, routing policy — that empirically meets the SLO:
+//!
+//! 1. **Phase 1 — analytical sweep** (paper §3.1): M/G/c with Kimura's
+//!    two-moment approximation over the whole candidate grid. The batched
+//!    evaluator is a JAX/Pallas computation AOT-compiled to
+//!    `artifacts/sweep.hlo.txt` and executed via PJRT ([`runtime`]), with
+//!    a numerically-equivalent pure-rust fallback in [`optimizer::analytic`].
+//! 2. **Phase 2 — DES verification** (paper §3.1): the top candidates are
+//!    replayed through a request-level discrete-event simulation with
+//!    slot-level continuous batching ([`des`]), which is authoritative for
+//!    heavy-tailed workloads where Erlang-C under-estimates tail latency.
+//!
+//! The crate also contains every substrate the paper depends on: the
+//! physics-informed GPU performance model ([`gpu`]), the workload model
+//! with the LMSYS / Azure / agent CDFs ([`workload`]), the four routing
+//! policies ([`router`]), disaggregated prefill/decode planning, grid
+//! demand-response analysis, and reliability-aware sizing ([`optimizer`]).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use fleet_sim::prelude::*;
+//!
+//! let workload = WorkloadSpec::builtin(BuiltinTrace::Azure, 100.0);
+//! let optimizer = FleetOptimizer::new(GpuCatalog::standard(), 500.0);
+//! let plan = optimizer.plan(&workload);
+//! println!("{}", plan.summary());
+//! ```
+
+pub mod cli;
+pub mod des;
+pub mod gpu;
+pub mod optimizer;
+pub mod queueing;
+pub mod report;
+pub mod router;
+pub mod runtime;
+pub mod scenarios;
+pub mod util;
+pub mod workload;
+
+/// Convenience re-exports of the main planner API surface.
+pub mod prelude {
+    pub use crate::des::engine::{DesConfig, SimPool, Simulator};
+    pub use crate::des::metrics::DesResult;
+    pub use crate::gpu::catalog::GpuCatalog;
+    pub use crate::gpu::profile::GpuProfile;
+    pub use crate::optimizer::planner::{FleetOptimizer, FleetPlan};
+    pub use crate::queueing::mgc::{PoolAnalysis, PoolSpec, WorkloadHist};
+    pub use crate::router::RoutingPolicy;
+    pub use crate::workload::spec::{BuiltinTrace, WorkloadSpec};
+}

@@ -1,0 +1,26 @@
+//! `fleet-sim` — the inference-fleet-sim CLI (L3 leader entrypoint).
+//!
+//! All planning runs in-process on the rust coordinator; the Phase-1
+//! analytical sweep optionally executes the AOT-compiled JAX/Pallas
+//! artifact via PJRT (`--backend aot`). Python never runs at plan time.
+
+use fleet_sim::cli::args::Args;
+use fleet_sim::cli::commands;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv, &["fast", "mixed", "explain"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    match commands::run(&args) {
+        Ok(out) => print!("{out}"),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

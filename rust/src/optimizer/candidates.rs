@@ -1,0 +1,306 @@
+//! Candidate fleet configurations for the Phase-1 sweep (paper §3.1).
+//!
+//! A candidate fixes `(B_short, n_s, n_l, GPU type per pool)`. The
+//! generator exploits pool independence to keep the grid small: for each
+//! `(B_short, gpu_s, gpu_l)` it brackets the GPU counts around the
+//! utilization-cap lower bound `n_min = ceil(lambda_pool * E[S] / rho_max)`
+//! instead of sweeping all of 1..512 — the same candidates a full grid
+//! would rank highest, at ~1% of the evaluations.
+
+use crate::gpu::catalog::GpuCatalog;
+use crate::gpu::profile::GpuProfile;
+use crate::queueing::erlang::C_MAX;
+use crate::queueing::mgc::{PoolSpec, RHO_MAX, WorkloadHist};
+use crate::workload::spec::WorkloadSpec;
+
+/// One fleet configuration under evaluation.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    /// Split threshold in tokens; >= max workload length means a
+    /// homogeneous (single-pool) fleet with n_l == 0.
+    pub b_short: f64,
+    pub n_s: u32,
+    pub n_l: u32,
+    pub gpu_s: GpuProfile,
+    pub gpu_l: GpuProfile,
+    /// Context budgets per pool (b_short and the workload max).
+    pub ctx_s: f64,
+    pub ctx_l: f64,
+}
+
+impl Candidate {
+    pub fn is_homogeneous(&self) -> bool {
+        self.n_l == 0
+    }
+
+    pub fn total_gpus(&self) -> u32 {
+        self.n_s + self.n_l
+    }
+
+    pub fn cost_per_year(&self) -> f64 {
+        self.n_s as f64 * self.gpu_s.cost_per_year()
+            + self.n_l as f64 * self.gpu_l.cost_per_year()
+    }
+
+    pub fn label(&self) -> String {
+        if self.is_homogeneous() {
+            format!("{} homo x{}", self.gpu_s.name, self.n_s)
+        } else {
+            format!(
+                "{}x{} short(B={}) + {}x{} long",
+                self.gpu_s.name, self.n_s, self.b_short, self.gpu_l.name, self.n_l
+            )
+        }
+    }
+
+    pub fn short_spec(&self) -> PoolSpec {
+        PoolSpec { gpu: self.gpu_s.clone(), n_gpus: self.n_s as usize,
+                   ctx_budget: self.ctx_s }
+    }
+
+    pub fn long_spec(&self) -> PoolSpec {
+        PoolSpec { gpu: self.gpu_l.clone(), n_gpus: self.n_l.max(1) as usize,
+                   ctx_budget: self.ctx_l }
+    }
+}
+
+/// Phase-1 evaluation of one candidate (mirrors the AOT artifact's output
+/// columns; see python/compile/model.py OUTPUT_COLUMNS).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CandidateResult {
+    pub rho_s: f64,
+    pub rho_l: f64,
+    pub ttft99_s: f64,
+    pub ttft99_l: f64,
+    pub w99_s: f64,
+    pub w99_l: f64,
+    pub cost_yr: f64,
+    pub feasible: bool,
+}
+
+impl CandidateResult {
+    pub fn worst_ttft(&self) -> f64 {
+        self.ttft99_s.max(self.ttft99_l)
+    }
+}
+
+/// Candidate-generation options.
+#[derive(Debug, Clone)]
+pub struct GenOptions {
+    /// Split thresholds to sweep (paper §4.1 uses {512 .. 12288}).
+    pub thresholds: Vec<f64>,
+    /// Include the homogeneous (no-split) baseline.
+    pub include_homogeneous: bool,
+    /// Allow different GPU types per pool (paper §4.6).
+    pub allow_mixed: bool,
+    /// How many counts above the utilization lower bound to explore.
+    pub headroom: u32,
+    /// Cap on GPUs per pool.
+    pub max_gpus_per_pool: u32,
+}
+
+impl Default for GenOptions {
+    fn default() -> Self {
+        GenOptions {
+            thresholds: vec![512.0, 1024.0, 2048.0, 3072.0, 4096.0, 8192.0,
+                             12288.0, 16384.0, 32768.0],
+            include_homogeneous: true,
+            allow_mixed: false,
+            headroom: 4,
+            max_gpus_per_pool: C_MAX as u32,
+        }
+    }
+}
+
+/// Utilization-cap lower bound on the GPU count for a pool slice.
+/// Returns None if the slice is empty (no pool needed).
+pub fn n_min_for_slice(
+    hist: &WorkloadHist,
+    lo: f64,
+    hi: f64,
+    lambda_total_ms: f64,
+    gpu: &GpuProfile,
+    ctx: f64,
+) -> Option<u32> {
+    let alpha = hist.mass(lo, hi);
+    if alpha <= 1e-12 {
+        return None;
+    }
+    // Mean iteration count over the slice.
+    let n = gpu.n_eff(ctx);
+    let mut i1 = 0.0;
+    for (p, &l) in hist.probs.iter().zip(&hist.lens) {
+        if l > lo && l <= hi {
+            let l_in = (l * hist.input_frac).ceil();
+            let l_out = (l - l_in).max(1.0);
+            i1 += p * gpu.iters(l_in, l_out);
+        }
+    }
+    i1 /= alpha;
+    // Under the equilibrium service model (mgc::equilibrium_batch) the
+    // rho <= RHO_MAX constraint has the closed form
+    //   c >= x H + x W / (n_eff * rho_max),  x = lambda_pool * E[iters].
+    let x = lambda_total_ms * alpha * i1; // demanded tokens/ms
+    let c = x * gpu.h_ms_per_slot + x * gpu.w_ms / (n * RHO_MAX);
+    Some((c.ceil() as u32).max(1))
+}
+
+/// Generate the Phase-1 candidate set for a workload.
+pub fn generate(
+    workload: &WorkloadSpec,
+    catalog: &GpuCatalog,
+    opts: &GenOptions,
+) -> Vec<Candidate> {
+    let hist = WorkloadHist::from_cdf(&workload.cdf, workload.input_fraction);
+    let max_len = workload.cdf.max_len();
+    let lam = workload.lambda_per_ms();
+    let mut out = Vec::new();
+
+    let gpus = catalog.profiles();
+    for gpu_s in gpus {
+        // Skip GPUs that cannot hold the short context at all.
+        for &b in &opts.thresholds {
+            if b >= max_len {
+                continue; // covered by the homogeneous candidates
+            }
+            if !gpu_s.supports_context(b) {
+                continue;
+            }
+            let long_types: Vec<&GpuProfile> = if opts.allow_mixed {
+                gpus.iter().collect()
+            } else {
+                vec![gpu_s]
+            };
+            for gpu_l in long_types {
+                if !gpu_l.supports_context(max_len) {
+                    continue;
+                }
+                let Some(ns_min) =
+                    n_min_for_slice(&hist, 0.0, b, lam, gpu_s, b)
+                else {
+                    continue;
+                };
+                let Some(nl_min) =
+                    n_min_for_slice(&hist, b, max_len, lam, gpu_l, max_len)
+                else {
+                    continue;
+                };
+                for ds in 0..=opts.headroom {
+                    for dl in 0..=opts.headroom {
+                        let n_s = (ns_min + ds).min(opts.max_gpus_per_pool);
+                        let n_l = (nl_min + dl).min(opts.max_gpus_per_pool);
+                        out.push(Candidate {
+                            b_short: b,
+                            n_s,
+                            n_l,
+                            gpu_s: gpu_s.clone(),
+                            gpu_l: gpu_l.clone(),
+                            ctx_s: b,
+                            ctx_l: max_len,
+                        });
+                    }
+                }
+            }
+        }
+        if opts.include_homogeneous && gpu_s.supports_context(max_len) {
+            if let Some(n_min) =
+                n_min_for_slice(&hist, 0.0, max_len, lam, gpu_s, max_len)
+            {
+                for d in 0..=opts.headroom * 2 {
+                    out.push(Candidate {
+                        b_short: max_len * 2.0,
+                        n_s: (n_min + d).min(opts.max_gpus_per_pool),
+                        n_l: 0,
+                        gpu_s: gpu_s.clone(),
+                        gpu_l: gpu_s.clone(),
+                        ctx_s: max_len,
+                        ctx_l: max_len,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::spec::BuiltinTrace;
+
+    fn azure100() -> WorkloadSpec {
+        WorkloadSpec::builtin(BuiltinTrace::Azure, 100.0)
+    }
+
+    #[test]
+    fn generates_two_pool_and_homogeneous() {
+        let cands = generate(&azure100(), &GpuCatalog::standard(),
+                             &GenOptions::default());
+        assert!(!cands.is_empty());
+        assert!(cands.iter().any(|c| c.is_homogeneous()));
+        assert!(cands.iter().any(|c| !c.is_homogeneous()));
+        // All thresholds beyond the Azure max (8192) fold into homo.
+        assert!(cands.iter().all(|c| c.is_homogeneous() || c.b_short < 8192.0));
+    }
+
+    #[test]
+    fn mixed_mode_generates_cross_type_pools() {
+        let mut opts = GenOptions::default();
+        let base = generate(&azure100(), &GpuCatalog::standard(), &opts).len();
+        opts.allow_mixed = true;
+        let cands = generate(&azure100(), &GpuCatalog::standard(), &opts);
+        assert!(cands.len() > base);
+        assert!(cands
+            .iter()
+            .any(|c| !c.is_homogeneous() && c.gpu_s.name != c.gpu_l.name));
+    }
+
+    #[test]
+    fn n_min_respects_utilization_cap() {
+        let w = azure100();
+        let hist = WorkloadHist::from_cdf(&w.cdf, w.input_fraction);
+        let cat = GpuCatalog::standard();
+        let h100 = cat.get("H100").unwrap();
+        let n = n_min_for_slice(&hist, 0.0, 1e9, w.lambda_per_ms(), h100,
+                                8192.0)
+            .unwrap();
+        // Sanity: a handful of H100s serve Azure at 100 req/s (Table 3).
+        assert!((4..=12).contains(&n), "n_min = {n}");
+        // Empty slice -> None.
+        assert!(n_min_for_slice(&hist, 1e8, 1e9, w.lambda_per_ms(), h100,
+                                8192.0)
+            .is_none());
+    }
+
+    #[test]
+    fn candidate_cost_and_labels() {
+        let cat = GpuCatalog::standard();
+        let c = Candidate {
+            b_short: 4096.0,
+            n_s: 3,
+            n_l: 5,
+            gpu_s: cat.get("A100").unwrap().clone(),
+            gpu_l: cat.get("A100").unwrap().clone(),
+            ctx_s: 4096.0,
+            ctx_l: 65536.0,
+        };
+        assert_eq!(c.total_gpus(), 8);
+        // Table 1: 8 A100s = $155K/yr.
+        assert!((c.cost_per_year() - 154_876.8).abs() < 10.0);
+        assert!(c.label().contains("A100"));
+    }
+
+    #[test]
+    fn slower_gpus_need_more_units() {
+        let w = azure100();
+        let hist = WorkloadHist::from_cdf(&w.cdf, w.input_fraction);
+        let cat = GpuCatalog::standard();
+        let n_a10g = n_min_for_slice(&hist, 0.0, 1e9, w.lambda_per_ms(),
+                                     cat.get("A10G").unwrap(), 8192.0)
+            .unwrap();
+        let n_h100 = n_min_for_slice(&hist, 0.0, 1e9, w.lambda_per_ms(),
+                                     cat.get("H100").unwrap(), 8192.0)
+            .unwrap();
+        assert!(n_a10g > n_h100 * 2, "a10g {n_a10g} vs h100 {n_h100}");
+    }
+}

@@ -1,0 +1,279 @@
+//! Grid demand-response analysis — `grid_flex_analysis()` (paper §4.8,
+//! Table 9).
+//!
+//! For each target power-reduction percentage the function:
+//!
+//! 1. inverts the logistic GPU power model to the implied batch cap
+//!    (`n_max'`),
+//! 2. *recalibrates* the M/G/c service rate at the reduced concurrency —
+//!    iterations are faster at lower batch (t_iter(n') < t_iter(n)), so
+//!    the analytical model must not reuse the full-batch service time,
+//! 3. re-evaluates Kimura P99 TTFT and stability,
+//! 4. verifies by DES — a full steady-state run, plus a windowed run for
+//!    the short-event bound (a 75 s curtailment inside a longer horizon).
+
+use crate::des::engine::{CapWindow, DesConfig, SimPool, Simulator};
+use crate::gpu::profile::GpuProfile;
+use crate::queueing::mgc::RHO_MAX;
+use crate::router::RoutingPolicy;
+use crate::workload::spec::WorkloadSpec;
+
+/// One row of the grid-flexibility curve.
+#[derive(Debug, Clone)]
+pub struct FlexPoint {
+    pub flex: f64,
+    /// Batch cap implied by the power target.
+    pub n_max: u32,
+    /// Per-GPU power at that cap, watts.
+    pub w_per_gpu: f64,
+    /// Fleet power, kW.
+    pub fleet_kw: f64,
+    /// Recalibrated analytical P99 TTFT (inf = unstable).
+    pub p99_analytic_ms: f64,
+    /// Steady-state DES P99 TTFT.
+    pub p99_des_ms: f64,
+    /// DES P99 TTFT for requests arriving during a short DR window.
+    pub p99_event_ms: f64,
+    /// Stable at steady state (analytical rho <= RHO_MAX).
+    pub steady_ok: bool,
+    /// SLO met during a short event window.
+    pub event_ok: bool,
+}
+
+/// Parameters of the analysis.
+#[derive(Debug, Clone)]
+pub struct GridFlexConfig {
+    /// Flex levels to sweep (fractions of nominal power).
+    pub flex_levels: Vec<f64>,
+    /// Fleet size (GPUs).
+    pub n_gpus: usize,
+    /// Baseline batch cap (vLLM max_num_seqs).
+    pub baseline_cap: u32,
+    /// P99 TTFT SLO, ms.
+    pub slo_ms: f64,
+    /// DES request count (paper: N = 15 000).
+    pub n_requests: usize,
+    /// Short-event duration, ms (paper: ~75 s).
+    pub event_ms: f64,
+    pub seed: u64,
+}
+
+impl Default for GridFlexConfig {
+    fn default() -> Self {
+        GridFlexConfig {
+            flex_levels: vec![0.0, 0.10, 0.20, 0.30, 0.40, 0.50],
+            n_gpus: 40,
+            baseline_cap: 128,
+            slo_ms: 500.0,
+            n_requests: 15_000,
+            event_ms: 75_000.0,
+            seed: 42,
+        }
+    }
+}
+
+/// Recalibrated analytical P99 TTFT at batch cap `cap` (paper §4.8:
+/// "the M/G/c service rate is recalibrated at each batch cap").
+pub fn analytic_p99_at_cap(
+    workload: &WorkloadSpec,
+    gpu: &GpuProfile,
+    n_gpus: usize,
+    ctx: f64,
+    cap: u32,
+) -> (f64, f64) {
+    // Reuse the standard pool model with a batch-capped clone of the
+    // profile: n_eff(ctx) then reflects min(n_max, cap) and the
+    // equilibrium recalibration happens inside analyze_pool.
+    let mut capped = gpu.clone();
+    capped.max_num_seqs = capped.max_num_seqs.min(cap as f64).max(1.0);
+    let hist = crate::queueing::mgc::WorkloadHist::from_cdf(
+        &workload.cdf, workload.input_fraction);
+    let spec = crate::queueing::mgc::PoolSpec {
+        gpu: capped, n_gpus, ctx_budget: ctx,
+    };
+    let a = crate::queueing::mgc::analyze_pool(
+        &hist, 0.0, ctx, workload.lambda_per_ms(), &spec);
+    (a.ttft99_ms, a.rho)
+}
+
+/// Run the full grid-flexibility analysis.
+pub fn grid_flex_analysis(
+    workload: &WorkloadSpec,
+    gpu: &GpuProfile,
+    cfg: &GridFlexConfig,
+) -> Vec<FlexPoint> {
+    let ctx = workload.cdf.max_len();
+    let mut out = Vec::with_capacity(cfg.flex_levels.len());
+    for &flex in &cfg.flex_levels {
+        let cap = if flex <= 0.0 {
+            cfg.baseline_cap
+        } else {
+            (gpu.batch_cap_for_flex(flex) as u32).min(cfg.baseline_cap)
+        };
+        let n_eff = (gpu.n_eff(ctx).min(cap as f64)).max(1.0);
+        let w_per_gpu = gpu.power_w(n_eff);
+        let fleet_kw = w_per_gpu * cfg.n_gpus as f64 / 1000.0;
+
+        let (p99_analytic, rho) =
+            analytic_p99_at_cap(workload, gpu, cfg.n_gpus, ctx, cap);
+        let steady_ok = rho <= RHO_MAX && p99_analytic <= cfg.slo_ms;
+        let p99_analytic = if rho > RHO_MAX { f64::INFINITY } else { p99_analytic };
+
+        // Steady-state DES at the cap.
+        let pools = vec![SimPool {
+            gpu: gpu.clone(),
+            n_gpus: cfg.n_gpus,
+            ctx_budget: ctx,
+            batch_cap: Some(cap),
+        }];
+        let des_cfg = DesConfig {
+            n_requests: cfg.n_requests,
+            seed: cfg.seed,
+            ..Default::default()
+        };
+        let mut steady = Simulator::new(
+            workload.clone(),
+            pools.clone(),
+            RoutingPolicy::Random { n_pools: 1 },
+            des_cfg.clone(),
+        )
+        .run();
+        let p99_des = steady.overall.p99_ttft();
+
+        // Short-event DES: full capacity except a cap window mid-run.
+        let expected_span_ms =
+            cfg.n_requests as f64 / workload.lambda_per_ms();
+        let start = (expected_span_ms * 0.3).max(1.0);
+        let window = CapWindow { start_ms: start, end_ms: start + cfg.event_ms,
+                                 cap };
+        let event_pools = vec![SimPool {
+            gpu: gpu.clone(),
+            n_gpus: cfg.n_gpus,
+            ctx_budget: ctx,
+            batch_cap: Some(cfg.baseline_cap),
+        }];
+        let event = Simulator::new(
+            workload.clone(),
+            event_pools,
+            RoutingPolicy::Random { n_pools: 1 },
+            DesConfig { cap_window: Some(window), ..des_cfg },
+        )
+        .run();
+        // P99 over requests that arrived inside the window.
+        let mut in_window = crate::util::stats::Samples::new();
+        {
+            // Re-derive arrival times to filter: same seed stream.
+            let sampled = workload.sample_requests(cfg.n_requests, cfg.seed);
+            for (s, &t) in sampled.iter().zip(event.overall.ttft.values()) {
+                if s.arrival_ms >= window.start_ms && s.arrival_ms < window.end_ms
+                {
+                    in_window.push(t);
+                }
+            }
+        }
+        let p99_event = if in_window.is_empty() {
+            0.0
+        } else {
+            in_window.p99()
+        };
+        out.push(FlexPoint {
+            flex,
+            n_max: cap,
+            w_per_gpu,
+            fleet_kw,
+            p99_analytic_ms: p99_analytic,
+            p99_des_ms: p99_des,
+            p99_event_ms: p99_event,
+            steady_ok,
+            event_ok: p99_event <= cfg.slo_ms,
+        })
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::catalog::GpuCatalog;
+    use crate::workload::spec::BuiltinTrace;
+
+    fn setup() -> (WorkloadSpec, GpuProfile, GridFlexConfig) {
+        let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 200.0);
+        let gpu = GpuCatalog::standard().get("H100").unwrap().clone();
+        let mut cfg = GridFlexConfig::default();
+        cfg.n_requests = 8_000; // keep tests quick
+        (w, gpu, cfg)
+    }
+
+    #[test]
+    fn reproduces_table9_cap_and_power_columns() {
+        let (w, gpu, cfg) = setup();
+        let rows = grid_flex_analysis(&w, &gpu, &cfg);
+        assert_eq!(rows.len(), 6);
+        // n_max column: 128, 48, 24, 13, 6-7, 1.
+        assert_eq!(rows[0].n_max, 128);
+        assert_eq!(rows[1].n_max, 48);
+        assert_eq!(rows[2].n_max, 24);
+        assert_eq!(rows[3].n_max, 13);
+        assert!((6..=7).contains(&rows[4].n_max));
+        assert_eq!(rows[5].n_max, 1);
+        // Fleet kW: 23.3 at baseline, monotone decreasing.
+        assert!((rows[0].fleet_kw - 23.3).abs() < 0.3, "{}", rows[0].fleet_kw);
+        for wpair in rows.windows(2) {
+            assert!(wpair[1].fleet_kw < wpair[0].fleet_kw);
+        }
+    }
+
+    #[test]
+    fn stability_degrades_with_depth() {
+        let (w, gpu, cfg) = setup();
+        let rows = grid_flex_analysis(&w, &gpu, &cfg);
+        // Shallow flex is steady-state safe; 50% collapses.
+        assert!(rows[0].steady_ok);
+        assert!(rows[1].steady_ok);
+        assert!(!rows[5].steady_ok, "50% flex must be unstable");
+        assert!(rows[5].p99_des_ms > cfg.slo_ms);
+        // Once unstable, it stays unstable at deeper flex.
+        let first_bad = rows.iter().position(|r| !r.steady_ok).unwrap();
+        assert!(rows[first_bad..].iter().all(|r| !r.steady_ok));
+    }
+
+    #[test]
+    fn short_events_tolerate_deeper_flex_than_steady_state() {
+        // Insight 8: the event-window bound is at least as permissive as
+        // the steady-state bound.
+        let (w, gpu, cfg) = setup();
+        let rows = grid_flex_analysis(&w, &gpu, &cfg);
+        let steady_depth = rows.iter().filter(|r| r.steady_ok).count();
+        let event_depth = rows.iter().filter(|r| r.event_ok).count();
+        assert!(event_depth >= steady_depth,
+                "event {event_depth} vs steady {steady_depth}");
+    }
+
+    #[test]
+    fn des_and_analytic_agree_when_stable() {
+        let (w, gpu, cfg) = setup();
+        let rows = grid_flex_analysis(&w, &gpu, &cfg);
+        for r in rows.iter().filter(|r| r.steady_ok) {
+            assert!(r.p99_des_ms <= cfg.slo_ms,
+                    "flex {}: DES {} violates SLO despite stable analytics",
+                    r.flex, r.p99_des_ms);
+        }
+    }
+
+    #[test]
+    fn recalibration_speeds_up_iterations() {
+        // t_iter(6) << t_iter(128): the recalibrated service model must
+        // reflect that (paper §4.8 "recalibrated at each batch cap").
+        let (w, gpu, _) = setup();
+        let (p99_cap13, rho13) = analytic_p99_at_cap(&w, &gpu, 40, 8192.0, 13);
+        let (p99_full, rho_full) = analytic_p99_at_cap(&w, &gpu, 40, 8192.0, 128);
+        // Both stable; the recalibrated model keeps TTFT in the same
+        // regime because the equilibrium batch sits below both caps
+        // (Table 9's constant analytic column).
+        assert!(rho13 < RHO_MAX && rho_full < RHO_MAX, "{rho13} {rho_full}");
+        assert!(p99_cap13.is_finite() && p99_full.is_finite());
+        assert!((p99_cap13 / p99_full - 1.0).abs() < 0.5,
+                "cap13 {p99_cap13} vs full {p99_full}");
+    }
+}

@@ -1,0 +1,11 @@
+//! The paper's contribution: the two-phase fleet optimizer (§3.1) and its
+//! companions — disaggregated P/D planning (§4.7), grid-flex analysis
+//! (§4.8), reliability-aware sizing (§3.5), and what-if λ sweeps (§4.4).
+
+pub mod analytic;
+pub mod candidates;
+pub mod disagg;
+pub mod gridflex;
+pub mod planner;
+pub mod reliability;
+pub mod whatif;

@@ -1,0 +1,299 @@
+//! The two-phase fleet optimizer (paper §3.1, Figure 1).
+//!
+//! Phase 1 ranks candidate configurations with the analytical M/G/c model
+//! (native or AOT-compiled JAX/Pallas evaluator); Phase 2 verifies the
+//! top-k by discrete-event simulation and returns the cheapest candidate
+//! that *empirically* meets the P99-TTFT SLO. Reliability-aware sizing
+//! (§3.5) is applied to the winner.
+
+use crate::des::engine::{DesConfig, SimPool, Simulator};
+use crate::gpu::catalog::GpuCatalog;
+use crate::optimizer::analytic::{rank_feasible, NativeSweep, SweepEval};
+use crate::optimizer::candidates::{generate, Candidate, CandidateResult,
+                                   GenOptions};
+use crate::optimizer::reliability::NodeAvail;
+use crate::router::RoutingPolicy;
+use crate::util::parallel::{default_threads, par_map};
+use crate::util::table::{dollars, millis};
+use crate::workload::spec::WorkloadSpec;
+
+/// Phase-2 verification outcome for one candidate.
+#[derive(Debug, Clone)]
+pub struct Verification {
+    pub p99_ttft_ms: f64,
+    pub p99_ttft_short_ms: f64,
+    pub p99_ttft_long_ms: f64,
+    pub utilization: Vec<f64>,
+    pub passed: bool,
+}
+
+/// A fully evaluated plan entry (candidate + both phases).
+#[derive(Debug, Clone)]
+pub struct PlanEntry {
+    pub candidate: Candidate,
+    pub analytic: CandidateResult,
+    pub verification: Option<Verification>,
+}
+
+/// The optimizer's output.
+#[derive(Debug, Clone)]
+pub struct FleetPlan {
+    /// Cheapest DES-verified configuration, if any passed.
+    pub chosen: Option<PlanEntry>,
+    /// All Phase-2-verified entries, cheapest first.
+    pub verified: Vec<PlanEntry>,
+    /// Phase-1 feasible count (for reporting).
+    pub n_phase1_feasible: usize,
+    pub n_candidates: usize,
+    /// Production GPU counts after reliability adjustment (§3.5).
+    pub production_n_s: u32,
+    pub production_n_l: u32,
+    pub backend: &'static str,
+}
+
+impl FleetPlan {
+    /// One-paragraph human summary.
+    pub fn summary(&self) -> String {
+        match &self.chosen {
+            Some(e) => {
+                let v = e.verification.as_ref().unwrap();
+                format!(
+                    "{} — {} / yr, DES P99 TTFT {} (short {}, long {}); \
+                     production counts with node_avail: {} short + {} long \
+                     [{} candidates, {} phase-1 feasible, backend {}]",
+                    e.candidate.label(),
+                    dollars(e.analytic.cost_yr),
+                    millis(v.p99_ttft_ms),
+                    millis(v.p99_ttft_short_ms),
+                    millis(v.p99_ttft_long_ms),
+                    self.production_n_s,
+                    self.production_n_l,
+                    self.n_candidates,
+                    self.n_phase1_feasible,
+                    self.backend,
+                )
+            }
+            None => format!(
+                "no feasible configuration found ({} candidates, {} phase-1 \
+                 feasible, backend {})",
+                self.n_candidates, self.n_phase1_feasible, self.backend
+            ),
+        }
+    }
+}
+
+/// The two-phase optimizer.
+pub struct FleetOptimizer {
+    pub catalog: GpuCatalog,
+    pub slo_ms: f64,
+    pub gen: GenOptions,
+    /// How many Phase-1 leaders go to DES verification.
+    pub top_k: usize,
+    pub des: DesConfig,
+    /// Reliability adjustment applied to the winner (§3.5).
+    pub node_avail: NodeAvail,
+    /// Worker threads for Phase-2.
+    pub threads: usize,
+}
+
+impl FleetOptimizer {
+    pub fn new(catalog: GpuCatalog, slo_ms: f64) -> Self {
+        FleetOptimizer {
+            catalog,
+            slo_ms,
+            gen: GenOptions::default(),
+            top_k: 8,
+            des: DesConfig::default(),
+            node_avail: NodeAvail::default(),
+            threads: default_threads(),
+        }
+    }
+
+    /// Phase 1 only: generate + evaluate + rank. Returns (candidates,
+    /// results, ranked indices).
+    pub fn phase1(
+        &self,
+        workload: &WorkloadSpec,
+        eval: &dyn SweepEval,
+    ) -> anyhow::Result<(Vec<Candidate>, Vec<CandidateResult>, Vec<usize>)> {
+        let cands = generate(workload, &self.catalog, &self.gen);
+        let results = eval.eval(workload, &cands, self.slo_ms)?;
+        let ranked = rank_feasible(&cands, &results);
+        Ok((cands, results, ranked))
+    }
+
+    /// Phase 2: DES-verify one candidate with the production LengthRouter.
+    pub fn verify(&self, workload: &WorkloadSpec, cand: &Candidate) -> Verification {
+        let (pools, router) = plan_pools(cand);
+        let sim = Simulator::new(workload.clone(), pools, router, self.des.clone());
+        let mut r = sim.run();
+        let p99 = r.overall.p99_ttft();
+        let p99_s = r.per_pool[0].stats.ttft.p99();
+        let p99_l = if r.per_pool.len() > 1 {
+            r.per_pool[1].stats.ttft.p99()
+        } else {
+            0.0
+        };
+        Verification {
+            p99_ttft_ms: p99,
+            p99_ttft_short_ms: p99_s,
+            p99_ttft_long_ms: p99_l,
+            utilization: r.per_pool.iter().map(|p| p.utilization).collect(),
+            passed: p99 <= self.slo_ms,
+        }
+    }
+
+    /// Full two-phase plan with the given Phase-1 backend.
+    pub fn plan_with(
+        &self,
+        workload: &WorkloadSpec,
+        eval: &dyn SweepEval,
+    ) -> anyhow::Result<FleetPlan> {
+        let (cands, results, ranked) = self.phase1(workload, eval)?;
+        let n_feasible = ranked.len();
+        let top: Vec<usize> = ranked.into_iter().take(self.top_k).collect();
+
+        let verified: Vec<PlanEntry> = par_map(top, self.threads, |&i| {
+            let v = self.verify(workload, &cands[i]);
+            PlanEntry {
+                candidate: cands[i].clone(),
+                analytic: results[i],
+                verification: Some(v),
+            }
+        });
+
+        let chosen = verified
+            .iter()
+            .find(|e| e.verification.as_ref().unwrap().passed)
+            .cloned();
+        let (prod_s, prod_l) = match &chosen {
+            Some(e) => (
+                self.node_avail.production_count(e.candidate.n_s),
+                self.node_avail.production_count(e.candidate.n_l),
+            ),
+            None => (0, 0),
+        };
+        Ok(FleetPlan {
+            chosen,
+            verified,
+            n_phase1_feasible: n_feasible,
+            n_candidates: cands.len(),
+            production_n_s: prod_s,
+            production_n_l: prod_l,
+            backend: eval.backend(),
+        })
+    }
+
+    /// Full two-phase plan with the native Phase-1 evaluator.
+    pub fn plan(&self, workload: &WorkloadSpec) -> FleetPlan {
+        self.plan_with(workload, &NativeSweep)
+            .expect("native sweep is infallible")
+    }
+}
+
+/// Materialize a candidate into DES pools + the production router.
+pub fn plan_pools(cand: &Candidate) -> (Vec<SimPool>, RoutingPolicy) {
+    if cand.is_homogeneous() {
+        (
+            vec![SimPool {
+                gpu: cand.gpu_s.clone(),
+                n_gpus: cand.n_s as usize,
+                ctx_budget: cand.ctx_l,
+                batch_cap: None,
+            }],
+            RoutingPolicy::Random { n_pools: 1 },
+        )
+    } else {
+        (
+            vec![
+                SimPool {
+                    gpu: cand.gpu_s.clone(),
+                    n_gpus: cand.n_s as usize,
+                    ctx_budget: cand.ctx_s,
+                    batch_cap: None,
+                },
+                SimPool {
+                    gpu: cand.gpu_l.clone(),
+                    n_gpus: cand.n_l as usize,
+                    ctx_budget: cand.ctx_l,
+                    batch_cap: None,
+                },
+            ],
+            RoutingPolicy::Length { b_short: cand.b_short },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::spec::BuiltinTrace;
+
+    fn opt(slo: f64) -> FleetOptimizer {
+        let mut o = FleetOptimizer::new(GpuCatalog::standard(), slo);
+        o.des.n_requests = 6_000;
+        o
+    }
+
+    #[test]
+    fn plans_lmsys_two_pool_and_meets_slo() {
+        let w = WorkloadSpec::builtin(BuiltinTrace::Lmsys, 100.0);
+        let plan = opt(500.0).plan(&w);
+        let chosen = plan.chosen.as_ref().expect("plan found");
+        let v = chosen.verification.as_ref().unwrap();
+        assert!(v.passed, "DES P99 = {}", v.p99_ttft_ms);
+        // The winner should be a split fleet (Table 1's headline effect).
+        assert!(!chosen.candidate.is_homogeneous());
+        assert!(plan.n_phase1_feasible > 0);
+        // Verified list is cost-ascending.
+        for pair in plan.verified.windows(2) {
+            assert!(pair[0].analytic.cost_yr <= pair[1].analytic.cost_yr);
+        }
+    }
+
+    #[test]
+    fn production_counts_exceed_raw() {
+        let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 100.0);
+        let mut o = opt(500.0);
+        o.node_avail = NodeAvail::five_percent_rule();
+        let plan = o.plan(&w);
+        let c = plan.chosen.as_ref().unwrap();
+        assert!(plan.production_n_s >= c.candidate.n_s);
+        assert!(
+            plan.production_n_s + plan.production_n_l
+                > c.candidate.total_gpus() - 1
+        );
+    }
+
+    #[test]
+    fn impossible_slo_returns_no_plan() {
+        let w = WorkloadSpec::builtin(BuiltinTrace::Lmsys, 100.0);
+        let plan = opt(0.5).plan(&w); // 0.5 ms: below one iteration
+        assert!(plan.chosen.is_none());
+        assert_eq!(plan.n_phase1_feasible, 0);
+    }
+
+    #[test]
+    fn plan_summary_mentions_cost_and_backend() {
+        let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 50.0);
+        let plan = opt(500.0).plan(&w);
+        let s = plan.summary();
+        assert!(s.contains("backend native"), "{s}");
+        assert!(s.contains('$'), "{s}");
+    }
+
+    #[test]
+    fn verify_reports_pool_breakdown() {
+        let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 100.0);
+        let o = opt(500.0);
+        let (cands, _, ranked) = o.phase1(&w, &NativeSweep).unwrap();
+        let split = ranked
+            .iter()
+            .find(|&&i| !cands[i].is_homogeneous())
+            .copied()
+            .unwrap();
+        let v = o.verify(&w, &cands[split]);
+        assert!(v.p99_ttft_short_ms > 0.0);
+        assert_eq!(v.utilization.len(), 2);
+    }
+}

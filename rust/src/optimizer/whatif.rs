@@ -1,0 +1,167 @@
+//! What-if λ sweeps: GPU step thresholds (paper §4.4, Table 4).
+//!
+//! For a fixed GPU type and layout discipline, answer: how many GPUs does
+//! each arrival rate need, and at what λ does a given fleet run out of
+//! headroom ("provision more before λ = ...")?
+
+use crate::gpu::catalog::GpuCatalog;
+use crate::gpu::profile::GpuProfile;
+use crate::optimizer::analytic::{rank_feasible, NativeSweep, SweepEval};
+use crate::optimizer::candidates::{generate, Candidate, GenOptions};
+use crate::workload::spec::WorkloadSpec;
+
+/// One row of the step-threshold table.
+#[derive(Debug, Clone)]
+pub struct StepRow {
+    pub lambda_rps: f64,
+    pub candidate: Candidate,
+    pub cost_yr: f64,
+    /// Largest λ (req/s) this fleet still serves within SLO; provision
+    /// more before traffic reaches it. None for the last bracket.
+    pub headroom_rps: Option<f64>,
+}
+
+/// Sweep arrival rates and find the minimal feasible fleet at each.
+pub struct WhatIfSweep {
+    pub catalog: GpuCatalog,
+    pub slo_ms: f64,
+    pub gen: GenOptions,
+}
+
+impl WhatIfSweep {
+    pub fn new(catalog: GpuCatalog, slo_ms: f64) -> Self {
+        WhatIfSweep { catalog, slo_ms, gen: GenOptions::default() }
+    }
+
+    /// Restrict the candidate space to one GPU type (Table 4 is H100-only).
+    pub fn for_gpu(mut self, gpu: &GpuProfile) -> Self {
+        self.catalog = GpuCatalog::from_profiles(vec![gpu.clone()]);
+        self
+    }
+
+    /// Minimal feasible candidate at one λ.
+    pub fn size_at(&self, workload: &WorkloadSpec, lambda_rps: f64)
+        -> Option<(Candidate, f64)>
+    {
+        let w = workload.at_lambda(lambda_rps);
+        let cands = generate(&w, &self.catalog, &self.gen);
+        let res = NativeSweep.eval(&w, &cands, self.slo_ms).ok()?;
+        let ranked = rank_feasible(&cands, &res);
+        ranked.first().map(|&i| (cands[i].clone(), res[i].cost_yr))
+    }
+
+    /// Largest λ a fixed candidate still serves feasibly (binary search
+    /// on the analytical model; 1 req/s resolution).
+    pub fn headroom(&self, workload: &WorkloadSpec, cand: &Candidate,
+                    lo_rps: f64, hi_rps: f64) -> f64 {
+        let feasible_at = |rps: f64| {
+            let w = workload.at_lambda(rps);
+            NativeSweep
+                .eval(&w, std::slice::from_ref(cand), self.slo_ms)
+                .map(|r| r[0].feasible)
+                .unwrap_or(false)
+        };
+        let (mut lo, mut hi) = (lo_rps, hi_rps);
+        if !feasible_at(lo) {
+            return lo;
+        }
+        while !feasible_at(hi) && hi - lo > 1.0 {
+            let mid = 0.5 * (lo + hi);
+            if feasible_at(mid) {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        lo.floor()
+    }
+
+    /// The full Table-4 style sweep.
+    pub fn sweep(&self, workload: &WorkloadSpec, lambdas: &[f64]) -> Vec<StepRow> {
+        let mut rows = Vec::new();
+        for (i, &lam) in lambdas.iter().enumerate() {
+            let Some((cand, cost)) = self.size_at(workload, lam) else {
+                continue;
+            };
+            let headroom = if i + 1 < lambdas.len() {
+                Some(self.headroom(workload, &cand, lam,
+                                   lambdas.last().copied().unwrap() * 2.0))
+            } else {
+                None
+            };
+            rows.push(StepRow { lambda_rps: lam, candidate: cand,
+                                cost_yr: cost, headroom_rps: headroom });
+        }
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::spec::BuiltinTrace;
+
+    fn sweeper() -> WhatIfSweep {
+        let cat = GpuCatalog::standard();
+        let h100 = cat.get("H100").unwrap().clone();
+        WhatIfSweep::new(cat, 500.0).for_gpu(&h100)
+    }
+
+    fn azure() -> WorkloadSpec {
+        WorkloadSpec::builtin(BuiltinTrace::Azure, 100.0)
+    }
+
+    #[test]
+    fn gpu_count_grows_sublinearly() {
+        // Insight 4: traffic x16 -> GPUs well under x16.
+        let s = sweeper();
+        let rows = s.sweep(&azure(), &[25.0, 100.0, 400.0]);
+        assert_eq!(rows.len(), 3);
+        let g0 = rows[0].candidate.total_gpus() as f64;
+        let g2 = rows[2].candidate.total_gpus() as f64;
+        let traffic_ratio = 400.0 / 25.0;
+        let gpu_ratio = g2 / g0;
+        // Sub-linear: GPUs-per-req/s falls as traffic grows. (The paper's
+        // 16x-traffic -> 5.75x-GPUs is stronger because its small fleets
+        // are wait-dominated; see EXPERIMENTS.md T4 notes.)
+        assert!(gpu_ratio < traffic_ratio,
+                "gpus {g0} -> {g2} (x{gpu_ratio}) vs traffic x{traffic_ratio}");
+        assert!(g2 / 400.0 < g0 / 25.0, "marginal GPUs/rps must decline");
+        // Costs are monotone in lambda.
+        assert!(rows[0].cost_yr < rows[1].cost_yr);
+        assert!(rows[1].cost_yr < rows[2].cost_yr);
+    }
+
+    #[test]
+    fn headroom_exceeds_sizing_lambda() {
+        let s = sweeper();
+        let rows = s.sweep(&azure(), &[50.0, 100.0]);
+        let r = &rows[0];
+        let h = r.headroom_rps.unwrap();
+        assert!(h >= 50.0, "headroom {h} below sizing point");
+        // And the fleet really is infeasible just past the headroom.
+        let w = azure().at_lambda(h + 25.0);
+        let res = NativeSweep
+            .eval(&w, std::slice::from_ref(&r.candidate), 500.0)
+            .unwrap();
+        assert!(!res[0].feasible);
+    }
+
+    #[test]
+    fn last_bracket_has_no_headroom_entry() {
+        let s = sweeper();
+        let rows = s.sweep(&azure(), &[50.0, 150.0]);
+        assert!(rows.last().unwrap().headroom_rps.is_none());
+        assert!(rows.first().unwrap().headroom_rps.is_some());
+    }
+
+    #[test]
+    fn headroom_of_infeasible_lambda_returns_lo() {
+        let s = sweeper();
+        let (cand, _) = s.size_at(&azure(), 25.0).unwrap();
+        // At 10x the sizing rate the candidate is infeasible from the lo
+        // bound already.
+        let h = s.headroom(&azure(), &cand, 2000.0, 4000.0);
+        assert_eq!(h, 2000.0);
+    }
+}

@@ -1,0 +1,118 @@
+//! Erlang-B and Erlang-C (paper Eq. 1), numerically stable at large c.
+//!
+//! This is the pure-rust twin of the L1 Pallas kernel
+//! (`python/compile/kernels/erlang.py`): the same Erlang-B recurrence, with
+//! early termination at k == c instead of the kernel's fixed-length masked
+//! loop. `rust/tests/runtime_parity.rs` cross-validates the two paths
+//! through the AOT artifact.
+
+/// Maximum server count the planner sweeps (matches the kernel's C_MAX).
+pub const C_MAX: usize = 512;
+
+/// Erlang-B blocking probability B(c, a) for offered load `a = c * rho`.
+///
+/// Uses the stable recurrence `B_k = a B_{k-1} / (k + a B_{k-1})`.
+pub fn erlang_b(a: f64, c: usize) -> f64 {
+    assert!(c >= 1, "need at least one server");
+    let mut b = 1.0;
+    for k in 1..=c {
+        b = a * b / (k as f64 + a * b);
+    }
+    b
+}
+
+/// Erlang-C waiting probability C(c, rho) (paper Eq. 1): the probability an
+/// arriving request finds all c servers busy. Returns 1.0 when unstable
+/// (rho >= 1), 0.0 at zero load.
+pub fn erlang_c(rho: f64, c: usize) -> f64 {
+    if rho <= 0.0 {
+        return 0.0;
+    }
+    if rho >= 1.0 {
+        return 1.0;
+    }
+    let a = rho * c as f64;
+    let b = erlang_b(a, c);
+    let denom = 1.0 - rho * (1.0 - b);
+    (b / denom).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn erlang_c_direct(rho: f64, c: usize) -> f64 {
+        // Textbook summation in f64 (small c only).
+        let a = rho * c as f64;
+        let mut fact = 1.0;
+        let mut sum = 0.0;
+        for k in 0..c {
+            if k > 0 {
+                fact *= k as f64;
+            }
+            sum += a.powi(k as i32) / fact;
+        }
+        let cfact = fact * c as f64;
+        let top = a.powi(c as i32) / (cfact * (1.0 - rho));
+        top / (sum + top)
+    }
+
+    #[test]
+    fn mm1_reduces_to_rho() {
+        for rho in [0.05, 0.3, 0.6, 0.9, 0.99] {
+            assert!((erlang_c(rho, 1) - rho).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matches_direct_summation() {
+        for c in [2, 3, 5, 10, 20, 40, 60] {
+            for rho in [0.1, 0.4, 0.7, 0.9, 0.97] {
+                let got = erlang_c(rho, c);
+                let want = erlang_c_direct(rho, c);
+                assert!(
+                    (got - want).abs() < 1e-9,
+                    "c={c} rho={rho}: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn erlang_b_known_values() {
+        // B(1, a) = a/(1+a).
+        for a in [0.1, 1.0, 5.0] {
+            assert!((erlang_b(a, 1) - a / (1.0 + a)).abs() < 1e-12);
+        }
+        // Classic telephony value: B(10, 5) ~ 0.018385.
+        assert!((erlang_b(5.0, 10) - 0.018385).abs() < 1e-5);
+    }
+
+    #[test]
+    fn boundary_behavior() {
+        assert_eq!(erlang_c(0.0, 8), 0.0);
+        assert_eq!(erlang_c(1.0, 8), 1.0);
+        assert_eq!(erlang_c(2.5, 8), 1.0);
+    }
+
+    #[test]
+    fn stable_at_large_c() {
+        // c = 512 at high rho: must not overflow or go negative.
+        let v = erlang_c(0.97, C_MAX);
+        assert!((0.0..=1.0).contains(&v));
+        assert!(v > 0.0);
+        // And decreasing in c.
+        assert!(erlang_c(0.8, 512) < erlang_c(0.8, 64));
+    }
+
+    #[test]
+    fn monotone_in_rho() {
+        let mut prev = 0.0;
+        for i in 1..100 {
+            let rho = i as f64 / 100.0;
+            let v = erlang_c(rho, 16);
+            assert!(v >= prev);
+            prev = v;
+        }
+    }
+}

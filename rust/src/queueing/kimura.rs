@@ -1,0 +1,101 @@
+//! Kimura's two-moment M/G/c approximation (paper Eq. 2).
+//!
+//! The P-th percentile queue wait of an M/G/c queue with mean service E[S],
+//! squared coefficient of variation Cs², and per-server utilization rho:
+//!
+//! ```text
+//! W_p ≈ C(c, rho) / (c µ (1 - rho)) · (1 + Cs²)/2 · ln(1/(1-p))
+//! ```
+//!
+//! (the paper prints the p = 0.99 case, ln(100)). The (1+Cs²)/2 factor is
+//! the Pollaczek–Khinchine correction that M/M/c lacks; for heavy-tailed
+//! agent workloads even this under-estimates the tail, which is why Phase 2
+//! exists (paper §3.2 "Model fidelity", §4.2).
+
+use crate::queueing::erlang::erlang_c;
+
+/// Mean queue wait (ms) under the two-moment approximation.
+pub fn mean_wait(rho: f64, c: usize, es_ms: f64, cs2: f64) -> f64 {
+    if rho <= 0.0 {
+        return 0.0;
+    }
+    if rho >= 1.0 {
+        return f64::INFINITY;
+    }
+    let pc = erlang_c(rho, c);
+    let c_mu = c as f64 / es_ms;
+    pc / (c_mu * (1.0 - rho)) * (1.0 + cs2) / 2.0
+}
+
+/// P-th percentile queue wait (ms), `p` in (0, 1).
+pub fn percentile_wait(rho: f64, c: usize, es_ms: f64, cs2: f64, p: f64) -> f64 {
+    assert!((0.0..1.0).contains(&p));
+    let w = mean_wait(rho, c, es_ms, cs2);
+    if !w.is_finite() {
+        return w;
+    }
+    w * (1.0 / (1.0 - p)).ln()
+}
+
+/// The paper's headline metric: P99 queue wait (Eq. 2).
+pub fn w99(rho: f64, c: usize, es_ms: f64, cs2: f64) -> f64 {
+    percentile_wait(rho, c, es_ms, cs2, 0.99)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exponential_service_matches_mmc_mean() {
+        // With Cs² = 1 the formula reduces to the exact M/M/c mean wait
+        // W = C(c,rho) / (c mu (1 - rho)).
+        let (rho, c, es) = (0.8, 4, 100.0);
+        let w = mean_wait(rho, c, es, 1.0);
+        let want = erlang_c(rho, c) / (c as f64 / es * (1.0 - rho));
+        assert!((w - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn w99_is_ln100_times_mean() {
+        let (rho, c, es, cs2) = (0.7, 8, 50.0, 3.0);
+        let w = w99(rho, c, es, cs2);
+        assert!((w / mean_wait(rho, c, es, cs2) - 100.0f64.ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_service_halves_exponential_wait() {
+        // Cs² = 0 -> (1+0)/2 = half the exponential-service wait.
+        let (rho, c, es) = (0.8, 2, 10.0);
+        assert!(
+            (mean_wait(rho, c, es, 0.0) * 2.0 - mean_wait(rho, c, es, 1.0)).abs()
+                < 1e-12
+        );
+    }
+
+    #[test]
+    fn unstable_is_infinite() {
+        assert!(w99(1.0, 4, 10.0, 1.0).is_infinite());
+        assert!(w99(1.7, 4, 10.0, 1.0).is_infinite());
+    }
+
+    #[test]
+    fn zero_load_is_zero_wait() {
+        assert_eq!(w99(0.0, 4, 10.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn heavy_tail_correction_scales_linearly() {
+        // Doubling (1 + Cs²) doubles the predicted wait.
+        let base = w99(0.6, 8, 20.0, 1.0);
+        let heavy = w99(0.6, 8, 20.0, 3.0);
+        assert!((heavy / base - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wait_explodes_near_saturation() {
+        let w85 = w99(0.85, 16, 30.0, 1.0);
+        let w99v = w99(0.99, 16, 30.0, 1.0);
+        assert!(w99v > w85 * 20.0, "{w85} -> {w99v}");
+    }
+}

@@ -1,0 +1,359 @@
+//! Per-pool M/G/c analysis (paper §3.1 Phase-1 steps 2–3).
+//!
+//! A pool is `n` identical GPUs serving the slice of the workload whose
+//! total token budget falls in `(lo, hi]`. This module integrates the GPU
+//! service model (Eq. 4) over the workload histogram restricted to that
+//! slice, then evaluates Kimura's W99 (Eq. 2) and the TTFT decomposition
+//! (Eq. 5). It is the rust-native twin of the L2 JAX model
+//! (`python/compile/model.py`); `rust/tests/runtime_parity.rs` checks the
+//! two agree through the AOT artifact.
+
+use crate::gpu::profile::GpuProfile;
+use crate::queueing::erlang::C_MAX;
+use crate::queueing::kimura;
+use crate::workload::cdf::EmpiricalCdf;
+
+/// Utilization cap for queueing stability (paper §3.1): rho <= 0.85.
+pub const RHO_MAX: f64 = 0.85;
+
+/// A pool under analysis: GPU type, count, and the context budget its KV
+/// cache is provisioned for (the upper end of its length range).
+#[derive(Debug, Clone)]
+pub struct PoolSpec {
+    pub gpu: GpuProfile,
+    pub n_gpus: usize,
+    /// Max token budget a sequence in this pool may need (drives n_max).
+    pub ctx_budget: f64,
+}
+
+/// Results of analyzing one pool.
+#[derive(Debug, Clone)]
+pub struct PoolAnalysis {
+    /// Fraction of total traffic routed to this pool.
+    pub alpha: f64,
+    /// Pool arrival rate, req/ms.
+    pub lambda_ms: f64,
+    /// Mean service time E[S] (Eq. 4), ms.
+    pub es_ms: f64,
+    /// Squared coefficient of variation of service time.
+    pub cs2: f64,
+    /// Per-server utilization.
+    pub rho: f64,
+    /// P99 queue wait (Eq. 2), ms.
+    pub w99_ms: f64,
+    /// P99 prefill latency within the pool, ms.
+    pub prefill99_ms: f64,
+    /// P99 TTFT (Eq. 5), ms.
+    pub ttft99_ms: f64,
+    /// rho < 1 (queue does not grow without bound).
+    pub stable: bool,
+}
+
+impl PoolAnalysis {
+    /// Empty pool: no traffic, no latency.
+    pub fn empty() -> Self {
+        PoolAnalysis {
+            alpha: 0.0,
+            lambda_ms: 0.0,
+            es_ms: 0.0,
+            cs2: 0.0,
+            rho: 0.0,
+            w99_ms: 0.0,
+            prefill99_ms: 0.0,
+            ttft99_ms: 0.0,
+            stable: true,
+        }
+    }
+
+    /// Meets the SLO under the utilization cap (paper §3.1 step 3).
+    pub fn meets_slo(&self, slo_ms: f64) -> bool {
+        self.alpha <= 1e-12
+            || (self.stable && self.rho <= RHO_MAX && self.ttft99_ms <= slo_ms)
+    }
+}
+
+/// The planner's standard histogram resolution (matches the AOT artifact).
+pub const K_BINS: usize = 256;
+
+/// A discretized workload shared across many pool evaluations.
+#[derive(Debug, Clone)]
+pub struct WorkloadHist {
+    pub probs: Vec<f64>,
+    pub lens: Vec<f64>,
+    pub input_frac: f64,
+}
+
+impl WorkloadHist {
+    pub fn from_cdf(cdf: &EmpiricalCdf, input_frac: f64) -> Self {
+        let (probs, lens) = cdf.histogram(K_BINS);
+        WorkloadHist { probs, lens, input_frac }
+    }
+
+    /// Fraction of requests with budget in (lo, hi].
+    pub fn mass(&self, lo: f64, hi: f64) -> f64 {
+        self.probs
+            .iter()
+            .zip(&self.lens)
+            .filter(|(_, &l)| l > lo && l <= hi)
+            .map(|(p, _)| p)
+            .sum()
+    }
+
+    /// Conditional q-quantile of the budget within (lo, hi].
+    pub fn conditional_quantile(&self, lo: f64, hi: f64, q: f64) -> f64 {
+        let alpha = self.mass(lo, hi);
+        if alpha <= 1e-12 {
+            return 0.0;
+        }
+        let target = q * alpha;
+        let mut cum = 0.0;
+        for (p, &l) in self.probs.iter().zip(&self.lens) {
+            if l > lo && l <= hi {
+                cum += p;
+                if cum >= target {
+                    return l;
+                }
+            }
+        }
+        hi
+    }
+
+    /// Split a bin's budget into (prompt, completion) tokens.
+    fn split(&self, total: f64) -> (f64, f64) {
+        let l_in = (total * self.input_frac).ceil();
+        let l_out = (total - l_in).max(1.0);
+        (l_in, l_out)
+    }
+}
+
+/// Equilibrium concurrency per GPU (Little's law on the linear t_iter).
+///
+/// Demand of `a` tokens/ms/GPU with t_iter(n) = W + H n self-consistently
+/// settles at n̄ = a W / (1 - a H), clamped to [1, n_eff]. Above the
+/// token-throughput ceiling (a H >= 1) the batch saturates at n_eff.
+/// This is the recalibration the paper applies in §4.8 ("the M/G/c
+/// service rate is recalibrated at each batch cap") and is what makes the
+/// analytic TTFT independent of the cap while n̄ stays below it (Table 9's
+/// constant 0-30%-flex column).
+pub fn equilibrium_batch(gpu: &crate::gpu::profile::GpuProfile,
+                         n_eff: f64, tokens_per_ms_per_gpu: f64) -> f64 {
+    let a = tokens_per_ms_per_gpu;
+    if a <= 0.0 {
+        return 1.0;
+    }
+    if a * gpu.h_ms_per_slot >= 1.0 {
+        return n_eff;
+    }
+    (a * gpu.w_ms / (1.0 - a * gpu.h_ms_per_slot)).clamp(1.0, n_eff)
+}
+
+/// Analyze one pool serving the (lo, hi] slice of the workload.
+///
+/// `lambda_total_ms` is the *fleet-wide* arrival rate in req/ms; the pool
+/// receives `alpha x lambda` per the deterministic length split
+/// (paper §3.1 step 1, with the §3.3 sub-stream Poisson caveat).
+///
+/// Service times follow Eq. 4 with the iteration latency evaluated at the
+/// pool's equilibrium concurrency n̄ (see [`equilibrium_batch`]):
+/// `E[S] = iters / n_eff * t_iter(n̄)`. Utilization rho = lambda E[S] / c
+/// then equals the slot-occupancy fraction n̄ / n_eff, and the slot-count
+/// advantage of a short pool translates into real throughput — the §2.1
+/// "cost cliff" mechanism.
+pub fn analyze_pool(
+    hist: &WorkloadHist,
+    lo: f64,
+    hi: f64,
+    lambda_total_ms: f64,
+    spec: &PoolSpec,
+) -> PoolAnalysis {
+    let alpha = hist.mass(lo, hi);
+    if alpha <= 1e-12 {
+        return PoolAnalysis::empty();
+    }
+    let n = spec.gpu.n_eff(spec.ctx_budget);
+    let lambda_ms = lambda_total_ms * alpha;
+    let c = spec.n_gpus.clamp(1, C_MAX);
+
+    // Conditional iteration-count moments over the slice.
+    let mut i1 = 0.0;
+    let mut i2 = 0.0;
+    for (p, &l) in hist.probs.iter().zip(&hist.lens) {
+        if l > lo && l <= hi {
+            let (l_in, l_out) = hist.split(l);
+            let it = spec.gpu.iters(l_in, l_out);
+            i1 += p * it;
+            i2 += p * it * it;
+        }
+    }
+    i1 /= alpha;
+    i2 /= alpha;
+    // S = iters * t̄ / n_eff: the constant factor cancels in Cs².
+    let cs2 = (i2 / (i1 * i1) - 1.0).max(0.0);
+
+    let tokens_per_ms_per_gpu = lambda_ms * i1 / c as f64;
+    let n_bar = equilibrium_batch(&spec.gpu, n, tokens_per_ms_per_gpu);
+    let t_bar = spec.gpu.t_iter(n_bar);
+    let es = i1 * t_bar / n;
+    let rho = lambda_ms * es / c as f64;
+    let w99 = kimura::w99(rho, c, es, cs2);
+
+    // P99 prefill: chunked prefill of the pool's P99 prompt (Eq. 5) at the
+    // equilibrium iteration latency.
+    let p99_len = hist.conditional_quantile(lo, hi, 0.99);
+    let l_in99 = (p99_len * hist.input_frac).ceil();
+    let prefill99 = (l_in99 / spec.gpu.chunk).ceil() * t_bar;
+    let ttft99 = w99 + prefill99 + t_bar;
+
+    PoolAnalysis {
+        alpha,
+        lambda_ms,
+        es_ms: es,
+        cs2,
+        rho,
+        w99_ms: w99,
+        prefill99_ms: prefill99,
+        ttft99_ms: ttft99,
+        stable: rho < 1.0,
+    }
+}
+
+/// Convenience: the paper's two-pool analysis — short pool (0, B] and long
+/// pool (B, max]. Returns (short, long).
+pub fn analyze_two_pool(
+    hist: &WorkloadHist,
+    b_short: f64,
+    max_len: f64,
+    lambda_total_ms: f64,
+    short: &PoolSpec,
+    long: &PoolSpec,
+) -> (PoolAnalysis, PoolAnalysis) {
+    (
+        analyze_pool(hist, 0.0, b_short, lambda_total_ms, short),
+        analyze_pool(hist, b_short, max_len, lambda_total_ms, long),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::catalog::GpuCatalog;
+    use crate::workload::builtin::Trace;
+
+    fn a100() -> GpuProfile {
+        GpuCatalog::standard().get("A100").unwrap().clone()
+    }
+
+    use crate::gpu::profile::GpuProfile;
+
+    fn lmsys_hist() -> WorkloadHist {
+        let t = Trace::lmsys();
+        WorkloadHist::from_cdf(&t.cdf, t.input_fraction)
+    }
+
+    #[test]
+    fn mass_matches_cdf() {
+        let h = lmsys_hist();
+        let alpha = h.mass(0.0, 4096.0);
+        assert!((alpha - 0.984).abs() < 0.01, "alpha = {alpha}");
+        assert!((h.mass(0.0, 1e9) - 1.0).abs() < 1e-9);
+        assert!((h.mass(0.0, 4096.0) + h.mass(4096.0, 1e9) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn conditional_quantile_in_range() {
+        let h = lmsys_hist();
+        let q = h.conditional_quantile(4096.0, 65536.0, 0.99);
+        assert!(q > 4096.0 && q <= 65536.0, "q = {q}");
+        let qs = h.conditional_quantile(0.0, 4096.0, 0.99);
+        assert!(qs <= 4096.0);
+        assert_eq!(h.conditional_quantile(1e8, 1e9, 0.99), 0.0);
+    }
+
+    #[test]
+    fn empty_pool_is_feasible() {
+        let h = lmsys_hist();
+        let spec = PoolSpec { gpu: a100(), n_gpus: 1, ctx_budget: 65536.0 };
+        let a = analyze_pool(&h, 1e8, 1e9, 0.1, &spec);
+        assert_eq!(a.alpha, 0.0);
+        assert!(a.meets_slo(1.0));
+    }
+
+    #[test]
+    fn overload_is_unstable_and_fails_slo() {
+        let h = lmsys_hist();
+        let spec = PoolSpec { gpu: a100(), n_gpus: 1, ctx_budget: 65536.0 };
+        let a = analyze_pool(&h, 0.0, 1e9, 1.0, &spec); // 1000 req/s on 1 GPU
+        assert!(!a.stable);
+        assert!(a.w99_ms.is_infinite());
+        assert!(!a.meets_slo(1e9));
+    }
+
+    #[test]
+    fn more_gpus_reduce_rho_and_wait() {
+        // Under the equilibrium-batch model rho falls *faster* than 1/c
+        // (fewer GPUs -> higher per-GPU concurrency -> slower iterations).
+        let h = lmsys_hist();
+        let mk = |n| PoolSpec { gpu: a100(), n_gpus: n, ctx_budget: 65536.0 };
+        let a4 = analyze_pool(&h, 0.0, 1e9, 0.05, &mk(4));
+        let a8 = analyze_pool(&h, 0.0, 1e9, 0.05, &mk(8));
+        assert!(a4.rho / a8.rho >= 2.0 - 1e-9, "{} vs {}", a4.rho, a8.rho);
+        assert!(a8.w99_ms < a4.w99_ms);
+    }
+
+    #[test]
+    fn short_pool_has_lower_service_time() {
+        let h = lmsys_hist();
+        let short = PoolSpec { gpu: a100(), n_gpus: 3, ctx_budget: 4096.0 };
+        let long = PoolSpec { gpu: a100(), n_gpus: 5, ctx_budget: 65536.0 };
+        let (s, l) = analyze_two_pool(&h, 4096.0, 65536.0, 0.1, &short, &long);
+        assert!(s.es_ms < l.es_ms / 5.0, "es_s={} es_l={}", s.es_ms, l.es_ms);
+        assert!((s.alpha + l.alpha - 1.0).abs() < 1e-9);
+        // Short pool gets the 16x slot advantage (§4.1): 256 vs 16 slots.
+        assert_eq!(short.gpu.n_max(4096.0), 256.0);
+        assert_eq!(long.gpu.n_max(65536.0), 16.0);
+    }
+
+    #[test]
+    fn prefill_dominates_for_long_context_low_load() {
+        // Long pool at trivial load: TTFT ~ prefill, not queueing.
+        let h = lmsys_hist();
+        let long = PoolSpec { gpu: a100(), n_gpus: 8, ctx_budget: 65536.0 };
+        let a = analyze_pool(&h, 4096.0, 65536.0, 0.001, &long);
+        assert!(a.w99_ms < 1.0, "w99 = {}", a.w99_ms);
+        assert!(a.prefill99_ms > 100.0, "prefill = {}", a.prefill99_ms);
+        assert!((a.ttft99_ms - a.prefill99_ms - a.w99_ms).abs() < 20.0);
+    }
+
+    #[test]
+    fn meets_slo_respects_rho_cap() {
+        // Direct check of the feasibility predicate: a stable pool above
+        // the utilization cap must be rejected regardless of SLO.
+        let a = PoolAnalysis {
+            alpha: 0.5,
+            lambda_ms: 0.1,
+            es_ms: 10.0,
+            cs2: 1.0,
+            rho: 0.9,
+            w99_ms: 5.0,
+            prefill99_ms: 5.0,
+            ttft99_ms: 12.0,
+            stable: true,
+        };
+        assert!(!a.meets_slo(1e9));
+        let ok = PoolAnalysis { rho: 0.8, ..a.clone() };
+        assert!(ok.meets_slo(1e9));
+        assert!(!ok.meets_slo(1.0)); // ttft 12 > 1
+    }
+
+    #[test]
+    fn agent_workload_has_high_cs2() {
+        // Heavy-tailed agent trace: service-time SCV across the whole
+        // range must be large (the Puzzle-2 mechanism).
+        let t = Trace::agent();
+        let h = WorkloadHist::from_cdf(&t.cdf, t.input_fraction);
+        let h100 = GpuCatalog::standard().get("H100").unwrap().clone();
+        let spec = PoolSpec { gpu: h100, n_gpus: 24, ctx_budget: 300000.0 };
+        let a = analyze_pool(&h, 0.0, 1e9, 0.02, &spec);
+        assert!(a.cs2 > 3.0, "cs2 = {}", a.cs2);
+    }
+}

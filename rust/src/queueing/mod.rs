@@ -1,0 +1,7 @@
+//! Analytical M/G/c queueing (paper §2.2): Erlang-B/C, Kimura's two-moment
+//! approximation, and the per-pool model that integrates the GPU service
+//! model over a workload CDF slice.
+
+pub mod erlang;
+pub mod kimura;
+pub mod mgc;

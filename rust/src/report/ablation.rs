@@ -1,0 +1,119 @@
+//! Ablation study for the reproduction's key modeling choice
+//! (DESIGN.md "Key modeling decisions" #2): evaluating `t_iter` at the
+//! pool's *equilibrium* concurrency versus the paper's literal Eq. 4
+//! reading (`t_iter(n_max)`).
+//!
+//! The ablation replays the Phase-1 sizing of a homogeneous fleet under
+//! both service models and compares each against the DES — showing why
+//! the equilibrium model was adopted: the n_max model over-sizes fleets
+//! and over-predicts lightly-loaded TTFT by the full batch-inflation
+//! factor, and it cannot reproduce Table 9's cap-independent analytic
+//! column.
+
+use crate::des::engine::{DesConfig, SimPool, Simulator};
+use crate::gpu::profile::GpuProfile;
+use crate::queueing::kimura;
+use crate::queueing::mgc::{analyze_pool, PoolSpec, WorkloadHist};
+use crate::router::RoutingPolicy;
+use crate::util::table::{millis, Align, Table};
+use crate::workload::spec::WorkloadSpec;
+
+/// P99 TTFT under the literal-Eq.4 ablation: t_iter fixed at n_eff.
+pub fn nmax_model_p99(
+    hist: &WorkloadHist,
+    gpu: &GpuProfile,
+    n_gpus: usize,
+    ctx: f64,
+    lambda_ms: f64,
+) -> (f64, f64) {
+    let n = gpu.n_eff(ctx);
+    let t = gpu.t_iter(n);
+    let mut i1 = 0.0;
+    let mut i2 = 0.0;
+    for (p, &l) in hist.probs.iter().zip(&hist.lens) {
+        let l_in = (l * hist.input_frac).ceil();
+        let l_out = (l - l_in).max(1.0);
+        let it = gpu.iters(l_in, l_out);
+        i1 += p * it;
+        i2 += p * it * it;
+    }
+    let cs2 = (i2 / (i1 * i1) - 1.0).max(0.0);
+    let es = i1 * t / n;
+    let rho = lambda_ms * es / n_gpus as f64;
+    let w99 = kimura::w99(rho, n_gpus.min(512), es, cs2);
+    let p99_len = hist.conditional_quantile(0.0, ctx, 0.99);
+    let prefill = ((p99_len * hist.input_frac).ceil() / gpu.chunk).ceil() * t;
+    (w99 + prefill + t, rho)
+}
+
+/// One ablation row: (n_gpus, equilibrium P99, n_max P99, DES P99).
+pub fn compare(
+    w: &WorkloadSpec,
+    gpu: &GpuProfile,
+    sizes: &[usize],
+    n_requests: usize,
+) -> Vec<(usize, f64, f64, f64)> {
+    let ctx = w.cdf.max_len();
+    let hist = WorkloadHist::from_cdf(&w.cdf, w.input_fraction);
+    sizes
+        .iter()
+        .map(|&n| {
+            let eq = analyze_pool(&hist, 0.0, 1e12, w.lambda_per_ms(),
+                                  &PoolSpec { gpu: gpu.clone(), n_gpus: n,
+                                              ctx_budget: ctx })
+                .ttft99_ms;
+            let (nm, _) = nmax_model_p99(&hist, gpu, n, ctx, w.lambda_per_ms());
+            let sim = Simulator::new(
+                w.clone(),
+                vec![SimPool { gpu: gpu.clone(), n_gpus: n, ctx_budget: ctx,
+                               batch_cap: None }],
+                RoutingPolicy::Random { n_pools: 1 },
+                DesConfig { n_requests, seed: 13, ..Default::default() },
+            );
+            let mut r = sim.run();
+            (n, eq, nm, r.overall.p99_ttft())
+        })
+        .collect()
+}
+
+/// Render the ablation table.
+pub fn table(w: &WorkloadSpec, gpu: &GpuProfile, sizes: &[usize],
+             n_requests: usize) -> Table {
+    let mut t = Table::new(&["GPUs", "equilibrium model", "n_max model",
+                             "DES"])
+        .with_title(format!(
+            "Service-model ablation ({}, λ={} req/s, {}): P99 TTFT",
+            w.name, w.lambda_rps, gpu.name
+        ))
+        .align(&[Align::Right, Align::Right, Align::Right, Align::Right]);
+    for (n, eq, nm, des) in compare(w, gpu, sizes, n_requests) {
+        t.row(&[n.to_string(), millis(eq), millis(nm), millis(des)]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::catalog::GpuCatalog;
+    use crate::workload::spec::BuiltinTrace;
+
+    #[test]
+    fn equilibrium_model_tracks_des_better_than_nmax() {
+        let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 100.0);
+        let gpu = GpuCatalog::standard().get("H100").unwrap().clone();
+        let rows = compare(&w, &gpu, &[10, 14], 6_000);
+        for (n, eq, nm, des) in rows {
+            let err_eq = (eq - des).abs() / des;
+            let err_nm = (nm - des).abs() / des;
+            assert!(
+                err_eq < err_nm,
+                "n={n}: equilibrium err {err_eq:.2} should beat n_max \
+                 {err_nm:.2} (eq {eq:.0} nm {nm:.0} des {des:.0})"
+            );
+            // The n_max model over-predicts lightly-loaded TTFT by the
+            // batch-inflation factor.
+            assert!(nm > des * 1.5, "n={n}: nm {nm} vs des {des}");
+        }
+    }
+}

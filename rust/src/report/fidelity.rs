@@ -1,0 +1,119 @@
+//! Model-fidelity analysis (paper §3.2): Kimura analytical P99 TTFT vs
+//! DES, per workload, across utilization levels.
+//!
+//! The paper's claim: for chatbot workloads (low Cs²) the analytical model
+//! is conservative by ~8-14% versus DES; for agent workloads it is not
+//! trustworthy and DES is authoritative. This module measures exactly
+//! that table for our calibration.
+
+use crate::des::engine::{DesConfig, SimPool, Simulator};
+use crate::gpu::profile::GpuProfile;
+use crate::queueing::mgc::{analyze_pool, PoolSpec, WorkloadHist};
+use crate::router::RoutingPolicy;
+use crate::util::table::{millis, Align, Table};
+use crate::workload::spec::{BuiltinTrace, WorkloadSpec};
+
+/// One fidelity measurement.
+#[derive(Debug, Clone)]
+pub struct FidelityRow {
+    pub trace: String,
+    pub n_gpus: usize,
+    pub rho: f64,
+    pub cs2: f64,
+    pub analytic_ms: f64,
+    pub des_ms: f64,
+    /// analytic / DES (>1 = conservative).
+    pub ratio: f64,
+}
+
+/// Measure analytic-vs-DES P99 TTFT for a homogeneous pool at several
+/// fleet sizes.
+pub fn measure(
+    trace: BuiltinTrace,
+    lambda: f64,
+    gpu: &GpuProfile,
+    sizes: &[usize],
+    n_requests: usize,
+) -> Vec<FidelityRow> {
+    let w = WorkloadSpec::builtin(trace, lambda);
+    let ctx = w.cdf.max_len();
+    let hist = WorkloadHist::from_cdf(&w.cdf, w.input_fraction);
+    sizes
+        .iter()
+        .map(|&n| {
+            let a = analyze_pool(
+                &hist, 0.0, 1e12, w.lambda_per_ms(),
+                &PoolSpec { gpu: gpu.clone(), n_gpus: n, ctx_budget: ctx },
+            );
+            let sim = Simulator::new(
+                w.clone(),
+                vec![SimPool { gpu: gpu.clone(), n_gpus: n, ctx_budget: ctx,
+                               batch_cap: None }],
+                RoutingPolicy::Random { n_pools: 1 },
+                DesConfig { n_requests, seed: 7, ..Default::default() },
+            );
+            let mut r = sim.run();
+            let des = r.overall.p99_ttft();
+            FidelityRow {
+                trace: trace.name().into(),
+                n_gpus: n,
+                rho: a.rho,
+                cs2: a.cs2,
+                analytic_ms: a.ttft99_ms,
+                des_ms: des,
+                ratio: if des > 0.0 { a.ttft99_ms / des } else { f64::NAN },
+            }
+        })
+        .collect()
+}
+
+/// Render the §3.2 fidelity table for the three builtin traces.
+pub fn fidelity_table(gpu: &GpuProfile, n_requests: usize) -> Table {
+    let mut t = Table::new(&["Trace", "GPUs", "rho", "Cs2", "Analytic P99",
+                             "DES P99", "anal/DES"])
+        .with_title("Model fidelity: Kimura (Eq. 2 + Eq. 5) vs DES, \
+                     homogeneous H100 pools")
+        .align(&[Align::Left, Align::Right, Align::Right, Align::Right,
+                 Align::Right, Align::Right, Align::Right]);
+    for (trace, lam, sizes) in [
+        (BuiltinTrace::Azure, 100.0, [6usize, 8, 12]),
+        (BuiltinTrace::Lmsys, 100.0, [14, 18, 24]),
+        (BuiltinTrace::Agent, 20.0, [40, 64, 96]),
+    ] {
+        for r in measure(trace, lam, gpu, &sizes, n_requests) {
+            t.row(&[
+                r.trace.clone(),
+                r.n_gpus.to_string(),
+                format!("{:.2}", r.rho),
+                format!("{:.1}", r.cs2),
+                millis(r.analytic_ms),
+                millis(r.des_ms),
+                format!("{:.2}", r.ratio),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::catalog::GpuCatalog;
+
+    #[test]
+    fn chat_traces_have_low_cs2_agent_high() {
+        let gpu = GpuCatalog::standard().get("H100").unwrap().clone();
+        let azure = measure(BuiltinTrace::Azure, 100.0, &gpu, &[8], 3000);
+        let agent = measure(BuiltinTrace::Agent, 20.0, &gpu, &[64], 3000);
+        assert!(azure[0].cs2 < 3.0, "azure cs2 = {}", azure[0].cs2);
+        assert!(agent[0].cs2 > azure[0].cs2 * 2.0,
+                "agent {} vs azure {}", agent[0].cs2, azure[0].cs2);
+    }
+
+    #[test]
+    fn fidelity_table_renders_nine_rows() {
+        let gpu = GpuCatalog::standard().get("H100").unwrap().clone();
+        let t = fidelity_table(&gpu, 2000);
+        assert_eq!(t.n_rows(), 9);
+    }
+}

@@ -1,0 +1,6 @@
+//! Reporting: model-fidelity analysis (paper §3.2) and shared rendering.
+
+pub mod ablation;
+pub mod fidelity;
+pub mod sensitivity;
+pub mod substream;

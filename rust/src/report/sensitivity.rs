@@ -1,0 +1,116 @@
+//! Sensitivity analysis over synthetic workloads (paper §3.3, "Poisson
+//! with synthetic lengths"): how the optimal split and cost respond to the
+//! tail weight of the length distribution.
+
+use crate::gpu::catalog::GpuCatalog;
+use crate::optimizer::analytic::{rank_feasible, NativeSweep, SweepEval};
+use crate::optimizer::candidates::{generate, GenOptions};
+use crate::util::table::{dollars, Align, Table};
+use crate::workload::spec::WorkloadSpec;
+use crate::workload::synth::{LengthDist, SynthLengths};
+
+/// One sensitivity point.
+#[derive(Debug, Clone)]
+pub struct SensitivityRow {
+    pub label: String,
+    pub mean_tokens: f64,
+    /// Fraction of requests above 8K tokens (tail weight proxy).
+    pub tail_8k: f64,
+    /// Best configuration found (label + cost), if any.
+    pub best: Option<(String, f64)>,
+}
+
+/// Sweep Pareto tail indices and log-normal sigmas at a fixed arrival
+/// rate / SLO; returns one row per distribution.
+pub fn sweep(lambda_rps: f64, slo_ms: f64, input_frac: f64, seed: u64)
+    -> Vec<SensitivityRow>
+{
+    let catalog = GpuCatalog::standard();
+    let mut rows = Vec::new();
+    let dists: Vec<(String, LengthDist)> = vec![
+        ("pareto a=2.5".into(), LengthDist::Pareto { x_m: 300.0, alpha: 2.5 }),
+        ("pareto a=1.5".into(), LengthDist::Pareto { x_m: 300.0, alpha: 1.5 }),
+        ("pareto a=1.1".into(), LengthDist::Pareto { x_m: 300.0, alpha: 1.1 }),
+        ("lognorm s=0.8".into(), LengthDist::LogNormal { mu: 6.2, sigma: 0.8 }),
+        ("lognorm s=1.6".into(), LengthDist::LogNormal { mu: 6.2, sigma: 1.6 }),
+    ];
+    for (label, dist) in dists {
+        let synth = SynthLengths::new(dist, 64.0, 131_072.0).unwrap();
+        let cdf = synth.to_cdf(60_000, seed).unwrap();
+        let mean = cdf.mean(256);
+        let tail = 1.0 - cdf.cdf(8_192.0);
+        let w = WorkloadSpec::new(label.clone(), cdf, input_frac, lambda_rps);
+        let cands = generate(&w, &catalog, &GenOptions::default());
+        let res = NativeSweep.eval(&w, &cands, slo_ms).unwrap();
+        let best = rank_feasible(&cands, &res)
+            .first()
+            .map(|&i| (cands[i].label(), res[i].cost_yr));
+        rows.push(SensitivityRow { label, mean_tokens: mean, tail_8k: tail,
+                                   best });
+    }
+    rows
+}
+
+/// Render the sensitivity table.
+pub fn table(lambda_rps: f64, slo_ms: f64, seed: u64) -> Table {
+    let rows = sweep(lambda_rps, slo_ms, 0.8, seed);
+    let mut t = Table::new(&["Distribution", "mean tok", ">8K", "best config",
+                             "$/yr"])
+        .with_title(format!(
+            "Synthetic-length sensitivity (λ={lambda_rps} req/s, \
+             SLO={slo_ms} ms, prompt fraction 0.8)"
+        ))
+        .align(&[Align::Left, Align::Right, Align::Right, Align::Left,
+                 Align::Right]);
+    for r in &rows {
+        match &r.best {
+            Some((label, cost)) => t.row(&[
+                r.label.clone(),
+                format!("{:.0}", r.mean_tokens),
+                format!("{:.1}%", r.tail_8k * 100.0),
+                label.clone(),
+                dollars(*cost),
+            ]),
+            None => t.row(&[
+                r.label.clone(),
+                format!("{:.0}", r.mean_tokens),
+                format!("{:.1}%", r.tail_8k * 100.0),
+                "infeasible".into(),
+                "-".into(),
+            ]),
+        };
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heavier_tails_cost_more() {
+        let rows = sweep(50.0, 1000.0, 0.8, 3);
+        let cost = |label: &str| {
+            rows.iter()
+                .find(|r| r.label == label)
+                .and_then(|r| r.best.as_ref().map(|b| b.1))
+        };
+        let light = cost("pareto a=2.5");
+        let heavy = cost("pareto a=1.5");
+        if let (Some(l), Some(h)) = (light, heavy) {
+            assert!(h >= l, "heavy tail {h} should cost >= light {l}");
+        } else {
+            // At minimum the light tail must be plannable.
+            assert!(light.is_some(), "{rows:?}");
+        }
+        // Tail fractions are ordered by alpha.
+        let t25 = rows.iter().find(|r| r.label == "pareto a=2.5").unwrap();
+        let t11 = rows.iter().find(|r| r.label == "pareto a=1.1").unwrap();
+        assert!(t11.tail_8k > t25.tail_8k);
+    }
+
+    #[test]
+    fn table_has_five_rows() {
+        assert_eq!(table(50.0, 1000.0, 3).n_rows(), 5);
+    }
+}

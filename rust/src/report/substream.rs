@@ -1,0 +1,212 @@
+//! Sub-stream Poisson approximation check (paper §3.3 note + §5
+//! Limitations).
+//!
+//! Splitting a Poisson stream by token length is a deterministic rule, not
+//! random thinning, so the per-pool sub-streams are not strictly Poisson;
+//! and when prompt length correlates with arrival time (long requests
+//! arriving in bursts) the analytical queue-length estimates drift. The
+//! paper's remedy is "the DES checks whether the approximation holds in
+//! each case" — this module is that check, plus the adversarial variant
+//! with a Markov-modulated arrival process whose burst state carries
+//! longer requests.
+
+use crate::des::engine::{DesConfig, SimPool, Simulator};
+use crate::des::metrics::DesResult;
+use crate::gpu::profile::GpuProfile;
+use crate::queueing::mgc::{analyze_two_pool, PoolSpec, WorkloadHist};
+use crate::router::RoutingPolicy;
+use crate::util::stats::Samples;
+use crate::workload::rng::Pcg64;
+use crate::workload::spec::{SampledRequest, WorkloadSpec};
+
+/// Result of one approximation check.
+#[derive(Debug, Clone)]
+pub struct SubstreamCheck {
+    /// Analytical P99 TTFT per pool under the Poisson-split assumption.
+    pub analytic_short_ms: f64,
+    pub analytic_long_ms: f64,
+    /// DES-measured P99 TTFT per pool (i.i.d. lengths).
+    pub des_short_ms: f64,
+    pub des_long_ms: f64,
+    /// DES-measured with length-correlated (bursty) arrivals.
+    pub bursty_short_ms: f64,
+    pub bursty_long_ms: f64,
+    /// SCV of the long-pool inter-arrival gaps in the bursty trace
+    /// (1 = Poisson; > 1 = bursty).
+    pub long_gap_scv: f64,
+}
+
+impl SubstreamCheck {
+    /// The approximation "holds" when i.i.d. DES is within `tol` of the
+    /// analytic prediction on the pool that carries the traffic.
+    pub fn holds(&self, tol: f64) -> bool {
+        let rel = |a: f64, b: f64| {
+            if b <= 1.0 {
+                a <= 1.0 + tol
+            } else {
+                (a - b).abs() / b <= tol
+            }
+        };
+        rel(self.des_short_ms, self.analytic_short_ms)
+    }
+}
+
+/// Generate a length-correlated request stream: a two-state process where
+/// the burst state both raises the arrival rate and draws lengths from the
+/// upper `burst_quantile` tail of the CDF — the §5 adversary.
+pub fn correlated_requests(
+    w: &WorkloadSpec,
+    n: usize,
+    burst_quantile: f64,
+    seed: u64,
+) -> Vec<SampledRequest> {
+    let mut rng = Pcg64::new(seed, 11);
+    let base_rate = w.lambda_per_ms();
+    let mut t = 0.0;
+    let mut out = Vec::with_capacity(n);
+    let mut in_burst = false;
+    let mut phase_left: f64 = 20_000.0; // ms
+    while out.len() < n {
+        let rate = if in_burst { base_rate * 2.0 } else { base_rate * 0.8 };
+        let gap = rng.exponential(rate);
+        t += gap;
+        phase_left -= gap;
+        if phase_left <= 0.0 {
+            in_burst = !in_burst;
+            phase_left = if in_burst { 5_000.0 } else { 20_000.0 };
+        }
+        let q = if in_burst {
+            burst_quantile + rng.uniform() * (1.0 - burst_quantile)
+        } else {
+            rng.uniform() * burst_quantile
+        };
+        let total = w.cdf.quantile(q);
+        let (l_in, l_out) = w.split(total);
+        out.push(SampledRequest { arrival_ms: t, l_in, l_out });
+    }
+    out
+}
+
+/// Simulator wrapper that replays an explicit request stream.
+fn simulate_stream(
+    w: &WorkloadSpec,
+    reqs: &[SampledRequest],
+    pools: Vec<SimPool>,
+    b_short: f64,
+) -> DesResult {
+    // Reuse the engine by substituting the workload's sampler: easiest is
+    // to run the standard simulator on a spec whose seed reproduces the
+    // given stream — instead we run a bespoke pass: route + simulate via
+    // the Simulator by injecting the stream through a custom WorkloadSpec
+    // is not possible without a trait; so we re-sort and feed the DES
+    // directly through its public API using the same code path: construct
+    // a Simulator and replace its sampled stream by running with the same
+    // length distribution. For exactness we implement the replay here.
+    let sim = Simulator::new(
+        w.clone(),
+        pools,
+        RoutingPolicy::Length { b_short },
+        DesConfig { n_requests: reqs.len(), ..Default::default() },
+    );
+    sim.run_with_requests(reqs.to_vec())
+}
+
+/// Run the full §5 check on a two-pool fleet.
+#[allow(clippy::too_many_arguments)]
+pub fn substream_check(
+    w: &WorkloadSpec,
+    gpu: &GpuProfile,
+    n_s: usize,
+    n_l: usize,
+    b_short: f64,
+    n_requests: usize,
+    burst_quantile: f64,
+    seed: u64,
+) -> SubstreamCheck {
+    let max_len = w.cdf.max_len();
+    let hist = WorkloadHist::from_cdf(&w.cdf, w.input_fraction);
+    let (a_s, a_l) = analyze_two_pool(
+        &hist,
+        b_short,
+        max_len,
+        w.lambda_per_ms(),
+        &PoolSpec { gpu: gpu.clone(), n_gpus: n_s, ctx_budget: b_short },
+        &PoolSpec { gpu: gpu.clone(), n_gpus: n_l, ctx_budget: max_len },
+    );
+    let pools = || {
+        vec![
+            SimPool { gpu: gpu.clone(), n_gpus: n_s, ctx_budget: b_short,
+                      batch_cap: None },
+            SimPool { gpu: gpu.clone(), n_gpus: n_l, ctx_budget: max_len,
+                      batch_cap: None },
+        ]
+    };
+    // i.i.d. Poisson baseline.
+    let iid = w.sample_requests(n_requests, seed);
+    let mut r_iid = simulate_stream(w, &iid, pools(), b_short);
+    // Length-correlated bursts.
+    let bursty = correlated_requests(w, n_requests, burst_quantile, seed);
+    let mut gaps = Samples::new();
+    let mut prev = 0.0;
+    for r in bursty.iter().filter(|r| r.total() > b_short) {
+        gaps.push(r.arrival_ms - prev);
+        prev = r.arrival_ms;
+    }
+    let scv = gaps.scv();
+    let mut r_burst = simulate_stream(w, &bursty, pools(), b_short);
+
+    SubstreamCheck {
+        analytic_short_ms: a_s.ttft99_ms,
+        analytic_long_ms: a_l.ttft99_ms,
+        des_short_ms: r_iid.per_pool[0].stats.ttft.p99(),
+        des_long_ms: r_iid.per_pool[1].stats.ttft.p99(),
+        bursty_short_ms: r_burst.per_pool[0].stats.ttft.p99(),
+        bursty_long_ms: r_burst.per_pool[1].stats.ttft.p99(),
+        long_gap_scv: scv,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::catalog::GpuCatalog;
+    use crate::workload::spec::BuiltinTrace;
+
+    fn setup() -> (WorkloadSpec, GpuProfile) {
+        (
+            WorkloadSpec::builtin(BuiltinTrace::Azure, 100.0),
+            GpuCatalog::standard().get("H100").unwrap().clone(),
+        )
+    }
+
+    #[test]
+    fn iid_approximation_holds_on_chat_workload() {
+        let (w, gpu) = setup();
+        let c = substream_check(&w, &gpu, 6, 3, 3072.0, 10_000, 0.9, 5);
+        assert!(c.holds(0.5),
+                "analytic {} vs DES {}", c.analytic_short_ms, c.des_short_ms);
+    }
+
+    #[test]
+    fn correlated_arrivals_are_bursty_and_degrade_tails() {
+        let (w, gpu) = setup();
+        let c = substream_check(&w, &gpu, 6, 3, 3072.0, 10_000, 0.9, 5);
+        // The adversarial stream is genuinely bursty on the long pool…
+        assert!(c.long_gap_scv > 1.3, "scv = {}", c.long_gap_scv);
+        // …and bursty long-pool latency is no better than i.i.d.
+        assert!(c.bursty_long_ms >= c.des_long_ms * 0.9,
+                "bursty {} vs iid {}", c.bursty_long_ms, c.des_long_ms);
+    }
+
+    #[test]
+    fn correlated_stream_is_time_ordered_and_sized() {
+        let (w, _) = setup();
+        let reqs = correlated_requests(&w, 5_000, 0.9, 7);
+        assert_eq!(reqs.len(), 5_000);
+        assert!(reqs.windows(2).all(|p| p[0].arrival_ms <= p[1].arrival_ms));
+        // Burst draws come from the tail: the stream contains both halves.
+        let long = reqs.iter().filter(|r| r.total() > w.cdf.quantile(0.9))
+            .count();
+        assert!(long > 500, "{long}");
+    }
+}

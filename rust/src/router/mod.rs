@@ -1,0 +1,185 @@
+//! Routing policies (paper §3.4): LengthRouter, CompressAndRoute,
+//! RandomRouter, ModelRouter.
+//!
+//! A router maps an incoming request to a pool index and may transform the
+//! request on the way (CompressAndRoute shrinks borderline prompts back
+//! under the threshold, paper §2.1 / Chen et al. 2026). Routers are
+//! deterministic given the request and the RNG stream, so DES runs are
+//! reproducible.
+
+use crate::workload::rng::Pcg64;
+
+/// A request as seen by the router.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RouteRequest {
+    pub l_in: f64,
+    pub l_out: f64,
+    /// Semantic class for multi-model fleets (ModelRouter); 0 otherwise.
+    pub class: usize,
+}
+
+impl RouteRequest {
+    pub fn total(&self) -> f64 {
+        self.l_in + self.l_out
+    }
+}
+
+/// Routing decision: destination pool plus the (possibly transformed)
+/// request that will actually be served.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RouteDecision {
+    pub pool: usize,
+    pub request: RouteRequest,
+    /// True if the router compressed the request (CompressAndRoute).
+    pub compressed: bool,
+}
+
+/// The four routing policies of paper §3.4.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RoutingPolicy {
+    /// Pool 0 if total budget <= b_short, else pool 1. Default production
+    /// policy.
+    Length { b_short: f64 },
+    /// Compress borderline requests (b_short < total <= gamma * b_short)
+    /// down to b_short and send them short; intended for fleet *sizing*,
+    /// not production (paper §4.5 / Insight 5).
+    CompressAndRoute { b_short: f64, gamma: f64 },
+    /// Uniform random across `n_pools`; baseline.
+    Random { n_pools: usize },
+    /// Semantic classifier: request class -> pool index.
+    Model { class_to_pool: Vec<usize> },
+}
+
+impl RoutingPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutingPolicy::Length { .. } => "LengthRouter",
+            RoutingPolicy::CompressAndRoute { .. } => "CompressAndRoute",
+            RoutingPolicy::Random { .. } => "RandomRouter",
+            RoutingPolicy::Model { .. } => "ModelRouter",
+        }
+    }
+
+    /// Number of pools this policy expects downstream.
+    pub fn n_pools(&self) -> usize {
+        match self {
+            RoutingPolicy::Length { .. } | RoutingPolicy::CompressAndRoute { .. } => 2,
+            RoutingPolicy::Random { n_pools } => *n_pools,
+            RoutingPolicy::Model { class_to_pool } => {
+                class_to_pool.iter().copied().max().map_or(1, |m| m + 1)
+            }
+        }
+    }
+
+    /// Route one request.
+    pub fn route(&self, req: RouteRequest, rng: &mut Pcg64) -> RouteDecision {
+        match self {
+            RoutingPolicy::Length { b_short } => RouteDecision {
+                pool: if req.total() <= *b_short { 0 } else { 1 },
+                request: req,
+                compressed: false,
+            },
+            RoutingPolicy::CompressAndRoute { b_short, gamma } => {
+                let total = req.total();
+                if total <= *b_short {
+                    RouteDecision { pool: 0, request: req, compressed: false }
+                } else if total <= gamma * b_short {
+                    // Compress the prompt so that the *total* budget fits
+                    // b_short; completion tokens are untouched (the
+                    // gateway can squeeze the prompt, not the answer).
+                    let l_in = (b_short - req.l_out).max(1.0);
+                    let request = RouteRequest { l_in, ..req };
+                    RouteDecision { pool: 0, request, compressed: true }
+                } else {
+                    RouteDecision { pool: 1, request: req, compressed: false }
+                }
+            }
+            RoutingPolicy::Random { n_pools } => RouteDecision {
+                pool: rng.below(*n_pools as u64) as usize,
+                request: req,
+                compressed: false,
+            },
+            RoutingPolicy::Model { class_to_pool } => RouteDecision {
+                pool: class_to_pool[req.class.min(class_to_pool.len() - 1)],
+                request: req,
+                compressed: false,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(l_in: f64, l_out: f64) -> RouteRequest {
+        RouteRequest { l_in, l_out, class: 0 }
+    }
+
+    #[test]
+    fn length_router_splits_at_threshold() {
+        let r = RoutingPolicy::Length { b_short: 4096.0 };
+        let mut rng = Pcg64::new(1, 0);
+        assert_eq!(r.route(req(2000.0, 2096.0), &mut rng).pool, 0); // == B
+        assert_eq!(r.route(req(2000.0, 2097.0), &mut rng).pool, 1); // B + 1
+        assert_eq!(r.route(req(100.0, 50.0), &mut rng).pool, 0);
+    }
+
+    #[test]
+    fn compress_squeezes_borderline_only() {
+        let r = RoutingPolicy::CompressAndRoute { b_short: 4096.0, gamma: 1.5 };
+        let mut rng = Pcg64::new(2, 0);
+        // Below threshold: untouched.
+        let d = r.route(req(3000.0, 500.0), &mut rng);
+        assert_eq!((d.pool, d.compressed), (0, false));
+        // Borderline (4096 < 5000 <= 6144): compressed short.
+        let d = r.route(req(4500.0, 500.0), &mut rng);
+        assert_eq!((d.pool, d.compressed), (0, true));
+        assert_eq!(d.request.total(), 4096.0);
+        assert_eq!(d.request.l_out, 500.0); // completion preserved
+        // Genuinely long (> gamma * B): long pool, untouched.
+        let d = r.route(req(8000.0, 500.0), &mut rng);
+        assert_eq!((d.pool, d.compressed), (1, false));
+        assert_eq!(d.request.l_in, 8000.0);
+    }
+
+    #[test]
+    fn compress_never_zeroes_prompt() {
+        let r = RoutingPolicy::CompressAndRoute { b_short: 1000.0, gamma: 2.0 };
+        let mut rng = Pcg64::new(3, 0);
+        // l_out alone exceeds b_short: prompt floors at 1 token.
+        let d = r.route(req(500.0, 1200.0), &mut rng);
+        assert!(d.compressed);
+        assert_eq!(d.request.l_in, 1.0);
+    }
+
+    #[test]
+    fn random_router_is_roughly_uniform() {
+        let r = RoutingPolicy::Random { n_pools: 4 };
+        let mut rng = Pcg64::new(4, 0);
+        let mut counts = [0usize; 4];
+        for _ in 0..40_000 {
+            counts[r.route(req(100.0, 10.0), &mut rng).pool] += 1;
+        }
+        for c in counts {
+            assert!((8_000..12_000).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn model_router_maps_classes() {
+        let r = RoutingPolicy::Model { class_to_pool: vec![0, 2, 1] };
+        let mut rng = Pcg64::new(5, 0);
+        for (class, want) in [(0usize, 0usize), (1, 2), (2, 1), (9, 1)] {
+            let d = r.route(RouteRequest { l_in: 10.0, l_out: 5.0, class }, &mut rng);
+            assert_eq!(d.pool, want, "class {class}");
+        }
+        assert_eq!(r.n_pools(), 3);
+    }
+
+    #[test]
+    fn pool_counts() {
+        assert_eq!(RoutingPolicy::Length { b_short: 1.0 }.n_pools(), 2);
+        assert_eq!(RoutingPolicy::Random { n_pools: 7 }.n_pools(), 7);
+    }
+}

@@ -1,0 +1,6 @@
+//! PJRT runtime: load the AOT-compiled Phase-1 sweep (artifacts/
+//! sweep.hlo.txt, produced once by python/compile/aot.py) and execute it
+//! from the planning hot path. Python is never on the request path.
+
+pub mod pjrt;
+pub mod sweep;

@@ -1,0 +1,207 @@
+//! AotSweep: the Phase-1 evaluator backed by the AOT-compiled JAX/Pallas
+//! artifact (`artifacts/sweep.hlo.txt` + `sweep.meta.json`).
+//!
+//! The artifact is lowered once at build time (`make artifacts`); at plan
+//! time this module packs candidates into the artifact's static
+//! `[F, N_CAND]` layout, executes via PJRT, and unpacks the `[N, 8]`
+//! result. Padding lanes are inert (empty workload share, 1 GPU).
+//! `rust/tests/runtime_parity.rs` checks AotSweep == NativeSweep.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::optimizer::analytic::SweepEval;
+use crate::optimizer::candidates::{Candidate, CandidateResult};
+use crate::queueing::mgc::K_BINS;
+use crate::runtime::pjrt::PjrtContext;
+use crate::util::json::Json;
+use crate::workload::spec::WorkloadSpec;
+
+/// The candidate-field order baked into the artifact
+/// (python/compile/model.py CANDIDATE_FIELDS).
+pub const CANDIDATE_FIELDS: [&str; 16] = [
+    "b_short", "n_s", "n_l", "chunk_s", "chunk_l", "nmax_s", "nmax_l",
+    "w_s", "h_s", "w_l", "h_l", "cost_s", "cost_l", "input_frac", "lam",
+    "slo",
+];
+
+/// Artifact metadata (sweep.meta.json sidecar).
+#[derive(Debug, Clone)]
+pub struct SweepMeta {
+    pub n_cand: usize,
+    pub k_bins: usize,
+    pub candidate_fields: Vec<String>,
+}
+
+impl SweepMeta {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let doc = Json::parse(&text)?;
+        let fields = doc
+            .get("candidate_fields")
+            .and_then(Json::as_arr)
+            .context("candidate_fields missing")?
+            .iter()
+            .map(|v| v.as_str().unwrap_or("").to_string())
+            .collect();
+        Ok(SweepMeta {
+            n_cand: doc.get("n_cand").and_then(Json::as_f64)
+                .context("n_cand")? as usize,
+            k_bins: doc.get("k_bins").and_then(Json::as_f64)
+                .context("k_bins")? as usize,
+            candidate_fields: fields,
+        })
+    }
+
+    /// Validate the rust-side packing assumptions against the artifact.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.candidate_fields == CANDIDATE_FIELDS,
+            "artifact field order {:?} != expected {:?} — rebuild artifacts",
+            self.candidate_fields,
+            CANDIDATE_FIELDS
+        );
+        anyhow::ensure!(
+            self.k_bins == K_BINS,
+            "artifact k_bins {} != planner K_BINS {K_BINS}",
+            self.k_bins
+        );
+        Ok(())
+    }
+}
+
+/// Phase-1 evaluator backed by the AOT artifact.
+pub struct AotSweep {
+    ctx: PjrtContext,
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: SweepMeta,
+    pub artifact_path: PathBuf,
+}
+
+impl AotSweep {
+    /// Load from an artifacts directory (sweep.hlo.txt + sweep.meta.json).
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let hlo = artifacts_dir.join("sweep.hlo.txt");
+        let meta = SweepMeta::load(&artifacts_dir.join("sweep.meta.json"))?;
+        meta.validate()?;
+        let ctx = PjrtContext::cpu()?;
+        let exe = ctx.compile_hlo_text_file(&hlo)?;
+        Ok(AotSweep { ctx, exe, meta, artifact_path: hlo })
+    }
+
+    /// Default artifacts directory: $FLEET_SIM_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("FLEET_SIM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.ctx.platform()
+    }
+
+    /// Pack one batch (<= n_cand candidates), execute, unpack.
+    fn eval_batch(
+        &self,
+        hist: &[f32],
+        cands: &[Candidate],
+        workload: &WorkloadSpec,
+        slo_ms: f64,
+    ) -> Result<Vec<CandidateResult>> {
+        let n = self.meta.n_cand;
+        let f = CANDIDATE_FIELDS.len();
+        anyhow::ensure!(cands.len() <= n, "batch exceeds artifact capacity");
+        let mut cbuf = vec![0f32; f * n];
+        let lam_ms = workload.lambda_per_ms() as f32;
+        let frac = workload.input_fraction as f32;
+        for (j, c) in cands.iter().enumerate() {
+            let nmax_s = c.gpu_s.n_eff(c.ctx_s);
+            let nmax_l = c.gpu_l.n_eff(c.ctx_l);
+            let vals: [f32; 16] = [
+                c.b_short as f32,
+                c.n_s as f32,
+                c.n_l as f32,
+                c.gpu_s.chunk as f32,
+                c.gpu_l.chunk as f32,
+                nmax_s as f32,
+                nmax_l as f32,
+                c.gpu_s.w_ms as f32,
+                c.gpu_s.h_ms_per_slot as f32,
+                c.gpu_l.w_ms as f32,
+                c.gpu_l.h_ms_per_slot as f32,
+                c.gpu_s.cost_per_year() as f32,
+                c.gpu_l.cost_per_year() as f32,
+                frac,
+                lam_ms,
+                slo_ms as f32,
+            ];
+            for (i, v) in vals.iter().enumerate() {
+                cbuf[i * n + j] = *v;
+            }
+        }
+        // Inert padding lanes: everything-short single cheap pool, zero
+        // arrivals.
+        for j in cands.len()..n {
+            let vals: [f32; 16] = [
+                1e9, 1.0, 0.0, 512.0, 512.0, 1.0, 1.0, 1.0, 0.1, 1.0, 0.1,
+                0.0, 0.0, 0.5, 0.0, 1e9,
+            ];
+            for (i, v) in vals.iter().enumerate() {
+                cbuf[i * n + j] = *v;
+            }
+        }
+        let k = self.meta.k_bins;
+        let out = self.ctx.execute_f32(
+            &self.exe,
+            &[
+                (hist, &[2i64, k as i64]),
+                (&cbuf, &[f as i64, n as i64]),
+            ],
+        )?;
+        anyhow::ensure!(out.len() == n * 8, "unexpected output size {}", out.len());
+        Ok(cands
+            .iter()
+            .enumerate()
+            .map(|(j, _)| {
+                let row = &out[j * 8..j * 8 + 8];
+                CandidateResult {
+                    rho_s: row[0] as f64,
+                    rho_l: row[1] as f64,
+                    ttft99_s: row[2] as f64,
+                    ttft99_l: row[3] as f64,
+                    w99_s: row[4] as f64,
+                    w99_l: row[5] as f64,
+                    cost_yr: row[6] as f64,
+                    feasible: row[7] > 0.5,
+                }
+            })
+            .collect())
+    }
+}
+
+impl SweepEval for AotSweep {
+    fn eval(
+        &self,
+        workload: &WorkloadSpec,
+        candidates: &[Candidate],
+        slo_ms: f64,
+    ) -> Result<Vec<CandidateResult>> {
+        // Histogram row 0 = probs, row 1 = bin budgets.
+        let (probs, lens) = workload.cdf.histogram(self.meta.k_bins);
+        let mut hist = Vec::with_capacity(2 * self.meta.k_bins);
+        hist.extend(probs.iter().map(|&p| p as f32));
+        hist.extend(lens.iter().map(|&l| l as f32));
+
+        let mut out = Vec::with_capacity(candidates.len());
+        for chunk in candidates.chunks(self.meta.n_cand) {
+            out.extend(self.eval_batch(&hist, chunk, workload, slo_ms)?);
+        }
+        Ok(out)
+    }
+
+    fn backend(&self) -> &'static str {
+        "aot-pjrt"
+    }
+}

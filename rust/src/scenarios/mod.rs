@@ -1,0 +1,40 @@
+//! The paper's case studies (§4, Puzzles 1–8) as reproducible scenarios.
+//!
+//! Each puzzle module exposes `run(&ScenarioOpts) -> PuzzleReport`
+//! regenerating the corresponding paper table; the CLI (`fleet-sim puzzle
+//! N`), the bench harnesses (`rust/benches/tableN_*.rs`), and
+//! `examples/reproduce_all.rs` all call through here so EXPERIMENTS.md is
+//! regenerated from one code path.
+
+pub mod common;
+pub mod multi_model;
+pub mod puzzle1_split;
+pub mod puzzle2_agent;
+pub mod puzzle3_gpu_type;
+pub mod puzzle4_steps;
+pub mod puzzle5_routers;
+pub mod puzzle6_mixed;
+pub mod puzzle7_disagg;
+pub mod puzzle8_gridflex;
+
+pub use common::{PuzzleReport, ScenarioOpts};
+
+/// Run puzzle `n` (1..=8).
+pub fn run(n: usize, opts: &ScenarioOpts) -> anyhow::Result<PuzzleReport> {
+    Ok(match n {
+        1 => puzzle1_split::run(opts),
+        2 => puzzle2_agent::run(opts),
+        3 => puzzle3_gpu_type::run(opts),
+        4 => puzzle4_steps::run(opts),
+        5 => puzzle5_routers::run(opts),
+        6 => puzzle6_mixed::run(opts),
+        7 => puzzle7_disagg::run(opts),
+        8 => puzzle8_gridflex::run(opts),
+        other => anyhow::bail!("no puzzle {other} (1..=8)"),
+    })
+}
+
+/// All puzzles in order.
+pub fn run_all(opts: &ScenarioOpts) -> Vec<PuzzleReport> {
+    (1..=8).map(|n| run(n, opts).expect("1..=8 valid")).collect()
+}

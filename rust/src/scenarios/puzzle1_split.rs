@@ -1,0 +1,126 @@
+//! Puzzle 1 (§4.1, Table 1): where exactly should I split?
+//!
+//! Sweeps B_short for LMSYS (λ=100, A100, SLO 500 ms) plus the Azure and
+//! agent variants, reporting the Pareto frontier the paper prints:
+//! per-threshold minimal fleets, cost vs the homogeneous baseline, and the
+//! DES SLO verdict.
+
+use crate::gpu::catalog::GpuCatalog;
+use crate::queueing::mgc::WorkloadHist;
+use crate::scenarios::common::*;
+use crate::util::table::{dollars, millis, percent, Table};
+use crate::workload::spec::{BuiltinTrace, WorkloadSpec};
+
+pub const THRESHOLDS: [f64; 6] = [512.0, 1024.0, 2048.0, 4096.0, 8192.0,
+                                  12288.0];
+
+fn sweep_table(
+    name: &str,
+    w: &WorkloadSpec,
+    gpu_name: &str,
+    slo: f64,
+    opts: &ScenarioOpts,
+) -> Table {
+    let cat = GpuCatalog::standard();
+    let gpu = cat.require(gpu_name).unwrap().clone();
+    let hist = WorkloadHist::from_cdf(&w.cdf, w.input_fraction);
+    let max_len = w.cdf.max_len();
+
+    // The paper's homogeneous baseline is utilization-cap sized.
+    let homo = rho_cap_homogeneous(w, &hist, &gpu, opts.max_gpus).unwrap();
+    let homo_cost = homo.cost_per_year();
+
+    let mut t = Table::new(&["B_short", "alpha_s", "n_s", "n_l", "GPUs",
+                             "$/yr", "saving", "P99 TTFT", "SLO"])
+        .with_title(format!(
+            "{name}: B_short Pareto frontier ({gpu_name}, λ={} req/s, \
+             SLO={slo} ms; homogeneous baseline: {} GPUs at {})",
+            w.lambda_rps, homo.n_s, dollars(homo_cost)
+        ));
+    for &b in THRESHOLDS.iter().filter(|&&b| b < max_len) {
+        let alpha = hist.mass(0.0, b);
+        match min_two_pool(w, &hist, &gpu, &gpu, b, slo, opts.max_gpus) {
+            Some(cand) => {
+                let (p99, _, _, _) = verify_candidate(w, &cand, opts);
+                let saving = 1.0 - cand.cost_per_year() / homo_cost;
+                t.row(&[
+                    format!("{b:.0}"),
+                    percent(alpha),
+                    cand.n_s.to_string(),
+                    cand.n_l.to_string(),
+                    cand.total_gpus().to_string(),
+                    dollars(cand.cost_per_year()),
+                    format!("{:+.1}%", saving * 100.0),
+                    millis(p99),
+                    check(p99 <= slo).to_string(),
+                ]);
+            }
+            None => {
+                t.row(&[
+                    format!("{b:.0}"),
+                    percent(alpha),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "infeasible".into(),
+                ]);
+            }
+        }
+    }
+    // Homogeneous row for reference.
+    let (p99_homo, _, _, _) = verify_candidate(w, &homo, opts);
+    t.row(&[
+        "homo".into(),
+        percent(1.0),
+        homo.n_s.to_string(),
+        "0".into(),
+        homo.n_s.to_string(),
+        dollars(homo_cost),
+        "+0.0%".into(),
+        millis(p99_homo),
+        check(p99_homo <= slo).to_string(),
+    ]);
+    t
+}
+
+pub fn run(opts: &ScenarioOpts) -> PuzzleReport {
+    let lmsys = WorkloadSpec::builtin(BuiltinTrace::Lmsys, 100.0);
+    let azure = WorkloadSpec::builtin(BuiltinTrace::Azure, 200.0);
+    let agent = WorkloadSpec::builtin(BuiltinTrace::Agent, 200.0);
+    let tables = vec![
+        sweep_table("LMSYS", &lmsys, "A100", 500.0, opts),
+        sweep_table("Azure", &azure, "A100", 500.0, opts),
+        sweep_table("Agent", &agent, "A100", 500.0, opts),
+    ];
+    PuzzleReport {
+        id: 1,
+        title: "Where exactly should I split?".into(),
+        tables,
+        insight: "The optimal B_short cannot be read off the CDF: it \
+                  balances slot efficiency, traffic fraction, and Erlang \
+                  fragmentation across both pools, and too-high thresholds \
+                  become SLO-infeasible from long-pool prefill alone."
+            .into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lmsys_frontier_has_a_winning_split() {
+        let opts = ScenarioOpts::fast();
+        let report = run(&opts);
+        assert_eq!(report.tables.len(), 3);
+        let rendered = report.tables[0].render();
+        // At least one split row shows a positive saving.
+        assert!(rendered.contains('+'), "{rendered}");
+        // Very high thresholds on the agent workload must be infeasible
+        // or expensive (the paper's B=32768 failure mode).
+        assert!(report.tables[0].n_rows() == 7);
+    }
+}

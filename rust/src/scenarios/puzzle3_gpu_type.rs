@@ -1,0 +1,152 @@
+//! Puzzle 3 (§4.3, Table 3): which GPU type is actually cheapest?
+//!
+//! Azure workload at λ=100: the instinct "faster GPU, fewer GPUs, lower
+//! cost" is wrong — the cheap A10G in a two-pool layout undercuts the
+//! H100 fleets, while H100 wins on rack space and short-request latency.
+
+use crate::gpu::catalog::GpuCatalog;
+use crate::queueing::mgc::WorkloadHist;
+use crate::scenarios::common::*;
+use crate::util::table::{dollars, millis, Align, Table};
+use crate::workload::spec::{BuiltinTrace, WorkloadSpec};
+
+pub const LAMBDA: f64 = 100.0;
+pub const SLO_MS: f64 = 500.0;
+
+/// One evaluated layout.
+#[derive(Debug, Clone)]
+pub struct LayoutRow {
+    pub gpu: String,
+    pub layout: String,
+    pub gpus: u32,
+    pub cost_yr: f64,
+    pub p99_short: f64,
+    pub p99_long: f64,
+    pub slo_ok: bool,
+}
+
+pub fn evaluate(opts: &ScenarioOpts) -> Vec<LayoutRow> {
+    let cat = GpuCatalog::standard();
+    let w = WorkloadSpec::builtin(BuiltinTrace::Azure, LAMBDA);
+    let hist = WorkloadHist::from_cdf(&w.cdf, w.input_fraction);
+    let mut rows = Vec::new();
+    for name in ["A10G", "A100", "H100"] {
+        let gpu = cat.require(name).unwrap().clone();
+        // Homogeneous.
+        if let Some(cand) = min_homogeneous(&w, &hist, &gpu, SLO_MS,
+                                            opts.max_gpus) {
+            let (p99, _, _, _) = verify_candidate(&w, &cand, opts);
+            rows.push(LayoutRow {
+                gpu: name.into(),
+                layout: "Homo".into(),
+                gpus: cand.total_gpus(),
+                cost_yr: cand.cost_per_year(),
+                p99_short: p99,
+                p99_long: 0.0,
+                slo_ok: p99 <= SLO_MS,
+            });
+        }
+        // Best two-pool over a handful of thresholds.
+        let best = [2048.0, 3072.0, 4096.0]
+            .iter()
+            .filter_map(|&b| min_two_pool(&w, &hist, &gpu, &gpu, b, SLO_MS,
+                                          opts.max_gpus))
+            .min_by(|a, b| a.cost_per_year().total_cmp(&b.cost_per_year()));
+        if let Some(cand) = best {
+            let (p99, p99_s, p99_l, _) = verify_candidate(&w, &cand, opts);
+            rows.push(LayoutRow {
+                gpu: name.into(),
+                layout: format!("Two-pool B={}", cand.b_short),
+                gpus: cand.total_gpus(),
+                cost_yr: cand.cost_per_year(),
+                p99_short: p99_s,
+                p99_long: p99_l,
+                slo_ok: p99 <= SLO_MS,
+            });
+        }
+    }
+    rows.sort_by(|a, b| a.cost_yr.total_cmp(&b.cost_yr));
+    rows
+}
+
+pub fn run(opts: &ScenarioOpts) -> PuzzleReport {
+    let rows = evaluate(opts);
+    let mut t = Table::new(&["GPU", "Layout", "GPUs", "Cost/yr",
+                             "P99 short/long", "SLO"])
+        .with_title(format!(
+            "GPU type vs layout (Azure, λ={LAMBDA}, SLO={SLO_MS} ms)"
+        ))
+        .align(&[Align::Left, Align::Left, Align::Right, Align::Right,
+                 Align::Right, Align::Right]);
+    for r in &rows {
+        let lat = if r.p99_long > 0.0 {
+            format!("{} / {}", millis(r.p99_short), millis(r.p99_long))
+        } else {
+            millis(r.p99_short)
+        };
+        t.row(&[
+            r.gpu.clone(),
+            r.layout.clone(),
+            r.gpus.to_string(),
+            dollars(r.cost_yr),
+            lat,
+            check(r.slo_ok).to_string(),
+        ]);
+    }
+
+    // Decision table (paper's "different constraints, different choices").
+    let cheapest = rows.iter().filter(|r| r.slo_ok).min_by(
+        |a, b| a.cost_yr.total_cmp(&b.cost_yr));
+    let fewest = rows.iter().filter(|r| r.slo_ok).min_by_key(|r| r.gpus);
+    let fastest = rows.iter().filter(|r| r.slo_ok).min_by(
+        |a, b| a.p99_short.total_cmp(&b.p99_short));
+    let mut d = Table::new(&["Priority", "Choice"])
+        .align(&[Align::Left, Align::Left]);
+    if let Some(r) = cheapest {
+        d.row(&["Minimum annual cost".into(),
+                format!("{} {} ({})", r.gpu, r.layout, dollars(r.cost_yr))]);
+    }
+    if let Some(r) = fewest {
+        d.row(&["Minimum rack space / power".into(),
+                format!("{} {} ({} GPUs)", r.gpu, r.layout, r.gpus)]);
+    }
+    if let Some(r) = fastest {
+        d.row(&["Best short-request latency".into(),
+                format!("{} {} ({} P99)", r.gpu, r.layout,
+                        millis(r.p99_short))]);
+    }
+    d.row(&["Long-context / agent workload".into(),
+            "H100 or A100 (A10G VRAM limits KV cache)".into()]);
+
+    PuzzleReport {
+        id: 3,
+        title: "Which GPU type is actually cheapest?".into(),
+        tables: vec![t, d],
+        insight: "GPU cost depends on pool topology, not just price and \
+                  throughput: the slot multiplier from a well-chosen \
+                  B_short makes the slower, cheaper A10G the minimum-cost \
+                  option, while H100 wins on footprint and latency."
+            .into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a10g_two_pool_is_cheapest_h100_fewest() {
+        let rows = evaluate(&ScenarioOpts::fast());
+        let ok: Vec<_> = rows.iter().filter(|r| r.slo_ok).collect();
+        assert!(!ok.is_empty());
+        let cheapest = ok.iter().min_by(|a, b| a.cost_yr.total_cmp(&b.cost_yr))
+            .unwrap();
+        assert_eq!(cheapest.gpu, "A10G", "{cheapest:?}");
+        let fewest = ok.iter().min_by_key(|r| r.gpus).unwrap();
+        assert_eq!(fewest.gpu, "H100", "{fewest:?}");
+        // And the cheapest H100 config costs more than the A10G one.
+        let h100_min = ok.iter().filter(|r| r.gpu == "H100")
+            .map(|r| r.cost_yr).fold(f64::INFINITY, f64::min);
+        assert!(cheapest.cost_yr < h100_min);
+    }
+}

@@ -1,0 +1,124 @@
+//! Puzzle 5 (§4.5, Table 5): which router causes SLO violations?
+//!
+//! Same (correctly sized) agent fleet, three routers: the production
+//! LengthRouter, the sizing-oriented CompressAndRoute, and the
+//! RandomRouter baseline. The sizing router can overload the small short
+//! pool it was designed to justify; random spreading dilutes heavy-tail
+//! events but is brittle.
+
+use crate::des::engine::SimPool;
+use crate::gpu::catalog::GpuCatalog;
+use crate::router::RoutingPolicy;
+use crate::scenarios::common::*;
+use crate::util::table::{millis, percent, Align, Table};
+use crate::workload::spec::{BuiltinTrace, WorkloadSpec};
+
+pub const LAMBDA: f64 = 20.0;
+pub const SLO_MS: f64 = 1000.0;
+pub const B_SHORT: f64 = 4096.0;
+/// Deliberately small short pool (the sizing optimum), as in the paper's
+/// (n_s=2, n_l=23) fleet.
+pub const N_SHORT: usize = 2;
+pub const N_LONG: usize = 40;
+
+#[derive(Debug, Clone)]
+pub struct RouterRow {
+    pub router: String,
+    pub p99_short: f64,
+    pub p99_overall: f64,
+    pub attainment: f64,
+    pub compressed: usize,
+}
+
+pub fn evaluate(opts: &ScenarioOpts) -> Vec<RouterRow> {
+    let cat = GpuCatalog::standard();
+    let gpu = cat.get("H100").unwrap().clone();
+    let w = WorkloadSpec::builtin(BuiltinTrace::Agent, LAMBDA);
+    let ctx = w.cdf.max_len();
+    let pools = || {
+        vec![
+            SimPool { gpu: gpu.clone(), n_gpus: N_SHORT, ctx_budget: B_SHORT,
+                      batch_cap: None },
+            SimPool { gpu: gpu.clone(), n_gpus: N_LONG, ctx_budget: ctx,
+                      batch_cap: None },
+        ]
+    };
+    let routers = [
+        RoutingPolicy::Length { b_short: B_SHORT },
+        RoutingPolicy::CompressAndRoute { b_short: B_SHORT, gamma: 2.0 },
+        RoutingPolicy::Random { n_pools: 2 },
+    ];
+    routers
+        .iter()
+        .map(|router| {
+            let mut r = simulate(&w, pools(), router.clone(), opts);
+            RouterRow {
+                router: router.name().into(),
+                p99_short: r.per_pool[0].stats.ttft.p99(),
+                p99_overall: r.overall.p99_ttft(),
+                attainment: r.attainment(SLO_MS),
+                compressed: r.n_compressed,
+            }
+        })
+        .collect()
+}
+
+pub fn run(opts: &ScenarioOpts) -> PuzzleReport {
+    let rows = evaluate(opts);
+    let mut t = Table::new(&["Router", "P99 short-pool TTFT", "P99 TTFT",
+                             "SLO attainment", "compressed"])
+        .with_title(format!(
+            "Router comparison on the agent fleet (λ={LAMBDA}, \
+             {N_SHORT}+{N_LONG} H100, SLO={SLO_MS} ms)"
+        ))
+        .align(&[Align::Left, Align::Right, Align::Right, Align::Right,
+                 Align::Right]);
+    for r in &rows {
+        t.row(&[
+            r.router.clone(),
+            millis(r.p99_short),
+            millis(r.p99_overall),
+            percent(r.attainment),
+            r.compressed.to_string(),
+        ]);
+    }
+    PuzzleReport {
+        id: 5,
+        title: "Which router causes SLO violations?".into(),
+        tables: vec![t],
+        insight: "The router used to size the fleet and the router deployed \
+                  in production should differ: CompressAndRoute funnels \
+                  borderline agent requests into the 2-GPU short pool and \
+                  spikes its P99, while LengthRouter operates the same \
+                  fleet safely. RandomRouter dilutes heavy tails across \
+                  all slots but couples short requests to long-request \
+                  fate — brittle under mix shifts."
+            .into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compress_hurts_short_pool_vs_length() {
+        let rows = evaluate(&ScenarioOpts::fast());
+        let length = rows.iter().find(|r| r.router == "LengthRouter").unwrap();
+        let compress =
+            rows.iter().find(|r| r.router == "CompressAndRoute").unwrap();
+        assert!(compress.compressed > 0);
+        // Funneling borderline traffic into the tiny short pool must
+        // degrade its P99 versus pure length routing. (The paper's fleet
+        // shows an outright SLO breach; our slot calibration gives a
+        // directional degradation — see EXPERIMENTS.md T5.)
+        assert!(
+            compress.p99_short > length.p99_short * 1.15,
+            "compress {} vs length {}",
+            compress.p99_short,
+            length.p99_short
+        );
+        // LengthRouter keeps the short pool fast.
+        assert!(length.p99_short < 100.0, "{}", length.p99_short);
+    }
+}

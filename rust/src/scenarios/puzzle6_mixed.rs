@@ -1,0 +1,164 @@
+//! Puzzle 6 (§4.6, Tables 6 & 7): does mixing GPU types save money?
+//!
+//! Azure: cheap A10Gs in the short pool + premium GPUs only where the long
+//! context warrants them. LMSYS at 65K max context: the long-pool GPU
+//! choice decides SLO feasibility outright — some pairings are invalid at
+//! any count (long-context prefill on slow chunks blows the budget).
+
+use crate::gpu::catalog::GpuCatalog;
+use crate::queueing::mgc::WorkloadHist;
+use crate::scenarios::common::*;
+use crate::util::table::{dollars, millis, Align, Table};
+use crate::workload::spec::{BuiltinTrace, WorkloadSpec};
+
+pub const LAMBDA: f64 = 100.0;
+pub const SLO_MS: f64 = 500.0;
+
+#[derive(Debug, Clone)]
+pub struct MixRow {
+    pub config: String,
+    pub gpus: u32,
+    pub cost_yr: f64,
+    pub p99_short: f64,
+    pub p99_long: f64,
+    pub feasible: bool,
+}
+
+pub fn evaluate(trace: BuiltinTrace, b_short: f64, opts: &ScenarioOpts)
+    -> Vec<MixRow>
+{
+    let cat = GpuCatalog::standard();
+    let w = WorkloadSpec::builtin(trace, LAMBDA);
+    let hist = WorkloadHist::from_cdf(&w.cdf, w.input_fraction);
+    let pairs = [("A100", "A100"), ("A10G", "H100"), ("A10G", "A100"),
+                 ("A10G", "A10G"), ("H100", "H100")];
+    let mut rows = Vec::new();
+    for (s, l) in pairs {
+        let gpu_s = cat.require(s).unwrap().clone();
+        let gpu_l = cat.require(l).unwrap().clone();
+        let config = if s == l {
+            format!("All-{s}")
+        } else {
+            format!("{s} Ps + {l} Pl")
+        };
+        match min_two_pool(&w, &hist, &gpu_s, &gpu_l, b_short, SLO_MS,
+                           opts.max_gpus) {
+            Some(cand) => {
+                let (_, p99_s, p99_l, _) = verify_candidate(&w, &cand, opts);
+                // Table 7 verdicts are per-pool: a long pool violating the
+                // SLO fails the config even though long traffic is too
+                // rare to move the fleet-wide P99.
+                rows.push(MixRow {
+                    config,
+                    gpus: cand.total_gpus(),
+                    cost_yr: cand.cost_per_year(),
+                    p99_short: p99_s,
+                    p99_long: p99_l,
+                    feasible: p99_s <= SLO_MS && p99_l <= SLO_MS,
+                });
+            }
+            None => rows.push(MixRow {
+                config,
+                gpus: 0,
+                cost_yr: f64::INFINITY,
+                p99_short: f64::NAN,
+                p99_long: f64::NAN,
+                feasible: false,
+            }),
+        }
+    }
+    rows.sort_by(|a, b| a.cost_yr.total_cmp(&b.cost_yr));
+    rows
+}
+
+fn table_for(name: &str, trace: BuiltinTrace, b_short: f64,
+             opts: &ScenarioOpts) -> Table {
+    let rows = evaluate(trace, b_short, opts);
+    let mut t = Table::new(&["Config", "GPUs", "Cost/yr", "P99-short",
+                             "P99-long", "SLO"])
+        .with_title(format!(
+            "Mixed GPU types, {name} workload (λ={LAMBDA}, B={b_short}, \
+             SLO={SLO_MS} ms)"
+        ))
+        .align(&[Align::Left, Align::Right, Align::Right, Align::Right,
+                 Align::Right, Align::Right]);
+    for r in &rows {
+        if r.cost_yr.is_finite() {
+            t.row(&[
+                r.config.clone(),
+                r.gpus.to_string(),
+                dollars(r.cost_yr),
+                millis(r.p99_short),
+                millis(r.p99_long),
+                check(r.feasible).to_string(),
+            ]);
+        } else {
+            t.row(&[
+                r.config.clone(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "infeasible at any count".into(),
+            ]);
+        }
+    }
+    t
+}
+
+pub fn run(opts: &ScenarioOpts) -> PuzzleReport {
+    let tables = vec![
+        table_for("Azure", BuiltinTrace::Azure, 3072.0, opts),
+        table_for("LMSYS (65K max ctx)", BuiltinTrace::Lmsys, 4096.0, opts),
+    ];
+    PuzzleReport {
+        id: 6,
+        title: "Does mixing GPU types save money?".into(),
+        tables,
+        insight: "Mixing is not just a cost play: on LMSYS the long-pool \
+                  GPU decides feasibility — slow chunked prefill on a 65K \
+                  prompt can exceed the whole SLO budget no matter how \
+                  many cards you add. Joint optimization over pool \
+                  assignment and GPU type is required; some pairings are \
+                  simply invalid."
+            .into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn azure_mixing_saves_vs_all_a100() {
+        let rows = evaluate(BuiltinTrace::Azure, 3072.0,
+                            &ScenarioOpts::fast());
+        let all_a100 = rows.iter().find(|r| r.config == "All-A100").unwrap();
+        let mixed = rows
+            .iter()
+            .find(|r| r.config.starts_with("A10G Ps"))
+            .filter(|r| r.feasible);
+        if let Some(m) = mixed {
+            assert!(m.cost_yr < all_a100.cost_yr,
+                    "mixed {} vs all-A100 {}", m.cost_yr, all_a100.cost_yr);
+        }
+    }
+
+    #[test]
+    fn lmsys_long_pool_gpu_choice_matters() {
+        let rows = evaluate(BuiltinTrace::Lmsys, 4096.0,
+                            &ScenarioOpts::fast());
+        // A10G cannot hold the 65K long pool VRAM/SLO-wise; with an H100
+        // long pool the same short pool becomes feasible.
+        let a10g_long = rows.iter().find(|r| r.config == "All-A10G").unwrap();
+        let h100_long = rows
+            .iter()
+            .find(|r| r.config == "A10G Ps + H100 Pl")
+            .unwrap();
+        assert!(
+            !a10g_long.feasible || a10g_long.cost_yr > h100_long.cost_yr,
+            "A10G long pool should lose: {a10g_long:?} vs {h100_long:?}"
+        );
+        assert!(h100_long.feasible, "{h100_long:?}");
+    }
+}

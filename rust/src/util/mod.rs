@@ -1,0 +1,13 @@
+//! Shared substrates: JSON, statistics, tables, parallelism.
+//!
+//! These exist because the build environment is fully offline — crates like
+//! `serde_json` are unavailable — and because the paper's tooling needs only
+//! a narrow slice of each: a JSON reader for CDF files and artifact
+//! metadata, streaming percentile statistics for the DES, paper-style ASCII
+//! tables for the case studies, and a scoped thread map for Phase-2
+//! verification.
+
+pub mod json;
+pub mod parallel;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,92 @@
+//! Scoped-thread parallel map for Phase-2 DES verification.
+//!
+//! The planner verifies the top-k analytical candidates by simulation;
+//! each simulation is independent, so we fan out over std threads
+//! (tokio is unavailable offline, and the work is CPU-bound anyway).
+
+/// Map `f` over `items` using up to `max_threads` worker threads,
+/// preserving input order in the output.
+pub fn par_map<T, R, F>(items: Vec<T>, max_threads: usize, f: F) -> Vec<R>
+where
+    T: Send + Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = max_threads.max(1).min(n);
+    if threads == 1 {
+        return items.iter().map(|t| f(t)).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let out_slots: Vec<std::sync::Mutex<&mut Option<R>>> =
+        out.iter_mut().map(std::sync::Mutex::new).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&items[i]);
+                **out_slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("worker completed")).collect()
+}
+
+/// Default parallelism: available cores, capped to keep the box responsive.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let items: Vec<u64> = (0..100).collect();
+        let out = par_map(items, 8, |x| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let out = par_map(vec![1, 2, 3], 1, |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<i32> = par_map(Vec::<i32>::new(), 4, |x| *x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let out = par_map(vec![5], 16, |x| x * x);
+        assert_eq!(out, vec![25]);
+    }
+
+    #[test]
+    fn actually_parallel() {
+        // All threads must be in-flight simultaneously for this to finish:
+        // a barrier waits for `threads` participants.
+        let threads = 4;
+        let barrier = std::sync::Barrier::new(threads);
+        let items: Vec<usize> = (0..threads).collect();
+        let out = par_map(items, threads, |_| {
+            barrier.wait();
+            1
+        });
+        assert_eq!(out.len(), threads);
+    }
+}

@@ -1,0 +1,203 @@
+//! Sample statistics for DES metrics: percentiles, moments, SCV.
+//!
+//! The DES collects per-request latencies; the SLO check is a P99 over the
+//! sample (paper §3.1 Phase 2). Percentiles use the nearest-rank method on
+//! a sorted copy — exact, deterministic, and cheap at the 10^4–10^5 sample
+//! sizes the simulator produces.
+
+/// Accumulates samples and answers percentile / moment queries.
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    values: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Samples { values: Vec::with_capacity(n), sorted: false }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.values.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            return 0.0;
+        }
+        self.values.iter().sum::<f64>() / self.values.len() as f64
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.values.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        self.values.iter().map(|v| (v - m) * (v - m)).sum::<f64>()
+            / self.values.len() as f64
+    }
+
+    /// Squared coefficient of variation Cs² = Var/Mean² (paper §2.2).
+    pub fn scv(&self) -> f64 {
+        let m = self.mean();
+        if m.abs() < 1e-12 {
+            return 0.0;
+        }
+        self.variance() / (m * m)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.values.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Nearest-rank percentile, `q` in [0, 100]. Empty samples return 0.
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        if self.values.is_empty() {
+            return 0.0;
+        }
+        if !self.sorted {
+            self.values
+                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            self.sorted = true;
+        }
+        let n = self.values.len();
+        let rank = ((q / 100.0) * n as f64).ceil() as usize;
+        self.values[rank.clamp(1, n) - 1]
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+}
+
+/// Streaming mean/variance (Welford) for cheap online monitoring where we
+/// don't need percentiles (e.g. per-pool utilization traces).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let mut s = Samples::new();
+        for v in 1..=100 {
+            s.push(v as f64);
+        }
+        assert_eq!(s.percentile(50.0), 50.0);
+        assert_eq!(s.percentile(99.0), 99.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+        assert_eq!(s.percentile(1.0), 1.0);
+    }
+
+    #[test]
+    fn percentile_small_samples() {
+        let mut s = Samples::new();
+        s.push(7.0);
+        assert_eq!(s.p99(), 7.0);
+        assert_eq!(s.p50(), 7.0);
+        let mut e = Samples::new();
+        assert_eq!(e.p99(), 0.0);
+    }
+
+    #[test]
+    fn percentile_after_push_resorts() {
+        let mut s = Samples::new();
+        s.push(10.0);
+        assert_eq!(s.p99(), 10.0);
+        s.push(20.0);
+        assert_eq!(s.p99(), 20.0);
+    }
+
+    #[test]
+    fn moments() {
+        let mut s = Samples::new();
+        for v in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(v);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.variance() - 4.0).abs() < 1e-12);
+        assert!((s.scv() - 4.0 / 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let data: Vec<f64> = (0..1000).map(|i| ((i * 7919) % 100) as f64).collect();
+        let mut w = Welford::default();
+        let mut s = Samples::new();
+        for &x in &data {
+            w.push(x);
+            s.push(x);
+        }
+        assert!((w.mean() - s.mean()).abs() < 1e-9);
+        assert!((w.variance() - s.variance()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn exponential_scv_close_to_one() {
+        // Deterministic inverse-CDF samples of Exp(1).
+        let mut s = Samples::new();
+        let n = 20000;
+        for i in 0..n {
+            let u = (i as f64 + 0.5) / n as f64;
+            s.push(-(1.0 - u).ln());
+        }
+        assert!((s.scv() - 1.0).abs() < 0.02, "scv = {}", s.scv());
+    }
+}

@@ -1,0 +1,193 @@
+//! Paper-style ASCII tables for case-study output.
+//!
+//! Every puzzle in §4 of the paper reports a small table; this renderer
+//! produces aligned, boxed output that the CLI, examples, and bench
+//! harnesses share so that EXPERIMENTS.md diffs read like the paper.
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple column-aligned table with a header row.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: Option<String>,
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            title: None,
+            aligns: headers.iter().map(|_| Align::Right).collect(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn with_title(mut self, title: impl Into<String>) -> Self {
+        self.title = Some(title.into());
+        self
+    }
+
+    /// Set per-column alignment (defaults to right).
+    pub fn align(mut self, aligns: &[Align]) -> Self {
+        assert_eq!(aligns.len(), self.headers.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String], aligns: &[Align]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                let cell = &cells[i];
+                let pad = widths[i] - cell.len();
+                match aligns[i] {
+                    Align::Left => {
+                        s.push(' ');
+                        s.push_str(cell);
+                        s.push_str(&" ".repeat(pad + 1));
+                    }
+                    Align::Right => {
+                        s.push_str(&" ".repeat(pad + 1));
+                        s.push_str(cell);
+                        s.push(' ');
+                    }
+                }
+                s.push('|');
+            }
+            s
+        };
+        out.push_str(&sep);
+        out.push('\n');
+        let lefts: Vec<Align> = vec![Align::Left; ncol];
+        out.push_str(&fmt_row(&self.headers, &lefts));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &self.aligns));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out
+    }
+}
+
+/// Format a dollar amount as the paper does: `$155K`, `$1.47M`, `$845K`.
+pub fn dollars(v: f64) -> String {
+    if v >= 995_000.0 {
+        format!("${:.2}M", v / 1e6)
+    } else if v >= 1_000.0 {
+        format!("${:.0}K", v / 1e3)
+    } else {
+        format!("${v:.0}")
+    }
+}
+
+/// Format milliseconds compactly: `17 ms`, `1,052 ms`, `inf`.
+pub fn millis(v: f64) -> String {
+    if !v.is_finite() {
+        return "inf".to_string();
+    }
+    let n = v.round() as i64;
+    if n >= 1000 {
+        format!("{},{:03} ms", n / 1000, n % 1000)
+    } else if v < 10.0 && v > 0.0 {
+        format!("{v:.1} ms")
+    } else {
+        format!("{n} ms")
+    }
+}
+
+/// Format a percentage with one decimal: `98.4%`.
+pub fn percent(frac: f64) -> String {
+    format!("{:.1}%", frac * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["B_short", "GPUs", "$/yr"]).with_title("T");
+        t.row_strs(&["512", "15", "$290K"]);
+        t.row_strs(&["4096", "8", "$155K"]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines[0], "T");
+        // All body lines equal width.
+        let w = lines[1].len();
+        assert!(lines[1..].iter().all(|l| l.len() == w), "{r}");
+        assert!(r.contains("$155K"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row_strs(&["1"]);
+    }
+
+    #[test]
+    fn dollar_formatting() {
+        assert_eq!(dollars(155_000.0), "$155K");
+        assert_eq!(dollars(1_470_000.0), "$1.47M");
+        assert_eq!(dollars(845_200.0), "$845K");
+        assert_eq!(dollars(420.0), "$420");
+    }
+
+    #[test]
+    fn millis_formatting() {
+        assert_eq!(millis(17.0), "17 ms");
+        assert_eq!(millis(1052.0), "1,052 ms");
+        assert_eq!(millis(7.9), "7.9 ms");
+        assert_eq!(millis(f64::INFINITY), "inf");
+    }
+
+    #[test]
+    fn percent_formatting() {
+        assert_eq!(percent(0.984), "98.4%");
+    }
+}

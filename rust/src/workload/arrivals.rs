@@ -1,0 +1,162 @@
+//! Poisson arrival process (paper §3.1 Phase 2, step 1).
+//!
+//! Inter-arrival gaps are Exp(λ); the generator also supports a bursty
+//! (Markov-modulated) variant used by the router case study to stress the
+//! sub-stream-Poisson approximation the paper calls out in §3.3.
+
+use crate::workload::rng::Pcg64;
+
+/// Generates arrival timestamps in milliseconds.
+#[derive(Debug, Clone)]
+pub enum ArrivalProcess {
+    /// Stationary Poisson at `rate_per_ms`.
+    Poisson { rate_per_ms: f64 },
+    /// Two-state Markov-modulated Poisson process: alternates between a
+    /// base rate and a burst rate with exponentially distributed dwell
+    /// times. Mean rate = weighted average by dwell fractions.
+    Mmpp {
+        base_per_ms: f64,
+        burst_per_ms: f64,
+        mean_base_dwell_ms: f64,
+        mean_burst_dwell_ms: f64,
+    },
+}
+
+impl ArrivalProcess {
+    /// Poisson process from a req/s rate (the paper quotes λ in req/s).
+    pub fn poisson_rps(rate_per_s: f64) -> Self {
+        ArrivalProcess::Poisson { rate_per_ms: rate_per_s / 1000.0 }
+    }
+
+    /// Long-run mean arrival rate (req/ms).
+    pub fn mean_rate(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate_per_ms } => rate_per_ms,
+            ArrivalProcess::Mmpp {
+                base_per_ms,
+                burst_per_ms,
+                mean_base_dwell_ms,
+                mean_burst_dwell_ms,
+            } => {
+                let total = mean_base_dwell_ms + mean_burst_dwell_ms;
+                (base_per_ms * mean_base_dwell_ms
+                    + burst_per_ms * mean_burst_dwell_ms)
+                    / total
+            }
+        }
+    }
+
+    /// Generate the first `n` arrival times (ms, ascending from ~0).
+    pub fn generate(&self, n: usize, rng: &mut Pcg64) -> Vec<f64> {
+        let mut times = Vec::with_capacity(n);
+        match *self {
+            ArrivalProcess::Poisson { rate_per_ms } => {
+                assert!(rate_per_ms > 0.0);
+                let mut t = 0.0;
+                for _ in 0..n {
+                    t += rng.exponential(rate_per_ms);
+                    times.push(t);
+                }
+            }
+            ArrivalProcess::Mmpp {
+                base_per_ms,
+                burst_per_ms,
+                mean_base_dwell_ms,
+                mean_burst_dwell_ms,
+            } => {
+                assert!(base_per_ms > 0.0 && burst_per_ms > 0.0);
+                let mut t = 0.0;
+                let mut in_burst = false;
+                let mut phase_end = rng.exponential(1.0 / mean_base_dwell_ms);
+                while times.len() < n {
+                    let rate = if in_burst { burst_per_ms } else { base_per_ms };
+                    let next = t + rng.exponential(rate);
+                    if next > phase_end {
+                        t = phase_end;
+                        in_burst = !in_burst;
+                        let dwell = if in_burst {
+                            mean_burst_dwell_ms
+                        } else {
+                            mean_base_dwell_ms
+                        };
+                        phase_end = t + rng.exponential(1.0 / dwell);
+                    } else {
+                        t = next;
+                        times.push(t);
+                    }
+                }
+            }
+        }
+        times
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_is_calibrated() {
+        let p = ArrivalProcess::poisson_rps(100.0);
+        let mut rng = Pcg64::new(21, 0);
+        let n = 100_000;
+        let times = p.generate(n, &mut rng);
+        let rate = n as f64 / times.last().unwrap();
+        assert!((rate - 0.1).abs() / 0.1 < 0.02, "rate = {rate}/ms");
+    }
+
+    #[test]
+    fn arrivals_ascend() {
+        let p = ArrivalProcess::poisson_rps(50.0);
+        let mut rng = Pcg64::new(22, 0);
+        let times = p.generate(10_000, &mut rng);
+        assert!(times.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn poisson_gap_scv_is_one() {
+        let p = ArrivalProcess::poisson_rps(10.0);
+        let mut rng = Pcg64::new(23, 0);
+        let times = p.generate(100_000, &mut rng);
+        let gaps: Vec<f64> = times.windows(2).map(|w| w[1] - w[0]).collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>()
+            / gaps.len() as f64;
+        let scv = var / (mean * mean);
+        assert!((scv - 1.0).abs() < 0.03, "scv = {scv}");
+    }
+
+    #[test]
+    fn mmpp_is_burstier_than_poisson() {
+        let m = ArrivalProcess::Mmpp {
+            base_per_ms: 0.01,
+            burst_per_ms: 0.2,
+            mean_base_dwell_ms: 5_000.0,
+            mean_burst_dwell_ms: 1_000.0,
+        };
+        let mut rng = Pcg64::new(24, 0);
+        let times = m.generate(50_000, &mut rng);
+        let gaps: Vec<f64> = times.windows(2).map(|w| w[1] - w[0]).collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>()
+            / gaps.len() as f64;
+        let scv = var / (mean * mean);
+        assert!(scv > 1.5, "MMPP scv = {scv}, expected bursty (>1)");
+    }
+
+    #[test]
+    fn mmpp_mean_rate() {
+        let m = ArrivalProcess::Mmpp {
+            base_per_ms: 0.01,
+            burst_per_ms: 0.05,
+            mean_base_dwell_ms: 3_000.0,
+            mean_burst_dwell_ms: 1_000.0,
+        };
+        assert!((m.mean_rate() - 0.02).abs() < 1e-12);
+        let mut rng = Pcg64::new(25, 0);
+        let n = 200_000;
+        let times = m.generate(n, &mut rng);
+        let rate = n as f64 / times.last().unwrap();
+        assert!((rate - 0.02).abs() / 0.02 < 0.05, "rate = {rate}");
+    }
+}

@@ -1,0 +1,123 @@
+//! The three workload traces that ship with the tool (paper §3.3).
+//!
+//! The JSON files under `data/cdf/` are the single source of truth; they are
+//! embedded at compile time so the binary is self-contained, and can also be
+//! loaded from disk (or replaced by the user) via [`EmpiricalCdf::load`].
+
+use crate::util::json::Json;
+use crate::workload::cdf::EmpiricalCdf;
+
+pub const LMSYS_JSON: &str = include_str!("../../../data/cdf/lmsys.json");
+pub const AZURE_JSON: &str = include_str!("../../../data/cdf/azure.json");
+pub const AGENT_JSON: &str = include_str!("../../../data/cdf/agent.json");
+
+/// A parsed builtin trace: CDF plus its prompt fraction.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub name: String,
+    pub description: String,
+    pub cdf: EmpiricalCdf,
+    /// Fraction of the token budget that is prompt (L_in / L_total).
+    pub input_fraction: f64,
+}
+
+impl Trace {
+    pub fn from_json_str(text: &str) -> anyhow::Result<Trace> {
+        let doc = Json::parse(text)?;
+        let cdf = EmpiricalCdf::from_json(&doc)?;
+        let input_fraction = doc
+            .get("input_fraction")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.5);
+        anyhow::ensure!(
+            (0.0..1.0).contains(&input_fraction),
+            "input_fraction must be in [0,1)"
+        );
+        Ok(Trace {
+            name: doc
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("unnamed")
+                .to_string(),
+            description: doc
+                .get("description")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+            cdf,
+            input_fraction,
+        })
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Trace> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::from_json_str(&text)
+    }
+
+    pub fn lmsys() -> Trace {
+        Self::from_json_str(LMSYS_JSON).expect("embedded lmsys.json is valid")
+    }
+
+    pub fn azure() -> Trace {
+        Self::from_json_str(AZURE_JSON).expect("embedded azure.json is valid")
+    }
+
+    pub fn agent() -> Trace {
+        Self::from_json_str(AGENT_JSON).expect("embedded agent.json is valid")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lmsys_matches_paper_quantiles() {
+        // Table 1's alpha_s column pins these.
+        let t = Trace::lmsys();
+        for (len, want) in [
+            (512.0, 0.638),
+            (1024.0, 0.831),
+            (2048.0, 0.948),
+            (4096.0, 0.984),
+            (8192.0, 0.997),
+            (12288.0, 0.999),
+        ] {
+            let got = t.cdf.cdf(len);
+            assert!((got - want).abs() < 1e-9, "F({len}) = {got}, want {want}");
+        }
+        assert_eq!(t.cdf.max_len(), 65536.0);
+    }
+
+    #[test]
+    fn azure_matches_paper_facts() {
+        let t = Trace::azure();
+        // "78% of requests below 2K tokens; max context 8K" (§3.3).
+        assert!((t.cdf.cdf(2048.0) - 0.78).abs() < 1e-9);
+        assert_eq!(t.cdf.max_len(), 8192.0);
+    }
+
+    #[test]
+    fn agent_matches_paper_facts() {
+        let t = Trace::agent();
+        // "46% of requests above 4K tokens and a heavy tail to 300K" (§3.3).
+        assert!((1.0 - t.cdf.cdf(4096.0) - 0.46).abs() < 1e-9);
+        assert_eq!(t.cdf.max_len(), 300000.0);
+    }
+
+    #[test]
+    fn input_fractions_loaded() {
+        assert!((Trace::lmsys().input_fraction - 0.85).abs() < 1e-12);
+        assert!((Trace::azure().input_fraction - 0.8).abs() < 1e-12);
+        assert!((Trace::agent().input_fraction - 0.93).abs() < 1e-12);
+    }
+
+    #[test]
+    fn names_and_descriptions_present() {
+        for t in [Trace::lmsys(), Trace::azure(), Trace::agent()] {
+            assert!(!t.name.is_empty());
+            assert!(!t.description.is_empty());
+        }
+    }
+}

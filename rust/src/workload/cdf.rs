@@ -1,0 +1,277 @@
+//! Empirical token-length CDFs (paper §3.3, "Empirical CDF" format).
+//!
+//! A CDF is a list of `(token_budget, cumulative_probability)` breakpoints.
+//! Between breakpoints we interpolate **log-linearly in length** — token
+//! budgets span decades (64 … 300 000) and log-space interpolation is the
+//! standard choice for heavy-tailed length data. The struct answers the
+//! queries the planner needs:
+//!
+//! * `cdf(L)` — fraction of requests with total budget ≤ L (splits λ,
+//!   paper §3.1 step 1),
+//! * `quantile(q)` — inverse CDF (drawing DES request lengths, P99 lengths),
+//! * `histogram(k)` — a k-bin discretization feeding the Phase-1 moment
+//!   kernel (L1 `moments.py` and the rust fallback),
+//! * conditional moments over a pool's length range.
+
+use crate::util::json::Json;
+use crate::workload::rng::Pcg64;
+
+/// Empirical CDF over total token budget (prompt + completion).
+#[derive(Debug, Clone)]
+pub struct EmpiricalCdf {
+    /// Breakpoints (length, cum_prob); strictly increasing in both fields,
+    /// last cum_prob == 1.0.
+    points: Vec<(f64, f64)>,
+    /// Smallest representable budget (left edge of the support).
+    min_len: f64,
+}
+
+impl EmpiricalCdf {
+    /// Build from breakpoints. Requirements: non-empty, lengths strictly
+    /// increasing, probabilities strictly increasing and ending at 1.0.
+    pub fn new(points: Vec<(f64, f64)>) -> anyhow::Result<Self> {
+        anyhow::ensure!(!points.is_empty(), "CDF needs at least one breakpoint");
+        for w in points.windows(2) {
+            anyhow::ensure!(w[0].0 < w[1].0, "lengths must strictly increase");
+            anyhow::ensure!(w[0].1 < w[1].1, "probs must strictly increase");
+        }
+        let last = points.last().unwrap();
+        anyhow::ensure!(
+            (last.1 - 1.0).abs() < 1e-9,
+            "last breakpoint must have cum_prob 1.0, got {}",
+            last.1
+        );
+        for &(l, p) in &points {
+            anyhow::ensure!(l > 0.0, "lengths must be positive");
+            anyhow::ensure!(p > 0.0 && p <= 1.0 + 1e-12, "probs must be in (0,1]");
+        }
+        let min_len = (points[0].0 / 4.0).max(1.0);
+        Ok(EmpiricalCdf { points, min_len })
+    }
+
+    /// Parse the JSON CDF format:
+    /// `{"name": ..., "points": [[len, cum_prob], ...]}`.
+    pub fn from_json(doc: &Json) -> anyhow::Result<Self> {
+        let pts = doc
+            .get("points")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("missing 'points' array"))?;
+        let mut points = Vec::with_capacity(pts.len());
+        for p in pts {
+            let pair = p
+                .as_arr()
+                .filter(|a| a.len() == 2)
+                .ok_or_else(|| anyhow::anyhow!("each point must be [len, prob]"))?;
+            let l = pair[0].as_f64().ok_or_else(|| anyhow::anyhow!("bad len"))?;
+            let q = pair[1].as_f64().ok_or_else(|| anyhow::anyhow!("bad prob"))?;
+            points.push((l, q));
+        }
+        Self::new(points)
+    }
+
+    pub fn from_json_str(text: &str) -> anyhow::Result<Self> {
+        Self::from_json(&Json::parse(text)?)
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::from_json_str(&text)
+    }
+
+    /// Maximum token budget in the support.
+    pub fn max_len(&self) -> f64 {
+        self.points.last().unwrap().0
+    }
+
+    /// F(L): fraction of requests with budget <= L.
+    pub fn cdf(&self, len: f64) -> f64 {
+        if len < self.min_len {
+            return 0.0;
+        }
+        if len >= self.max_len() {
+            return 1.0;
+        }
+        // Find the bracketing breakpoints.
+        let mut lo = (self.min_len, 0.0);
+        for &(l, p) in &self.points {
+            if len < l {
+                let hi = (l, p);
+                let t = (len.ln() - lo.0.ln()) / (hi.0.ln() - lo.0.ln());
+                return lo.1 + t * (hi.1 - lo.1);
+            }
+            lo = (l, p);
+        }
+        1.0
+    }
+
+    /// Inverse CDF: the smallest length L with F(L) >= q, q in [0, 1].
+    pub fn quantile(&self, q: f64) -> f64 {
+        let q = q.clamp(0.0, 1.0);
+        let mut lo = (self.min_len, 0.0);
+        for &(l, p) in &self.points {
+            if q <= p {
+                let t = if p - lo.1 > 1e-15 { (q - lo.1) / (p - lo.1) } else { 1.0 };
+                if t >= 1.0 {
+                    return l; // avoid exp(ln(l)) rounding at breakpoints
+                }
+                return (lo.0.ln() + t * (l.ln() - lo.0.ln())).exp();
+            }
+            lo = (l, p);
+        }
+        self.max_len()
+    }
+
+    /// Draw one total token budget.
+    pub fn sample(&self, rng: &mut Pcg64) -> f64 {
+        self.quantile(rng.uniform())
+    }
+
+    /// Return a CDF truncated at `cap` tokens: mass above the cap collapses
+    /// onto it (used e.g. by Puzzle 2's 65K-context agent fleet).
+    pub fn truncated(&self, cap: f64) -> anyhow::Result<Self> {
+        anyhow::ensure!(cap > self.points[0].0, "cap below CDF support");
+        if cap >= self.max_len() {
+            return Ok(self.clone());
+        }
+        let mut pts: Vec<(f64, f64)> =
+            self.points.iter().copied().filter(|&(l, _)| l < cap).collect();
+        pts.push((cap, 1.0));
+        Self::new(pts)
+    }
+
+    /// Discretize into `k` log-spaced bins: returns (probabilities, centers).
+    /// Probabilities sum to 1; centers are log-midpoints of the bin edges.
+    /// This is the histogram fed to the Phase-1 moment kernel.
+    pub fn histogram(&self, k: usize) -> (Vec<f64>, Vec<f64>) {
+        assert!(k >= 2);
+        let lo = self.min_len.ln();
+        let hi = self.max_len().ln();
+        let mut probs = Vec::with_capacity(k);
+        let mut centers = Vec::with_capacity(k);
+        let mut prev_edge = self.min_len;
+        let mut prev_cdf = 0.0;
+        for i in 0..k {
+            let edge = ((i + 1) as f64 / k as f64 * (hi - lo) + lo).exp();
+            let c = if i == k - 1 { 1.0 } else { self.cdf(edge) };
+            probs.push((c - prev_cdf).max(0.0));
+            centers.push((prev_edge.ln() * 0.5 + edge.ln() * 0.5).exp());
+            prev_edge = edge;
+            prev_cdf = c;
+        }
+        // Normalize away any interpolation residue.
+        let total: f64 = probs.iter().sum();
+        if total > 0.0 {
+            for p in &mut probs {
+                *p /= total;
+            }
+        }
+        (probs, centers)
+    }
+
+    /// Mean token budget (from the k-bin discretization).
+    pub fn mean(&self, k: usize) -> f64 {
+        let (p, c) = self.histogram(k);
+        p.iter().zip(&c).map(|(p, c)| p * c).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn simple() -> EmpiricalCdf {
+        EmpiricalCdf::new(vec![
+            (512.0, 0.638),
+            (1024.0, 0.831),
+            (2048.0, 0.948),
+            (4096.0, 0.984),
+            (8192.0, 0.997),
+            (65536.0, 1.0),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn cdf_hits_breakpoints() {
+        let c = simple();
+        assert!((c.cdf(512.0) - 0.638).abs() < 1e-12);
+        assert!((c.cdf(4096.0) - 0.984).abs() < 1e-12);
+        assert_eq!(c.cdf(65536.0), 1.0);
+        assert_eq!(c.cdf(1e9), 1.0);
+        assert_eq!(c.cdf(1.0), 0.0);
+    }
+
+    #[test]
+    fn cdf_monotone() {
+        let c = simple();
+        let mut prev = -1.0;
+        for i in 0..200 {
+            let l = 64.0 * 1.04f64.powi(i);
+            let v = c.cdf(l);
+            assert!(v >= prev);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn quantile_inverts_cdf() {
+        let c = simple();
+        for q in [0.1, 0.3, 0.638, 0.9, 0.984, 0.999] {
+            let l = c.quantile(q);
+            assert!((c.cdf(l) - q).abs() < 1e-9, "q={q} l={l}");
+        }
+        assert_eq!(c.quantile(1.0), 65536.0);
+    }
+
+    #[test]
+    fn histogram_sums_to_one_and_matches_cdf() {
+        let c = simple();
+        let (p, centers) = c.histogram(256);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert_eq!(p.len(), 256);
+        // Cumulative histogram approximates the CDF at the threshold.
+        let below: f64 = p
+            .iter()
+            .zip(&centers)
+            .filter(|(_, &c)| c <= 4096.0)
+            .map(|(p, _)| p)
+            .sum();
+        assert!((below - 0.984).abs() < 0.01, "below = {below}");
+    }
+
+    #[test]
+    fn sampling_matches_cdf() {
+        let c = simple();
+        let mut rng = Pcg64::new(5, 0);
+        let n = 50_000;
+        let short = (0..n).filter(|_| c.sample(&mut rng) <= 4096.0).count();
+        let frac = short as f64 / n as f64;
+        assert!((frac - 0.984).abs() < 0.005, "frac = {frac}");
+    }
+
+    #[test]
+    fn truncation() {
+        let c = simple().truncated(8192.0).unwrap();
+        assert_eq!(c.max_len(), 8192.0);
+        assert_eq!(c.cdf(8192.0), 1.0);
+        assert!((c.cdf(512.0) - 0.638).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let text = r#"{"name": "t", "points": [[512, 0.5], [1024, 1.0]]}"#;
+        let c = EmpiricalCdf::from_json_str(text).unwrap();
+        assert_eq!(c.max_len(), 1024.0);
+        assert!((c.cdf(512.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(EmpiricalCdf::new(vec![]).is_err());
+        assert!(EmpiricalCdf::new(vec![(10.0, 0.5)]).is_err()); // not 1.0
+        assert!(EmpiricalCdf::new(vec![(10.0, 0.5), (5.0, 1.0)]).is_err());
+        assert!(EmpiricalCdf::new(vec![(10.0, 0.8), (20.0, 0.7)]).is_err());
+        assert!(EmpiricalCdf::from_json_str("{}").is_err());
+    }
+}

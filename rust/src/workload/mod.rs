@@ -1,0 +1,9 @@
+//! Workload substrate: token-length CDFs, synthetic length distributions,
+//! Poisson arrival processes, and the RNG they share (paper §3.3).
+
+pub mod arrivals;
+pub mod builtin;
+pub mod cdf;
+pub mod rng;
+pub mod spec;
+pub mod synth;

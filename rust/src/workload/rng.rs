@@ -1,0 +1,173 @@
+//! Deterministic PCG64 RNG plus the distributions the simulator draws from.
+//!
+//! Offline build: the `rand` crate is unavailable, so we implement
+//! PCG-XSL-RR-128/64 (O'Neill 2014) directly. Every simulation takes an
+//! explicit seed, so runs are reproducible bit-for-bit — a requirement for
+//! the paper's case studies to be re-generable.
+
+/// PCG-XSL-RR 128/64: 128-bit LCG state, xor-shift-low + random-rotate output.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Seed with a stream id; distinct `(seed, stream)` pairs give
+    /// independent sequences.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let initseq = ((stream as u128) << 64) | 0xda3e_39cb_94b9_5bdb;
+        let mut rng = Pcg64 { state: 0, inc: (initseq << 1) | 1 };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xored = ((self.state >> 64) ^ self.state) as u64;
+        let rot = (self.state >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1) with 53 bits of precision.
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in (0, 1] — safe to pass to `ln`.
+    pub fn uniform_open(&mut self) -> f64 {
+        1.0 - self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Lemire's multiply-shift with rejection for exactness.
+        assert!(n > 0);
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128) * (n as u128);
+            let lo = m as u64;
+            if lo >= n.wrapping_neg() % n {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Exponential with rate `lambda` (mean 1/lambda).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        debug_assert!(lambda > 0.0);
+        -self.uniform_open().ln() / lambda
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.uniform_open();
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Log-normal with the given log-space mean and sigma.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Pareto with scale x_m and shape alpha.
+    pub fn pareto(&mut self, x_m: f64, alpha: f64) -> f64 {
+        debug_assert!(x_m > 0.0 && alpha > 0.0);
+        x_m / self.uniform_open().powf(1.0 / alpha)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Pcg64::new(42, 0);
+        let mut b = Pcg64::new(42, 0);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_and_streams_differ() {
+        let mut a = Pcg64::new(42, 0);
+        let mut b = Pcg64::new(43, 0);
+        let mut c = Pcg64::new(42, 1);
+        let (x, y, z) = (a.next_u64(), b.next_u64(), c.next_u64());
+        assert_ne!(x, y);
+        assert_ne!(x, z);
+    }
+
+    #[test]
+    fn uniform_in_range_and_balanced() {
+        let mut rng = Pcg64::new(7, 0);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.005, "mean = {mean}");
+    }
+
+    #[test]
+    fn below_is_unbiased_ish() {
+        let mut rng = Pcg64::new(9, 0);
+        let mut counts = [0u32; 10];
+        for _ in 0..100_000 {
+            counts[rng.below(10) as usize] += 1;
+        }
+        for c in counts {
+            assert!((8_000..12_000).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Pcg64::new(11, 0);
+        let lambda = 0.25;
+        let n = 200_000;
+        let mean: f64 =
+            (0..n).map(|_| rng.exponential(lambda)).sum::<f64>() / n as f64;
+        assert!((mean - 4.0).abs() < 0.05, "mean = {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(13, 0);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean = {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var = {var}");
+    }
+
+    #[test]
+    fn pareto_exceeds_scale() {
+        let mut rng = Pcg64::new(17, 0);
+        for _ in 0..1000 {
+            assert!(rng.pareto(100.0, 1.5) >= 100.0);
+        }
+    }
+
+    #[test]
+    fn lognormal_median() {
+        let mut rng = Pcg64::new(19, 0);
+        let n = 100_001;
+        let mut xs: Vec<f64> = (0..n).map(|_| rng.lognormal(2.0, 0.7)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = xs[n / 2];
+        // Median of lognormal is e^mu.
+        assert!((median - 2.0f64.exp()).abs() / 2.0f64.exp() < 0.03);
+    }
+}

@@ -1,0 +1,197 @@
+//! WorkloadSpec: the planner's unit of workload description — a token-length
+//! CDF, a prompt fraction, and an arrival rate λ (paper §3.1 inputs).
+
+use crate::workload::arrivals::ArrivalProcess;
+use crate::workload::builtin::Trace;
+use crate::workload::cdf::EmpiricalCdf;
+use crate::workload::rng::Pcg64;
+
+/// The three traces that ship with the tool (paper §3.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BuiltinTrace {
+    Lmsys,
+    Azure,
+    Agent,
+}
+
+impl BuiltinTrace {
+    pub fn parse(name: &str) -> anyhow::Result<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "lmsys" => Ok(BuiltinTrace::Lmsys),
+            "azure" => Ok(BuiltinTrace::Azure),
+            "agent" => Ok(BuiltinTrace::Agent),
+            other => anyhow::bail!("unknown trace '{other}' (lmsys|azure|agent)"),
+        }
+    }
+
+    pub fn trace(self) -> Trace {
+        match self {
+            BuiltinTrace::Lmsys => Trace::lmsys(),
+            BuiltinTrace::Azure => Trace::azure(),
+            BuiltinTrace::Agent => Trace::agent(),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BuiltinTrace::Lmsys => "lmsys",
+            BuiltinTrace::Azure => "azure",
+            BuiltinTrace::Agent => "agent",
+        }
+    }
+}
+
+/// One sampled request before routing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SampledRequest {
+    pub arrival_ms: f64,
+    /// Prompt tokens.
+    pub l_in: f64,
+    /// Completion tokens.
+    pub l_out: f64,
+}
+
+impl SampledRequest {
+    pub fn total(&self) -> f64 {
+        self.l_in + self.l_out
+    }
+}
+
+/// A complete workload: lengths ~ CDF, arrivals ~ Poisson(λ).
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub name: String,
+    pub cdf: EmpiricalCdf,
+    /// Fraction of the token budget that is prompt.
+    pub input_fraction: f64,
+    /// Arrival rate in requests per second.
+    pub lambda_rps: f64,
+}
+
+impl WorkloadSpec {
+    pub fn new(
+        name: impl Into<String>,
+        cdf: EmpiricalCdf,
+        input_fraction: f64,
+        lambda_rps: f64,
+    ) -> Self {
+        assert!((0.0..1.0).contains(&input_fraction));
+        assert!(lambda_rps > 0.0);
+        WorkloadSpec { name: name.into(), cdf, input_fraction, lambda_rps }
+    }
+
+    pub fn builtin(trace: BuiltinTrace, lambda_rps: f64) -> Self {
+        let t = trace.trace();
+        WorkloadSpec::new(t.name, t.cdf, t.input_fraction, lambda_rps)
+    }
+
+    pub fn from_trace(t: &Trace, lambda_rps: f64) -> Self {
+        WorkloadSpec::new(t.name.clone(), t.cdf.clone(), t.input_fraction, lambda_rps)
+    }
+
+    /// Arrival rate in req/ms (the simulator's native time unit).
+    pub fn lambda_per_ms(&self) -> f64 {
+        self.lambda_rps / 1000.0
+    }
+
+    /// Replace the CDF with a version truncated at `cap` tokens.
+    pub fn truncated(&self, cap: f64) -> anyhow::Result<Self> {
+        Ok(WorkloadSpec {
+            name: format!("{}@{}k", self.name, (cap / 1024.0).round() as u64),
+            cdf: self.cdf.truncated(cap)?,
+            input_fraction: self.input_fraction,
+            lambda_rps: self.lambda_rps,
+        })
+    }
+
+    /// Same workload at a different arrival rate (whatif sweeps).
+    pub fn at_lambda(&self, lambda_rps: f64) -> Self {
+        let mut s = self.clone();
+        s.lambda_rps = lambda_rps;
+        s
+    }
+
+    /// Split a total token budget into (prompt, completion).
+    pub fn split(&self, total: f64) -> (f64, f64) {
+        let l_in = (total * self.input_fraction).ceil().max(1.0);
+        let l_out = (total - l_in).max(1.0);
+        (l_in, l_out)
+    }
+
+    /// Sample `n` requests with Poisson arrivals and i.i.d. CDF lengths
+    /// (paper §3.1 Phase 2 steps 1–2).
+    pub fn sample_requests(&self, n: usize, seed: u64) -> Vec<SampledRequest> {
+        let mut arr_rng = Pcg64::new(seed, 1);
+        let mut len_rng = Pcg64::new(seed, 2);
+        let arrivals =
+            ArrivalProcess::poisson_rps(self.lambda_rps).generate(n, &mut arr_rng);
+        arrivals
+            .into_iter()
+            .map(|t| {
+                let total = self.cdf.sample(&mut len_rng);
+                let (l_in, l_out) = self.split(total);
+                SampledRequest { arrival_ms: t, l_in, l_out }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_construction() {
+        let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 100.0);
+        assert_eq!(w.name, "azure");
+        assert!((w.lambda_per_ms() - 0.1).abs() < 1e-12);
+        assert!((w.input_fraction - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(BuiltinTrace::parse("LMSYS").unwrap(), BuiltinTrace::Lmsys);
+        assert!(BuiltinTrace::parse("nope").is_err());
+    }
+
+    #[test]
+    fn split_respects_fraction_and_floors() {
+        let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 1.0);
+        let (li, lo) = w.split(1000.0);
+        assert_eq!(li, 800.0);
+        assert_eq!(lo, 200.0);
+        // Tiny requests still get at least 1 output token.
+        let (li2, lo2) = w.split(1.0);
+        assert!(li2 >= 1.0 && lo2 >= 1.0);
+    }
+
+    #[test]
+    fn sampled_requests_are_ordered_and_sized() {
+        let w = WorkloadSpec::builtin(BuiltinTrace::Lmsys, 200.0);
+        let reqs = w.sample_requests(5_000, 42);
+        assert_eq!(reqs.len(), 5_000);
+        assert!(reqs.windows(2).all(|r| r[0].arrival_ms < r[1].arrival_ms));
+        assert!(reqs.iter().all(|r| r.total() <= 65536.0 + 1.0));
+        // ~98.4% under 4096 (Table 1).
+        let short = reqs.iter().filter(|r| r.total() <= 4096.0).count();
+        let frac = short as f64 / reqs.len() as f64;
+        assert!((frac - 0.984).abs() < 0.01, "short frac = {frac}");
+    }
+
+    #[test]
+    fn sampling_is_seed_deterministic() {
+        let w = WorkloadSpec::builtin(BuiltinTrace::Agent, 20.0);
+        assert_eq!(w.sample_requests(100, 7), w.sample_requests(100, 7));
+        assert_ne!(w.sample_requests(100, 7), w.sample_requests(100, 8));
+    }
+
+    #[test]
+    fn truncation_and_rescale() {
+        let w = WorkloadSpec::builtin(BuiltinTrace::Agent, 20.0).truncated(65536.0)
+            .unwrap();
+        assert_eq!(w.cdf.max_len(), 65536.0);
+        let w2 = w.at_lambda(50.0);
+        assert_eq!(w2.lambda_rps, 50.0);
+        assert_eq!(w.lambda_rps, 20.0);
+    }
+}

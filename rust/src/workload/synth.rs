@@ -1,0 +1,137 @@
+//! Synthetic token-length distributions for sensitivity analysis
+//! (paper §3.3, "Poisson with synthetic lengths"): Pareto or log-normal
+//! lengths, clamped to a [min, max] support.
+
+use crate::workload::cdf::EmpiricalCdf;
+use crate::workload::rng::Pcg64;
+
+/// A parametric length distribution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LengthDist {
+    /// Pareto(scale x_m, shape alpha); heavy-tailed for alpha near 1.
+    Pareto { x_m: f64, alpha: f64 },
+    /// Log-normal with log-space mean mu and sigma.
+    LogNormal { mu: f64, sigma: f64 },
+}
+
+/// Synthetic length generator with a clamped support.
+#[derive(Debug, Clone)]
+pub struct SynthLengths {
+    pub dist: LengthDist,
+    pub min_len: f64,
+    pub max_len: f64,
+}
+
+impl SynthLengths {
+    pub fn new(dist: LengthDist, min_len: f64, max_len: f64) -> anyhow::Result<Self> {
+        anyhow::ensure!(min_len > 0.0 && max_len > min_len, "bad support");
+        Ok(SynthLengths { dist, min_len, max_len })
+    }
+
+    /// Draw one total token budget.
+    pub fn sample(&self, rng: &mut Pcg64) -> f64 {
+        let raw = match self.dist {
+            LengthDist::Pareto { x_m, alpha } => rng.pareto(x_m, alpha),
+            LengthDist::LogNormal { mu, sigma } => rng.lognormal(mu, sigma),
+        };
+        raw.clamp(self.min_len, self.max_len)
+    }
+
+    /// Build an empirical CDF from `n` Monte-Carlo draws so the synthetic
+    /// workload can flow through the same Phase-1 machinery as trace CDFs.
+    pub fn to_cdf(&self, n: usize, seed: u64) -> anyhow::Result<EmpiricalCdf> {
+        let mut rng = Pcg64::new(seed, 77);
+        let mut draws: Vec<f64> = (0..n).map(|_| self.sample(&mut rng)).collect();
+        draws.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // Take ~64 quantile breakpoints; dedupe equal lengths.
+        let mut points: Vec<(f64, f64)> = Vec::new();
+        let k = 64.min(n);
+        for i in 1..=k {
+            let q = i as f64 / k as f64;
+            let idx = ((q * n as f64).ceil() as usize).clamp(1, n) - 1;
+            let len = draws[idx];
+            if let Some(last) = points.last_mut() {
+                if len <= last.0 {
+                    last.1 = q;
+                    continue;
+                }
+            }
+            points.push((len, q));
+        }
+        if let Some(last) = points.last_mut() {
+            last.1 = 1.0;
+        }
+        EmpiricalCdf::new(points)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_respect_support() {
+        let s = SynthLengths::new(
+            LengthDist::Pareto { x_m: 100.0, alpha: 1.2 },
+            128.0,
+            65536.0,
+        )
+        .unwrap();
+        let mut rng = Pcg64::new(1, 0);
+        for _ in 0..10_000 {
+            let v = s.sample(&mut rng);
+            assert!((128.0..=65536.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn pareto_is_heavier_tailed_than_lognormal() {
+        let pareto = SynthLengths::new(
+            LengthDist::Pareto { x_m: 200.0, alpha: 1.1 },
+            64.0,
+            300_000.0,
+        )
+        .unwrap();
+        let logn = SynthLengths::new(
+            LengthDist::LogNormal { mu: 5.3, sigma: 0.8 },
+            64.0,
+            300_000.0,
+        )
+        .unwrap();
+        let mut rng = Pcg64::new(2, 0);
+        let n = 50_000;
+        let big_p = (0..n).filter(|_| pareto.sample(&mut rng) > 10_000.0).count();
+        let big_l = (0..n).filter(|_| logn.sample(&mut rng) > 10_000.0).count();
+        assert!(big_p > big_l * 5, "pareto {big_p} vs lognormal {big_l}");
+    }
+
+    #[test]
+    fn to_cdf_matches_sampler() {
+        let s = SynthLengths::new(
+            LengthDist::LogNormal { mu: 6.0, sigma: 1.0 },
+            64.0,
+            65536.0,
+        )
+        .unwrap();
+        let cdf = s.to_cdf(50_000, 3).unwrap();
+        // Median of the CDF should be near e^6 ~ 403.
+        let med = cdf.quantile(0.5);
+        assert!((med - 403.0).abs() / 403.0 < 0.1, "median = {med}");
+    }
+
+    #[test]
+    fn rejects_bad_support() {
+        assert!(SynthLengths::new(
+            LengthDist::Pareto { x_m: 1.0, alpha: 1.0 },
+            0.0,
+            10.0
+        )
+        .is_err());
+        assert!(SynthLengths::new(
+            LengthDist::Pareto { x_m: 1.0, alpha: 1.0 },
+            10.0,
+            5.0
+        )
+        .is_err());
+    }
+}

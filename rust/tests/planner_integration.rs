@@ -1,0 +1,162 @@
+//! Cross-module integration: workload -> optimizer -> DES, and the
+//! consistency between analytics and simulation the paper's two-phase
+//! design relies on (§3.1, §3.2 "Model fidelity").
+
+use fleet_sim::des::engine::{DesConfig, SimPool, Simulator};
+use fleet_sim::gpu::catalog::GpuCatalog;
+use fleet_sim::optimizer::analytic::NativeSweep;
+use fleet_sim::optimizer::planner::{plan_pools, FleetOptimizer};
+use fleet_sim::queueing::mgc::{analyze_pool, PoolSpec, WorkloadHist};
+use fleet_sim::router::RoutingPolicy;
+use fleet_sim::workload::spec::{BuiltinTrace, WorkloadSpec};
+
+/// §3.2: "for chatbot workloads (low Cs²) the Kimura model is conservative
+/// vs DES: it over-predicts P99 TTFT" — verify on Azure at moderate load.
+#[test]
+fn kimura_is_conservative_on_chatbot_workloads() {
+    let cat = GpuCatalog::standard();
+    let gpu = cat.get("H100").unwrap().clone();
+    let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 100.0);
+    let hist = WorkloadHist::from_cdf(&w.cdf, w.input_fraction);
+    let n_gpus = 9;
+    let spec = PoolSpec { gpu: gpu.clone(), n_gpus, ctx_budget: 8192.0 };
+    let a = analyze_pool(&hist, 0.0, 8192.0, w.lambda_per_ms(), &spec);
+    assert!(a.rho < 0.85, "test setup: want moderate load, rho = {}", a.rho);
+
+    let sim = Simulator::new(
+        w,
+        vec![SimPool { gpu, n_gpus, ctx_budget: 8192.0, batch_cap: None }],
+        RoutingPolicy::Random { n_pools: 1 },
+        DesConfig { n_requests: 20_000, seed: 9, ..Default::default() },
+    );
+    let mut r = sim.run();
+    let des_p99 = r.overall.p99_ttft();
+    // Conservative: analytic >= DES (with slack for the service-model
+    // differences); and both in the same order of magnitude.
+    assert!(
+        a.ttft99_ms >= des_p99 * 0.8,
+        "analytic {} should not wildly underestimate DES {}",
+        a.ttft99_ms,
+        des_p99
+    );
+    assert!(a.ttft99_ms < des_p99 * 10.0 + 100.0);
+}
+
+/// §4.2 mechanism (Puzzle 2): an agent fleet at ~30% utilization with zero
+/// queue wait still fails its SLO — the failure is giant-prompt service,
+/// invisible to Erlang-C (Eq. 2) — and adding GPUs does not fix it. A
+/// two-pool split protects the short traffic.
+#[test]
+fn agent_fleet_fails_slo_at_low_utilization() {
+    let cat = GpuCatalog::standard();
+    let gpu = cat.get("H100").unwrap().clone();
+    let w = WorkloadSpec::builtin(BuiltinTrace::Agent, 20.0);
+    let ctx = w.cdf.max_len();
+    let slo = 1000.0;
+    let run_homo = |n_gpus: usize| {
+        let sim = Simulator::new(
+            w.clone(),
+            vec![SimPool { gpu: gpu.clone(), n_gpus, ctx_budget: ctx,
+                           batch_cap: None }],
+            RoutingPolicy::Random { n_pools: 1 },
+            DesConfig { n_requests: 15_000, seed: 2, ..Default::default() },
+        );
+        sim.run()
+    };
+    let r64 = run_homo(64);
+    let mut s64 = r64.overall.clone();
+    assert!(r64.per_pool[0].utilization < 0.45,
+            "util = {}", r64.per_pool[0].utilization);
+    assert!(s64.wait.p99() < 10.0, "queue wait should read ~zero");
+    assert!(s64.p99_ttft() > slo,
+            "fleet must fail SLO anyway: {}", s64.p99_ttft());
+    // Erlang-C / Kimura on the same pool sees no queueing problem.
+    let hist = WorkloadHist::from_cdf(&w.cdf, w.input_fraction);
+    let a = analyze_pool(&hist, 0.0, 1e9, w.lambda_per_ms(),
+                         &PoolSpec { gpu: gpu.clone(), n_gpus: 64,
+                                     ctx_budget: ctx });
+    assert!(a.w99_ms < 10.0, "Eq. 2 says the queue is fine: {}", a.w99_ms);
+    // Doubling the fleet does not fix it (Insight: adding GPUs cannot buy
+    // back prefill time).
+    let mut s128 = run_homo(128).overall.clone();
+    assert!(s128.p99_ttft() > slo, "128 GPUs: {}", s128.p99_ttft());
+    // Two-pool split: short requests are isolated and fast.
+    let pools = vec![
+        SimPool { gpu: gpu.clone(), n_gpus: 4, ctx_budget: 4096.0,
+                  batch_cap: None },
+        SimPool { gpu: gpu.clone(), n_gpus: 60, ctx_budget: ctx,
+                  batch_cap: None },
+    ];
+    let sim = Simulator::new(
+        w.clone(), pools, RoutingPolicy::Length { b_short: 4096.0 },
+        DesConfig { n_requests: 15_000, seed: 2, ..Default::default() },
+    );
+    let mut r = sim.run();
+    let short_p99 = r.per_pool[0].stats.ttft.p99();
+    assert!(short_p99 < 100.0,
+            "short pool must be protected: {short_p99}");
+}
+
+/// The planner's chosen fleet must actually pass its own DES check when
+/// re-simulated with a different seed (no seed overfitting).
+#[test]
+fn chosen_plan_is_robust_across_seeds() {
+    let mut opt = FleetOptimizer::new(GpuCatalog::standard(), 500.0);
+    opt.des.n_requests = 8_000;
+    let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 100.0);
+    let plan = opt.plan(&w);
+    let chosen = plan.chosen.expect("plan found");
+    let (pools, router) = plan_pools(&chosen.candidate);
+    for seed in [101, 202, 303] {
+        let sim = Simulator::new(
+            w.clone(),
+            pools.clone(),
+            router.clone(),
+            DesConfig { n_requests: 8_000, seed, ..Default::default() },
+        );
+        let mut r = sim.run();
+        let p99 = r.overall.p99_ttft();
+        assert!(
+            p99 <= 500.0 * 1.3,
+            "seed {seed}: P99 {p99} blows the SLO by more than 30%"
+        );
+    }
+}
+
+/// Phase-1 ranking and Phase-2 verification agree on feasibility for the
+/// top candidates on a low-variance workload (the regime where the paper
+/// says the analytic model is trustworthy).
+#[test]
+fn phase1_winners_pass_phase2_on_azure() {
+    let mut opt = FleetOptimizer::new(GpuCatalog::standard(), 500.0);
+    opt.des.n_requests = 6_000;
+    let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 100.0);
+    let (cands, _res, ranked) = opt.phase1(&w, &NativeSweep).unwrap();
+    assert!(!ranked.is_empty());
+    let mut passes = 0;
+    let k = ranked.len().min(5);
+    for &i in ranked.iter().take(k) {
+        if opt.verify(&w, &cands[i]).passed {
+            passes += 1;
+        }
+    }
+    assert!(passes >= k - 1, "only {passes}/{k} phase-1 winners pass DES");
+}
+
+/// End-to-end determinism: the whole two-phase plan is reproducible.
+#[test]
+fn planning_is_deterministic() {
+    let mk = || {
+        let mut opt = FleetOptimizer::new(GpuCatalog::standard(), 1000.0);
+        opt.des.n_requests = 4_000;
+        let w = WorkloadSpec::builtin(BuiltinTrace::Lmsys, 50.0);
+        opt.plan(&w)
+    };
+    let (a, b) = (mk(), mk());
+    let (ca, cb) = (a.chosen.unwrap(), b.chosen.unwrap());
+    assert_eq!(ca.candidate.label(), cb.candidate.label());
+    assert_eq!(
+        ca.verification.unwrap().p99_ttft_ms,
+        cb.verification.unwrap().p99_ttft_ms
+    );
+}

