@@ -1,38 +1,60 @@
 // Shared micro-bench harness (criterion is unavailable offline).
 //
 // Each table bench (1) regenerates its paper table via the scenario
-// library and prints it — the reproduction artifact — and (2) times the
+// registry and prints it — the reproduction artifact — and (2) times the
 // core computation with warmup + repeated samples, reporting
-// min/mean/p50/max like criterion's summary line.
+// min/mean/p50/max like criterion's summary line, and (3) merges its
+// numbers into the repo-root `BENCH_1.json` perf snapshot so the perf
+// trajectory is recorded across PRs.
 //
 // Used via `include!("harness.rs")` from each bench target.
 
 use std::time::Instant;
 
+#[allow(dead_code)]
 pub struct BenchStats {
     pub name: String,
     pub samples_ms: Vec<f64>,
 }
 
+#[allow(dead_code)]
 impl BenchStats {
-    pub fn report(&self) -> String {
+    /// (min, mean, p50, max) from one sort pass.
+    fn summary(&self) -> (f64, f64, f64, f64) {
         let mut s = self.samples_ms.clone();
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let mean = s.iter().sum::<f64>() / s.len() as f64;
+        (s[0], mean, s[s.len() / 2], s[s.len() - 1])
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.samples_ms.iter().sum::<f64>() / self.samples_ms.len() as f64
+    }
+
+    pub fn report(&self) -> String {
+        let (min, mean, p50, max) = self.summary();
         format!(
             "bench {:<40} min {:>9.3} ms  mean {:>9.3} ms  p50 {:>9.3} ms  \
              max {:>9.3} ms  ({} samples)",
-            self.name,
-            s[0],
-            mean,
-            s[s.len() / 2],
-            s[s.len() - 1],
-            s.len()
+            self.name, min, mean, p50, max, self.samples_ms.len()
         )
+    }
+
+    fn to_json(&self) -> fleet_sim::util::json::Json {
+        use fleet_sim::util::json::Json;
+        let (min, mean, p50, max) = self.summary();
+        Json::Obj(vec![
+            ("min_ms".into(), Json::Num(min)),
+            ("mean_ms".into(), Json::Num(mean)),
+            ("p50_ms".into(), Json::Num(p50)),
+            ("max_ms".into(), Json::Num(max)),
+            ("samples".into(), Json::Num(self.samples_ms.len() as f64)),
+        ])
     }
 }
 
 /// Time `f` with one warmup call and `samples` measured calls.
+#[allow(dead_code)]
 pub fn bench<F: FnMut()>(name: &str, samples: usize, mut f: F) -> BenchStats {
     f(); // warmup
     let mut out = Vec::with_capacity(samples);
@@ -47,6 +69,50 @@ pub fn bench<F: FnMut()>(name: &str, samples: usize, mut f: F) -> BenchStats {
 }
 
 /// Standard banner for table-regeneration benches.
+#[allow(dead_code)]
 pub fn banner(table: &str) {
     println!("\n================ {table} ================");
+}
+
+/// DES throughput implied by a timed run: requests / mean wall-time.
+#[allow(dead_code)]
+pub fn requests_per_sec(n_requests: usize, stats: &BenchStats) -> f64 {
+    n_requests as f64 / (stats.mean_ms() / 1e3)
+}
+
+/// Merge this bench target's results into the repo-root `BENCH_1.json`
+/// perf snapshot: one object per bench target, one entry per timed
+/// section plus free-form scalar extras (e.g. DES requests/sec).
+#[allow(dead_code)]
+pub fn write_snapshot(target: &str, stats: &[&BenchStats],
+                      extras: &[(&str, f64)]) {
+    use fleet_sim::util::json::Json;
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_1.json");
+    let mut root = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .and_then(|j| match j {
+            Json::Obj(pairs) => Some(pairs),
+            _ => None,
+        })
+        .unwrap_or_default();
+
+    let mut entry: Vec<(String, Json)> = stats
+        .iter()
+        .map(|s| (s.name.clone(), s.to_json()))
+        .collect();
+    for (k, v) in extras {
+        entry.push(((*k).to_string(), Json::Num(*v)));
+    }
+    let value = Json::Obj(entry);
+    if let Some(slot) = root.iter_mut().find(|(k, _)| k == target) {
+        slot.1 = value;
+    } else {
+        root.push((target.to_string(), value));
+    }
+    let doc = Json::Obj(root);
+    match std::fs::write(path, doc.to_string_pretty() + "\n") {
+        Ok(()) => println!("perf snapshot updated: {path} [{target}]"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

@@ -20,7 +20,7 @@ fn main() {
     let cands = generate(&w, &GpuCatalog::standard(), &opts);
     println!("candidate grid: {} configurations", cands.len());
 
-    bench("phase1_native_sweep", 20, || {
+    let phase1 = bench("phase1_native_sweep", 20, || {
         let _ = NativeSweep.eval(&w, &cands, 500.0).unwrap();
     });
     match AotSweep::load(&AotSweep::default_dir()) {
@@ -33,7 +33,7 @@ fn main() {
     }
 
     let gpu = GpuCatalog::standard().get("H100").unwrap().clone();
-    bench("des_10k_requests_two_pool", 20, || {
+    let des = bench("des_10k_requests_two_pool", 20, || {
         let pools = vec![
             SimPool { gpu: gpu.clone(), n_gpus: 3, ctx_budget: 4096.0,
                       batch_cap: None },
@@ -47,7 +47,7 @@ fn main() {
         let _ = sim.run();
     });
 
-    bench("erlang_c_native_4096_lanes", 50, || {
+    let erlang = bench("erlang_c_native_4096_lanes", 50, || {
         let mut acc = 0.0;
         for i in 0..4096 {
             acc += erlang_c(0.5 + (i % 45) as f64 * 0.01,
@@ -55,4 +55,7 @@ fn main() {
         }
         std::hint::black_box(acc);
     });
+    let rps = requests_per_sec(10_000, &des);
+    write_snapshot("perf_hotpaths", &[&phase1, &des, &erlang],
+                   &[("des_requests_per_sec", rps)]);
 }

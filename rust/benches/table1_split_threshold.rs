@@ -9,7 +9,8 @@ fn main() {
     let opts = ScenarioOpts::fast();
     let report = scenarios::run(1, &opts).unwrap();
     println!("{}", report.render());
-    bench("puzzle1_full_sweep", 3, || {
+    let sweep = bench("puzzle1_full_sweep", 3, || {
         let _ = scenarios::run(1, &opts).unwrap();
     });
+    write_snapshot("table1_split_threshold", &[&sweep], &[]);
 }

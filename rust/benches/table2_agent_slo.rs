@@ -15,7 +15,7 @@ fn main() {
     let gpu = GpuCatalog::standard().get("H100").unwrap().clone();
     let w = WorkloadSpec::builtin(BuiltinTrace::Agent, 20.0);
     let ctx = w.cdf.max_len();
-    bench("agent_des_15k_requests", 5, || {
+    let des = bench("agent_des_15k_requests", 5, || {
         let sim = Simulator::new(
             w.clone(),
             vec![SimPool { gpu: gpu.clone(), n_gpus: 64, ctx_budget: ctx,
@@ -25,4 +25,7 @@ fn main() {
         );
         let _ = sim.run();
     });
+    let rps = requests_per_sec(15_000, &des);
+    write_snapshot("table2_agent_slo", &[&des],
+                   &[("des_requests_per_sec", rps)]);
 }

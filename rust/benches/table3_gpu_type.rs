@@ -8,7 +8,8 @@ fn main() {
     banner("Table 3 — GPU type vs layout");
     let opts = ScenarioOpts::fast();
     println!("{}", scenarios::run(3, &opts).unwrap().render());
-    bench("gpu_type_layout_search", 3, || {
+    let search = bench("gpu_type_layout_search", 3, || {
         let _ = puzzle3_gpu_type::evaluate(&opts);
     });
+    write_snapshot("table3_gpu_type", &[&search], &[]);
 }

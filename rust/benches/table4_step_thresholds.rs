@@ -14,9 +14,10 @@ fn main() {
     let cat = GpuCatalog::standard();
     let h100 = cat.get("H100").unwrap().clone();
     let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 100.0);
-    bench("whatif_lambda_sweep", 5, || {
+    let sweep = bench("whatif_lambda_sweep", 5, || {
         let s = WhatIfSweep::new(GpuCatalog::standard(), 500.0)
             .for_gpu(&h100);
         let _ = s.sweep(&w, &[25.0, 100.0, 400.0]);
     });
+    write_snapshot("table4_step_thresholds", &[&sweep], &[]);
 }

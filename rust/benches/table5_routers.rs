@@ -8,7 +8,10 @@ fn main() {
     banner("Table 5 — router comparison");
     let opts = ScenarioOpts::fast();
     println!("{}", scenarios::run(5, &opts).unwrap().render());
-    bench("three_router_comparison", 3, || {
+    let cmp = bench("three_router_comparison", 3, || {
         let _ = puzzle5_routers::evaluate(&opts);
     });
+    let rps = requests_per_sec(3 * opts.n_requests, &cmp);
+    write_snapshot("table5_routers", &[&cmp],
+                   &[("des_requests_per_sec", rps)]);
 }

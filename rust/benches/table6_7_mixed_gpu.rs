@@ -9,7 +9,8 @@ fn main() {
     banner("Tables 6 & 7 — mixed GPU types");
     let opts = ScenarioOpts::fast();
     println!("{}", scenarios::run(6, &opts).unwrap().render());
-    bench("mixed_pairing_sweep_azure", 3, || {
+    let sweep = bench("mixed_pairing_sweep_azure", 3, || {
         let _ = puzzle6_mixed::evaluate(BuiltinTrace::Azure, 3072.0, &opts);
     });
+    write_snapshot("table6_7_mixed_gpu", &[&sweep], &[]);
 }

@@ -13,11 +13,14 @@ fn main() {
     println!("{}", scenarios::run(7, &opts).unwrap().render());
     let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 100.0);
     let o = DisaggFleetOptimizer::new(GpuCatalog::standard(), 500.0, 100.0);
-    bench("disagg_sweep", 5, || {
+    let sweep = bench("disagg_sweep", 5, || {
         let _ = o.sweep(&w);
     });
     let best = o.sweep(&w).into_iter().next().unwrap().0;
-    bench("disagg_two_stage_des_10k", 5, || {
+    let des = bench("disagg_two_stage_des_10k", 5, || {
         let _ = simulate_disagg(&w, &best, 10_000, 42);
     });
+    let rps = requests_per_sec(10_000, &des);
+    write_snapshot("table8_disagg", &[&sweep, &des],
+                   &[("des_requests_per_sec", rps)]);
 }

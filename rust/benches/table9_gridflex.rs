@@ -16,7 +16,11 @@ fn main() {
     let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 200.0);
     let mut cfg = GridFlexConfig::default();
     cfg.n_requests = 8_000;
-    bench("grid_flex_analysis_6_levels", 3, || {
+    let flex = bench("grid_flex_analysis_6_levels", 3, || {
         let _ = grid_flex_analysis(&w, &gpu, &cfg);
     });
+    // 6 flex levels x 2 DES runs per level at cfg.n_requests each.
+    let rps = requests_per_sec(12 * cfg.n_requests, &flex);
+    write_snapshot("table9_gridflex", &[&flex],
+                   &[("des_requests_per_sec", rps)]);
 }

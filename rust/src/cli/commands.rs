@@ -12,7 +12,7 @@ use crate::optimizer::whatif::WhatIfSweep;
 use crate::report::fidelity::fidelity_table;
 use crate::router::RoutingPolicy;
 use crate::runtime::sweep::AotSweep;
-use crate::scenarios::{self, ScenarioOpts};
+use crate::scenarios::{self, Scenario, ScenarioOpts};
 use crate::util::table::{dollars, millis, Table};
 use crate::workload::builtin::Trace;
 use crate::workload::spec::{BuiltinTrace, WorkloadSpec};
@@ -23,6 +23,9 @@ inference-fleet-sim — queueing-theory-grounded LLM fleet capacity planner
 USAGE: fleet-sim <command> [options]
 
 COMMANDS:
+  scenarios   list every registered scenario (id, name, spec summary)
+  run         run one scenario by id or name: --scenario <id|name>
+              [--fast] [--requests N] [--seed S] [--threads T]
   plan        two-phase fleet plan: --trace lmsys|azure|agent|<path.json>
               --lambda RPS [--slo MS] [--mixed] [--backend native|aot]
               [--node-avail none|soft|hard|5pct] [--top-k K] [--explain]
@@ -42,6 +45,7 @@ COMMANDS:
               [--trace T] [--lambda RPS] [--b-short TOKENS]
   multimodel  three-class ModelRouter fleet [--fast]
   puzzle N    regenerate paper case study N (1..8) [--fast]
+              (alias for `run --scenario puzzleN`)
   reproduce-all   all eight puzzles [--fast]
   profiles    print the GPU catalog and reliability constants
   selftest-runtime   load artifacts/ and cross-check AOT vs native sweep
@@ -71,11 +75,14 @@ fn scenario_opts(args: &Args) -> anyhow::Result<ScenarioOpts> {
     };
     opts.n_requests = args.get_usize("requests", opts.n_requests)?;
     opts.seed = args.get_usize("seed", opts.seed as usize)? as u64;
+    opts.threads = args.get_usize("threads", opts.threads)?.max(1);
     Ok(opts)
 }
 
 pub fn run(args: &Args) -> anyhow::Result<String> {
     match args.subcommand.as_str() {
+        "scenarios" => cmd_scenarios(),
+        "run" => cmd_run(args),
         "plan" => cmd_plan(args),
         "simulate" => cmd_simulate(args),
         "whatif" => cmd_whatif(args),
@@ -93,6 +100,45 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
         "" | "help" | "--help" | "-h" => Ok(USAGE.to_string()),
         other => anyhow::bail!("unknown command '{other}'\n\n{USAGE}"),
     }
+}
+
+fn cmd_scenarios() -> anyhow::Result<String> {
+    let mut t = Table::new(&["id", "name", "title", "spec"])
+        .align(&[crate::util::table::Align::Left,
+                 crate::util::table::Align::Left,
+                 crate::util::table::Align::Left,
+                 crate::util::table::Align::Left]);
+    for s in scenarios::registry() {
+        t.row(&[
+            s.id().to_string(),
+            s.name().to_string(),
+            s.title().to_string(),
+            s.spec().summary(),
+        ]);
+    }
+    Ok(format!(
+        "{}\nrun one with: fleet-sim run --scenario <id|name> [--fast]\n",
+        t.render()
+    ))
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<String> {
+    let key = args
+        .get("scenario")
+        .ok_or_else(|| anyhow::anyhow!(
+            "usage: fleet-sim run --scenario <id|name> (see `fleet-sim \
+             scenarios` for the registry)"))?;
+    let scenario = scenarios::find(key).ok_or_else(|| {
+        let known: Vec<String> = scenarios::registry()
+            .iter()
+            .map(|s| format!("{} ({})", s.id(), s.name()))
+            .collect();
+        anyhow::anyhow!("unknown scenario '{key}'; registered: {}",
+                        known.join(", "))
+    })?;
+    let opts = scenario_opts(args)?;
+    let engine = scenarios::default_engine(&opts);
+    Ok(scenario.run(&engine, &opts).render())
 }
 
 fn cmd_plan(args: &Args) -> anyhow::Result<String> {
@@ -330,6 +376,8 @@ fn cmd_multimodel(args: &Args) -> anyhow::Result<String> {
 }
 
 fn cmd_puzzle(args: &Args) -> anyhow::Result<String> {
+    // Alias for `run --scenario puzzleN`, kept for compatibility; both
+    // dispatch through the scenario registry.
     let n: usize = args
         .positional
         .first()
@@ -425,6 +473,35 @@ mod tests {
     fn help_and_unknown() {
         assert!(run_cmd(&["help"]).unwrap().contains("USAGE"));
         assert!(run_cmd(&["frobnicate"]).is_err());
+    }
+
+    #[test]
+    fn scenarios_lists_registry() {
+        let out = run_cmd(&["scenarios"]).unwrap();
+        for key in ["puzzle1", "split-threshold", "multimodel", "gridflex"] {
+            assert!(out.contains(key), "{out}");
+        }
+    }
+
+    #[test]
+    fn run_requires_and_validates_scenario() {
+        assert!(run_cmd(&["run"]).is_err());
+        let err = run_cmd(&["run", "--scenario", "nope"]).unwrap_err();
+        assert!(format!("{err}").contains("registered"), "{err}");
+    }
+
+    #[test]
+    fn run_by_name_matches_puzzle_alias() {
+        // `run --scenario puzzle5` and the legacy `puzzle 5` path must
+        // produce the same table (same registry entry, same engine).
+        let a = run_cmd(&["run", "--scenario", "puzzle5", "--fast",
+                          "--requests", "2000"]).unwrap();
+        let b = run_cmd(&["puzzle", "5", "--fast", "--requests", "2000"])
+            .unwrap();
+        assert_eq!(a, b);
+        let by_name = run_cmd(&["run", "--scenario", "routers", "--fast",
+                                "--requests", "2000"]).unwrap();
+        assert_eq!(a, by_name);
     }
 
     #[test]

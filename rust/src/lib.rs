@@ -26,6 +26,13 @@
 //! policies ([`router`]), disaggregated prefill/decode planning, grid
 //! demand-response analysis, and reliability-aware sizing ([`optimizer`]).
 //!
+//! The paper's case studies live in the **scenario registry**
+//! ([`scenarios`]): each puzzle is a declarative [`scenarios::Scenario`]
+//! run by the shared [`optimizer::engine::EvalEngine`], which owns
+//! Phase-1 backend selection, the cached sampled-request streams, and the
+//! parallel minimal-fleet sweeps. `fleet-sim scenarios` lists them;
+//! `fleet-sim run --scenario <id|name>` regenerates any paper table.
+//!
 //! ## Quickstart
 //!
 //! ```no_run

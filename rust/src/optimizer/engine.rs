@@ -1,0 +1,485 @@
+//! The unified evaluation engine behind every scenario and the planner.
+//!
+//! `EvalEngine` centralizes the three things the paper's experiments all
+//! share (and that each scenario used to hand-wire):
+//!
+//! 1. **Phase-1 backend selection** — the analytical sweep runs on the
+//!    pure-rust [`NativeSweep`] by default, or on the AOT-compiled
+//!    JAX/Pallas artifact via PJRT when built with the `pjrt` feature.
+//! 2. **Phase-2 DES verification** — candidates are replayed through the
+//!    discrete-event simulator on a *shared sampled-request stream*: the
+//!    `(workload, λ, n_requests, seed)`-keyed cache means fifty candidates
+//!    evaluated against the same workload sample it once instead of fifty
+//!    times. Results are bit-identical to per-candidate resampling because
+//!    `Simulator::run` derives its stream from exactly this key.
+//! 3. **Parallel sweeps** — every minimal-fleet search (per-threshold,
+//!    per-GPU-type, per-pairing) fans out over [`par_map`] worker threads,
+//!    in deterministic input order.
+//!
+//! Scenarios declare *what* to evaluate ([`SweepJob`]s); the engine owns
+//! *how*.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::des::engine::{DesConfig, SimPool, Simulator};
+use crate::des::metrics::DesResult;
+use crate::gpu::catalog::GpuCatalog;
+use crate::gpu::profile::GpuProfile;
+use crate::optimizer::analytic::{rank_feasible, NativeSweep, SweepEval};
+use crate::optimizer::candidates::{generate, n_min_for_slice, Candidate,
+                                   CandidateResult, GenOptions};
+use crate::optimizer::planner::{plan_pools, Verification};
+use crate::queueing::mgc::{analyze_pool, PoolSpec, WorkloadHist};
+use crate::router::RoutingPolicy;
+use crate::util::parallel::{default_threads, par_map};
+use crate::workload::spec::{SampledRequest, WorkloadSpec};
+
+/// Phase-1 evaluator owned by the engine.
+enum Backend {
+    Native(NativeSweep),
+    #[cfg(feature = "pjrt")]
+    Aot(crate::runtime::sweep::AotSweep),
+}
+
+impl Backend {
+    fn as_eval(&self) -> &dyn SweepEval {
+        match self {
+            Backend::Native(n) => n,
+            #[cfg(feature = "pjrt")]
+            Backend::Aot(a) => a,
+        }
+    }
+}
+
+/// Cache key for one sampled request stream (paper §3.1 Phase 2 steps
+/// 1–2): the workload fingerprint (CDF breakpoints, prompt fraction, λ)
+/// plus the stream's `(n_requests, seed)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct StreamKey {
+    workload: u64,
+    n: usize,
+    seed: u64,
+}
+
+fn fnv1a(hash: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *hash ^= b as u64;
+        *hash = hash.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+}
+
+fn workload_fingerprint(w: &WorkloadSpec) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    fnv1a(&mut h, w.name.as_bytes());
+    fnv1a(&mut h, &w.lambda_rps.to_bits().to_le_bytes());
+    fnv1a(&mut h, &w.input_fraction.to_bits().to_le_bytes());
+    for &(l, p) in w.cdf.points() {
+        fnv1a(&mut h, &l.to_bits().to_le_bytes());
+        fnv1a(&mut h, &p.to_bits().to_le_bytes());
+    }
+    h
+}
+
+/// One minimal-fleet search unit inside a scenario sweep: size the
+/// smallest feasible fleet for this GPU pairing / split threshold, then
+/// DES-verify it.
+#[derive(Debug, Clone)]
+pub struct SweepJob {
+    pub gpu_s: GpuProfile,
+    pub gpu_l: GpuProfile,
+    /// Split threshold; ignored for homogeneous jobs.
+    pub b_short: f64,
+    /// Size a single-pool fleet instead of a two-pool split.
+    pub homogeneous: bool,
+}
+
+impl SweepJob {
+    pub fn two_pool(gpu_s: &GpuProfile, gpu_l: &GpuProfile, b_short: f64) -> Self {
+        SweepJob {
+            gpu_s: gpu_s.clone(),
+            gpu_l: gpu_l.clone(),
+            b_short,
+            homogeneous: false,
+        }
+    }
+
+    pub fn homogeneous(gpu: &GpuProfile) -> Self {
+        SweepJob {
+            gpu_s: gpu.clone(),
+            gpu_l: gpu.clone(),
+            b_short: f64::INFINITY,
+            homogeneous: true,
+        }
+    }
+}
+
+/// The unified evaluation engine.
+pub struct EvalEngine {
+    pub catalog: GpuCatalog,
+    /// Worker threads for parallel sweeps and Phase-2 verification.
+    pub threads: usize,
+    backend: Backend,
+    cache: Mutex<HashMap<StreamKey, Arc<Vec<SampledRequest>>>>,
+}
+
+impl Default for EvalEngine {
+    fn default() -> Self {
+        EvalEngine::standard()
+    }
+}
+
+impl EvalEngine {
+    /// Native Phase-1 backend over the given catalog.
+    pub fn native(catalog: GpuCatalog) -> Self {
+        EvalEngine {
+            catalog,
+            threads: default_threads(),
+            backend: Backend::Native(NativeSweep),
+            cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Native backend over the standard paper catalog.
+    pub fn standard() -> Self {
+        Self::native(GpuCatalog::standard())
+    }
+
+    /// AOT/PJRT Phase-1 backend (requires the `pjrt` feature).
+    #[cfg(feature = "pjrt")]
+    pub fn aot(catalog: GpuCatalog,
+               sweep: crate::runtime::sweep::AotSweep) -> Self {
+        EvalEngine {
+            catalog,
+            threads: default_threads(),
+            backend: Backend::Aot(sweep),
+            cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// The Phase-1 evaluator in use.
+    pub fn sweep_eval(&self) -> &dyn SweepEval {
+        self.backend.as_eval()
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.as_eval().backend()
+    }
+
+    /// Phase 1: generate + evaluate + rank candidates for a workload.
+    pub fn phase1(
+        &self,
+        workload: &WorkloadSpec,
+        gen: &GenOptions,
+        slo_ms: f64,
+    ) -> anyhow::Result<(Vec<Candidate>, Vec<CandidateResult>, Vec<usize>)> {
+        let cands = generate(workload, &self.catalog, gen);
+        let results = self.sweep_eval().eval(workload, &cands, slo_ms)?;
+        let ranked = rank_feasible(&cands, &results);
+        Ok((cands, results, ranked))
+    }
+
+    /// Deterministic, order-preserving parallel map over `items` with the
+    /// engine's worker-thread budget.
+    pub fn par_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + Sync,
+        R: Send,
+        F: Fn(&T) -> R + Sync,
+    {
+        par_map(items, self.threads, f)
+    }
+
+    /// The shared sampled request stream for `(workload, n, seed)` —
+    /// sampled once, reused by every simulation against the same key.
+    pub fn sampled_stream(
+        &self,
+        workload: &WorkloadSpec,
+        n_requests: usize,
+        seed: u64,
+    ) -> Arc<Vec<SampledRequest>> {
+        let key = StreamKey {
+            workload: workload_fingerprint(workload),
+            n: n_requests,
+            seed,
+        };
+        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+            return Arc::clone(hit);
+        }
+        // Sample outside the lock (the expensive part); racing duplicates
+        // produce identical vectors, so last-write-wins is benign.
+        let stream = Arc::new(workload.sample_requests(n_requests, seed));
+        self.cache
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_insert_with(|| Arc::clone(&stream))
+            .clone()
+    }
+
+    /// Number of distinct request streams currently cached.
+    pub fn cached_streams(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// DES run on an explicit pool layout, reusing the cached request
+    /// stream. Bit-identical to `Simulator::run` with the same config.
+    pub fn simulate(
+        &self,
+        workload: &WorkloadSpec,
+        pools: Vec<SimPool>,
+        router: RoutingPolicy,
+        cfg: &DesConfig,
+    ) -> DesResult {
+        let stream = self.sampled_stream(workload, cfg.n_requests, cfg.seed);
+        let sim = Simulator::new(workload.clone(), pools, router, cfg.clone());
+        sim.run_with_requests((*stream).clone())
+    }
+
+    /// Phase 2: DES-verify one candidate with the production router.
+    pub fn verify(
+        &self,
+        workload: &WorkloadSpec,
+        cand: &Candidate,
+        cfg: &DesConfig,
+        slo_ms: f64,
+    ) -> Verification {
+        let (pools, router) = plan_pools(cand);
+        let mut r = self.simulate(workload, pools, router, cfg);
+        let p99 = r.overall.p99_ttft();
+        let p99_s = r.per_pool[0].stats.ttft.p99();
+        let p99_l = if r.per_pool.len() > 1 {
+            r.per_pool[1].stats.ttft.p99()
+        } else {
+            0.0
+        };
+        Verification {
+            p99_ttft_ms: p99,
+            p99_ttft_short_ms: p99_s,
+            p99_ttft_long_ms: p99_l,
+            utilization: r.per_pool.iter().map(|p| p.utilization).collect(),
+            passed: p99 <= slo_ms,
+        }
+    }
+
+    // ------- minimal-fleet sizing (hoisted from scenarios::common) -------
+
+    /// Smallest per-pool GPU count meeting the analytical SLO for the
+    /// (lo, hi] slice, starting from the utilization-cap lower bound.
+    #[allow(clippy::too_many_arguments)]
+    pub fn min_pool_gpus(
+        hist: &WorkloadHist,
+        lo: f64,
+        hi: f64,
+        lambda_ms: f64,
+        gpu: &GpuProfile,
+        ctx: f64,
+        slo_ms: f64,
+        max_gpus: u32,
+    ) -> Option<u32> {
+        let start = n_min_for_slice(hist, lo, hi, lambda_ms, gpu, ctx)?;
+        for n in start..=max_gpus {
+            let spec = PoolSpec { gpu: gpu.clone(), n_gpus: n as usize,
+                                  ctx_budget: ctx };
+            if analyze_pool(hist, lo, hi, lambda_ms, &spec).meets_slo(slo_ms) {
+                return Some(n);
+            }
+        }
+        None
+    }
+
+    /// Minimal two-pool candidate (analytic Phase 1) for a threshold and
+    /// GPU pairing; None if either pool cannot meet the SLO within
+    /// `max_gpus`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn min_two_pool(
+        w: &WorkloadSpec,
+        hist: &WorkloadHist,
+        gpu_s: &GpuProfile,
+        gpu_l: &GpuProfile,
+        b_short: f64,
+        slo_ms: f64,
+        max_gpus: u32,
+    ) -> Option<Candidate> {
+        let max_len = w.cdf.max_len();
+        let lam = w.lambda_per_ms();
+        let n_s = Self::min_pool_gpus(hist, 0.0, b_short, lam, gpu_s, b_short,
+                                      slo_ms, max_gpus)?;
+        let n_l = Self::min_pool_gpus(hist, b_short, max_len, lam, gpu_l,
+                                      max_len, slo_ms, max_gpus)?;
+        Some(Candidate {
+            b_short,
+            n_s,
+            n_l,
+            gpu_s: gpu_s.clone(),
+            gpu_l: gpu_l.clone(),
+            ctx_s: b_short,
+            ctx_l: max_len,
+        })
+    }
+
+    /// Minimal homogeneous candidate.
+    pub fn min_homogeneous(
+        w: &WorkloadSpec,
+        hist: &WorkloadHist,
+        gpu: &GpuProfile,
+        slo_ms: f64,
+        max_gpus: u32,
+    ) -> Option<Candidate> {
+        let max_len = w.cdf.max_len();
+        let n = Self::min_pool_gpus(hist, 0.0, max_len, w.lambda_per_ms(), gpu,
+                                    max_len, slo_ms, max_gpus)?;
+        Some(Candidate {
+            b_short: max_len * 2.0,
+            n_s: n,
+            n_l: 0,
+            gpu_s: gpu.clone(),
+            gpu_l: gpu.clone(),
+            ctx_s: max_len,
+            ctx_l: max_len,
+        })
+    }
+
+    /// Homogeneous fleet sized by the utilization cap only (ignoring the
+    /// SLO) — the paper's Table-1 "homogeneous baseline".
+    pub fn rho_cap_homogeneous(
+        w: &WorkloadSpec,
+        hist: &WorkloadHist,
+        gpu: &GpuProfile,
+        max_gpus: u32,
+    ) -> Option<Candidate> {
+        let max_len = w.cdf.max_len();
+        let lam = w.lambda_per_ms();
+        let start = n_min_for_slice(hist, 0.0, max_len, lam, gpu, max_len)?;
+        let n = start.min(max_gpus);
+        Some(Candidate {
+            b_short: max_len * 2.0,
+            n_s: n,
+            n_l: 0,
+            gpu_s: gpu.clone(),
+            gpu_l: gpu.clone(),
+            ctx_s: max_len,
+            ctx_l: max_len,
+        })
+    }
+
+    /// Run every [`SweepJob`] in parallel: minimal-fleet search + Phase-2
+    /// DES verification per job, preserving input order. `None` entries
+    /// are jobs whose fleet is SLO-infeasible within `max_gpus`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sweep_min_fleets(
+        &self,
+        w: &WorkloadSpec,
+        hist: &WorkloadHist,
+        jobs: Vec<SweepJob>,
+        slo_ms: f64,
+        max_gpus: u32,
+        des: &DesConfig,
+    ) -> Vec<Option<(Candidate, Verification)>> {
+        self.par_map(jobs, |job| {
+            let cand = if job.homogeneous {
+                Self::min_homogeneous(w, hist, &job.gpu_s, slo_ms, max_gpus)
+            } else {
+                Self::min_two_pool(w, hist, &job.gpu_s, &job.gpu_l,
+                                   job.b_short, slo_ms, max_gpus)
+            }?;
+            let v = self.verify(w, &cand, des, slo_ms);
+            Some((cand, v))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::spec::BuiltinTrace;
+
+    fn azure() -> WorkloadSpec {
+        WorkloadSpec::builtin(BuiltinTrace::Azure, 100.0)
+    }
+
+    #[test]
+    fn stream_cache_hits_on_same_key() {
+        let e = EvalEngine::standard();
+        let w = azure();
+        let a = e.sampled_stream(&w, 2_000, 7);
+        let b = e.sampled_stream(&w, 2_000, 7);
+        assert!(Arc::ptr_eq(&a, &b), "same key must share one stream");
+        assert_eq!(e.cached_streams(), 1);
+        let c = e.sampled_stream(&w, 2_000, 8);
+        assert!(!Arc::ptr_eq(&a, &c));
+        let d = e.sampled_stream(&w.at_lambda(50.0), 2_000, 7);
+        assert!(!Arc::ptr_eq(&a, &d), "different λ must not share streams");
+        assert_eq!(e.cached_streams(), 3);
+    }
+
+    #[test]
+    fn cached_stream_matches_direct_sampling() {
+        let e = EvalEngine::standard();
+        let w = azure();
+        let s = e.sampled_stream(&w, 1_000, 42);
+        assert_eq!(*s, w.sample_requests(1_000, 42));
+    }
+
+    #[test]
+    fn engine_verify_matches_simulator_run() {
+        // The cache path must be bit-identical to Simulator::run.
+        let e = EvalEngine::standard();
+        let w = azure();
+        let hist = WorkloadHist::from_cdf(&w.cdf, w.input_fraction);
+        let cand = EvalEngine::min_two_pool(
+            &w, &hist, e.catalog.get("H100").unwrap(),
+            e.catalog.get("H100").unwrap(), 2048.0, 500.0, 64)
+            .expect("feasible");
+        let cfg = DesConfig { n_requests: 2_000, ..Default::default() };
+        let v = e.verify(&w, &cand, &cfg, 500.0);
+        let (pools, router) = plan_pools(&cand);
+        let mut direct = Simulator::new(w.clone(), pools, router, cfg).run();
+        assert_eq!(v.p99_ttft_ms, direct.overall.p99_ttft());
+        assert_eq!(v.utilization.len(), 2);
+    }
+
+    #[test]
+    fn sweep_min_fleets_preserves_order_and_flags_infeasible() {
+        let e = EvalEngine::standard();
+        let w = azure();
+        let hist = WorkloadHist::from_cdf(&w.cdf, w.input_fraction);
+        let h100 = e.catalog.get("H100").unwrap().clone();
+        let jobs = vec![
+            SweepJob::two_pool(&h100, &h100, 2048.0),
+            SweepJob::homogeneous(&h100),
+            SweepJob::two_pool(&h100, &h100, 4096.0),
+        ];
+        let des = DesConfig { n_requests: 2_000, ..Default::default() };
+        let rows = e.sweep_min_fleets(&w, &hist, jobs, 500.0, 256, &des);
+        assert_eq!(rows.len(), 3);
+        assert!(rows[0].is_some() && rows[1].is_some());
+        let (cand, v) = rows[0].as_ref().unwrap();
+        assert_eq!(cand.b_short, 2048.0);
+        assert!(v.p99_ttft_ms > 0.0);
+        let infeasible = e.sweep_min_fleets(
+            &w, &hist,
+            vec![SweepJob::two_pool(&h100, &h100, 2048.0)],
+            500.0, 1, &des);
+        assert!(infeasible[0].is_none());
+    }
+
+    #[test]
+    fn phase1_ranks_feasible_candidates() {
+        let e = EvalEngine::standard();
+        let (cands, results, ranked) = e
+            .phase1(&azure(), &GenOptions::default(), 500.0)
+            .unwrap();
+        assert_eq!(cands.len(), results.len());
+        assert!(!ranked.is_empty());
+        for pair in ranked.windows(2) {
+            assert!(results[pair[0]].cost_yr <= results[pair[1]].cost_yr);
+        }
+        assert_eq!(e.backend_name(), "native");
+    }
+}

@@ -1,10 +1,15 @@
 //! The paper's contribution: the two-phase fleet optimizer (§3.1) and its
 //! companions — disaggregated P/D planning (§4.7), grid-flex analysis
 //! (§4.8), reliability-aware sizing (§3.5), and what-if λ sweeps (§4.4).
+//!
+//! [`engine::EvalEngine`] is the shared substrate: Phase-1 backend
+//! selection, the cached sampled-request stream for Phase-2 DES runs, and
+//! the parallel minimal-fleet sweeps every scenario dispatches through.
 
 pub mod analytic;
 pub mod candidates;
 pub mod disagg;
+pub mod engine;
 pub mod gridflex;
 pub mod planner;
 pub mod reliability;

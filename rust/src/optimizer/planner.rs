@@ -6,14 +6,15 @@
 //! that *empirically* meets the P99-TTFT SLO. Reliability-aware sizing
 //! (§3.5) is applied to the winner.
 
-use crate::des::engine::{DesConfig, SimPool, Simulator};
+use crate::des::engine::{DesConfig, SimPool};
 use crate::gpu::catalog::GpuCatalog;
 use crate::optimizer::analytic::{rank_feasible, NativeSweep, SweepEval};
 use crate::optimizer::candidates::{generate, Candidate, CandidateResult,
                                    GenOptions};
+use crate::optimizer::engine::EvalEngine;
 use crate::optimizer::reliability::NodeAvail;
 use crate::router::RoutingPolicy;
-use crate::util::parallel::{default_threads, par_map};
+use crate::util::parallel::default_threads;
 use crate::util::table::{dollars, millis};
 use crate::workload::spec::WorkloadSpec;
 
@@ -124,23 +125,8 @@ impl FleetOptimizer {
 
     /// Phase 2: DES-verify one candidate with the production LengthRouter.
     pub fn verify(&self, workload: &WorkloadSpec, cand: &Candidate) -> Verification {
-        let (pools, router) = plan_pools(cand);
-        let sim = Simulator::new(workload.clone(), pools, router, self.des.clone());
-        let mut r = sim.run();
-        let p99 = r.overall.p99_ttft();
-        let p99_s = r.per_pool[0].stats.ttft.p99();
-        let p99_l = if r.per_pool.len() > 1 {
-            r.per_pool[1].stats.ttft.p99()
-        } else {
-            0.0
-        };
-        Verification {
-            p99_ttft_ms: p99,
-            p99_ttft_short_ms: p99_s,
-            p99_ttft_long_ms: p99_l,
-            utilization: r.per_pool.iter().map(|p| p.utilization).collect(),
-            passed: p99 <= self.slo_ms,
-        }
+        EvalEngine::native(self.catalog.clone())
+            .verify(workload, cand, &self.des, self.slo_ms)
     }
 
     /// Full two-phase plan with the given Phase-1 backend.
@@ -153,8 +139,13 @@ impl FleetOptimizer {
         let n_feasible = ranked.len();
         let top: Vec<usize> = ranked.into_iter().take(self.top_k).collect();
 
-        let verified: Vec<PlanEntry> = par_map(top, self.threads, |&i| {
-            let v = self.verify(workload, &cands[i]);
+        // Phase-2 verification goes through the evaluation engine: the
+        // top-k candidates share one cached request stream and fan out
+        // over worker threads.
+        let engine =
+            EvalEngine::native(self.catalog.clone()).with_threads(self.threads);
+        let verified: Vec<PlanEntry> = engine.par_map(top, |&i| {
+            let v = engine.verify(workload, &cands[i], &self.des, self.slo_ms);
             PlanEntry {
                 candidate: cands[i].clone(),
                 analytic: results[i],

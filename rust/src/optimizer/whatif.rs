@@ -8,6 +8,7 @@ use crate::gpu::catalog::GpuCatalog;
 use crate::gpu::profile::GpuProfile;
 use crate::optimizer::analytic::{rank_feasible, NativeSweep, SweepEval};
 use crate::optimizer::candidates::{generate, Candidate, GenOptions};
+use crate::util::parallel::{default_threads, par_map};
 use crate::workload::spec::WorkloadSpec;
 
 /// One row of the step-threshold table.
@@ -26,11 +27,18 @@ pub struct WhatIfSweep {
     pub catalog: GpuCatalog,
     pub slo_ms: f64,
     pub gen: GenOptions,
+    /// Worker threads for the per-λ sweeps (each bracket is independent).
+    pub threads: usize,
 }
 
 impl WhatIfSweep {
     pub fn new(catalog: GpuCatalog, slo_ms: f64) -> Self {
-        WhatIfSweep { catalog, slo_ms, gen: GenOptions::default() }
+        WhatIfSweep {
+            catalog,
+            slo_ms,
+            gen: GenOptions::default(),
+            threads: default_threads(),
+        }
     }
 
     /// Restrict the candidate space to one GPU type (Table 4 is H100-only).
@@ -76,23 +84,26 @@ impl WhatIfSweep {
         lo.floor()
     }
 
-    /// The full Table-4 style sweep.
+    /// The full Table-4 style sweep. Each λ bracket (sizing + headroom
+    /// bisection) is independent, so brackets fan out over worker threads
+    /// while the output stays in input order.
     pub fn sweep(&self, workload: &WorkloadSpec, lambdas: &[f64]) -> Vec<StepRow> {
-        let mut rows = Vec::new();
-        for (i, &lam) in lambdas.iter().enumerate() {
-            let Some((cand, cost)) = self.size_at(workload, lam) else {
-                continue;
-            };
+        let hi = lambdas.last().copied().unwrap_or(0.0) * 2.0;
+        let indexed: Vec<(usize, f64)> =
+            lambdas.iter().copied().enumerate().collect();
+        par_map(indexed, self.threads, |&(i, lam)| {
+            let (cand, cost) = self.size_at(workload, lam)?;
             let headroom = if i + 1 < lambdas.len() {
-                Some(self.headroom(workload, &cand, lam,
-                                   lambdas.last().copied().unwrap() * 2.0))
+                Some(self.headroom(workload, &cand, lam, hi))
             } else {
                 None
             };
-            rows.push(StepRow { lambda_rps: lam, candidate: cand,
-                                cost_yr: cost, headroom_rps: headroom });
-        }
-        rows
+            Some(StepRow { lambda_rps: lam, candidate: cand, cost_yr: cost,
+                           headroom_rps: headroom })
+        })
+        .into_iter()
+        .flatten()
+        .collect()
     }
 }
 

@@ -1,6 +1,13 @@
 //! PJRT runtime: load the AOT-compiled Phase-1 sweep (artifacts/
 //! sweep.hlo.txt, produced once by python/compile/aot.py) and execute it
 //! from the planning hot path. Python is never on the request path.
+//!
+//! The real PJRT client wraps the `xla` crate, which is unavailable in the
+//! offline build; it is gated behind the `pjrt` cargo feature. Without the
+//! feature, [`sweep::AotSweep`] is a stub whose `load` fails gracefully,
+//! so `--backend aot` reports a clear error and everything else (the
+//! native evaluator, the whole scenario registry) works unchanged.
 
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod sweep;

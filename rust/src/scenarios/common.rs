@@ -1,10 +1,21 @@
-//! Shared scenario plumbing: options, report struct, minimal-fleet sizing.
+//! Shared scenario plumbing: options, report struct, and thin wrappers
+//! over the minimal-fleet sizing that now lives in
+//! [`crate::optimizer::engine::EvalEngine`].
+//!
+//! The free functions here are the stable convenience API for one-off
+//! calls (CLI helpers, tests, external users). Scenario sweeps and
+//! anything evaluating many candidates should go through an `EvalEngine`
+//! instance instead, which adds the shared request-stream cache and
+//! parallel fan-out; `verify_candidate` below constructs a throwaway
+//! engine and gets neither.
 
 use crate::des::engine::{DesConfig, SimPool, Simulator};
 use crate::gpu::profile::GpuProfile;
-use crate::optimizer::candidates::{n_min_for_slice, Candidate};
-use crate::queueing::mgc::{analyze_pool, PoolSpec, WorkloadHist};
+use crate::optimizer::candidates::Candidate;
+use crate::optimizer::engine::EvalEngine;
+use crate::queueing::mgc::WorkloadHist;
 use crate::router::RoutingPolicy;
+use crate::util::parallel::default_threads;
 use crate::util::table::Table;
 use crate::workload::spec::WorkloadSpec;
 
@@ -16,18 +27,31 @@ pub struct ScenarioOpts {
     pub seed: u64,
     /// Max GPUs per pool when searching for a minimal feasible fleet.
     pub max_gpus: u32,
+    /// Worker threads for the engine's parallel sweeps (1 = serial).
+    pub threads: usize,
 }
 
 impl Default for ScenarioOpts {
     fn default() -> Self {
-        ScenarioOpts { n_requests: 10_000, seed: 42, max_gpus: 256 }
+        ScenarioOpts {
+            n_requests: 10_000,
+            seed: 42,
+            max_gpus: 256,
+            threads: default_threads(),
+        }
     }
 }
 
 impl ScenarioOpts {
     /// Reduced-fidelity settings for quick CLI runs / CI.
     pub fn fast() -> Self {
-        ScenarioOpts { n_requests: 3_000, seed: 42, max_gpus: 256 }
+        ScenarioOpts { n_requests: 3_000, ..Default::default() }
+    }
+
+    /// Same fidelity, single-threaded sweeps (determinism cross-checks).
+    pub fn serial(mut self) -> Self {
+        self.threads = 1;
+        self
     }
 
     pub fn des(&self) -> DesConfig {
@@ -62,6 +86,7 @@ impl PuzzleReport {
 
 /// Smallest per-pool GPU count meeting the analytical SLO for the slice
 /// (starting from the utilization-cap lower bound).
+#[allow(clippy::too_many_arguments)]
 pub fn min_pool_gpus(
     hist: &WorkloadHist,
     lo: f64,
@@ -72,14 +97,8 @@ pub fn min_pool_gpus(
     slo_ms: f64,
     max_gpus: u32,
 ) -> Option<u32> {
-    let start = n_min_for_slice(hist, lo, hi, lambda_ms, gpu, ctx)?;
-    for n in start..=max_gpus {
-        let spec = PoolSpec { gpu: gpu.clone(), n_gpus: n as usize, ctx_budget: ctx };
-        if analyze_pool(hist, lo, hi, lambda_ms, &spec).meets_slo(slo_ms) {
-            return Some(n);
-        }
-    }
-    None
+    EvalEngine::min_pool_gpus(hist, lo, hi, lambda_ms, gpu, ctx, slo_ms,
+                              max_gpus)
 }
 
 /// Minimal two-pool candidate (analytic Phase 1) for a threshold and GPU
@@ -93,21 +112,7 @@ pub fn min_two_pool(
     slo_ms: f64,
     max_gpus: u32,
 ) -> Option<Candidate> {
-    let max_len = w.cdf.max_len();
-    let lam = w.lambda_per_ms();
-    let n_s = min_pool_gpus(hist, 0.0, b_short, lam, gpu_s, b_short, slo_ms,
-                            max_gpus)?;
-    let n_l = min_pool_gpus(hist, b_short, max_len, lam, gpu_l, max_len,
-                            slo_ms, max_gpus)?;
-    Some(Candidate {
-        b_short,
-        n_s,
-        n_l,
-        gpu_s: gpu_s.clone(),
-        gpu_l: gpu_l.clone(),
-        ctx_s: b_short,
-        ctx_l: max_len,
-    })
+    EvalEngine::min_two_pool(w, hist, gpu_s, gpu_l, b_short, slo_ms, max_gpus)
 }
 
 /// Minimal homogeneous candidate.
@@ -118,18 +123,7 @@ pub fn min_homogeneous(
     slo_ms: f64,
     max_gpus: u32,
 ) -> Option<Candidate> {
-    let max_len = w.cdf.max_len();
-    let n = min_pool_gpus(hist, 0.0, max_len, w.lambda_per_ms(), gpu, max_len,
-                          slo_ms, max_gpus)?;
-    Some(Candidate {
-        b_short: max_len * 2.0,
-        n_s: n,
-        n_l: 0,
-        gpu_s: gpu.clone(),
-        gpu_l: gpu.clone(),
-        ctx_s: max_len,
-        ctx_l: max_len,
-    })
+    EvalEngine::min_homogeneous(w, hist, gpu, slo_ms, max_gpus)
 }
 
 /// Homogeneous fleet sized by the utilization cap only (ignoring the SLO)
@@ -140,19 +134,7 @@ pub fn rho_cap_homogeneous(
     gpu: &GpuProfile,
     max_gpus: u32,
 ) -> Option<Candidate> {
-    let max_len = w.cdf.max_len();
-    let lam = w.lambda_per_ms();
-    let start = n_min_for_slice(hist, 0.0, max_len, lam, gpu, max_len)?;
-    let n = start.min(max_gpus);
-    Some(Candidate {
-        b_short: max_len * 2.0,
-        n_s: n,
-        n_l: 0,
-        gpu_s: gpu.clone(),
-        gpu_l: gpu.clone(),
-        ctx_s: max_len,
-        ctx_l: max_len,
-    })
+    EvalEngine::rho_cap_homogeneous(w, hist, gpu, max_gpus)
 }
 
 /// DES-verify a candidate with the production LengthRouter; returns
@@ -162,21 +144,8 @@ pub fn verify_candidate(
     cand: &Candidate,
     opts: &ScenarioOpts,
 ) -> (f64, f64, f64, Vec<f64>) {
-    let (pools, router) = crate::optimizer::planner::plan_pools(cand);
-    let sim = Simulator::new(w.clone(), pools, router, opts.des());
-    let mut r = sim.run();
-    let short = r.per_pool[0].stats.ttft.p99();
-    let long = if r.per_pool.len() > 1 {
-        r.per_pool[1].stats.ttft.p99()
-    } else {
-        0.0
-    };
-    (
-        r.overall.p99_ttft(),
-        short,
-        long,
-        r.per_pool.iter().map(|p| p.utilization).collect(),
-    )
+    let v = EvalEngine::standard().verify(w, cand, &opts.des(), f64::INFINITY);
+    (v.p99_ttft_ms, v.p99_ttft_short_ms, v.p99_ttft_long_ms, v.utilization)
 }
 
 /// DES on an explicit pool layout + router.
@@ -201,6 +170,7 @@ pub fn check(ok: bool) -> &'static str {
 mod tests {
     use super::*;
     use crate::gpu::catalog::GpuCatalog;
+    use crate::queueing::mgc::analyze_pool;
     use crate::workload::spec::BuiltinTrace;
 
     #[test]

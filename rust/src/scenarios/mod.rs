@@ -1,10 +1,20 @@
-//! The paper's case studies (§4, Puzzles 1–8) as reproducible scenarios.
+//! The scenario registry: the paper's case studies (§4, Puzzles 1–8) and
+//! extensions as declarative, engine-driven scenarios.
 //!
-//! Each puzzle module exposes `run(&ScenarioOpts) -> PuzzleReport`
-//! regenerating the corresponding paper table; the CLI (`fleet-sim puzzle
-//! N`), the bench harnesses (`rust/benches/tableN_*.rs`), and
-//! `examples/reproduce_all.rs` all call through here so EXPERIMENTS.md is
-//! regenerated from one code path.
+//! Every scenario implements the [`Scenario`] trait: an `id`/`name` pair
+//! for CLI lookup, a declarative [`ScenarioSpec`] (workloads, GPUs, λ
+//! sweep, SLO, router, topology) for listings and docs, and a `run` that
+//! regenerates the corresponding paper table through one shared
+//! [`EvalEngine`] — so every scenario inherits the engine's parallel
+//! minimal-fleet sweeps and cached request streams instead of hand-wiring
+//! its own plumbing.
+//!
+//! The CLI (`fleet-sim scenarios` / `fleet-sim run --scenario <id|name>`,
+//! plus the legacy `puzzle N` / `reproduce-all`), the bench harnesses
+//! (`rust/benches/tableN_*.rs`), and `examples/reproduce_all.rs` all call
+//! through here so EXPERIMENTS.md is regenerated from one code path.
+//! Adding a scenario means writing a spec + a short `run` and pushing one
+//! `Box::new(...)` into [`registry`].
 
 pub mod common;
 pub mod multi_model;
@@ -17,24 +27,178 @@ pub mod puzzle6_mixed;
 pub mod puzzle7_disagg;
 pub mod puzzle8_gridflex;
 
+pub use crate::optimizer::engine::EvalEngine;
 pub use common::{PuzzleReport, ScenarioOpts};
 
-/// Run puzzle `n` (1..=8).
-pub fn run(n: usize, opts: &ScenarioOpts) -> anyhow::Result<PuzzleReport> {
-    Ok(match n {
-        1 => puzzle1_split::run(opts),
-        2 => puzzle2_agent::run(opts),
-        3 => puzzle3_gpu_type::run(opts),
-        4 => puzzle4_steps::run(opts),
-        5 => puzzle5_routers::run(opts),
-        6 => puzzle6_mixed::run(opts),
-        7 => puzzle7_disagg::run(opts),
-        8 => puzzle8_gridflex::run(opts),
-        other => anyhow::bail!("no puzzle {other} (1..=8)"),
-    })
+/// Pool topology a scenario exercises (for listings and docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    /// One homogeneous pool.
+    SinglePool,
+    /// Length-split short/long pools (the paper's core design).
+    TwoPool,
+    /// Two pools with different GPU types per pool.
+    MixedTwoPool,
+    /// Separate prefill and decode pools (DistServe-style).
+    Disaggregated,
+    /// N class-specific pools behind the ModelRouter.
+    MultiPool,
 }
 
-/// All puzzles in order.
+impl Topology {
+    pub fn name(self) -> &'static str {
+        match self {
+            Topology::SinglePool => "single-pool",
+            Topology::TwoPool => "two-pool",
+            Topology::MixedTwoPool => "mixed two-pool",
+            Topology::Disaggregated => "prefill/decode",
+            Topology::MultiPool => "multi-pool",
+        }
+    }
+}
+
+/// Declarative description of a scenario: what it evaluates, independent
+/// of how the engine runs it. Shown by `fleet-sim scenarios`.
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    /// Workload traces swept, as `(builtin trace name, λ req/s)`.
+    pub workloads: Vec<(&'static str, f64)>,
+    /// GPU types involved.
+    pub gpus: Vec<&'static str>,
+    /// Split thresholds swept (empty when the topology is fixed).
+    pub thresholds: Vec<f64>,
+    /// Arrival-rate sweep (what-if scenarios; empty otherwise).
+    pub lambda_sweep: Vec<f64>,
+    /// P99 TTFT SLO in ms.
+    pub slo_ms: f64,
+    /// Router used in DES verification.
+    pub router: &'static str,
+    pub topology: Topology,
+}
+
+impl ScenarioSpec {
+    /// Compact one-line summary for the `scenarios` listing.
+    pub fn summary(&self) -> String {
+        let wl: Vec<String> = self
+            .workloads
+            .iter()
+            .map(|(t, l)| format!("{t}@{l:.0}rps"))
+            .collect();
+        format!(
+            "{} | {} | SLO {:.0} ms | {} | {}",
+            wl.join(","),
+            self.gpus.join("/"),
+            self.slo_ms,
+            self.router,
+            self.topology.name()
+        )
+    }
+}
+
+/// A registered scenario. `run` regenerates the paper table(s) through
+/// the shared evaluation engine.
+pub trait Scenario: Sync {
+    /// Stable CLI id (`puzzle1` … `puzzle8`, `multimodel`).
+    fn id(&self) -> &'static str;
+    /// Human-friendly CLI alias (`split-threshold`, `gridflex`, …).
+    fn name(&self) -> &'static str;
+    /// Report title.
+    fn title(&self) -> &'static str;
+    fn spec(&self) -> ScenarioSpec;
+    fn run(&self, engine: &EvalEngine, opts: &ScenarioOpts) -> PuzzleReport;
+}
+
+/// All built-in scenarios, in paper order.
+pub fn registry() -> Vec<Box<dyn Scenario>> {
+    vec![
+        Box::new(puzzle1_split::SplitThreshold),
+        Box::new(puzzle2_agent::AgentSlo),
+        Box::new(puzzle3_gpu_type::GpuTypeChoice),
+        Box::new(puzzle4_steps::StepThresholds),
+        Box::new(puzzle5_routers::RouterComparison),
+        Box::new(puzzle6_mixed::MixedGpuTypes),
+        Box::new(puzzle7_disagg::DisaggServing),
+        Box::new(puzzle8_gridflex::GridFlexibility),
+        Box::new(multi_model::MultiModelFleet),
+    ]
+}
+
+/// Look a scenario up by id or name (case-insensitive).
+pub fn find(key: &str) -> Option<Box<dyn Scenario>> {
+    let k = key.trim();
+    registry()
+        .into_iter()
+        .find(|s| s.id().eq_ignore_ascii_case(k) || s.name().eq_ignore_ascii_case(k))
+}
+
+/// Engine matching the options' thread budget (native backend, standard
+/// catalog).
+pub fn default_engine(opts: &ScenarioOpts) -> EvalEngine {
+    EvalEngine::standard().with_threads(opts.threads)
+}
+
+/// Run puzzle `n` (1..=8) through the registry.
+pub fn run(n: usize, opts: &ScenarioOpts) -> anyhow::Result<PuzzleReport> {
+    anyhow::ensure!((1..=8).contains(&n), "no puzzle {n} (1..=8)");
+    let s = find(&format!("puzzle{n}")).expect("registry covers puzzles 1..=8");
+    Ok(s.run(&default_engine(opts), opts))
+}
+
+/// All puzzles in order, sharing one engine (and its stream cache).
 pub fn run_all(opts: &ScenarioOpts) -> Vec<PuzzleReport> {
-    (1..=8).map(|n| run(n, opts).expect("1..=8 valid")).collect()
+    let engine = default_engine(opts);
+    (1..=8)
+        .map(|n| {
+            find(&format!("puzzle{n}"))
+                .expect("1..=8 valid")
+                .run(&engine, opts)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_all_scenarios_with_unique_keys() {
+        let reg = registry();
+        assert_eq!(reg.len(), 9);
+        let mut ids: Vec<&str> = reg.iter().map(|s| s.id()).collect();
+        let mut names: Vec<&str> = reg.iter().map(|s| s.name()).collect();
+        ids.sort();
+        ids.dedup();
+        names.sort();
+        names.dedup();
+        assert_eq!(ids.len(), 9, "duplicate scenario ids");
+        assert_eq!(names.len(), 9, "duplicate scenario names");
+        for n in 1..=8 {
+            assert!(find(&format!("puzzle{n}")).is_some());
+        }
+    }
+
+    #[test]
+    fn find_matches_id_and_name_case_insensitively() {
+        assert_eq!(find("PUZZLE3").unwrap().id(), "puzzle3");
+        assert_eq!(find("gpu-type").unwrap().id(), "puzzle3");
+        assert_eq!(find("multimodel").unwrap().name(), "multi-model");
+        assert!(find("puzzle99").is_none());
+    }
+
+    #[test]
+    fn specs_are_well_formed() {
+        for s in registry() {
+            let spec = s.spec();
+            assert!(!spec.workloads.is_empty(), "{}", s.id());
+            assert!(!spec.gpus.is_empty(), "{}", s.id());
+            assert!(spec.slo_ms > 0.0, "{}", s.id());
+            assert!(!spec.summary().is_empty());
+        }
+    }
+
+    #[test]
+    fn run_rejects_out_of_range() {
+        assert!(run(0, &ScenarioOpts::fast()).is_err());
+        assert!(run(9, &ScenarioOpts::fast()).is_err());
+    }
 }

@@ -7,10 +7,11 @@
 //! budget. The planner question: does class isolation hold when one class
 //! is heavy-tailed?
 
-use crate::des::engine::{DesConfig, SimPool, Simulator};
-use crate::gpu::catalog::GpuCatalog;
+use crate::des::engine::{DesConfig, SimPool};
+use crate::optimizer::engine::EvalEngine;
 use crate::router::RoutingPolicy;
 use crate::scenarios::common::{check, PuzzleReport, ScenarioOpts};
+use crate::scenarios::{Scenario, ScenarioSpec, Topology};
 use crate::util::table::{millis, Align, Table};
 use crate::workload::spec::{BuiltinTrace, WorkloadSpec};
 
@@ -23,16 +24,16 @@ pub fn classes() -> Vec<(&'static str, f64, &'static str, usize, f64)> {
     ]
 }
 
-/// Run the multi-model DES and return (per-class P99 TTFT, utilization).
-pub fn evaluate(lambda_rps: f64, opts: &ScenarioOpts)
+/// Run the multi-model DES through the given engine; returns
+/// (class name, P99 TTFT, utilization, request count) per class.
+pub fn evaluate_with(engine: &EvalEngine, lambda_rps: f64, opts: &ScenarioOpts)
     -> Vec<(String, f64, f64, usize)>
 {
-    let cat = GpuCatalog::standard();
     let spec = classes();
     let pools: Vec<SimPool> = spec
         .iter()
         .map(|(_, _, gpu, n, ctx)| SimPool {
-            gpu: cat.require(gpu).unwrap().clone(),
+            gpu: engine.catalog.require(gpu).unwrap().clone(),
             n_gpus: *n,
             ctx_budget: *ctx,
             batch_cap: None,
@@ -50,7 +51,7 @@ pub fn evaluate(lambda_rps: f64, opts: &ScenarioOpts)
         class_probs: Some(spec.iter().map(|c| c.1).collect()),
         ..Default::default()
     };
-    let mut r = Simulator::new(w, pools, router, cfg).run();
+    let mut r = engine.simulate(&w, pools, router, &cfg);
     spec.iter()
         .zip(r.per_pool.iter_mut())
         .map(|((name, ..), p)| {
@@ -60,32 +61,73 @@ pub fn evaluate(lambda_rps: f64, opts: &ScenarioOpts)
         .collect()
 }
 
+/// Evaluate with a default engine (legacy signature used by tests/CLI).
+pub fn evaluate(lambda_rps: f64, opts: &ScenarioOpts)
+    -> Vec<(String, f64, f64, usize)>
+{
+    evaluate_with(&crate::scenarios::default_engine(opts), lambda_rps, opts)
+}
+
+/// Registry entry for the multi-model fleet scenario.
+pub struct MultiModelFleet;
+
+impl Scenario for MultiModelFleet {
+    fn id(&self) -> &'static str {
+        "multimodel"
+    }
+
+    fn name(&self) -> &'static str {
+        "multi-model"
+    }
+
+    fn title(&self) -> &'static str {
+        "Multi-model fleets (ModelRouter)"
+    }
+
+    fn spec(&self) -> ScenarioSpec {
+        ScenarioSpec {
+            workloads: vec![("lmsys", 100.0)],
+            gpus: vec!["A10G", "A100", "H100"],
+            thresholds: vec![],
+            lambda_sweep: vec![],
+            slo_ms: 500.0,
+            router: "ModelRouter",
+            topology: Topology::MultiPool,
+        }
+    }
+
+    fn run(&self, engine: &EvalEngine, opts: &ScenarioOpts) -> PuzzleReport {
+        let rows = evaluate_with(engine, 100.0, opts);
+        let mut t = Table::new(&["Class", "requests", "P99 TTFT", "util",
+                                 "SLO 500ms"])
+            .with_title("Multi-model fleet via ModelRouter (λ=100 req/s, \
+                         3 classes, LMSYS lengths)")
+            .align(&[Align::Left, Align::Right, Align::Right, Align::Right,
+                     Align::Right]);
+        for (name, p99, util, count) in &rows {
+            t.row(&[
+                name.clone(),
+                count.to_string(),
+                millis(*p99),
+                format!("{:.0}%", util * 100.0),
+                check(*p99 <= 500.0).to_string(),
+            ]);
+        }
+        PuzzleReport {
+            id: 9,
+            title: self.title().into(),
+            tables: vec![t],
+            insight: "Class isolation via the semantic router keeps each \
+                      model's latency independent: the heavy long-context \
+                      class cannot head-of-line block the small-model pool."
+                .into(),
+        }
+    }
+}
+
+/// Legacy entry point (CLI `multimodel`): registry + default engine.
 pub fn run(opts: &ScenarioOpts) -> PuzzleReport {
-    let rows = evaluate(100.0, opts);
-    let mut t = Table::new(&["Class", "requests", "P99 TTFT", "util",
-                             "SLO 500ms"])
-        .with_title("Multi-model fleet via ModelRouter (λ=100 req/s, \
-                     3 classes, LMSYS lengths)")
-        .align(&[Align::Left, Align::Right, Align::Right, Align::Right,
-                 Align::Right]);
-    for (name, p99, util, count) in &rows {
-        t.row(&[
-            name.clone(),
-            count.to_string(),
-            millis(*p99),
-            format!("{:.0}%", util * 100.0),
-            check(*p99 <= 500.0).to_string(),
-        ]);
-    }
-    PuzzleReport {
-        id: 9,
-        title: "Multi-model fleets (ModelRouter)".into(),
-        tables: vec![t],
-        insight: "Class isolation via the semantic router keeps each \
-                  model's latency independent: the heavy long-context \
-                  class cannot head-of-line block the small-model pool."
-            .into(),
-    }
+    MultiModelFleet.run(&crate::scenarios::default_engine(opts), opts)
 }
 
 #[cfg(test)]

@@ -3,32 +3,45 @@
 //! Sweeps B_short for LMSYS (λ=100, A100, SLO 500 ms) plus the Azure and
 //! agent variants, reporting the Pareto frontier the paper prints:
 //! per-threshold minimal fleets, cost vs the homogeneous baseline, and the
-//! DES SLO verdict.
+//! DES SLO verdict. Every threshold's minimal-fleet search + verification
+//! runs in parallel through the engine.
 
-use crate::gpu::catalog::GpuCatalog;
+use crate::optimizer::engine::{EvalEngine, SweepJob};
 use crate::queueing::mgc::WorkloadHist;
 use crate::scenarios::common::*;
+use crate::scenarios::{Scenario, ScenarioSpec, Topology};
 use crate::util::table::{dollars, millis, percent, Table};
 use crate::workload::spec::{BuiltinTrace, WorkloadSpec};
 
 pub const THRESHOLDS: [f64; 6] = [512.0, 1024.0, 2048.0, 4096.0, 8192.0,
                                   12288.0];
+pub const SLO_MS: f64 = 500.0;
 
 fn sweep_table(
+    engine: &EvalEngine,
     name: &str,
     w: &WorkloadSpec,
     gpu_name: &str,
     slo: f64,
     opts: &ScenarioOpts,
 ) -> Table {
-    let cat = GpuCatalog::standard();
-    let gpu = cat.require(gpu_name).unwrap().clone();
+    let gpu = engine.catalog.require(gpu_name).unwrap().clone();
     let hist = WorkloadHist::from_cdf(&w.cdf, w.input_fraction);
     let max_len = w.cdf.max_len();
 
     // The paper's homogeneous baseline is utilization-cap sized.
-    let homo = rho_cap_homogeneous(w, &hist, &gpu, opts.max_gpus).unwrap();
+    let homo = EvalEngine::rho_cap_homogeneous(w, &hist, &gpu, opts.max_gpus)
+        .unwrap();
     let homo_cost = homo.cost_per_year();
+
+    let thresholds: Vec<f64> =
+        THRESHOLDS.iter().copied().filter(|&b| b < max_len).collect();
+    let jobs: Vec<SweepJob> = thresholds
+        .iter()
+        .map(|&b| SweepJob::two_pool(&gpu, &gpu, b))
+        .collect();
+    let rows =
+        engine.sweep_min_fleets(w, &hist, jobs, slo, opts.max_gpus, &opts.des());
 
     let mut t = Table::new(&["B_short", "alpha_s", "n_s", "n_l", "GPUs",
                              "$/yr", "saving", "P99 TTFT", "SLO"])
@@ -37,11 +50,11 @@ fn sweep_table(
              SLO={slo} ms; homogeneous baseline: {} GPUs at {})",
             w.lambda_rps, homo.n_s, dollars(homo_cost)
         ));
-    for &b in THRESHOLDS.iter().filter(|&&b| b < max_len) {
+    for (&b, row) in thresholds.iter().zip(&rows) {
         let alpha = hist.mass(0.0, b);
-        match min_two_pool(w, &hist, &gpu, &gpu, b, slo, opts.max_gpus) {
-            Some(cand) => {
-                let (p99, _, _, _) = verify_candidate(w, &cand, opts);
+        match row {
+            Some((cand, v)) => {
+                let p99 = v.p99_ttft_ms;
                 let saving = 1.0 - cand.cost_per_year() / homo_cost;
                 t.row(&[
                     format!("{b:.0}"),
@@ -71,7 +84,7 @@ fn sweep_table(
         }
     }
     // Homogeneous row for reference.
-    let (p99_homo, _, _, _) = verify_candidate(w, &homo, opts);
+    let vh = engine.verify(w, &homo, &opts.des(), slo);
     t.row(&[
         "homo".into(),
         percent(1.0),
@@ -80,31 +93,67 @@ fn sweep_table(
         homo.n_s.to_string(),
         dollars(homo_cost),
         "+0.0%".into(),
-        millis(p99_homo),
-        check(p99_homo <= slo).to_string(),
+        millis(vh.p99_ttft_ms),
+        check(vh.p99_ttft_ms <= slo).to_string(),
     ]);
     t
 }
 
-pub fn run(opts: &ScenarioOpts) -> PuzzleReport {
-    let lmsys = WorkloadSpec::builtin(BuiltinTrace::Lmsys, 100.0);
-    let azure = WorkloadSpec::builtin(BuiltinTrace::Azure, 200.0);
-    let agent = WorkloadSpec::builtin(BuiltinTrace::Agent, 200.0);
-    let tables = vec![
-        sweep_table("LMSYS", &lmsys, "A100", 500.0, opts),
-        sweep_table("Azure", &azure, "A100", 500.0, opts),
-        sweep_table("Agent", &agent, "A100", 500.0, opts),
-    ];
-    PuzzleReport {
-        id: 1,
-        title: "Where exactly should I split?".into(),
-        tables,
-        insight: "The optimal B_short cannot be read off the CDF: it \
-                  balances slot efficiency, traffic fraction, and Erlang \
-                  fragmentation across both pools, and too-high thresholds \
-                  become SLO-infeasible from long-pool prefill alone."
-            .into(),
+/// Registry entry for the B_short Pareto-frontier scenario.
+pub struct SplitThreshold;
+
+impl Scenario for SplitThreshold {
+    fn id(&self) -> &'static str {
+        "puzzle1"
     }
+
+    fn name(&self) -> &'static str {
+        "split-threshold"
+    }
+
+    fn title(&self) -> &'static str {
+        "Where exactly should I split?"
+    }
+
+    fn spec(&self) -> ScenarioSpec {
+        ScenarioSpec {
+            workloads: vec![("lmsys", 100.0), ("azure", 200.0),
+                            ("agent", 200.0)],
+            gpus: vec!["A100"],
+            thresholds: THRESHOLDS.to_vec(),
+            lambda_sweep: vec![],
+            slo_ms: SLO_MS,
+            router: "LengthRouter",
+            topology: Topology::TwoPool,
+        }
+    }
+
+    fn run(&self, engine: &EvalEngine, opts: &ScenarioOpts) -> PuzzleReport {
+        let lmsys = WorkloadSpec::builtin(BuiltinTrace::Lmsys, 100.0);
+        let azure = WorkloadSpec::builtin(BuiltinTrace::Azure, 200.0);
+        let agent = WorkloadSpec::builtin(BuiltinTrace::Agent, 200.0);
+        let tables = vec![
+            sweep_table(engine, "LMSYS", &lmsys, "A100", SLO_MS, opts),
+            sweep_table(engine, "Azure", &azure, "A100", SLO_MS, opts),
+            sweep_table(engine, "Agent", &agent, "A100", SLO_MS, opts),
+        ];
+        PuzzleReport {
+            id: 1,
+            title: self.title().into(),
+            tables,
+            insight: "The optimal B_short cannot be read off the CDF: it \
+                      balances slot efficiency, traffic fraction, and Erlang \
+                      fragmentation across both pools, and too-high \
+                      thresholds become SLO-infeasible from long-pool \
+                      prefill alone."
+                .into(),
+        }
+    }
+}
+
+/// Legacy entry point (CLI `puzzle 1`, benches): registry + default engine.
+pub fn run(opts: &ScenarioOpts) -> PuzzleReport {
+    SplitThreshold.run(&crate::scenarios::default_engine(opts), opts)
 }
 
 #[cfg(test)]

@@ -4,92 +4,130 @@
 //! and near-zero queue wait, yet fails its 1 s P99 TTFT SLO — and doubling
 //! the fleet does not fix it. The failure mode (giant-prompt service) is
 //! invisible to Erlang-C; the two-pool design isolates and protects the
-//! short, interactive traffic.
+//! short, interactive traffic. The three homogeneous fleet sizes simulate
+//! in parallel on one cached request stream.
 
 use crate::des::engine::SimPool;
-use crate::gpu::catalog::GpuCatalog;
+use crate::optimizer::engine::EvalEngine;
 use crate::queueing::mgc::{analyze_pool, PoolSpec, WorkloadHist};
 use crate::router::RoutingPolicy;
 use crate::scenarios::common::*;
+use crate::scenarios::{Scenario, ScenarioSpec, Topology};
 use crate::util::table::{dollars, millis, Table};
 use crate::workload::spec::{BuiltinTrace, WorkloadSpec};
 
 pub const LAMBDA: f64 = 20.0;
 pub const SLO_MS: f64 = 1000.0;
 
-pub fn run(opts: &ScenarioOpts) -> PuzzleReport {
-    let cat = GpuCatalog::standard();
-    let gpu = cat.get("H100").unwrap().clone();
-    let w = WorkloadSpec::builtin(BuiltinTrace::Agent, LAMBDA);
-    let ctx = w.cdf.max_len();
-    let hist = WorkloadHist::from_cdf(&w.cdf, w.input_fraction);
+/// Registry entry for the agent-fleet SLO investigation.
+pub struct AgentSlo;
 
-    let mut t = Table::new(&["Config", "GPUs", "Cost/yr", "Util", "Wait99",
-                             "Erlang W99", "P99 TTFT", "SLO"])
-        .with_title(format!(
-            "Agent fleet SLO analysis (λ={LAMBDA} req/s, H100, \
-             SLO={SLO_MS} ms)"
-        ));
+impl Scenario for AgentSlo {
+    fn id(&self) -> &'static str {
+        "puzzle2"
+    }
 
-    for n in [40usize, 64, 128] {
-        let r = simulate(
-            &w,
-            vec![SimPool { gpu: gpu.clone(), n_gpus: n, ctx_budget: ctx,
-                           batch_cap: None }],
-            RoutingPolicy::Random { n_pools: 1 },
-            opts,
-        );
-        let mut stats = r.overall.clone();
-        let a = analyze_pool(&hist, 0.0, 1e12, w.lambda_per_ms(),
-                             &PoolSpec { gpu: gpu.clone(), n_gpus: n,
-                                         ctx_budget: ctx });
-        let p99 = stats.p99_ttft();
+    fn name(&self) -> &'static str {
+        "agent-slo"
+    }
+
+    fn title(&self) -> &'static str {
+        "Why is my agent fleet failing SLO?"
+    }
+
+    fn spec(&self) -> ScenarioSpec {
+        ScenarioSpec {
+            workloads: vec![("agent", LAMBDA)],
+            gpus: vec!["H100"],
+            thresholds: vec![4096.0],
+            lambda_sweep: vec![],
+            slo_ms: SLO_MS,
+            router: "LengthRouter",
+            topology: Topology::TwoPool,
+        }
+    }
+
+    fn run(&self, engine: &EvalEngine, opts: &ScenarioOpts) -> PuzzleReport {
+        let gpu = engine.catalog.get("H100").unwrap().clone();
+        let w = WorkloadSpec::builtin(BuiltinTrace::Agent, LAMBDA);
+        let ctx = w.cdf.max_len();
+        let hist = WorkloadHist::from_cdf(&w.cdf, w.input_fraction);
+
+        let mut t = Table::new(&["Config", "GPUs", "Cost/yr", "Util",
+                                 "Wait99", "Erlang W99", "P99 TTFT", "SLO"])
+            .with_title(format!(
+                "Agent fleet SLO analysis (λ={LAMBDA} req/s, H100, \
+                 SLO={SLO_MS} ms)"
+            ));
+
+        // The three homogeneous fleet sizes are independent simulations.
+        let homo_rows = engine.par_map(vec![40usize, 64, 128], |&n| {
+            let mut r = engine.simulate(
+                &w,
+                vec![SimPool { gpu: gpu.clone(), n_gpus: n, ctx_budget: ctx,
+                               batch_cap: None }],
+                RoutingPolicy::Random { n_pools: 1 },
+                &opts.des(),
+            );
+            let a = analyze_pool(&hist, 0.0, 1e12, w.lambda_per_ms(),
+                                 &PoolSpec { gpu: gpu.clone(), n_gpus: n,
+                                             ctx_budget: ctx });
+            let p99 = r.overall.p99_ttft();
+            (n, r.per_pool[0].utilization, r.overall.wait.p99(), a.w99_ms, p99)
+        });
+        for (n, util, wait99, erlang_w99, p99) in homo_rows {
+            t.row(&[
+                format!("Homo {}K ctx", (ctx / 1024.0) as u64),
+                n.to_string(),
+                dollars(gpu.cost_per_year() * n as f64),
+                format!("{:.0}%", util * 100.0),
+                millis(wait99),
+                millis(erlang_w99),
+                millis(p99),
+                check(p99 <= SLO_MS).to_string(),
+            ]);
+        }
+
+        // Two-pool: short pool isolated at 4K.
+        let (n_s, n_l) = (4usize, 60usize);
+        let pools = vec![
+            SimPool { gpu: gpu.clone(), n_gpus: n_s, ctx_budget: 4096.0,
+                      batch_cap: None },
+            SimPool { gpu: gpu.clone(), n_gpus: n_l, ctx_budget: ctx,
+                      batch_cap: None },
+        ];
+        let mut r = engine.simulate(
+            &w, pools, RoutingPolicy::Length { b_short: 4096.0 }, &opts.des());
+        let short_p99 = r.per_pool[0].stats.ttft.p99();
+        let long_p99 = r.per_pool[1].stats.ttft.p99();
         t.row(&[
-            format!("Homo {}K ctx", (ctx / 1024.0) as u64),
-            n.to_string(),
-            dollars(gpu.cost_per_year() * n as f64),
-            format!("{:.0}%", r.per_pool[0].utilization * 100.0),
-            millis(stats.wait.p99()),
-            millis(a.w99_ms),
-            millis(p99),
-            check(p99 <= SLO_MS).to_string(),
+            format!("Two-pool 4K/{}K", (ctx / 1024.0) as u64),
+            (n_s + n_l).to_string(),
+            dollars(gpu.cost_per_year() * (n_s + n_l) as f64),
+            format!("{:.0}%", r.per_pool[1].utilization * 100.0),
+            millis(r.overall.wait.p99()),
+            "-".into(),
+            format!("{} / {}", millis(short_p99), millis(long_p99)),
+            check(short_p99 <= SLO_MS).to_string(),
         ]);
-    }
 
-    // Two-pool: short pool isolated at 4K.
-    let (n_s, n_l) = (4usize, 60usize);
-    let pools = vec![
-        SimPool { gpu: gpu.clone(), n_gpus: n_s, ctx_budget: 4096.0,
-                  batch_cap: None },
-        SimPool { gpu: gpu.clone(), n_gpus: n_l, ctx_budget: ctx,
-                  batch_cap: None },
-    ];
-    let mut r = simulate(&w, pools, RoutingPolicy::Length { b_short: 4096.0 },
-                         opts);
-    let short_p99 = r.per_pool[0].stats.ttft.p99();
-    let long_p99 = r.per_pool[1].stats.ttft.p99();
-    t.row(&[
-        format!("Two-pool 4K/{}K", (ctx / 1024.0) as u64),
-        (n_s + n_l).to_string(),
-        dollars(gpu.cost_per_year() * (n_s + n_l) as f64),
-        format!("{:.0}%", r.per_pool[1].utilization * 100.0),
-        millis(r.overall.wait.p99()),
-        "-".into(),
-        format!("{} / {}", millis(short_p99), millis(long_p99)),
-        check(short_p99 <= SLO_MS).to_string(),
-    ]);
-
-    PuzzleReport {
-        id: 2,
-        title: "Why is my agent fleet failing SLO?".into(),
-        tables: vec![t],
-        insight: "For agent workloads the analytical queue model reads \
-                  healthy (near-zero W99 at <45% utilization) while DES \
-                  measures P99 TTFT above the SLO — the tail is service, \
-                  not queueing, so adding GPUs does not help. Splitting \
-                  isolates short requests (P99 in the tens of ms)."
-            .into(),
+        PuzzleReport {
+            id: 2,
+            title: self.title().into(),
+            tables: vec![t],
+            insight: "For agent workloads the analytical queue model reads \
+                      healthy (near-zero W99 at <45% utilization) while DES \
+                      measures P99 TTFT above the SLO — the tail is service, \
+                      not queueing, so adding GPUs does not help. Splitting \
+                      isolates short requests (P99 in the tens of ms)."
+                .into(),
+        }
     }
+}
+
+/// Legacy entry point (CLI `puzzle 2`, benches): registry + default engine.
+pub fn run(opts: &ScenarioOpts) -> PuzzleReport {
+    AgentSlo.run(&crate::scenarios::default_engine(opts), opts)
 }
 
 #[cfg(test)]

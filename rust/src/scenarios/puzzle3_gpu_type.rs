@@ -3,10 +3,12 @@
 //! Azure workload at λ=100: the instinct "faster GPU, fewer GPUs, lower
 //! cost" is wrong — the cheap A10G in a two-pool layout undercuts the
 //! H100 fleets, while H100 wins on rack space and short-request latency.
+//! The per-GPU-type minimal-fleet searches run in parallel.
 
-use crate::gpu::catalog::GpuCatalog;
+use crate::optimizer::engine::EvalEngine;
 use crate::queueing::mgc::WorkloadHist;
 use crate::scenarios::common::*;
+use crate::scenarios::{Scenario, ScenarioSpec, Topology};
 use crate::util::table::{dollars, millis, Align, Table};
 use crate::workload::spec::{BuiltinTrace, WorkloadSpec};
 
@@ -25,109 +27,155 @@ pub struct LayoutRow {
     pub slo_ok: bool,
 }
 
-pub fn evaluate(opts: &ScenarioOpts) -> Vec<LayoutRow> {
-    let cat = GpuCatalog::standard();
+/// Evaluate homogeneous + best-two-pool layouts for every GPU type, in
+/// parallel, through the given engine.
+pub fn evaluate_with(engine: &EvalEngine, opts: &ScenarioOpts) -> Vec<LayoutRow> {
     let w = WorkloadSpec::builtin(BuiltinTrace::Azure, LAMBDA);
     let hist = WorkloadHist::from_cdf(&w.cdf, w.input_fraction);
-    let mut rows = Vec::new();
-    for name in ["A10G", "A100", "H100"] {
-        let gpu = cat.require(name).unwrap().clone();
+    let per_gpu = engine.par_map(vec!["A10G", "A100", "H100"], |name| {
+        let gpu = engine.catalog.require(name).unwrap().clone();
+        let mut rows = Vec::new();
         // Homogeneous.
-        if let Some(cand) = min_homogeneous(&w, &hist, &gpu, SLO_MS,
-                                            opts.max_gpus) {
-            let (p99, _, _, _) = verify_candidate(&w, &cand, opts);
+        if let Some(cand) =
+            EvalEngine::min_homogeneous(&w, &hist, &gpu, SLO_MS, opts.max_gpus)
+        {
+            let v = engine.verify(&w, &cand, &opts.des(), SLO_MS);
             rows.push(LayoutRow {
-                gpu: name.into(),
+                gpu: (*name).into(),
                 layout: "Homo".into(),
                 gpus: cand.total_gpus(),
                 cost_yr: cand.cost_per_year(),
-                p99_short: p99,
+                p99_short: v.p99_ttft_ms,
                 p99_long: 0.0,
-                slo_ok: p99 <= SLO_MS,
+                slo_ok: v.passed,
             });
         }
         // Best two-pool over a handful of thresholds.
         let best = [2048.0, 3072.0, 4096.0]
             .iter()
-            .filter_map(|&b| min_two_pool(&w, &hist, &gpu, &gpu, b, SLO_MS,
-                                          opts.max_gpus))
+            .filter_map(|&b| EvalEngine::min_two_pool(&w, &hist, &gpu, &gpu, b,
+                                                      SLO_MS, opts.max_gpus))
             .min_by(|a, b| a.cost_per_year().total_cmp(&b.cost_per_year()));
         if let Some(cand) = best {
-            let (p99, p99_s, p99_l, _) = verify_candidate(&w, &cand, opts);
+            let v = engine.verify(&w, &cand, &opts.des(), SLO_MS);
             rows.push(LayoutRow {
-                gpu: name.into(),
+                gpu: (*name).into(),
                 layout: format!("Two-pool B={}", cand.b_short),
                 gpus: cand.total_gpus(),
                 cost_yr: cand.cost_per_year(),
-                p99_short: p99_s,
-                p99_long: p99_l,
-                slo_ok: p99 <= SLO_MS,
+                p99_short: v.p99_ttft_short_ms,
+                p99_long: v.p99_ttft_long_ms,
+                slo_ok: v.passed,
             });
         }
-    }
+        rows
+    });
+    let mut rows: Vec<LayoutRow> = per_gpu.into_iter().flatten().collect();
     rows.sort_by(|a, b| a.cost_yr.total_cmp(&b.cost_yr));
     rows
 }
 
+/// Evaluate with a default engine (legacy signature used by benches).
+pub fn evaluate(opts: &ScenarioOpts) -> Vec<LayoutRow> {
+    evaluate_with(&crate::scenarios::default_engine(opts), opts)
+}
+
+/// Registry entry for the GPU-type comparison scenario.
+pub struct GpuTypeChoice;
+
+impl Scenario for GpuTypeChoice {
+    fn id(&self) -> &'static str {
+        "puzzle3"
+    }
+
+    fn name(&self) -> &'static str {
+        "gpu-type"
+    }
+
+    fn title(&self) -> &'static str {
+        "Which GPU type is actually cheapest?"
+    }
+
+    fn spec(&self) -> ScenarioSpec {
+        ScenarioSpec {
+            workloads: vec![("azure", LAMBDA)],
+            gpus: vec!["A10G", "A100", "H100"],
+            thresholds: vec![2048.0, 3072.0, 4096.0],
+            lambda_sweep: vec![],
+            slo_ms: SLO_MS,
+            router: "LengthRouter",
+            topology: Topology::TwoPool,
+        }
+    }
+
+    fn run(&self, engine: &EvalEngine, opts: &ScenarioOpts) -> PuzzleReport {
+        let rows = evaluate_with(engine, opts);
+        let mut t = Table::new(&["GPU", "Layout", "GPUs", "Cost/yr",
+                                 "P99 short/long", "SLO"])
+            .with_title(format!(
+                "GPU type vs layout (Azure, λ={LAMBDA}, SLO={SLO_MS} ms)"
+            ))
+            .align(&[Align::Left, Align::Left, Align::Right, Align::Right,
+                     Align::Right, Align::Right]);
+        for r in &rows {
+            let lat = if r.p99_long > 0.0 {
+                format!("{} / {}", millis(r.p99_short), millis(r.p99_long))
+            } else {
+                millis(r.p99_short)
+            };
+            t.row(&[
+                r.gpu.clone(),
+                r.layout.clone(),
+                r.gpus.to_string(),
+                dollars(r.cost_yr),
+                lat,
+                check(r.slo_ok).to_string(),
+            ]);
+        }
+
+        // Decision table (paper's "different constraints, different
+        // choices").
+        let cheapest = rows.iter().filter(|r| r.slo_ok).min_by(
+            |a, b| a.cost_yr.total_cmp(&b.cost_yr));
+        let fewest = rows.iter().filter(|r| r.slo_ok).min_by_key(|r| r.gpus);
+        let fastest = rows.iter().filter(|r| r.slo_ok).min_by(
+            |a, b| a.p99_short.total_cmp(&b.p99_short));
+        let mut d = Table::new(&["Priority", "Choice"])
+            .align(&[Align::Left, Align::Left]);
+        if let Some(r) = cheapest {
+            d.row(&["Minimum annual cost".into(),
+                    format!("{} {} ({})", r.gpu, r.layout,
+                            dollars(r.cost_yr))]);
+        }
+        if let Some(r) = fewest {
+            d.row(&["Minimum rack space / power".into(),
+                    format!("{} {} ({} GPUs)", r.gpu, r.layout, r.gpus)]);
+        }
+        if let Some(r) = fastest {
+            d.row(&["Best short-request latency".into(),
+                    format!("{} {} ({} P99)", r.gpu, r.layout,
+                            millis(r.p99_short))]);
+        }
+        d.row(&["Long-context / agent workload".into(),
+                "H100 or A100 (A10G VRAM limits KV cache)".into()]);
+
+        PuzzleReport {
+            id: 3,
+            title: self.title().into(),
+            tables: vec![t, d],
+            insight: "GPU cost depends on pool topology, not just price and \
+                      throughput: the slot multiplier from a well-chosen \
+                      B_short makes the slower, cheaper A10G the \
+                      minimum-cost option, while H100 wins on footprint and \
+                      latency."
+                .into(),
+        }
+    }
+}
+
+/// Legacy entry point (CLI `puzzle 3`, benches): registry + default engine.
 pub fn run(opts: &ScenarioOpts) -> PuzzleReport {
-    let rows = evaluate(opts);
-    let mut t = Table::new(&["GPU", "Layout", "GPUs", "Cost/yr",
-                             "P99 short/long", "SLO"])
-        .with_title(format!(
-            "GPU type vs layout (Azure, λ={LAMBDA}, SLO={SLO_MS} ms)"
-        ))
-        .align(&[Align::Left, Align::Left, Align::Right, Align::Right,
-                 Align::Right, Align::Right]);
-    for r in &rows {
-        let lat = if r.p99_long > 0.0 {
-            format!("{} / {}", millis(r.p99_short), millis(r.p99_long))
-        } else {
-            millis(r.p99_short)
-        };
-        t.row(&[
-            r.gpu.clone(),
-            r.layout.clone(),
-            r.gpus.to_string(),
-            dollars(r.cost_yr),
-            lat,
-            check(r.slo_ok).to_string(),
-        ]);
-    }
-
-    // Decision table (paper's "different constraints, different choices").
-    let cheapest = rows.iter().filter(|r| r.slo_ok).min_by(
-        |a, b| a.cost_yr.total_cmp(&b.cost_yr));
-    let fewest = rows.iter().filter(|r| r.slo_ok).min_by_key(|r| r.gpus);
-    let fastest = rows.iter().filter(|r| r.slo_ok).min_by(
-        |a, b| a.p99_short.total_cmp(&b.p99_short));
-    let mut d = Table::new(&["Priority", "Choice"])
-        .align(&[Align::Left, Align::Left]);
-    if let Some(r) = cheapest {
-        d.row(&["Minimum annual cost".into(),
-                format!("{} {} ({})", r.gpu, r.layout, dollars(r.cost_yr))]);
-    }
-    if let Some(r) = fewest {
-        d.row(&["Minimum rack space / power".into(),
-                format!("{} {} ({} GPUs)", r.gpu, r.layout, r.gpus)]);
-    }
-    if let Some(r) = fastest {
-        d.row(&["Best short-request latency".into(),
-                format!("{} {} ({} P99)", r.gpu, r.layout,
-                        millis(r.p99_short))]);
-    }
-    d.row(&["Long-context / agent workload".into(),
-            "H100 or A100 (A10G VRAM limits KV cache)".into()]);
-
-    PuzzleReport {
-        id: 3,
-        title: "Which GPU type is actually cheapest?".into(),
-        tables: vec![t, d],
-        insight: "GPU cost depends on pool topology, not just price and \
-                  throughput: the slot multiplier from a well-chosen \
-                  B_short makes the slower, cheaper A10G the minimum-cost \
-                  option, while H100 wins on footprint and latency."
-            .into(),
-    }
+    GpuTypeChoice.run(&crate::scenarios::default_engine(opts), opts)
 }
 
 #[cfg(test)]

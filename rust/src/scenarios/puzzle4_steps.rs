@@ -2,57 +2,96 @@
 //!
 //! What-if λ sweep over an H100 two-pool fleet on Azure: per-bracket
 //! minimal fleets, and the exact arrival rate at which each fleet runs out
-//! of headroom ("provision more before λ = ...").
+//! of headroom ("provision more before λ = ..."). Brackets evaluate in
+//! parallel.
 
-use crate::gpu::catalog::GpuCatalog;
+use crate::optimizer::engine::EvalEngine;
 use crate::optimizer::whatif::WhatIfSweep;
 use crate::scenarios::common::*;
+use crate::scenarios::{Scenario, ScenarioSpec, Topology};
 use crate::util::table::{dollars, Table};
 use crate::workload::spec::{BuiltinTrace, WorkloadSpec};
 
 pub const LAMBDAS: [f64; 7] = [25.0, 50.0, 100.0, 150.0, 200.0, 300.0, 400.0];
 pub const SLO_MS: f64 = 500.0;
 
-pub fn run(_opts: &ScenarioOpts) -> PuzzleReport {
-    let cat = GpuCatalog::standard();
-    let h100 = cat.get("H100").unwrap().clone();
-    let sweep = WhatIfSweep::new(cat, SLO_MS).for_gpu(&h100);
-    let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 100.0);
-    let rows = sweep.sweep(&w, &LAMBDAS);
+/// Registry entry for the GPU step-threshold scenario.
+pub struct StepThresholds;
 
-    let mut t = Table::new(&["λ (req/s)", "GPUs", "Cost/yr",
-                             "provision more before λ ="])
-        .with_title(format!(
-            "GPU step thresholds, H100 two-pool fleet (Azure, SLO={SLO_MS} ms)"
-        ));
-    for r in &rows {
-        t.row(&[
-            format!("{:.0}", r.lambda_rps),
-            r.candidate.total_gpus().to_string(),
-            dollars(r.cost_yr),
-            r.headroom_rps
-                .map(|h| format!("{h:.0}"))
-                .unwrap_or_else(|| "-".into()),
-        ]);
+impl Scenario for StepThresholds {
+    fn id(&self) -> &'static str {
+        "puzzle4"
     }
 
-    // The sub-linearity headline.
-    let first = rows.first().unwrap();
-    let last = rows.last().unwrap();
-    let insight = format!(
-        "GPU provisioning does not scale linearly with traffic: λ grows \
-         {:.0}x ({:.0} -> {:.0} req/s) while the fleet grows {:.1}x \
-         ({} -> {} GPUs). The whatif sweep gives the exact step thresholds \
-         so capacity stays ahead of demand.",
-        last.lambda_rps / first.lambda_rps,
-        first.lambda_rps,
-        last.lambda_rps,
-        last.candidate.total_gpus() as f64 / first.candidate.total_gpus() as f64,
-        first.candidate.total_gpus(),
-        last.candidate.total_gpus(),
-    );
-    PuzzleReport { id: 4, title: "When do I need to add GPUs?".into(),
-                   tables: vec![t], insight }
+    fn name(&self) -> &'static str {
+        "step-thresholds"
+    }
+
+    fn title(&self) -> &'static str {
+        "When do I need to add GPUs?"
+    }
+
+    fn spec(&self) -> ScenarioSpec {
+        ScenarioSpec {
+            workloads: vec![("azure", 100.0)],
+            gpus: vec!["H100"],
+            thresholds: vec![],
+            lambda_sweep: LAMBDAS.to_vec(),
+            slo_ms: SLO_MS,
+            router: "LengthRouter",
+            topology: Topology::TwoPool,
+        }
+    }
+
+    fn run(&self, engine: &EvalEngine, opts: &ScenarioOpts) -> PuzzleReport {
+        let h100 = engine.catalog.get("H100").unwrap().clone();
+        let mut sweep = WhatIfSweep::new(engine.catalog.clone(), SLO_MS)
+            .for_gpu(&h100);
+        sweep.threads = opts.threads;
+        let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 100.0);
+        let rows = sweep.sweep(&w, &LAMBDAS);
+
+        let mut t = Table::new(&["λ (req/s)", "GPUs", "Cost/yr",
+                                 "provision more before λ ="])
+            .with_title(format!(
+                "GPU step thresholds, H100 two-pool fleet (Azure, \
+                 SLO={SLO_MS} ms)"
+            ));
+        for r in &rows {
+            t.row(&[
+                format!("{:.0}", r.lambda_rps),
+                r.candidate.total_gpus().to_string(),
+                dollars(r.cost_yr),
+                r.headroom_rps
+                    .map(|h| format!("{h:.0}"))
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+        }
+
+        // The sub-linearity headline.
+        let first = rows.first().unwrap();
+        let last = rows.last().unwrap();
+        let insight = format!(
+            "GPU provisioning does not scale linearly with traffic: λ grows \
+             {:.0}x ({:.0} -> {:.0} req/s) while the fleet grows {:.1}x \
+             ({} -> {} GPUs). The whatif sweep gives the exact step \
+             thresholds so capacity stays ahead of demand.",
+            last.lambda_rps / first.lambda_rps,
+            first.lambda_rps,
+            last.lambda_rps,
+            last.candidate.total_gpus() as f64
+                / first.candidate.total_gpus() as f64,
+            first.candidate.total_gpus(),
+            last.candidate.total_gpus(),
+        );
+        PuzzleReport { id: 4, title: self.title().into(), tables: vec![t],
+                       insight }
+    }
+}
+
+/// Legacy entry point (CLI `puzzle 4`, benches): registry + default engine.
+pub fn run(opts: &ScenarioOpts) -> PuzzleReport {
+    StepThresholds.run(&crate::scenarios::default_engine(opts), opts)
 }
 
 #[cfg(test)]

@@ -4,12 +4,14 @@
 //! LengthRouter, the sizing-oriented CompressAndRoute, and the
 //! RandomRouter baseline. The sizing router can overload the small short
 //! pool it was designed to justify; random spreading dilutes heavy-tail
-//! events but is brittle.
+//! events but is brittle. The three routers simulate in parallel on one
+//! cached request stream.
 
 use crate::des::engine::SimPool;
-use crate::gpu::catalog::GpuCatalog;
+use crate::optimizer::engine::EvalEngine;
 use crate::router::RoutingPolicy;
 use crate::scenarios::common::*;
+use crate::scenarios::{Scenario, ScenarioSpec, Topology};
 use crate::util::table::{millis, percent, Align, Table};
 use crate::workload::spec::{BuiltinTrace, WorkloadSpec};
 
@@ -30,9 +32,9 @@ pub struct RouterRow {
     pub compressed: usize,
 }
 
-pub fn evaluate(opts: &ScenarioOpts) -> Vec<RouterRow> {
-    let cat = GpuCatalog::standard();
-    let gpu = cat.get("H100").unwrap().clone();
+/// Simulate the three routers in parallel through the given engine.
+pub fn evaluate_with(engine: &EvalEngine, opts: &ScenarioOpts) -> Vec<RouterRow> {
+    let gpu = engine.catalog.get("H100").unwrap().clone();
     let w = WorkloadSpec::builtin(BuiltinTrace::Agent, LAMBDA);
     let ctx = w.cdf.max_len();
     let pools = || {
@@ -43,58 +45,94 @@ pub fn evaluate(opts: &ScenarioOpts) -> Vec<RouterRow> {
                       batch_cap: None },
         ]
     };
-    let routers = [
+    let routers = vec![
         RoutingPolicy::Length { b_short: B_SHORT },
         RoutingPolicy::CompressAndRoute { b_short: B_SHORT, gamma: 2.0 },
         RoutingPolicy::Random { n_pools: 2 },
     ];
-    routers
-        .iter()
-        .map(|router| {
-            let mut r = simulate(&w, pools(), router.clone(), opts);
-            RouterRow {
-                router: router.name().into(),
-                p99_short: r.per_pool[0].stats.ttft.p99(),
-                p99_overall: r.overall.p99_ttft(),
-                attainment: r.attainment(SLO_MS),
-                compressed: r.n_compressed,
-            }
-        })
-        .collect()
+    engine.par_map(routers, |router| {
+        let mut r = engine.simulate(&w, pools(), router.clone(), &opts.des());
+        RouterRow {
+            router: router.name().into(),
+            p99_short: r.per_pool[0].stats.ttft.p99(),
+            p99_overall: r.overall.p99_ttft(),
+            attainment: r.attainment(SLO_MS),
+            compressed: r.n_compressed,
+        }
+    })
 }
 
+/// Evaluate with a default engine (legacy signature used by benches).
+pub fn evaluate(opts: &ScenarioOpts) -> Vec<RouterRow> {
+    evaluate_with(&crate::scenarios::default_engine(opts), opts)
+}
+
+/// Registry entry for the router-comparison scenario.
+pub struct RouterComparison;
+
+impl Scenario for RouterComparison {
+    fn id(&self) -> &'static str {
+        "puzzle5"
+    }
+
+    fn name(&self) -> &'static str {
+        "routers"
+    }
+
+    fn title(&self) -> &'static str {
+        "Which router causes SLO violations?"
+    }
+
+    fn spec(&self) -> ScenarioSpec {
+        ScenarioSpec {
+            workloads: vec![("agent", LAMBDA)],
+            gpus: vec!["H100"],
+            thresholds: vec![B_SHORT],
+            lambda_sweep: vec![],
+            slo_ms: SLO_MS,
+            router: "Length/CompressAndRoute/Random",
+            topology: Topology::TwoPool,
+        }
+    }
+
+    fn run(&self, engine: &EvalEngine, opts: &ScenarioOpts) -> PuzzleReport {
+        let rows = evaluate_with(engine, opts);
+        let mut t = Table::new(&["Router", "P99 short-pool TTFT", "P99 TTFT",
+                                 "SLO attainment", "compressed"])
+            .with_title(format!(
+                "Router comparison on the agent fleet (λ={LAMBDA}, \
+                 {N_SHORT}+{N_LONG} H100, SLO={SLO_MS} ms)"
+            ))
+            .align(&[Align::Left, Align::Right, Align::Right, Align::Right,
+                     Align::Right]);
+        for r in &rows {
+            t.row(&[
+                r.router.clone(),
+                millis(r.p99_short),
+                millis(r.p99_overall),
+                percent(r.attainment),
+                r.compressed.to_string(),
+            ]);
+        }
+        PuzzleReport {
+            id: 5,
+            title: self.title().into(),
+            tables: vec![t],
+            insight: "The router used to size the fleet and the router \
+                      deployed in production should differ: CompressAndRoute \
+                      funnels borderline agent requests into the 2-GPU short \
+                      pool and spikes its P99, while LengthRouter operates \
+                      the same fleet safely. RandomRouter dilutes heavy \
+                      tails across all slots but couples short requests to \
+                      long-request fate — brittle under mix shifts."
+                .into(),
+        }
+    }
+}
+
+/// Legacy entry point (CLI `puzzle 5`, benches): registry + default engine.
 pub fn run(opts: &ScenarioOpts) -> PuzzleReport {
-    let rows = evaluate(opts);
-    let mut t = Table::new(&["Router", "P99 short-pool TTFT", "P99 TTFT",
-                             "SLO attainment", "compressed"])
-        .with_title(format!(
-            "Router comparison on the agent fleet (λ={LAMBDA}, \
-             {N_SHORT}+{N_LONG} H100, SLO={SLO_MS} ms)"
-        ))
-        .align(&[Align::Left, Align::Right, Align::Right, Align::Right,
-                 Align::Right]);
-    for r in &rows {
-        t.row(&[
-            r.router.clone(),
-            millis(r.p99_short),
-            millis(r.p99_overall),
-            percent(r.attainment),
-            r.compressed.to_string(),
-        ]);
-    }
-    PuzzleReport {
-        id: 5,
-        title: "Which router causes SLO violations?".into(),
-        tables: vec![t],
-        insight: "The router used to size the fleet and the router deployed \
-                  in production should differ: CompressAndRoute funnels \
-                  borderline agent requests into the 2-GPU short pool and \
-                  spikes its P99, while LengthRouter operates the same \
-                  fleet safely. RandomRouter dilutes heavy tails across \
-                  all slots but couples short requests to long-request \
-                  fate — brittle under mix shifts."
-            .into(),
-    }
+    RouterComparison.run(&crate::scenarios::default_engine(opts), opts)
 }
 
 #[cfg(test)]

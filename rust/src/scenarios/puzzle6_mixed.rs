@@ -3,11 +3,13 @@
 //! Azure: cheap A10Gs in the short pool + premium GPUs only where the long
 //! context warrants them. LMSYS at 65K max context: the long-pool GPU
 //! choice decides SLO feasibility outright — some pairings are invalid at
-//! any count (long-context prefill on slow chunks blows the budget).
+//! any count (long-context prefill on slow chunks blows the budget). The
+//! five pairings size + verify in parallel.
 
-use crate::gpu::catalog::GpuCatalog;
+use crate::optimizer::engine::{EvalEngine, SweepJob};
 use crate::queueing::mgc::WorkloadHist;
 use crate::scenarios::common::*;
+use crate::scenarios::{Scenario, ScenarioSpec, Topology};
 use crate::util::table::{dollars, millis, Align, Table};
 use crate::workload::spec::{BuiltinTrace, WorkloadSpec};
 
@@ -24,27 +26,39 @@ pub struct MixRow {
     pub feasible: bool,
 }
 
-pub fn evaluate(trace: BuiltinTrace, b_short: f64, opts: &ScenarioOpts)
-    -> Vec<MixRow>
-{
-    let cat = GpuCatalog::standard();
+/// Evaluate the five GPU pairings (in parallel) through the given engine.
+pub fn evaluate_with(
+    engine: &EvalEngine,
+    trace: BuiltinTrace,
+    b_short: f64,
+    opts: &ScenarioOpts,
+) -> Vec<MixRow> {
     let w = WorkloadSpec::builtin(trace, LAMBDA);
     let hist = WorkloadHist::from_cdf(&w.cdf, w.input_fraction);
     let pairs = [("A100", "A100"), ("A10G", "H100"), ("A10G", "A100"),
                  ("A10G", "A10G"), ("H100", "H100")];
+    let jobs: Vec<SweepJob> = pairs
+        .iter()
+        .map(|(s, l)| {
+            SweepJob::two_pool(
+                engine.catalog.require(s).unwrap(),
+                engine.catalog.require(l).unwrap(),
+                b_short,
+            )
+        })
+        .collect();
+    let sized =
+        engine.sweep_min_fleets(&w, &hist, jobs, SLO_MS, opts.max_gpus,
+                                &opts.des());
     let mut rows = Vec::new();
-    for (s, l) in pairs {
-        let gpu_s = cat.require(s).unwrap().clone();
-        let gpu_l = cat.require(l).unwrap().clone();
+    for ((s, l), row) in pairs.iter().zip(sized) {
         let config = if s == l {
             format!("All-{s}")
         } else {
             format!("{s} Ps + {l} Pl")
         };
-        match min_two_pool(&w, &hist, &gpu_s, &gpu_l, b_short, SLO_MS,
-                           opts.max_gpus) {
-            Some(cand) => {
-                let (_, p99_s, p99_l, _) = verify_candidate(&w, &cand, opts);
+        match row {
+            Some((cand, v)) => {
                 // Table 7 verdicts are per-pool: a long pool violating the
                 // SLO fails the config even though long traffic is too
                 // rare to move the fleet-wide P99.
@@ -52,9 +66,10 @@ pub fn evaluate(trace: BuiltinTrace, b_short: f64, opts: &ScenarioOpts)
                     config,
                     gpus: cand.total_gpus(),
                     cost_yr: cand.cost_per_year(),
-                    p99_short: p99_s,
-                    p99_long: p99_l,
-                    feasible: p99_s <= SLO_MS && p99_l <= SLO_MS,
+                    p99_short: v.p99_ttft_short_ms,
+                    p99_long: v.p99_ttft_long_ms,
+                    feasible: v.p99_ttft_short_ms <= SLO_MS
+                        && v.p99_ttft_long_ms <= SLO_MS,
                 });
             }
             None => rows.push(MixRow {
@@ -71,9 +86,17 @@ pub fn evaluate(trace: BuiltinTrace, b_short: f64, opts: &ScenarioOpts)
     rows
 }
 
-fn table_for(name: &str, trace: BuiltinTrace, b_short: f64,
-             opts: &ScenarioOpts) -> Table {
-    let rows = evaluate(trace, b_short, opts);
+/// Evaluate with a default engine (legacy signature used by benches).
+pub fn evaluate(trace: BuiltinTrace, b_short: f64, opts: &ScenarioOpts)
+    -> Vec<MixRow>
+{
+    evaluate_with(&crate::scenarios::default_engine(opts), trace, b_short,
+                  opts)
+}
+
+fn table_for(engine: &EvalEngine, name: &str, trace: BuiltinTrace,
+             b_short: f64, opts: &ScenarioOpts) -> Table {
+    let rows = evaluate_with(engine, trace, b_short, opts);
     let mut t = Table::new(&["Config", "GPUs", "Cost/yr", "P99-short",
                              "P99-long", "SLO"])
         .with_title(format!(
@@ -106,23 +129,58 @@ fn table_for(name: &str, trace: BuiltinTrace, b_short: f64,
     t
 }
 
-pub fn run(opts: &ScenarioOpts) -> PuzzleReport {
-    let tables = vec![
-        table_for("Azure", BuiltinTrace::Azure, 3072.0, opts),
-        table_for("LMSYS (65K max ctx)", BuiltinTrace::Lmsys, 4096.0, opts),
-    ];
-    PuzzleReport {
-        id: 6,
-        title: "Does mixing GPU types save money?".into(),
-        tables,
-        insight: "Mixing is not just a cost play: on LMSYS the long-pool \
-                  GPU decides feasibility — slow chunked prefill on a 65K \
-                  prompt can exceed the whole SLO budget no matter how \
-                  many cards you add. Joint optimization over pool \
-                  assignment and GPU type is required; some pairings are \
-                  simply invalid."
-            .into(),
+/// Registry entry for the mixed-GPU-types scenario.
+pub struct MixedGpuTypes;
+
+impl Scenario for MixedGpuTypes {
+    fn id(&self) -> &'static str {
+        "puzzle6"
     }
+
+    fn name(&self) -> &'static str {
+        "mixed-gpu"
+    }
+
+    fn title(&self) -> &'static str {
+        "Does mixing GPU types save money?"
+    }
+
+    fn spec(&self) -> ScenarioSpec {
+        ScenarioSpec {
+            workloads: vec![("azure", LAMBDA), ("lmsys", LAMBDA)],
+            gpus: vec!["A10G", "A100", "H100"],
+            thresholds: vec![3072.0, 4096.0],
+            lambda_sweep: vec![],
+            slo_ms: SLO_MS,
+            router: "LengthRouter",
+            topology: Topology::MixedTwoPool,
+        }
+    }
+
+    fn run(&self, engine: &EvalEngine, opts: &ScenarioOpts) -> PuzzleReport {
+        let tables = vec![
+            table_for(engine, "Azure", BuiltinTrace::Azure, 3072.0, opts),
+            table_for(engine, "LMSYS (65K max ctx)", BuiltinTrace::Lmsys,
+                      4096.0, opts),
+        ];
+        PuzzleReport {
+            id: 6,
+            title: self.title().into(),
+            tables,
+            insight: "Mixing is not just a cost play: on LMSYS the long-pool \
+                      GPU decides feasibility — slow chunked prefill on a \
+                      65K prompt can exceed the whole SLO budget no matter \
+                      how many cards you add. Joint optimization over pool \
+                      assignment and GPU type is required; some pairings are \
+                      simply invalid."
+                .into(),
+        }
+    }
+}
+
+/// Legacy entry point (CLI `puzzle 6`, benches): registry + default engine.
+pub fn run(opts: &ScenarioOpts) -> PuzzleReport {
+    MixedGpuTypes.run(&crate::scenarios::default_engine(opts), opts)
 }
 
 #[cfg(test)]

@@ -2,11 +2,15 @@
 //!
 //! DisaggFleetOptimizer sweep over prefill/decode GPU pairings (A100/H100)
 //! on Azure at λ=100, against the aggregated baselines, with the two-stage
-//! DES verifying the analytical TTFT.
+//! DES verifying the analytical TTFT. The per-configuration DES runs fan
+//! out over the engine's worker threads (the two-stage `simulate_disagg`
+//! owns its sampling, so this scenario uses the engine for parallelism
+//! rather than the stream cache).
 
-use crate::gpu::catalog::GpuCatalog;
 use crate::optimizer::disagg::{simulate_disagg, DisaggFleetOptimizer};
+use crate::optimizer::engine::EvalEngine;
 use crate::scenarios::common::*;
+use crate::scenarios::{Scenario, ScenarioSpec, Topology};
 use crate::util::table::{dollars, millis, Align, Table};
 use crate::workload::spec::{BuiltinTrace, WorkloadSpec};
 
@@ -14,64 +18,104 @@ pub const LAMBDA: f64 = 100.0;
 pub const TTFT_SLO_MS: f64 = 500.0;
 pub const TPOT_SLO_MS: f64 = 100.0;
 
-pub fn run(opts: &ScenarioOpts) -> PuzzleReport {
-    let cat = GpuCatalog::standard();
-    let w = WorkloadSpec::builtin(BuiltinTrace::Azure, LAMBDA);
-    let o = DisaggFleetOptimizer::new(cat.clone(), TTFT_SLO_MS, TPOT_SLO_MS);
+/// Registry entry for the disaggregated-serving scenario.
+pub struct DisaggServing;
 
-    let mut t = Table::new(&["Config", "GPUs", "Cost/yr", "TTFT", "TTFT(DES)",
-                             "TPOT", "SLO"])
-        .with_title(format!(
-            "Disaggregated P/D configurations (Azure λ={LAMBDA}, TTFT \
-             SLO={TTFT_SLO_MS} ms, TPOT SLO={TPOT_SLO_MS} ms, \
-             KV-transfer BETA_TTFT=1.80)"
-        ))
-        .align(&[Align::Left, Align::Left, Align::Right, Align::Right,
-                 Align::Right, Align::Right, Align::Right]);
+impl Scenario for DisaggServing {
+    fn id(&self) -> &'static str {
+        "puzzle7"
+    }
 
-    // Aggregated baselines first (paper's table shape).
-    for name in ["A100", "H100"] {
-        let gpu = cat.require(name).unwrap();
-        if let Some((n, cost, ttft)) = o.aggregated_baseline(&w, gpu) {
-            t.row(&[
-                format!("All-{name} aggregated"),
-                n.to_string(),
-                dollars(cost),
-                millis(ttft),
-                "-".into(),
-                "-".into(),
-                check(ttft <= TTFT_SLO_MS).to_string(),
-            ]);
+    fn name(&self) -> &'static str {
+        "disagg"
+    }
+
+    fn title(&self) -> &'static str {
+        "When should I switch to disaggregated serving?"
+    }
+
+    fn spec(&self) -> ScenarioSpec {
+        ScenarioSpec {
+            workloads: vec![("azure", LAMBDA)],
+            gpus: vec!["A100", "H100"],
+            thresholds: vec![],
+            lambda_sweep: vec![],
+            slo_ms: TTFT_SLO_MS,
+            router: "prefill->decode pipeline",
+            topology: Topology::Disaggregated,
         }
     }
-    for (cfg, a) in o.sweep(&w) {
-        let (des_ttft, _, _) = simulate_disagg(&w, &cfg, opts.n_requests,
-                                               opts.seed);
-        t.row(&[
-            cfg.label(),
-            (cfg.n_prefill + cfg.n_decode).to_string(),
-            dollars(a.cost_yr),
-            millis(a.ttft99_ms),
-            millis(des_ttft),
-            millis(a.tpot_ms),
-            check(a.feasible).to_string(),
-        ]);
-    }
 
-    PuzzleReport {
-        id: 7,
-        title: "When should I switch to disaggregated serving?".into(),
-        tables: vec![t],
-        insight: "The premium GPU earns its cost in decode, not prefill: \
-                  H100 decode workers serve ~2x the requests of A100 per \
-                  card, while a small prefill pool (1 H100 / <=3 A100) \
-                  carries all prompts. Under the chunked-prefill service \
-                  model the cost gap vs aggregated serving is narrower \
-                  than the paper's testbed (see EXPERIMENTS.md T8); the \
-                  TTFT penalty from the 1.8x KV transfer and the TPOT \
-                  guarantee trade-off reproduce."
-            .into(),
+    fn run(&self, engine: &EvalEngine, opts: &ScenarioOpts) -> PuzzleReport {
+        let w = WorkloadSpec::builtin(BuiltinTrace::Azure, LAMBDA);
+        let o = DisaggFleetOptimizer::new(engine.catalog.clone(),
+                                          TTFT_SLO_MS, TPOT_SLO_MS);
+
+        let mut t = Table::new(&["Config", "GPUs", "Cost/yr", "TTFT",
+                                 "TTFT(DES)", "TPOT", "SLO"])
+            .with_title(format!(
+                "Disaggregated P/D configurations (Azure λ={LAMBDA}, TTFT \
+                 SLO={TTFT_SLO_MS} ms, TPOT SLO={TPOT_SLO_MS} ms, \
+                 KV-transfer BETA_TTFT=1.80)"
+            ))
+            .align(&[Align::Left, Align::Left, Align::Right, Align::Right,
+                     Align::Right, Align::Right, Align::Right]);
+
+        // Aggregated baselines first (paper's table shape).
+        for name in ["A100", "H100"] {
+            let gpu = engine.catalog.require(name).unwrap();
+            if let Some((n, cost, ttft)) = o.aggregated_baseline(&w, gpu) {
+                t.row(&[
+                    format!("All-{name} aggregated"),
+                    n.to_string(),
+                    dollars(cost),
+                    millis(ttft),
+                    "-".into(),
+                    "-".into(),
+                    check(ttft <= TTFT_SLO_MS).to_string(),
+                ]);
+            }
+        }
+        // The analytic sweep is cheap; each config's two-stage DES
+        // verification is the expensive part and runs in parallel.
+        let sweep = o.sweep(&w);
+        let des_rows = engine.par_map(sweep, |(cfg, a)| {
+            let (des_ttft, _, _) =
+                simulate_disagg(&w, cfg, opts.n_requests, opts.seed);
+            (cfg.clone(), *a, des_ttft)
+        });
+        for (cfg, a, des_ttft) in des_rows {
+            t.row(&[
+                cfg.label(),
+                (cfg.n_prefill + cfg.n_decode).to_string(),
+                dollars(a.cost_yr),
+                millis(a.ttft99_ms),
+                millis(des_ttft),
+                millis(a.tpot_ms),
+                check(a.feasible).to_string(),
+            ]);
+        }
+
+        PuzzleReport {
+            id: 7,
+            title: self.title().into(),
+            tables: vec![t],
+            insight: "The premium GPU earns its cost in decode, not prefill: \
+                      H100 decode workers serve ~2x the requests of A100 per \
+                      card, while a small prefill pool (1 H100 / <=3 A100) \
+                      carries all prompts. Under the chunked-prefill service \
+                      model the cost gap vs aggregated serving is narrower \
+                      than the paper's testbed (see EXPERIMENTS.md T8); the \
+                      TTFT penalty from the 1.8x KV transfer and the TPOT \
+                      guarantee trade-off reproduce."
+                .into(),
+        }
     }
+}
+
+/// Legacy entry point (CLI `puzzle 7`, benches): registry + default engine.
+pub fn run(opts: &ScenarioOpts) -> PuzzleReport {
+    DisaggServing.run(&crate::scenarios::default_engine(opts), opts)
 }
 
 #[cfg(test)]

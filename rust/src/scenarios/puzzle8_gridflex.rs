@@ -4,11 +4,17 @@
 //! `grid_flex_analysis()` sweeps demand-response depths for a 40x H100
 //! fleet on Azure at λ=200: logistic power inversion -> batch cap ->
 //! recalibrated M/G/c -> DES verification (steady state + 75 s event
-//! window).
+//! window). Each flex level is an independent (analysis + 2x DES) unit and
+//! fans out over the engine's worker threads. (The DES runs inside
+//! `grid_flex_analysis` manage their own request sampling — cap windows
+//! need the raw arrival times — so this scenario gains parallelism, not
+//! the engine's stream cache.)
 
-use crate::gpu::catalog::GpuCatalog;
-use crate::optimizer::gridflex::{grid_flex_analysis, GridFlexConfig};
+use crate::optimizer::engine::EvalEngine;
+use crate::optimizer::gridflex::{grid_flex_analysis, FlexPoint,
+                                 GridFlexConfig};
 use crate::scenarios::common::*;
+use crate::scenarios::{Scenario, ScenarioSpec, Topology};
 use crate::util::table::{millis, Table};
 use crate::workload::spec::{BuiltinTrace, WorkloadSpec};
 
@@ -26,61 +32,101 @@ pub fn config(opts: &ScenarioOpts) -> GridFlexConfig {
     }
 }
 
+/// Registry entry for the grid demand-response scenario.
+pub struct GridFlexibility;
+
+impl Scenario for GridFlexibility {
+    fn id(&self) -> &'static str {
+        "puzzle8"
+    }
+
+    fn name(&self) -> &'static str {
+        "gridflex"
+    }
+
+    fn title(&self) -> &'static str {
+        "How much grid power can I shed without an SLO breach?"
+    }
+
+    fn spec(&self) -> ScenarioSpec {
+        ScenarioSpec {
+            workloads: vec![("azure", LAMBDA)],
+            gpus: vec!["H100"],
+            thresholds: vec![],
+            lambda_sweep: vec![],
+            slo_ms: SLO_MS,
+            router: "RandomRouter",
+            topology: Topology::SinglePool,
+        }
+    }
+
+    fn run(&self, engine: &EvalEngine, opts: &ScenarioOpts) -> PuzzleReport {
+        let gpu = engine.catalog.get("H100").unwrap().clone();
+        let w = WorkloadSpec::builtin(BuiltinTrace::Azure, LAMBDA);
+        let cfg = config(opts);
+        // One flex level per job: each is an independent power-inversion +
+        // M/G/c recalibration + two DES runs.
+        let rows: Vec<FlexPoint> = engine
+            .par_map(cfg.flex_levels.clone(), |&flex| {
+                let level = GridFlexConfig { flex_levels: vec![flex],
+                                             ..cfg.clone() };
+                grid_flex_analysis(&w, &gpu, &level)
+            })
+            .into_iter()
+            .flatten()
+            .collect();
+
+        let mut t = Table::new(&["Flex", "n_max", "W/GPU", "Fleet kW",
+                                 "P99 anal.", "P99 DES", "P99 event",
+                                 "steady", "event"])
+            .with_title(format!(
+                "Grid flexibility curve for {N_GPUS} H100 GPUs, λ={LAMBDA} \
+                 req/s, SLO={SLO_MS} ms (Azure; logistic power model, \
+                 DES-verified, {} requests, {:.0} s event window)",
+                cfg.n_requests,
+                cfg.event_ms / 1000.0
+            ));
+        for r in &rows {
+            t.row(&[
+                format!("{:.0}%", r.flex * 100.0),
+                r.n_max.to_string(),
+                format!("{:.0} W", r.w_per_gpu),
+                format!("{:.1} kW", r.fleet_kw),
+                millis(r.p99_analytic_ms),
+                millis(r.p99_des_ms),
+                millis(r.p99_event_ms),
+                check(r.steady_ok).to_string(),
+                check(r.event_ok).to_string(),
+            ]);
+        }
+
+        let steady_depth = rows.iter().take_while(|r| r.steady_ok).count();
+        let event_depth = rows.iter().take_while(|r| r.event_ok).count();
+        let baseline_kw = rows[0].fleet_kw;
+        let saved = rows
+            .get(event_depth.saturating_sub(1))
+            .map(|r| baseline_kw - r.fleet_kw)
+            .unwrap_or(0.0);
+        let insight = format!(
+            "The safe DR commitment depth depends on event duration: \
+             sustained curtailment is stability-limited at {}, while short \
+             events tolerate {} (saving {saved:.1} kW of {baseline_kw:.1} kW \
+             fleet-wide) before the queue collapses at 50%.",
+            rows.get(steady_depth.saturating_sub(1))
+                .map(|r| format!("{:.0}%", r.flex * 100.0))
+                .unwrap_or_else(|| "0%".into()),
+            rows.get(event_depth.saturating_sub(1))
+                .map(|r| format!("{:.0}%", r.flex * 100.0))
+                .unwrap_or_else(|| "0%".into()),
+        );
+        PuzzleReport { id: 8, title: self.title().into(), tables: vec![t],
+                       insight }
+    }
+}
+
+/// Legacy entry point (CLI `puzzle 8`, benches): registry + default engine.
 pub fn run(opts: &ScenarioOpts) -> PuzzleReport {
-    let gpu = GpuCatalog::standard().get("H100").unwrap().clone();
-    let w = WorkloadSpec::builtin(BuiltinTrace::Azure, LAMBDA);
-    let cfg = config(opts);
-    let rows = grid_flex_analysis(&w, &gpu, &cfg);
-
-    let mut t = Table::new(&["Flex", "n_max", "W/GPU", "Fleet kW",
-                             "P99 anal.", "P99 DES", "P99 event",
-                             "steady", "event"])
-        .with_title(format!(
-            "Grid flexibility curve for {N_GPUS} H100 GPUs, λ={LAMBDA} \
-             req/s, SLO={SLO_MS} ms (Azure; logistic power model, \
-             DES-verified, {} requests, {:.0} s event window)",
-            cfg.n_requests,
-            cfg.event_ms / 1000.0
-        ));
-    for r in &rows {
-        t.row(&[
-            format!("{:.0}%", r.flex * 100.0),
-            r.n_max.to_string(),
-            format!("{:.0} W", r.w_per_gpu),
-            format!("{:.1} kW", r.fleet_kw),
-            millis(r.p99_analytic_ms),
-            millis(r.p99_des_ms),
-            millis(r.p99_event_ms),
-            check(r.steady_ok).to_string(),
-            check(r.event_ok).to_string(),
-        ]);
-    }
-
-    let steady_depth = rows.iter().take_while(|r| r.steady_ok).count();
-    let event_depth = rows.iter().take_while(|r| r.event_ok).count();
-    let baseline_kw = rows[0].fleet_kw;
-    let saved = rows
-        .get(event_depth.saturating_sub(1))
-        .map(|r| baseline_kw - r.fleet_kw)
-        .unwrap_or(0.0);
-    let insight = format!(
-        "The safe DR commitment depth depends on event duration: sustained \
-         curtailment is stability-limited at {}, while short events \
-         tolerate {} (saving {saved:.1} kW of {baseline_kw:.1} kW \
-         fleet-wide) before the queue collapses at 50%.",
-        rows.get(steady_depth.saturating_sub(1))
-            .map(|r| format!("{:.0}%", r.flex * 100.0))
-            .unwrap_or_else(|| "0%".into()),
-        rows.get(event_depth.saturating_sub(1))
-            .map(|r| format!("{:.0}%", r.flex * 100.0))
-            .unwrap_or_else(|| "0%".into()),
-    );
-    PuzzleReport {
-        id: 8,
-        title: "How much grid power can I shed without an SLO breach?".into(),
-        tables: vec![t],
-        insight,
-    }
+    GridFlexibility.run(&crate::scenarios::default_engine(opts), opts)
 }
 
 #[cfg(test)]

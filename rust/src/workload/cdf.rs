@@ -84,6 +84,12 @@ impl EmpiricalCdf {
         self.points.last().unwrap().0
     }
 
+    /// The raw `(length, cum_prob)` breakpoints (used e.g. to fingerprint
+    /// a workload for the evaluation engine's request-stream cache).
+    pub fn points(&self) -> &[(f64, f64)] {
+        &self.points
+    }
+
     /// F(L): fraction of requests with budget <= L.
     pub fn cdf(&self, len: f64) -> f64 {
         if len < self.min_len {

@@ -1,0 +1,106 @@
+//! Integration tests for the scenario registry + unified evaluation
+//! engine: registry lookups, equivalence of the generic `run --scenario`
+//! path with the legacy per-puzzle entry points, parallel-vs-serial sweep
+//! determinism, and the shared request-stream cache.
+
+use fleet_sim::optimizer::engine::EvalEngine;
+use fleet_sim::scenarios::{self, Scenario, ScenarioOpts};
+use fleet_sim::workload::spec::{BuiltinTrace, WorkloadSpec};
+
+fn fast_opts() -> ScenarioOpts {
+    ScenarioOpts { n_requests: 2_000, ..ScenarioOpts::fast() }
+}
+
+#[test]
+fn registry_run_matches_legacy_entry_points() {
+    // The generic registry path (`run --scenario puzzleN`) must reproduce
+    // the same tables as the old per-puzzle run() functions.
+    let opts = fast_opts();
+    let via_registry = scenarios::run(5, &opts).unwrap().render();
+    let legacy = fleet_sim::scenarios::puzzle5_routers::run(&opts).render();
+    assert_eq!(via_registry, legacy);
+
+    let via_registry4 = scenarios::run(4, &opts).unwrap().render();
+    let legacy4 = fleet_sim::scenarios::puzzle4_steps::run(&opts).render();
+    assert_eq!(via_registry4, legacy4);
+
+    let mm = scenarios::find("multi-model").unwrap();
+    let engine = scenarios::default_engine(&opts);
+    let via_registry_mm = mm.run(&engine, &opts).render();
+    let legacy_mm = fleet_sim::scenarios::multi_model::run(&opts).render();
+    assert_eq!(via_registry_mm, legacy_mm);
+}
+
+#[test]
+fn parallel_and_serial_sweeps_produce_identical_tables() {
+    // The engine's par_map fan-out must not change any table cell: same
+    // candidates, same DES results, same rendering, independent of the
+    // worker-thread count.
+    let serial = fast_opts().serial();
+    let parallel = ScenarioOpts { threads: 8, ..fast_opts() };
+    for scenario_id in ["puzzle3", "puzzle5"] {
+        let s = scenarios::find(scenario_id).unwrap();
+        let a = s
+            .run(&scenarios::default_engine(&serial), &serial)
+            .render();
+        let b = s
+            .run(&scenarios::default_engine(&parallel), &parallel)
+            .render();
+        assert_eq!(a, b, "{scenario_id}: parallel != serial");
+    }
+}
+
+#[test]
+fn engine_stream_cache_is_shared_across_a_scenario_run() {
+    // Puzzle 5 simulates three routers on the same (workload, n, seed):
+    // the engine must sample the request stream exactly once.
+    let opts = fast_opts();
+    let engine = scenarios::default_engine(&opts);
+    let s = scenarios::find("routers").unwrap();
+    let _ = s.run(&engine, &opts);
+    assert_eq!(engine.cached_streams(), 1,
+               "three router sims should share one sampled stream");
+}
+
+#[test]
+fn engine_verify_is_identical_to_fresh_simulation() {
+    // The cached-stream verification path must equal a from-scratch
+    // Simulator::run for the same candidate (guards the cache key).
+    use fleet_sim::optimizer::planner::plan_pools;
+    use fleet_sim::des::engine::{DesConfig, Simulator};
+    use fleet_sim::queueing::mgc::WorkloadHist;
+
+    let engine = EvalEngine::standard();
+    let w = WorkloadSpec::builtin(BuiltinTrace::Lmsys, 100.0);
+    let hist = WorkloadHist::from_cdf(&w.cdf, w.input_fraction);
+    let a100 = engine.catalog.get("A100").unwrap().clone();
+    let cand = EvalEngine::min_two_pool(&w, &hist, &a100, &a100, 2048.0,
+                                        500.0, 256)
+        .expect("feasible");
+    let cfg = DesConfig { n_requests: 2_000, ..Default::default() };
+    // Twice through the engine: second call hits the cache.
+    let v1 = engine.verify(&w, &cand, &cfg, 500.0);
+    let v2 = engine.verify(&w, &cand, &cfg, 500.0);
+    assert_eq!(v1.p99_ttft_ms, v2.p99_ttft_ms);
+    assert_eq!(engine.cached_streams(), 1);
+    let (pools, router) = plan_pools(&cand);
+    let mut fresh = Simulator::new(w.clone(), pools, router, cfg).run();
+    assert_eq!(v1.p99_ttft_ms, fresh.overall.p99_ttft());
+}
+
+#[test]
+fn scenario_specs_name_real_traces_and_gpus() {
+    let catalog = fleet_sim::gpu::catalog::GpuCatalog::standard();
+    for s in scenarios::registry() {
+        let spec = s.spec();
+        for (trace, lambda) in &spec.workloads {
+            assert!(BuiltinTrace::parse(trace).is_ok(),
+                    "{}: unknown trace {trace}", s.id());
+            assert!(*lambda > 0.0);
+        }
+        for gpu in &spec.gpus {
+            assert!(catalog.get(gpu).is_some(),
+                    "{}: unknown GPU {gpu}", s.id());
+        }
+    }
+}
