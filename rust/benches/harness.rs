@@ -4,8 +4,14 @@
 // registry and prints it — the reproduction artifact — and (2) times the
 // core computation with warmup + repeated samples, reporting
 // min/mean/p50/max like criterion's summary line, and (3) merges its
-// numbers into the repo-root `BENCH_1.json` perf snapshot so the perf
-// trajectory is recorded across PRs.
+// numbers into a local perf snapshot (`BENCH_local.json` at the repo
+// root, or `$FLEET_SIM_BENCH_SNAPSHOT`) so the perf trajectory is
+// recorded across PRs.
+//
+// The committed `BENCH_1.json` / `BENCH_2.json` snapshots that the CI
+// perf gate compares are NOT written here — they come from the
+// `fleet-sim bench` subcommand (src/report/perf.rs), which measures the
+// DES engines on fixed scenarios. This file is for per-table timings.
 //
 // Used via `include!("harness.rs")` from each bench target.
 
@@ -80,15 +86,19 @@ pub fn requests_per_sec(n_requests: usize, stats: &BenchStats) -> f64 {
     n_requests as f64 / (stats.mean_ms() / 1e3)
 }
 
-/// Merge this bench target's results into the repo-root `BENCH_1.json`
-/// perf snapshot: one object per bench target, one entry per timed
-/// section plus free-form scalar extras (e.g. DES requests/sec).
+/// Merge this bench target's results into the local perf snapshot
+/// (`$FLEET_SIM_BENCH_SNAPSHOT`, default `BENCH_local.json` at the repo
+/// root): one object per bench target, one entry per timed section plus
+/// free-form scalar extras (e.g. DES requests/sec).
 #[allow(dead_code)]
 pub fn write_snapshot(target: &str, stats: &[&BenchStats],
                       extras: &[(&str, f64)]) {
     use fleet_sim::util::json::Json;
-    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_1.json");
-    let mut root = std::fs::read_to_string(path)
+    let path = std::env::var("FLEET_SIM_BENCH_SNAPSHOT").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_local.json")
+            .to_string()
+    });
+    let mut root = std::fs::read_to_string(&path)
         .ok()
         .and_then(|t| Json::parse(&t).ok())
         .and_then(|j| match j {
@@ -111,7 +121,7 @@ pub fn write_snapshot(target: &str, stats: &[&BenchStats],
         root.push((target.to_string(), value));
     }
     let doc = Json::Obj(root);
-    match std::fs::write(path, doc.to_string_pretty() + "\n") {
+    match std::fs::write(&path, doc.to_string_pretty() + "\n") {
         Ok(()) => println!("perf snapshot updated: {path} [{target}]"),
         Err(e) => eprintln!("could not write {path}: {e}"),
     }

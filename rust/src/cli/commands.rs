@@ -38,6 +38,11 @@ COMMANDS:
               [--ttft-slo MS] [--tpot-slo MS]
   gridflex    demand-response curve: --trace T --lambda RPS [--gpus N]
               [--slo MS] [--requests N]
+  bench       deterministic DES perf harness: times the production
+              (calendar-queue) engine against the reference heap engine
+              and emits a BENCH_N.json snapshot for the CI perf gate
+              [--json] [--out PATH] [--engine production|reference|both]
+              [--requests N] [--samples K] [--seed S] [--fast]
   fidelity    Kimura-vs-DES model fidelity table [--requests N]
   ablation    service-model ablation (equilibrium vs n_max t_iter)
   sensitivity synthetic-length sensitivity sweep [--lambda RPS] [--slo MS]
@@ -88,6 +93,7 @@ pub fn run(args: &Args) -> anyhow::Result<String> {
         "whatif" => cmd_whatif(args),
         "disagg" => cmd_disagg(args),
         "gridflex" => cmd_gridflex(args),
+        "bench" => cmd_bench(args),
         "fidelity" => cmd_fidelity(args),
         "ablation" => cmd_ablation(args),
         "sensitivity" => cmd_sensitivity(args),
@@ -320,6 +326,33 @@ fn cmd_gridflex(args: &Args) -> anyhow::Result<String> {
     Ok(format!("{}\n", t.render()))
 }
 
+fn cmd_bench(args: &Args) -> anyhow::Result<String> {
+    use crate::report::perf::{render_table, run_bench, to_json, BenchEngine,
+                              BenchOpts};
+    let default_requests = if args.flag("fast") { 8_000 } else { 30_000 };
+    let opts = BenchOpts {
+        n_requests: args.get_usize("requests", default_requests)?,
+        seed: args.get_usize("seed", 42)? as u64,
+        samples: args.get_usize("samples", 3)?.max(1),
+        engine: BenchEngine::parse(args.get_str("engine", "both"))?,
+    };
+    let rows = run_bench(&opts);
+    let doc = to_json(&opts, &rows);
+    let text = doc.to_string_pretty() + "\n";
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, &text)
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+    }
+    if args.flag("json") {
+        return Ok(text);
+    }
+    let mut out = render_table(&rows);
+    if let Some(path) = args.get("out") {
+        out.push_str(&format!("snapshot written to {path}\n"));
+    }
+    Ok(out)
+}
+
 fn cmd_fidelity(args: &Args) -> anyhow::Result<String> {
     let gpu = GpuCatalog::standard().get("H100").unwrap().clone();
     let n = args.get_usize("requests", 10_000)?;
@@ -465,7 +498,8 @@ mod tests {
 
     fn run_cmd(parts: &[&str]) -> anyhow::Result<String> {
         let argv: Vec<String> = parts.iter().map(|s| s.to_string()).collect();
-        let args = Args::parse(&argv, &["fast", "mixed", "explain"]).unwrap();
+        let args = Args::parse(&argv, &["fast", "mixed", "explain", "json"])
+            .unwrap();
         run(&args)
     }
 
@@ -537,6 +571,19 @@ mod tests {
     fn bad_router_and_gpu_rejected() {
         assert!(run_cmd(&["simulate", "--router", "psychic"]).is_err());
         assert!(run_cmd(&["simulate", "--gpu", "B200"]).is_err());
+    }
+
+    #[test]
+    fn bench_reports_speedup_table_and_json() {
+        let out = run_cmd(&["bench", "--requests", "1200", "--samples", "1"])
+            .unwrap();
+        assert!(out.contains("speedup"), "{out}");
+        assert!(out.contains("azure_two_pool_length"), "{out}");
+        let js = run_cmd(&["bench", "--requests", "800", "--samples", "1",
+                           "--engine", "production", "--json"]).unwrap();
+        assert!(js.contains("\"schema\""), "{js}");
+        assert!(js.contains("events_per_sec"), "{js}");
+        assert!(run_cmd(&["bench", "--engine", "warp"]).is_err());
     }
 
     #[test]

@@ -11,17 +11,28 @@
 //! * exactly two events per request, so 10^4 requests simulate in
 //!   milliseconds.
 //!
+//! Hot-path structure (perf pass iteration 4, this PR's tentpole):
+//! requests live in an index-based arena (`Vec<Req>`, ids flow through
+//! the router, the pool FIFOs, and event payloads); arrivals are
+//! merge-consumed from the time-sorted input slice; completions and
+//! cap-window drains are scheduled on a [`CalendarQueue`] (O(1) amortized
+//! vs the reference heap's O(log n)); and the whole run executes over a
+//! *borrowed* request stream (`&[SampledRequest]`) so sweeps replaying
+//! one cached stream across many candidates never copy it. The
+//! all-events-heap baseline lives in [`crate::des::reference`] and the
+//! `des_regression` suite pins this engine against it bit-for-bit.
+//!
 //! A `CapWindow` models a grid demand-response event (paper §4.8): during
 //! [start, end) the pool's admission capacity drops to `cap` slots per
 //! GPU; in-flight requests are never preempted.
 
-use crate::des::event::{EventKind, EventQueue};
-use crate::des::metrics::{DesResult, LatencyStats, PoolResult};
+use crate::des::event::{CalendarQueue, EventKind};
+use crate::des::metrics::{DesResult, LatencyStats, MetricsMode, PoolResult};
 use crate::des::pool::DesPool;
 use crate::gpu::profile::GpuProfile;
 use crate::router::{RouteRequest, RoutingPolicy};
 use crate::workload::rng::Pcg64;
-use crate::workload::spec::WorkloadSpec;
+use crate::workload::spec::{SampledRequest, WorkloadSpec};
 
 /// Pool construction spec for the simulator.
 #[derive(Debug, Clone)]
@@ -55,21 +66,125 @@ pub struct DesConfig {
     /// Semantic-class mix for multi-model fleets (ModelRouter): requests
     /// draw a class from this distribution; None = single class 0.
     pub class_probs: Option<Vec<f64>>,
+    /// Latency aggregation: exact sample vectors (default) or the
+    /// O(pools)-memory streaming sketch.
+    pub metrics: MetricsMode,
 }
 
 impl Default for DesConfig {
     fn default() -> Self {
-        DesConfig { n_requests: 10_000, seed: 42, warmup_frac: 0.0,
-                    cap_window: None, class_probs: None }
+        DesConfig {
+            n_requests: 10_000,
+            seed: 42,
+            warmup_frac: 0.0,
+            cap_window: None,
+            class_probs: None,
+            metrics: MetricsMode::Exact,
+        }
     }
 }
 
+/// Arena slot for one request: arrival time plus the (router-transformed)
+/// prompt/completion lengths. Indexed by `u32` ids everywhere.
 struct Req {
     arrival_ms: f64,
     l_in: f64,
     l_out: f64,
-    pool: u16,
-    compressed: bool,
+}
+
+/// Effective per-instance slot cap for `pool` at time `t`.
+fn eff_cap(cap_window: &Option<CapWindow>, pool: &DesPool, t: f64) -> u32 {
+    let mut cap = pool.slots_per_gpu;
+    if let Some(w) = cap_window {
+        if t >= w.start_ms && t < w.end_ms {
+            cap = cap.min(w.cap.max(1));
+        }
+    }
+    cap
+}
+
+/// Try to admit request `req_id` to `pool_idx` at time `now`.
+///
+/// The iteration latency is evaluated at the *admission concurrency*
+/// (the instance's busy count after this request joins): continuous
+/// batching runs faster iterations at lower concurrency, which is the
+/// §4.8 recalibration effect and what produces the paper's low
+/// lightly-loaded TTFTs. Held for the request's full duration
+/// (conservative: the batch may shrink later).
+#[allow(clippy::too_many_arguments)]
+fn try_admit(
+    pools: &mut [DesPool],
+    pool_idx: usize,
+    req_id: u32,
+    reqs: &[Req],
+    now: f64,
+    events: &mut CalendarQueue,
+    cap_window: &Option<CapWindow>,
+    per_pool: &mut [LatencyStats],
+    overall: &mut LatencyStats,
+    warmup_cutoff: usize,
+) -> bool {
+    let eff = eff_cap(cap_window, &pools[pool_idx], now);
+    let pool = &mut pools[pool_idx];
+    // Least-loaded instance with headroom under the effective cap.
+    let mut best: Option<(usize, u32)> = None;
+    for (i, inst) in pool.instances.iter().enumerate() {
+        if inst.busy < eff {
+            let free = eff - inst.busy;
+            if best.map_or(true, |(_, bf)| free > bf) {
+                best = Some((i, free));
+            }
+        }
+    }
+    let Some((inst, _)) = best else { return false };
+    pool.acquire(inst, now);
+    let req = &reqs[req_id as usize];
+    let n_at_admit = pool.instances[inst].busy as f64;
+    let t_iter = pool.gpu.t_iter(n_at_admit);
+    let hold = pool.gpu.iters(req.l_in, req.l_out) * t_iter;
+    events.push(
+        now + hold,
+        EventKind::Completion {
+            req: req_id,
+            pool: pool_idx as u16,
+            instance: inst as u16,
+        },
+    );
+    // Stats are recorded at admission (wait/TTFT known; E2E = wait +
+    // hold is deterministic given admission).
+    let wait = now - req.arrival_ms;
+    let prefill = (req.l_in / pool.gpu.chunk).ceil() * t_iter;
+    let ttft = wait + prefill + t_iter;
+    let e2e = wait + hold;
+    if req_id as usize >= warmup_cutoff {
+        per_pool[pool_idx].record(wait, ttft, e2e);
+        overall.record(wait, ttft, e2e);
+    }
+    true
+}
+
+/// Admit queued requests while capacity allows.
+#[allow(clippy::too_many_arguments)]
+fn drain_queue(
+    pools: &mut [DesPool],
+    pool_idx: usize,
+    reqs: &[Req],
+    now: f64,
+    events: &mut CalendarQueue,
+    cap_window: &Option<CapWindow>,
+    per_pool: &mut [LatencyStats],
+    overall: &mut LatencyStats,
+    warmup_cutoff: usize,
+) {
+    while let Some(&head) = pools[pool_idx].queue.front() {
+        if !try_admit(
+            pools, pool_idx, head, reqs, now, events, cap_window, per_pool,
+            overall, warmup_cutoff,
+        ) {
+            break;
+        }
+        pools[pool_idx].queue.pop_front();
+    }
 }
 
 /// The simulator: workload x pools x router -> latency distributions.
@@ -96,86 +211,94 @@ impl Simulator {
         Simulator { workload, pools, router, config }
     }
 
-    /// Effective per-instance slot cap for `pool` at time `t`.
-    fn eff_cap(&self, pool: &DesPool, t: f64) -> u32 {
-        let mut cap = pool.slots_per_gpu;
-        if let Some(w) = &self.config.cap_window {
-            if t >= w.start_ms && t < w.end_ms {
-                cap = cap.min(w.cap.max(1));
-            }
-        }
-        cap
-    }
-
     /// Run the simulation (samples the workload's request stream).
     pub fn run(&self) -> DesResult {
         let sampled = self
             .workload
             .sample_requests(self.config.n_requests, self.config.seed);
-        self.run_with_requests(sampled)
+        Self::run_stream(&self.pools, &self.router, &self.config, &sampled)
     }
 
     /// Run on an explicit, time-ordered request stream (used by the
     /// sub-stream Poisson check, §5, to inject length-correlated
-    /// arrivals).
-    pub fn run_with_requests(
-        &self,
-        sampled: Vec<crate::workload::spec::SampledRequest>,
-    ) -> DesResult {
-        let n = sampled.len();
-        debug_assert!(sampled.windows(2)
-            .all(|w| w[0].arrival_ms <= w[1].arrival_ms));
-        let mut route_rng = Pcg64::new(self.config.seed, 3);
+    /// arrivals). The stream is borrowed — replaying one cached sample
+    /// across many candidates copies nothing.
+    pub fn run_with_requests(&self, sampled: &[SampledRequest]) -> DesResult {
+        Self::run_stream(&self.pools, &self.router, &self.config, sampled)
+    }
 
-        let mut pools: Vec<DesPool> = self
-            .pools
+    /// The DES core: no `Simulator` construction (and no workload, pool,
+    /// or router clone) required — everything is borrowed.
+    pub fn run_stream(
+        pool_specs: &[SimPool],
+        router: &RoutingPolicy,
+        config: &DesConfig,
+        sampled: &[SampledRequest],
+    ) -> DesResult {
+        assert!(
+            router.n_pools() <= pool_specs.len(),
+            "router expects {} pools, got {}",
+            router.n_pools(),
+            pool_specs.len()
+        );
+        let n = sampled.len();
+        debug_assert!(sampled
+            .windows(2)
+            .all(|w| w[0].arrival_ms <= w[1].arrival_ms));
+        let mut route_rng = Pcg64::new(config.seed, 3);
+
+        let mut pools: Vec<DesPool> = pool_specs
             .iter()
-            .map(|p| DesPool::new(p.gpu.clone(), p.n_gpus, p.ctx_budget, p.batch_cap))
+            .map(|p| {
+                DesPool::new(p.gpu.clone(), p.n_gpus, p.ctx_budget,
+                             p.batch_cap)
+            })
             .collect();
 
-        // Perf pass iteration 3: arrivals are already time-sorted, so only
-        // completions (and cap-window drains) live in the heap; arrivals
-        // are merge-consumed from the sorted vector. Halves heap traffic.
-        let mut reqs: Vec<Req> = Vec::with_capacity(n);
-        let mut events = EventQueue::with_capacity(n + 4);
-        for s in sampled.iter() {
-            reqs.push(Req {
+        // Index-based request arena. Arrivals are already time-sorted, so
+        // only completions (and cap-window drains) live in the calendar
+        // queue; arrivals are merge-consumed from the sorted slice.
+        let mut reqs: Vec<Req> = sampled
+            .iter()
+            .map(|s| Req {
                 arrival_ms: s.arrival_ms,
                 l_in: s.l_in,
                 l_out: s.l_out,
-                pool: 0,
-                compressed: false,
-            });
-        }
-        if let Some(w) = &self.config.cap_window {
+            })
+            .collect();
+        let mut events = CalendarQueue::with_capacity(64);
+        if let Some(w) = &config.cap_window {
             for p in 0..pools.len() {
                 events.push(w.end_ms, EventKind::Drain { pool: p as u16 });
             }
         }
 
-        let warmup_cutoff = (self.config.warmup_frac * n as f64) as usize;
+        let warmup_cutoff = (config.warmup_frac * n as f64) as usize;
+        let per_pool_cap = n / pools.len().max(1) + 16;
         let mut per_pool: Vec<LatencyStats> = (0..pools.len())
-            .map(|_| LatencyStats::with_capacity(n / pools.len().max(1) + 16))
+            .map(|_| LatencyStats::for_mode(config.metrics, per_pool_cap))
             .collect();
-        let mut overall = LatencyStats::with_capacity(n);
+        let mut overall = LatencyStats::for_mode(config.metrics, n);
         let mut n_compressed = 0usize;
+        let mut n_events = 0usize;
         let mut horizon = 0.0f64;
         let mut next_arrival: usize = 0;
 
         loop {
-            // Arrivals win ties (matching the previous heap's FIFO seq
-            // ordering, where arrivals were pushed first).
+            // Arrivals win ties (matching the reference heap's FIFO seq
+            // ordering, where arrivals are pushed first).
             let take_arrival = next_arrival < n
                 && events
-                    .peek()
-                    .map_or(true, |e| reqs[next_arrival].arrival_ms <= e.time_ms);
+                    .next_time()
+                    .map_or(true, |t| reqs[next_arrival].arrival_ms <= t);
             if take_arrival {
                 let req = next_arrival as u32;
                 next_arrival += 1;
+                n_events += 1;
                 let r = &reqs[req as usize];
                 let now = r.arrival_ms;
                 horizon = horizon.max(now);
-                let class = match &self.config.class_probs {
+                let class = match &config.class_probs {
                     None => 0,
                     Some(probs) => {
                         let u = route_rng.uniform();
@@ -191,42 +314,44 @@ impl Simulator {
                         cls
                     }
                 };
-                let decision = self.router.route(
+                let decision = router.route(
                     RouteRequest { l_in: r.l_in, l_out: r.l_out, class },
                     &mut route_rng,
                 );
                 let r = &mut reqs[req as usize];
-                r.pool = decision.pool as u16;
                 r.l_in = decision.request.l_in;
                 r.l_out = decision.request.l_out;
-                r.compressed = decision.compressed;
                 if decision.compressed {
                     n_compressed += 1;
                 }
-                if !self.try_admit(
+                if !try_admit(
                     &mut pools, decision.pool, req, &reqs, now, &mut events,
-                    &mut per_pool, &mut overall, warmup_cutoff,
+                    &config.cap_window, &mut per_pool, &mut overall,
+                    warmup_cutoff,
                 ) {
                     pools[decision.pool].enqueue(req);
                 }
                 continue;
             }
             let Some(ev) = events.pop() else { break };
+            n_events += 1;
             let now = ev.time_ms;
             horizon = horizon.max(now);
             match ev.kind {
                 EventKind::Arrival { .. } => unreachable!("arrivals merged"),
                 EventKind::Completion { req: _, pool, instance } => {
                     pools[pool as usize].release(instance as usize, now);
-                    self.drain_queue(
-                        &mut pools, pool as usize, now, &mut events, &reqs,
-                        &mut per_pool, &mut overall, warmup_cutoff,
+                    drain_queue(
+                        &mut pools, pool as usize, &reqs, now, &mut events,
+                        &config.cap_window, &mut per_pool, &mut overall,
+                        warmup_cutoff,
                     );
                 }
                 EventKind::Drain { pool } => {
-                    self.drain_queue(
-                        &mut pools, pool as usize, now, &mut events, &reqs,
-                        &mut per_pool, &mut overall, warmup_cutoff,
+                    drain_queue(
+                        &mut pools, pool as usize, &reqs, now, &mut events,
+                        &config.cap_window, &mut per_pool, &mut overall,
+                        warmup_cutoff,
                     );
                 }
             }
@@ -248,90 +373,7 @@ impl Simulator {
             horizon_ms: horizon,
             n_requests: n,
             n_compressed,
-        }
-    }
-
-    /// Try to admit request `req_id` to `pool_idx` at time `now`.
-    ///
-    /// The iteration latency is evaluated at the *admission concurrency*
-    /// (the instance's busy count after this request joins): continuous
-    /// batching runs faster iterations at lower concurrency, which is the
-    /// §4.8 recalibration effect and what produces the paper's low
-    /// lightly-loaded TTFTs. Held for the request's full duration
-    /// (conservative: the batch may shrink later).
-    #[allow(clippy::too_many_arguments)]
-    fn try_admit(
-        &self,
-        pools: &mut [DesPool],
-        pool_idx: usize,
-        req_id: u32,
-        reqs: &[Req],
-        now: f64,
-        events: &mut EventQueue,
-        per_pool: &mut [LatencyStats],
-        overall: &mut LatencyStats,
-        warmup_cutoff: usize,
-    ) -> bool {
-        let eff = self.eff_cap(&pools[pool_idx], now);
-        let pool = &mut pools[pool_idx];
-        // Least-loaded instance with headroom under the effective cap.
-        let mut best: Option<(usize, u32)> = None;
-        for (i, inst) in pool.instances.iter().enumerate() {
-            if inst.busy < eff {
-                let free = eff - inst.busy;
-                if best.map_or(true, |(_, bf)| free > bf) {
-                    best = Some((i, free));
-                }
-            }
-        }
-        let Some((inst, _)) = best else { return false };
-        pool.acquire(inst, now);
-        let req = &reqs[req_id as usize];
-        let n_at_admit = pool.instances[inst].busy as f64;
-        let t_iter = pool.gpu.t_iter(n_at_admit);
-        let hold = pool.gpu.iters(req.l_in, req.l_out) * t_iter;
-        events.push(
-            now + hold,
-            EventKind::Completion {
-                req: req_id,
-                pool: pool_idx as u16,
-                instance: inst as u16,
-            },
-        );
-        // Stats are recorded at admission (wait/TTFT known; E2E = wait +
-        // hold is deterministic given admission).
-        let wait = now - req.arrival_ms;
-        let prefill = (req.l_in / pool.gpu.chunk).ceil() * t_iter;
-        let ttft = wait + prefill + t_iter;
-        let e2e = wait + hold;
-        if req_id as usize >= warmup_cutoff {
-            per_pool[pool_idx].record(wait, ttft, e2e);
-            overall.record(wait, ttft, e2e);
-        }
-        true
-    }
-
-    /// Admit queued requests while capacity allows.
-    #[allow(clippy::too_many_arguments)]
-    fn drain_queue(
-        &self,
-        pools: &mut Vec<DesPool>,
-        pool_idx: usize,
-        now: f64,
-        events: &mut EventQueue,
-        reqs: &Vec<Req>,
-        per_pool: &mut Vec<LatencyStats>,
-        overall: &mut LatencyStats,
-        warmup_cutoff: usize,
-    ) {
-        while let Some(&head) = pools[pool_idx].queue.front() {
-            if !self.try_admit(
-                pools, pool_idx, head, reqs, now, events, per_pool, overall,
-                warmup_cutoff,
-            ) {
-                break;
-            }
-            pools[pool_idx].queue.pop_front();
+            n_events,
         }
     }
 }
@@ -370,8 +412,8 @@ mod tests {
     #[test]
     fn conserves_requests() {
         let (pools, router) = two_pool(a100(), 4, 4, 4096.0, 8192.0);
-        let sim = Simulator::new(azure(100.0), pools, router,
-                                 DesConfig { n_requests: 5_000, ..Default::default() });
+        let cfg = DesConfig { n_requests: 5_000, ..Default::default() };
+        let sim = Simulator::new(azure(100.0), pools, router, cfg);
         let mut r = sim.run();
         assert_eq!(r.overall.count, 5_000);
         let pool_sum: usize = r.per_pool.iter().map(|p| p.stats.count).sum();
@@ -383,9 +425,11 @@ mod tests {
     #[test]
     fn deterministic_across_runs() {
         let (pools, router) = two_pool(h100(), 2, 2, 4096.0, 8192.0);
-        let cfg = DesConfig { n_requests: 2_000, seed: 7, ..Default::default() };
-        let mut a = Simulator::new(azure(150.0), pools.clone(), router.clone(),
-                                   cfg.clone()).run();
+        let cfg =
+            DesConfig { n_requests: 2_000, seed: 7, ..Default::default() };
+        let mut a = Simulator::new(azure(150.0), pools.clone(),
+                                   router.clone(), cfg.clone())
+            .run();
         let mut b = Simulator::new(azure(150.0), pools, router, cfg).run();
         assert_eq!(a.overall.p99_ttft(), b.overall.p99_ttft());
         assert_eq!(a.horizon_ms, b.horizon_ms);
@@ -395,8 +439,8 @@ mod tests {
     fn light_load_has_no_queueing() {
         // 5 req/s on 4 H100s: waits should be ~0, TTFT ~ prefill + iter.
         let (pools, router) = two_pool(h100(), 2, 2, 4096.0, 8192.0);
-        let sim = Simulator::new(azure(5.0), pools, router,
-                                 DesConfig { n_requests: 3_000, ..Default::default() });
+        let cfg = DesConfig { n_requests: 3_000, ..Default::default() };
+        let sim = Simulator::new(azure(5.0), pools, router, cfg);
         let mut r = sim.run();
         assert!(r.overall.wait.p99() < 1e-9, "wait = {}", r.overall.wait.p99());
         assert!(r.overall.p99_ttft() < 500.0);
@@ -413,7 +457,8 @@ mod tests {
             DesConfig { n_requests: 8_000, ..Default::default() },
         );
         let mut r = sim.run();
-        assert!(r.overall.wait.p99() > 10_000.0, "wait = {}", r.overall.wait.p99());
+        let w99 = r.overall.wait.p99();
+        assert!(w99 > 10_000.0, "wait = {w99}");
         assert!(r.per_pool[0].utilization > 0.9);
     }
 
@@ -421,8 +466,8 @@ mod tests {
     fn utilization_scales_with_load() {
         let mk = |lam| {
             let (pools, router) = two_pool(h100(), 3, 3, 4096.0, 8192.0);
-            let sim = Simulator::new(azure(lam), pools, router,
-                                     DesConfig { n_requests: 6_000, ..Default::default() });
+            let cfg = DesConfig { n_requests: 6_000, ..Default::default() };
+            let sim = Simulator::new(azure(lam), pools, router, cfg);
             let r = sim.run();
             (r.per_pool[0].utilization, r.per_pool[1].utilization)
         };
@@ -434,8 +479,8 @@ mod tests {
     #[test]
     fn short_pool_receives_expected_fraction() {
         let (pools, router) = two_pool(a100(), 4, 4, 4096.0, 8192.0);
-        let sim = Simulator::new(azure(100.0), pools, router,
-                                 DesConfig { n_requests: 20_000, ..Default::default() });
+        let cfg = DesConfig { n_requests: 20_000, ..Default::default() };
+        let sim = Simulator::new(azure(100.0), pools, router, cfg);
         let r = sim.run();
         let frac = r.per_pool[0].stats.count as f64 / r.n_requests as f64;
         // Azure F(4096) = 0.97.
@@ -448,7 +493,8 @@ mod tests {
         let pools = vec![SimPool {
             gpu: h100(), n_gpus: 2, ctx_budget: 8192.0, batch_cap: Some(64),
         }];
-        let base_cfg = DesConfig { n_requests: 10_000, seed: 3, ..Default::default() };
+        let base_cfg =
+            DesConfig { n_requests: 10_000, seed: 3, ..Default::default() };
         let base = Simulator::new(
             azure(60.0), pools.clone(), RoutingPolicy::Random { n_pools: 1 },
             base_cfg.clone(),
@@ -493,5 +539,64 @@ mod tests {
         };
         let r = Simulator::new(azure(50.0), pools, router, cfg).run();
         assert_eq!(r.overall.count, 800);
+    }
+
+    #[test]
+    fn counts_two_events_per_request_plus_drains() {
+        let (pools, router) = two_pool(a100(), 4, 4, 4096.0, 8192.0);
+        let n_pools = pools.len();
+        let cfg = DesConfig { n_requests: 3_000, ..Default::default() };
+        let r = Simulator::new(azure(80.0), pools.clone(), router.clone(), cfg)
+            .run();
+        assert_eq!(r.n_events, 2 * 3_000);
+        let capped = DesConfig {
+            n_requests: 3_000,
+            cap_window: Some(CapWindow {
+                start_ms: 5_000.0, end_ms: 20_000.0, cap: 4,
+            }),
+            ..Default::default()
+        };
+        let rc = Simulator::new(azure(80.0), pools, router, capped).run();
+        assert_eq!(rc.n_events, 2 * 3_000 + n_pools);
+    }
+
+    #[test]
+    fn streaming_mode_matches_exact_within_tolerance() {
+        let (pools, router) = two_pool(a100(), 4, 4, 4096.0, 8192.0);
+        let exact_cfg = DesConfig { n_requests: 8_000, ..Default::default() };
+        let stream_cfg = DesConfig {
+            metrics: MetricsMode::Streaming,
+            ..exact_cfg.clone()
+        };
+        let mut e = Simulator::new(azure(100.0), pools.clone(), router.clone(),
+                                   exact_cfg).run();
+        let mut s = Simulator::new(azure(100.0), pools, router, stream_cfg)
+            .run();
+        assert_eq!(e.overall.count, s.overall.count);
+        assert_eq!(e.n_events, s.n_events);
+        assert_eq!(e.horizon_ms, s.horizon_ms);
+        let (ep, sp) = (e.overall.p99_ttft(), s.overall.p99_ttft());
+        assert!((sp / ep - 1.0).abs() < 0.03, "exact {ep} streaming {sp}");
+        // Utilization accounting is metrics-independent.
+        for (pe, ps) in e.per_pool.iter().zip(&s.per_pool) {
+            assert_eq!(pe.utilization, ps.utilization);
+            assert_eq!(pe.stats.count, ps.stats.count);
+        }
+    }
+
+    #[test]
+    fn run_stream_matches_run_on_same_sample() {
+        let (pools, router) = two_pool(h100(), 2, 3, 4096.0, 8192.0);
+        let w = azure(90.0);
+        let cfg =
+            DesConfig { n_requests: 4_000, seed: 13, ..Default::default() };
+        let sampled = w.sample_requests(cfg.n_requests, cfg.seed);
+        let mut via_run = Simulator::new(w, pools.clone(), router.clone(),
+                                         cfg.clone()).run();
+        let mut via_stream = Simulator::run_stream(&pools, &router, &cfg,
+                                                   &sampled);
+        assert_eq!(via_run.overall.p99_ttft(), via_stream.overall.p99_ttft());
+        assert_eq!(via_run.n_events, via_stream.n_events);
+        assert_eq!(via_run.horizon_ms, via_stream.horizon_ms);
     }
 }

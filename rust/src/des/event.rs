@@ -1,11 +1,23 @@
-//! Min-heap event queue for the DES (paper §3.1: "each pool runs n GPU
-//! instances, each simulating continuous batching with a min-heap event
-//! queue").
+//! Event scheduling for the DES.
+//!
+//! Two schedulers share the [`Event`] type:
+//!
+//! * [`EventQueue`] — the original `BinaryHeap` min-heap. O(log n) per
+//!   operation. Kept as the *reference* scheduler: the all-events-heap
+//!   reference simulator ([`crate::des::reference`]) and the regression
+//!   suite pin the production engine against it bit-for-bit.
+//! * [`CalendarQueue`] — a classic calendar queue (Brown 1988): events
+//!   hash into `width`-ms day buckets; pop scans only the current day.
+//!   With the self-tuning resize keeping ~1 event per bucket, push and
+//!   pop are O(1) amortized, which is what lets the production engine
+//!   sustain much higher event volumes than the heap. Pops follow the
+//!   exact same total order as the heap — `(time_ms, seq)` — so the two
+//!   schedulers are interchangeable bit-for-bit.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-/// Event payloads. Request ids index the simulator's request table.
+/// Event payloads. Request ids index the simulator's request arena.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EventKind {
     /// A request hits the router.
@@ -50,7 +62,7 @@ impl Ord for Event {
     }
 }
 
-/// Deterministic min-heap event queue.
+/// Deterministic min-heap event queue (the reference scheduler).
 #[derive(Debug, Default)]
 pub struct EventQueue {
     heap: BinaryHeap<Event>,
@@ -83,6 +95,223 @@ impl EventQueue {
 
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
+    }
+}
+
+/// A bucket entry: the event plus its precomputed absolute day index
+/// (`floor(time_ms / width)`), so the pop scan compares integers instead
+/// of re-deriving float boundaries.
+#[derive(Debug, Clone, Copy)]
+struct CalEntry {
+    day: u64,
+    ev: Event,
+}
+
+/// Smallest bucket width the resize estimator will pick, ms.
+const MIN_WIDTH: f64 = 1e-6;
+/// Bucket-count bounds (powers of two).
+const MIN_BUCKETS: usize = 16;
+const MAX_BUCKETS: usize = 1 << 20;
+
+/// Deterministic calendar queue with the same `(time_ms, seq)` pop order
+/// as [`EventQueue`].
+///
+/// Invariant: no queued entry has `day < vday` — `push` rewinds the
+/// cursor when an earlier event arrives, and the cursor only advances
+/// past days proven empty. Within one day all candidates live in a single
+/// bucket, so the per-day min scan yields the global minimum.
+#[derive(Debug)]
+pub struct CalendarQueue {
+    buckets: Vec<Vec<CalEntry>>,
+    /// `buckets.len() - 1`; the bucket count is a power of two.
+    mask: usize,
+    /// Bucket width in ms (re-estimated on resize).
+    width: f64,
+    /// Absolute (un-wrapped) day index the cursor is scanning.
+    vday: u64,
+    len: usize,
+    next_seq: u64,
+    /// Cached `(bucket, position)` of the current minimum, valid until the
+    /// next push / pop / resize.
+    cached_min: Option<(usize, usize)>,
+}
+
+impl Default for CalendarQueue {
+    fn default() -> Self {
+        Self::with_capacity(0)
+    }
+}
+
+impl CalendarQueue {
+    /// `capacity` is a hint for the expected steady-state queue length.
+    pub fn with_capacity(capacity: usize) -> Self {
+        let n_buckets = capacity
+            .next_power_of_two()
+            .clamp(MIN_BUCKETS, MAX_BUCKETS);
+        CalendarQueue {
+            buckets: vec![Vec::new(); n_buckets],
+            mask: n_buckets - 1,
+            width: 1.0,
+            vday: 0,
+            len: 0,
+            next_seq: 0,
+            cached_min: None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn day_of(&self, time_ms: f64) -> u64 {
+        // Non-negative finite / positive width: the cast saturates safely.
+        (time_ms / self.width) as u64
+    }
+
+    pub fn push(&mut self, time_ms: f64, kind: EventKind) {
+        debug_assert!(time_ms.is_finite() && time_ms >= 0.0);
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let entry = CalEntry {
+            day: self.day_of(time_ms),
+            ev: Event { time_ms, seq, kind },
+        };
+        self.insert(entry);
+        if self.len > 2 * (self.mask + 1) && self.mask + 1 < MAX_BUCKETS {
+            self.resize();
+        }
+    }
+
+    fn insert(&mut self, entry: CalEntry) {
+        if entry.day < self.vday {
+            // An earlier event arrived: rewind the cursor to its day.
+            self.vday = entry.day;
+        }
+        self.cached_min = None;
+        let b = (entry.day & self.mask as u64) as usize;
+        self.buckets[b].push(entry);
+        self.len += 1;
+    }
+
+    /// Time of the earliest queued event without removing it.
+    pub fn next_time(&mut self) -> Option<f64> {
+        if self.len == 0 {
+            return None;
+        }
+        let (b, i) = match self.cached_min {
+            Some(loc) => loc,
+            None => {
+                let loc = self.locate_min();
+                self.cached_min = Some(loc);
+                loc
+            }
+        };
+        Some(self.buckets[b][i].ev.time_ms)
+    }
+
+    pub fn pop(&mut self) -> Option<Event> {
+        if self.len == 0 {
+            return None;
+        }
+        let (b, i) = match self.cached_min.take() {
+            Some(loc) => loc,
+            None => self.locate_min(),
+        };
+        let entry = self.buckets[b].swap_remove(i);
+        self.len -= 1;
+        if self.len * 8 < self.mask + 1 && self.mask + 1 > MIN_BUCKETS {
+            self.resize();
+        }
+        Some(entry.ev)
+    }
+
+    /// Find the `(bucket, position)` of the minimum `(time_ms, seq)`
+    /// event. Requires `len > 0`. Advances the cursor past empty days;
+    /// after a fruitless full lap, jumps directly to the earliest day.
+    fn locate_min(&mut self) -> (usize, usize) {
+        debug_assert!(self.len > 0);
+        let n_buckets = self.mask + 1;
+        let mut scanned = 0usize;
+        loop {
+            let b = (self.vday & self.mask as u64) as usize;
+            let mut best: Option<(usize, f64, u64)> = None;
+            for (i, e) in self.buckets[b].iter().enumerate() {
+                if e.day != self.vday {
+                    continue;
+                }
+                let better = match best {
+                    None => true,
+                    Some((_, t, s)) => {
+                        e.ev.time_ms < t || (e.ev.time_ms == t && e.ev.seq < s)
+                    }
+                };
+                if better {
+                    best = Some((i, e.ev.time_ms, e.ev.seq));
+                }
+            }
+            if let Some((i, _, _)) = best {
+                return (b, i);
+            }
+            self.vday += 1;
+            scanned += 1;
+            if scanned >= n_buckets {
+                // A whole lap without an eligible event: every queued
+                // entry lives in a later "year". Jump to the earliest day.
+                let min_day = self
+                    .buckets
+                    .iter()
+                    .flatten()
+                    .map(|e| e.day)
+                    .min()
+                    .expect("len > 0 implies a queued entry");
+                self.vday = min_day;
+                scanned = 0;
+            }
+        }
+    }
+
+    /// Re-bucket into a size fitted to the current population, with the
+    /// width re-estimated from the observed event-time span. Pop order is
+    /// unaffected (ordering is by `(time_ms, seq)`, not bucket layout).
+    fn resize(&mut self) {
+        let entries: Vec<CalEntry> = self
+            .buckets
+            .iter_mut()
+            .flat_map(std::mem::take)
+            .collect();
+        let n_buckets = entries
+            .len()
+            .next_power_of_two()
+            .clamp(MIN_BUCKETS, MAX_BUCKETS);
+        let mut min_t = f64::INFINITY;
+        let mut max_t = f64::NEG_INFINITY;
+        for e in &entries {
+            min_t = min_t.min(e.ev.time_ms);
+            max_t = max_t.max(e.ev.time_ms);
+        }
+        let span = max_t - min_t;
+        if span > 0.0 && !entries.is_empty() {
+            // Aim for ~one event per day bucket across the populated span.
+            self.width = (2.0 * span / entries.len() as f64).max(MIN_WIDTH);
+        }
+        self.buckets = vec![Vec::new(); n_buckets];
+        self.mask = n_buckets - 1;
+        self.len = 0;
+        self.cached_min = None;
+        self.vday = u64::MAX;
+        let mut min_day = u64::MAX;
+        for e in entries {
+            let day = self.day_of(e.ev.time_ms);
+            min_day = min_day.min(day);
+            let b = (day & self.mask as u64) as usize;
+            self.buckets[b].push(CalEntry { day, ev: e.ev });
+            self.len += 1;
+        }
+        self.vday = if min_day == u64::MAX { 0 } else { min_day };
     }
 }
 
@@ -142,5 +371,123 @@ mod tests {
             assert!(e.time_ms >= prev);
             prev = e.time_ms;
         }
+    }
+
+    // ---- calendar queue ----
+
+    #[test]
+    fn calendar_pops_in_time_order_with_ties() {
+        let mut q = CalendarQueue::default();
+        q.push(2.0, EventKind::Arrival { req: 10 });
+        q.push(2.0, EventKind::Arrival { req: 11 });
+        q.push(1.0, EventKind::Arrival { req: 12 });
+        q.push(2.0, EventKind::Arrival { req: 13 });
+        let order: Vec<u32> = std::iter::from_fn(|| {
+            q.pop().map(|e| match e.kind {
+                EventKind::Arrival { req } => req,
+                _ => unreachable!(),
+            })
+        })
+        .collect();
+        // Time order first, then insertion (seq) order on ties.
+        assert_eq!(order, vec![12, 10, 11, 13]);
+        assert!(q.is_empty());
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn calendar_next_time_matches_pop() {
+        let mut q = CalendarQueue::default();
+        q.push(7.0, EventKind::Drain { pool: 0 });
+        q.push(3.0, EventKind::Drain { pool: 1 });
+        assert_eq!(q.next_time(), Some(3.0));
+        assert_eq!(q.pop().unwrap().time_ms, 3.0);
+        assert_eq!(q.next_time(), Some(7.0));
+        // Pushing an earlier event must rewind the cursor.
+        q.push(1.0, EventKind::Drain { pool: 2 });
+        assert_eq!(q.next_time(), Some(1.0));
+        assert_eq!(q.pop().unwrap().time_ms, 1.0);
+        assert_eq!(q.pop().unwrap().time_ms, 7.0);
+        assert_eq!(q.next_time(), None);
+    }
+
+    #[test]
+    fn calendar_handles_far_future_events() {
+        // Events many "years" apart exercise the direct-jump path.
+        let mut q = CalendarQueue::with_capacity(4);
+        q.push(1e9, EventKind::Drain { pool: 0 });
+        q.push(0.5, EventKind::Drain { pool: 1 });
+        q.push(1e6, EventKind::Drain { pool: 2 });
+        assert_eq!(q.pop().unwrap().time_ms, 0.5);
+        assert_eq!(q.pop().unwrap().time_ms, 1e6);
+        assert_eq!(q.pop().unwrap().time_ms, 1e9);
+        assert!(q.pop().is_none());
+    }
+
+    /// The load-bearing property: the calendar queue pops in the exact
+    /// order the reference heap does, across random interleaved
+    /// push/pop traffic (including resize churn and same-time ties).
+    #[test]
+    fn calendar_matches_heap_order_under_random_traffic() {
+        let mut rng = crate::workload::rng::Pcg64::new(99, 7);
+        for case in 0..20 {
+            let mut heap = EventQueue::default();
+            let mut cal = CalendarQueue::default();
+            let mut now = 0.0f64;
+            let mut pending = 0usize;
+            for step in 0..4_000 {
+                let push = pending == 0 || rng.uniform() < 0.55;
+                if push {
+                    // Mixture of near-future, same-time, and far spikes.
+                    let u = rng.uniform();
+                    let dt = if u < 0.05 {
+                        0.0
+                    } else if u < 0.95 {
+                        rng.uniform() * 50.0
+                    } else {
+                        1e4 + rng.uniform() * 1e6
+                    };
+                    let t = now + dt;
+                    heap.push(t, EventKind::Arrival { req: step });
+                    cal.push(t, EventKind::Arrival { req: step });
+                    pending += 1;
+                } else {
+                    let a = heap.pop().unwrap();
+                    let b = cal.pop().unwrap();
+                    assert_eq!(
+                        (a.time_ms, a.seq, a.kind),
+                        (b.time_ms, b.seq, b.kind),
+                        "case {case} step {step}"
+                    );
+                    now = a.time_ms;
+                    pending -= 1;
+                }
+                assert_eq!(heap.len(), cal.len());
+            }
+            while let Some(a) = heap.pop() {
+                let b = cal.pop().unwrap();
+                assert_eq!((a.time_ms, a.seq, a.kind),
+                           (b.time_ms, b.seq, b.kind));
+            }
+            assert!(cal.is_empty());
+        }
+    }
+
+    #[test]
+    fn calendar_resize_preserves_contents() {
+        let mut q = CalendarQueue::with_capacity(4);
+        // Push enough to force growth, then drain to force shrinkage.
+        for i in 0..500u32 {
+            q.push(i as f64 * 0.37, EventKind::Arrival { req: i });
+        }
+        assert_eq!(q.len(), 500);
+        let mut prev = -1.0;
+        let mut n = 0;
+        while let Some(e) = q.pop() {
+            assert!(e.time_ms >= prev);
+            prev = e.time_ms;
+            n += 1;
+        }
+        assert_eq!(n, 500);
     }
 }

@@ -1,7 +1,26 @@
 //! Per-request metric collection for the DES (paper §3.1 Phase 2 step 3:
 //! queue wait, TTFT, end-to-end latency; SLO check is P99 TTFT <= T).
+//!
+//! Collection has two modes (see [`MetricsMode`]): the default **exact**
+//! mode stores every sample (what all scenario tables use, so published
+//! numbers are bit-stable), and **streaming** mode aggregates into
+//! O(1)-memory [`crate::util::stats::LogHistogram`] sketches so memory
+//! stays O(pools) instead of O(requests) — the mode the perf harness and
+//! high-volume sweeps run in.
 
 use crate::util::stats::Samples;
+
+/// How the DES aggregates per-request latencies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MetricsMode {
+    /// Store every sample; exact nearest-rank percentiles (the default —
+    /// scenario tables depend on exact values).
+    #[default]
+    Exact,
+    /// Streaming log-histogram sketch: O(1) memory per metric,
+    /// percentiles within ~1% relative error.
+    Streaming,
+}
 
 /// Latency samples for one pool (or the fleet overall).
 #[derive(Debug, Clone, Default)]
@@ -13,14 +32,32 @@ pub struct LatencyStats {
 }
 
 impl LatencyStats {
-    /// Pre-size the sample buffers (perf pass iteration 2: avoids
-    /// realloc churn in the DES hot loop).
+    /// Pre-size the exact-mode sample buffers (perf pass iteration 2:
+    /// avoids realloc churn in the DES hot loop).
     pub fn with_capacity(n: usize) -> Self {
         LatencyStats {
             wait: Samples::with_capacity(n),
             ttft: Samples::with_capacity(n),
             e2e: Samples::with_capacity(n),
             count: 0,
+        }
+    }
+
+    /// Streaming-sketch collection: memory independent of request count.
+    pub fn streaming() -> Self {
+        LatencyStats {
+            wait: Samples::streaming(),
+            ttft: Samples::streaming(),
+            e2e: Samples::streaming(),
+            count: 0,
+        }
+    }
+
+    /// Collector for the given mode, pre-sized for `n` exact samples.
+    pub fn for_mode(mode: MetricsMode, n: usize) -> Self {
+        match mode {
+            MetricsMode::Exact => Self::with_capacity(n),
+            MetricsMode::Streaming => Self::streaming(),
         }
     }
 
@@ -46,6 +83,9 @@ pub struct DesResult {
     pub n_requests: usize,
     /// Requests the router compressed (CompressAndRoute).
     pub n_compressed: usize,
+    /// Simulation events processed (arrivals + completions + drains) —
+    /// the numerator of the perf harness's events/sec metric.
+    pub n_events: usize,
 }
 
 /// Summary for one pool after the run.
@@ -66,13 +106,10 @@ impl DesResult {
     }
 
     /// Fraction of requests with TTFT <= slo (the "99.98%" style numbers
-    /// in Table 5).
+    /// in Table 5). Exact in exact metrics mode; within one sketch bin in
+    /// streaming mode.
     pub fn attainment(&self, slo_ms: f64) -> f64 {
-        let v = self.overall.ttft.values();
-        if v.is_empty() {
-            return 1.0;
-        }
-        v.iter().filter(|&&t| t <= slo_ms).count() as f64 / v.len() as f64
+        self.overall.ttft.fraction_le(slo_ms)
     }
 }
 
@@ -99,6 +136,7 @@ mod tests {
             horizon_ms: 1000.0,
             n_requests: 100,
             n_compressed: 0,
+            n_events: 200,
         };
         for i in 0..100 {
             let ttft = if i < 98 { 10.0 } else { 600.0 };
@@ -107,5 +145,22 @@ mod tests {
         assert!(!r.meets_slo(500.0)); // p99 = 600
         assert!(r.meets_slo(700.0));
         assert!((r.attainment(500.0) - 0.98).abs() < 1e-12);
+    }
+
+    #[test]
+    fn streaming_stats_track_percentiles_approximately() {
+        let mut exact = LatencyStats::with_capacity(2000);
+        let mut sketch = LatencyStats::for_mode(MetricsMode::Streaming, 2000);
+        for i in 1..=2000 {
+            let v = i as f64 * 0.7;
+            exact.record(0.0, v, v + 1.0);
+            sketch.record(0.0, v, v + 1.0);
+        }
+        assert_eq!(exact.count, sketch.count);
+        // Zero waits are exact in both modes.
+        assert_eq!(exact.wait.p99(), 0.0);
+        assert_eq!(sketch.wait.p99(), 0.0);
+        let (e, s) = (exact.p99_ttft(), sketch.p99_ttft());
+        assert!((s / e - 1.0).abs() < 0.02, "exact {e} sketch {s}");
     }
 }

@@ -11,3 +11,4 @@ pub mod engine;
 pub mod event;
 pub mod metrics;
 pub mod pool;
+pub mod reference;

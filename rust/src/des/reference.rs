@@ -1,0 +1,273 @@
+//! The reference all-events-heap DES.
+//!
+//! This is the original engine structure: every arrival is a heap event
+//! (pushed first, so arrivals win time ties against completions and
+//! drains by sequence number), scheduled on the `BinaryHeap`-backed
+//! [`EventQueue`]. The production engine ([`crate::des::engine`]) replaced
+//! this with merge-consumed arrivals plus a calendar queue; this module is
+//! the semantic anchor it is pinned against:
+//!
+//! * `rust/tests/des_regression.rs` asserts the production engine is
+//!   *bit-identical* to `run_reference` across workloads, routers, cap
+//!   windows, and class mixes;
+//! * the perf harness (`fleet-sim bench`) times it as the baseline the
+//!   calendar-queue engine's speedup is measured against.
+//!
+//! Keep this implementation boring. It trades speed for obviousness on
+//! purpose — do not port engine optimizations back into it.
+
+use crate::des::engine::{CapWindow, DesConfig, SimPool};
+use crate::des::event::{EventKind, EventQueue};
+use crate::des::metrics::{DesResult, LatencyStats, PoolResult};
+use crate::des::pool::DesPool;
+use crate::router::{RouteRequest, RoutingPolicy};
+use crate::workload::rng::Pcg64;
+use crate::workload::spec::SampledRequest;
+
+struct RefReq {
+    arrival_ms: f64,
+    l_in: f64,
+    l_out: f64,
+}
+
+fn eff_cap(cap_window: &Option<CapWindow>, pool: &DesPool, t: f64) -> u32 {
+    let mut cap = pool.slots_per_gpu;
+    if let Some(w) = cap_window {
+        if t >= w.start_ms && t < w.end_ms {
+            cap = cap.min(w.cap.max(1));
+        }
+    }
+    cap
+}
+
+#[allow(clippy::too_many_arguments)]
+fn try_admit(
+    pools: &mut [DesPool],
+    pool_idx: usize,
+    req_id: u32,
+    reqs: &[RefReq],
+    now: f64,
+    events: &mut EventQueue,
+    cap_window: &Option<CapWindow>,
+    per_pool: &mut [LatencyStats],
+    overall: &mut LatencyStats,
+    warmup_cutoff: usize,
+) -> bool {
+    let eff = eff_cap(cap_window, &pools[pool_idx], now);
+    let pool = &mut pools[pool_idx];
+    let mut best: Option<(usize, u32)> = None;
+    for (i, inst) in pool.instances.iter().enumerate() {
+        if inst.busy < eff {
+            let free = eff - inst.busy;
+            if best.map_or(true, |(_, bf)| free > bf) {
+                best = Some((i, free));
+            }
+        }
+    }
+    let Some((inst, _)) = best else { return false };
+    pool.acquire(inst, now);
+    let req = &reqs[req_id as usize];
+    let n_at_admit = pool.instances[inst].busy as f64;
+    let t_iter = pool.gpu.t_iter(n_at_admit);
+    let hold = pool.gpu.iters(req.l_in, req.l_out) * t_iter;
+    events.push(
+        now + hold,
+        EventKind::Completion {
+            req: req_id,
+            pool: pool_idx as u16,
+            instance: inst as u16,
+        },
+    );
+    let wait = now - req.arrival_ms;
+    let prefill = (req.l_in / pool.gpu.chunk).ceil() * t_iter;
+    let ttft = wait + prefill + t_iter;
+    let e2e = wait + hold;
+    if req_id as usize >= warmup_cutoff {
+        per_pool[pool_idx].record(wait, ttft, e2e);
+        overall.record(wait, ttft, e2e);
+    }
+    true
+}
+
+#[allow(clippy::too_many_arguments)]
+fn drain_queue(
+    pools: &mut [DesPool],
+    pool_idx: usize,
+    reqs: &[RefReq],
+    now: f64,
+    events: &mut EventQueue,
+    cap_window: &Option<CapWindow>,
+    per_pool: &mut [LatencyStats],
+    overall: &mut LatencyStats,
+    warmup_cutoff: usize,
+) {
+    while let Some(&head) = pools[pool_idx].queue.front() {
+        if !try_admit(
+            pools, pool_idx, head, reqs, now, events, cap_window, per_pool,
+            overall, warmup_cutoff,
+        ) {
+            break;
+        }
+        pools[pool_idx].queue.pop_front();
+    }
+}
+
+/// Run the reference simulator on an explicit, time-ordered request
+/// stream. Honors `config.metrics` so both exact and streaming
+/// collection can be compared bit-for-bit against the production engine.
+pub fn run_reference(
+    pool_specs: &[SimPool],
+    router: &RoutingPolicy,
+    config: &DesConfig,
+    sampled: &[SampledRequest],
+) -> DesResult {
+    assert!(
+        router.n_pools() <= pool_specs.len(),
+        "router expects {} pools, got {}",
+        router.n_pools(),
+        pool_specs.len()
+    );
+    let n = sampled.len();
+    let mut route_rng = Pcg64::new(config.seed, 3);
+    let mut pools: Vec<DesPool> = pool_specs
+        .iter()
+        .map(|p| {
+            DesPool::new(p.gpu.clone(), p.n_gpus, p.ctx_budget, p.batch_cap)
+        })
+        .collect();
+    let mut reqs: Vec<RefReq> = sampled
+        .iter()
+        .map(|s| RefReq {
+            arrival_ms: s.arrival_ms,
+            l_in: s.l_in,
+            l_out: s.l_out,
+        })
+        .collect();
+
+    let mut events = EventQueue::with_capacity(2 * n + 4);
+    for (i, r) in reqs.iter().enumerate() {
+        events.push(r.arrival_ms, EventKind::Arrival { req: i as u32 });
+    }
+    if let Some(w) = &config.cap_window {
+        for p in 0..pools.len() {
+            events.push(w.end_ms, EventKind::Drain { pool: p as u16 });
+        }
+    }
+
+    let warmup_cutoff = (config.warmup_frac * n as f64) as usize;
+    let per_pool_cap = n / pools.len().max(1) + 16;
+    let mut per_pool: Vec<LatencyStats> = (0..pools.len())
+        .map(|_| LatencyStats::for_mode(config.metrics, per_pool_cap))
+        .collect();
+    let mut overall = LatencyStats::for_mode(config.metrics, n);
+    let mut n_compressed = 0usize;
+    let mut n_events = 0usize;
+    let mut horizon = 0.0f64;
+
+    while let Some(ev) = events.pop() {
+        n_events += 1;
+        let now = ev.time_ms;
+        horizon = horizon.max(now);
+        match ev.kind {
+            EventKind::Arrival { req } => {
+                let r = &reqs[req as usize];
+                let class = match &config.class_probs {
+                    None => 0,
+                    Some(probs) => {
+                        let u = route_rng.uniform();
+                        let mut cum = 0.0;
+                        let mut cls = probs.len() - 1;
+                        for (i, p) in probs.iter().enumerate() {
+                            cum += p;
+                            if u < cum {
+                                cls = i;
+                                break;
+                            }
+                        }
+                        cls
+                    }
+                };
+                let decision = router.route(
+                    RouteRequest { l_in: r.l_in, l_out: r.l_out, class },
+                    &mut route_rng,
+                );
+                let r = &mut reqs[req as usize];
+                r.l_in = decision.request.l_in;
+                r.l_out = decision.request.l_out;
+                if decision.compressed {
+                    n_compressed += 1;
+                }
+                if !try_admit(
+                    &mut pools, decision.pool, req, &reqs, now, &mut events,
+                    &config.cap_window, &mut per_pool, &mut overall,
+                    warmup_cutoff,
+                ) {
+                    pools[decision.pool].enqueue(req);
+                }
+            }
+            EventKind::Completion { req: _, pool, instance } => {
+                pools[pool as usize].release(instance as usize, now);
+                drain_queue(
+                    &mut pools, pool as usize, &reqs, now, &mut events,
+                    &config.cap_window, &mut per_pool, &mut overall,
+                    warmup_cutoff,
+                );
+            }
+            EventKind::Drain { pool } => {
+                drain_queue(
+                    &mut pools, pool as usize, &reqs, now, &mut events,
+                    &config.cap_window, &mut per_pool, &mut overall,
+                    warmup_cutoff,
+                );
+            }
+        }
+    }
+
+    DesResult {
+        per_pool: pools
+            .iter()
+            .zip(per_pool)
+            .map(|(p, stats)| PoolResult {
+                stats,
+                utilization: p.utilization(horizon),
+                max_queue_depth: p.max_queue_depth,
+                slots_per_gpu: p.slots_per_gpu,
+                n_gpus: p.instances.len(),
+            })
+            .collect(),
+        overall,
+        horizon_ms: horizon,
+        n_requests: n,
+        n_compressed,
+        n_events,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::des::engine::Simulator;
+    use crate::gpu::catalog::GpuCatalog;
+    use crate::workload::spec::{BuiltinTrace, WorkloadSpec};
+
+    #[test]
+    fn reference_agrees_with_production_engine() {
+        let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 100.0);
+        let gpu = GpuCatalog::standard().get("A100").unwrap().clone();
+        let pools = vec![
+            SimPool { gpu: gpu.clone(), n_gpus: 3, ctx_budget: 4096.0,
+                      batch_cap: None },
+            SimPool { gpu, n_gpus: 3, ctx_budget: 8192.0, batch_cap: None },
+        ];
+        let router = RoutingPolicy::Length { b_short: 4096.0 };
+        let cfg =
+            DesConfig { n_requests: 3_000, seed: 17, ..Default::default() };
+        let sampled = w.sample_requests(cfg.n_requests, cfg.seed);
+        let mut a = run_reference(&pools, &router, &cfg, &sampled);
+        let mut b = Simulator::run_stream(&pools, &router, &cfg, &sampled);
+        assert_eq!(a.overall.p99_ttft(), b.overall.p99_ttft());
+        assert_eq!(a.overall.count, b.overall.count);
+        assert_eq!(a.horizon_ms, b.horizon_ms);
+        assert_eq!(a.n_events, b.n_events);
+    }
+}

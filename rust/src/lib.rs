@@ -59,7 +59,7 @@ pub mod workload;
 /// Convenience re-exports of the main planner API surface.
 pub mod prelude {
     pub use crate::des::engine::{DesConfig, SimPool, Simulator};
-    pub use crate::des::metrics::DesResult;
+    pub use crate::des::metrics::{DesResult, MetricsMode};
     pub use crate::gpu::catalog::GpuCatalog;
     pub use crate::gpu::profile::GpuProfile;
     pub use crate::optimizer::planner::{FleetOptimizer, FleetPlan};

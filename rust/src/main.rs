@@ -9,7 +9,7 @@ use fleet_sim::cli::commands;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = match Args::parse(&argv, &["fast", "mixed", "explain"]) {
+    let args = match Args::parse(&argv, &["fast", "mixed", "explain", "json"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");

@@ -95,7 +95,9 @@ pub struct SweepJob {
 }
 
 impl SweepJob {
-    pub fn two_pool(gpu_s: &GpuProfile, gpu_l: &GpuProfile, b_short: f64) -> Self {
+    pub fn two_pool(gpu_s: &GpuProfile, gpu_l: &GpuProfile, b_short: f64)
+        -> Self
+    {
         SweepJob {
             gpu_s: gpu_s.clone(),
             gpu_l: gpu_l.clone(),
@@ -228,17 +230,18 @@ impl EvalEngine {
     }
 
     /// DES run on an explicit pool layout, reusing the cached request
-    /// stream. Bit-identical to `Simulator::run` with the same config.
+    /// stream. Bit-identical to `Simulator::run` with the same config —
+    /// and everything is borrowed: no workload, pool, router, or
+    /// request-vector clone per candidate.
     pub fn simulate(
         &self,
         workload: &WorkloadSpec,
-        pools: Vec<SimPool>,
-        router: RoutingPolicy,
+        pools: &[SimPool],
+        router: &RoutingPolicy,
         cfg: &DesConfig,
     ) -> DesResult {
         let stream = self.sampled_stream(workload, cfg.n_requests, cfg.seed);
-        let sim = Simulator::new(workload.clone(), pools, router, cfg.clone());
-        sim.run_with_requests((*stream).clone())
+        Simulator::run_stream(pools, router, cfg, &stream)
     }
 
     /// Phase 2: DES-verify one candidate with the production router.
@@ -250,7 +253,7 @@ impl EvalEngine {
         slo_ms: f64,
     ) -> Verification {
         let (pools, router) = plan_pools(cand);
-        let mut r = self.simulate(workload, pools, router, cfg);
+        let mut r = self.simulate(workload, &pools, &router, cfg);
         let p99 = r.overall.p99_ttft();
         let p99_s = r.per_pool[0].stats.ttft.p99();
         let p99_l = if r.per_pool.len() > 1 {

@@ -1,6 +1,8 @@
-//! Reporting: model-fidelity analysis (paper §3.2) and shared rendering.
+//! Reporting: model-fidelity analysis (paper §3.2), the DES perf
+//! harness, and shared rendering.
 
 pub mod ablation;
 pub mod fidelity;
+pub mod perf;
 pub mod sensitivity;
 pub mod substream;

@@ -1,0 +1,400 @@
+//! Deterministic DES perf harness (the engine behind `fleet-sim bench`).
+//!
+//! Three fixed scenarios — mirroring the des_regression matrix so the
+//! timed code path is exactly the verified one — are replayed on a
+//! pre-sampled request stream (sampling is excluded from timing):
+//!
+//! * `azure_two_pool_length` — the paper's core two-pool split fleet,
+//! * `agent_heavy_tail` — heavy-tailed agent trace on one large pool,
+//! * `lmsys_multipool_capped` — three pools, ModelRouter class mix, and a
+//!   mid-run demand-response cap window.
+//!
+//! For each scenario the harness times the **production** engine
+//! (calendar queue + streaming metrics, the configuration high-volume
+//! sweeps run in) and the **reference** engine (all-events `BinaryHeap` +
+//! exact sample vectors — the seed baseline), reports simulated events
+//! per second for both, their ratio (`speedup_vs_reference`, the
+//! machine-portable number the CI perf gate compares), and cross-checks
+//! that the two engines are bit-identical on the same stream before
+//! trusting either timing.
+//!
+//! Output is a `BENCH_N.json` snapshot (schema documented in the README;
+//! consumed by `scripts/perf_gate.py`).
+
+use std::time::Instant;
+
+use crate::des::engine::{CapWindow, DesConfig, SimPool, Simulator};
+use crate::des::metrics::MetricsMode;
+use crate::des::reference::run_reference;
+use crate::gpu::catalog::GpuCatalog;
+use crate::router::RoutingPolicy;
+use crate::util::json::Json;
+use crate::util::table::{Align, Table};
+use crate::workload::spec::{BuiltinTrace, WorkloadSpec};
+
+/// Snapshot schema tag (bump when the JSON layout changes).
+pub const SCHEMA: &str = "fleet-sim-bench-v2";
+
+/// Which engine(s) to time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BenchEngine {
+    Production,
+    Reference,
+    Both,
+}
+
+impl BenchEngine {
+    pub fn parse(name: &str) -> anyhow::Result<Self> {
+        match name {
+            "production" => Ok(BenchEngine::Production),
+            "reference" => Ok(BenchEngine::Reference),
+            "both" => Ok(BenchEngine::Both),
+            other => anyhow::bail!(
+                "--engine: 'production', 'reference', or 'both', got '{other}'"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BenchEngine::Production => "production",
+            BenchEngine::Reference => "reference",
+            BenchEngine::Both => "both",
+        }
+    }
+
+    fn times_production(&self) -> bool {
+        matches!(self, BenchEngine::Production | BenchEngine::Both)
+    }
+
+    fn times_reference(&self) -> bool {
+        matches!(self, BenchEngine::Reference | BenchEngine::Both)
+    }
+}
+
+/// Harness knobs (the CLI's fidelity flags map onto these).
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    /// Requests per scenario (`--requests`; `--fast` lowers the default).
+    pub n_requests: usize,
+    pub seed: u64,
+    /// Timed repetitions per engine; the minimum wall time is reported.
+    pub samples: usize,
+    pub engine: BenchEngine,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            n_requests: 30_000,
+            seed: 42,
+            samples: 3,
+            engine: BenchEngine::Both,
+        }
+    }
+}
+
+/// One scenario's measurements. `None` = not measured at this engine
+/// selection (serialized as JSON null).
+#[derive(Debug, Clone)]
+pub struct BenchRow {
+    pub name: &'static str,
+    /// Simulated events processed per run (deterministic given the seed).
+    pub events: usize,
+    pub wall_ms: Option<f64>,
+    pub events_per_sec: Option<f64>,
+    pub ref_wall_ms: Option<f64>,
+    pub ref_events_per_sec: Option<f64>,
+    /// events_per_sec / ref_events_per_sec — machine-portable, the number
+    /// the CI perf gate compares across snapshots.
+    pub speedup_vs_reference: Option<f64>,
+    /// Production and reference engines agreed bit-for-bit on this
+    /// stream (only checked when both run).
+    pub bit_identical: Option<bool>,
+}
+
+struct BenchCase {
+    name: &'static str,
+    workload: WorkloadSpec,
+    pools: Vec<SimPool>,
+    router: RoutingPolicy,
+    cfg: DesConfig,
+}
+
+fn cases(n_requests: usize, seed: u64) -> Vec<BenchCase> {
+    let cat = GpuCatalog::standard();
+    let a100 = cat.get("A100").unwrap().clone();
+    let h100 = cat.get("H100").unwrap().clone();
+    let a10g = cat.get("A10G").unwrap().clone();
+    let base = DesConfig { n_requests, seed, ..Default::default() };
+
+    let azure = WorkloadSpec::builtin(BuiltinTrace::Azure, 120.0);
+    let agent = WorkloadSpec::builtin(BuiltinTrace::Agent, 20.0);
+    let agent_ctx = agent.cdf.max_len();
+    let lmsys = WorkloadSpec::builtin(BuiltinTrace::Lmsys, 80.0);
+
+    vec![
+        BenchCase {
+            name: "azure_two_pool_length",
+            workload: azure,
+            pools: vec![
+                SimPool { gpu: a100.clone(), n_gpus: 4, ctx_budget: 4096.0,
+                          batch_cap: None },
+                SimPool { gpu: a100.clone(), n_gpus: 4, ctx_budget: 8192.0,
+                          batch_cap: None },
+            ],
+            router: RoutingPolicy::Length { b_short: 4096.0 },
+            cfg: base.clone(),
+        },
+        BenchCase {
+            name: "agent_heavy_tail",
+            workload: agent,
+            pools: vec![SimPool { gpu: h100.clone(), n_gpus: 24,
+                                  ctx_budget: agent_ctx, batch_cap: None }],
+            router: RoutingPolicy::Random { n_pools: 1 },
+            cfg: base.clone(),
+        },
+        BenchCase {
+            name: "lmsys_multipool_capped",
+            workload: lmsys,
+            pools: vec![
+                SimPool { gpu: a10g, n_gpus: 6, ctx_budget: 4096.0,
+                          batch_cap: Some(32) },
+                SimPool { gpu: a100, n_gpus: 4, ctx_budget: 8192.0,
+                          batch_cap: None },
+                SimPool { gpu: h100, n_gpus: 4, ctx_budget: 65536.0,
+                          batch_cap: None },
+            ],
+            router: RoutingPolicy::Model { class_to_pool: vec![0, 1, 2] },
+            cfg: DesConfig {
+                cap_window: Some(CapWindow {
+                    start_ms: 10_000.0,
+                    end_ms: 40_000.0,
+                    cap: 2,
+                }),
+                class_probs: Some(vec![0.6, 0.3, 0.1]),
+                ..base
+            },
+        },
+    ]
+}
+
+/// Minimum wall time (ms) over `samples` runs of `f`.
+fn time_min<F: FnMut() -> usize>(samples: usize, mut f: F) -> (f64, usize) {
+    let mut best = f64::INFINITY;
+    let mut events = 0usize;
+    for _ in 0..samples.max(1) {
+        let t0 = Instant::now();
+        events = f();
+        best = best.min(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    (best, events)
+}
+
+/// Run the harness. Panics never; a bit-identity mismatch is reported in
+/// the row (and fails the CI gate), not here.
+pub fn run_bench(opts: &BenchOpts) -> Vec<BenchRow> {
+    let mut rows = Vec::new();
+    for case in cases(opts.n_requests, opts.seed) {
+        let stream = case
+            .workload
+            .sample_requests(case.cfg.n_requests, case.cfg.seed);
+
+        let mut row = BenchRow {
+            name: case.name,
+            events: 0,
+            wall_ms: None,
+            events_per_sec: None,
+            ref_wall_ms: None,
+            ref_events_per_sec: None,
+            speedup_vs_reference: None,
+            bit_identical: None,
+        };
+
+        if opts.engine == BenchEngine::Both {
+            // Untimed exact-mode cross-check: both engines, same stream,
+            // must agree bit-for-bit before either timing is trusted.
+            let mut prod =
+                Simulator::run_stream(&case.pools, &case.router, &case.cfg,
+                                      &stream);
+            let mut refr =
+                run_reference(&case.pools, &case.router, &case.cfg, &stream);
+            row.events = prod.n_events;
+            row.bit_identical = Some(
+                prod.overall.p99_ttft() == refr.overall.p99_ttft()
+                    && prod.overall.count == refr.overall.count
+                    && prod.n_events == refr.n_events
+                    && prod.horizon_ms == refr.horizon_ms,
+            );
+        }
+
+        if opts.engine.times_production() {
+            // Production configuration: calendar queue + streaming sketch.
+            let cfg = DesConfig {
+                metrics: MetricsMode::Streaming,
+                ..case.cfg.clone()
+            };
+            let (wall, events) = time_min(opts.samples, || {
+                let r = Simulator::run_stream(&case.pools, &case.router,
+                                              &cfg, &stream);
+                std::hint::black_box(r.n_events)
+            });
+            row.events = events;
+            row.wall_ms = Some(wall);
+            row.events_per_sec = Some(events as f64 / (wall / 1e3));
+        }
+
+        if opts.engine.times_reference() {
+            // Seed baseline: all-events heap + exact sample vectors.
+            let (wall, events) = time_min(opts.samples, || {
+                let r = run_reference(&case.pools, &case.router, &case.cfg,
+                                      &stream);
+                std::hint::black_box(r.n_events)
+            });
+            row.events = events;
+            row.ref_wall_ms = Some(wall);
+            row.ref_events_per_sec = Some(events as f64 / (wall / 1e3));
+        }
+
+        row.speedup_vs_reference =
+            match (row.events_per_sec, row.ref_events_per_sec) {
+                (Some(p), Some(r)) if r > 0.0 => Some(p / r),
+                _ => None,
+            };
+        rows.push(row);
+    }
+    rows
+}
+
+/// Peak resident set size of this process, MB (linux `VmHWM`; `None`
+/// elsewhere). A process-lifetime high-water mark — a coarse memory
+/// proxy for the snapshot, not a per-scenario measurement.
+pub fn peak_rss_mb() -> Option<f64> {
+    let text = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: f64 = rest.trim().trim_end_matches("kB").trim()
+                .parse().ok()?;
+            return Some(kb / 1024.0);
+        }
+    }
+    None
+}
+
+fn opt_num(v: Option<f64>) -> Json {
+    v.map_or(Json::Null, Json::Num)
+}
+
+/// Serialize a snapshot (`BENCH_N.json` layout).
+pub fn to_json(opts: &BenchOpts, rows: &[BenchRow]) -> Json {
+    let scenarios: Vec<(String, Json)> = rows
+        .iter()
+        .map(|r| {
+            (
+                r.name.to_string(),
+                Json::Obj(vec![
+                    ("events".into(), Json::Num(r.events as f64)),
+                    ("wall_ms".into(), opt_num(r.wall_ms)),
+                    ("events_per_sec".into(), opt_num(r.events_per_sec)),
+                    ("ref_wall_ms".into(), opt_num(r.ref_wall_ms)),
+                    ("ref_events_per_sec".into(),
+                     opt_num(r.ref_events_per_sec)),
+                    ("speedup_vs_reference".into(),
+                     opt_num(r.speedup_vs_reference)),
+                    ("bit_identical".into(),
+                     r.bit_identical.map_or(Json::Null, Json::Bool)),
+                ]),
+            )
+        })
+        .collect();
+    Json::Obj(vec![
+        ("schema".into(), Json::Str(SCHEMA.to_string())),
+        ("engine".into(), Json::Str(opts.engine.name().to_string())),
+        ("n_requests".into(), Json::Num(opts.n_requests as f64)),
+        ("seed".into(), Json::Num(opts.seed as f64)),
+        ("samples".into(), Json::Num(opts.samples as f64)),
+        ("peak_rss_mb".into(), opt_num(peak_rss_mb())),
+        ("scenarios".into(), Json::Obj(scenarios)),
+    ])
+}
+
+fn fmt_opt(v: Option<f64>, prec: usize) -> String {
+    match v {
+        Some(x) => format!("{:.*}", prec, x),
+        None => "-".to_string(),
+    }
+}
+
+/// Human-readable summary table.
+pub fn render_table(rows: &[BenchRow]) -> String {
+    let mut t = Table::new(&[
+        "scenario", "events", "prod ms", "prod ev/s", "ref ms", "ref ev/s",
+        "speedup", "bit-identical",
+    ])
+    .align(&[
+        Align::Left, Align::Right, Align::Right, Align::Right, Align::Right,
+        Align::Right, Align::Right, Align::Right,
+    ]);
+    for r in rows {
+        t.row(&[
+            r.name.to_string(),
+            r.events.to_string(),
+            fmt_opt(r.wall_ms, 2),
+            fmt_opt(r.events_per_sec, 0),
+            fmt_opt(r.ref_wall_ms, 2),
+            fmt_opt(r.ref_events_per_sec, 0),
+            fmt_opt(r.speedup_vs_reference, 2),
+            r.bit_identical
+                .map_or("-".to_string(), |b| b.to_string()),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_rows_cover_all_scenarios_and_agree() {
+        let opts = BenchOpts {
+            n_requests: 1_500,
+            samples: 1,
+            ..Default::default()
+        };
+        let rows = run_bench(&opts);
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert_eq!(r.bit_identical, Some(true), "{}", r.name);
+            assert!(r.events >= 2 * 1_500, "{}: {}", r.name, r.events);
+            assert!(r.events_per_sec.unwrap() > 0.0);
+            assert!(r.ref_events_per_sec.unwrap() > 0.0);
+            assert!(r.speedup_vs_reference.unwrap() > 0.0);
+        }
+        // The capped multi-pool case processes its drain events too.
+        let capped = rows.iter().find(|r| r.name == "lmsys_multipool_capped")
+            .unwrap();
+        assert_eq!(capped.events, 2 * 1_500 + 3);
+    }
+
+    #[test]
+    fn snapshot_json_round_trips() {
+        let opts = BenchOpts {
+            n_requests: 800,
+            samples: 1,
+            engine: BenchEngine::Production,
+            ..Default::default()
+        };
+        let rows = run_bench(&opts);
+        let doc = to_json(&opts, &rows);
+        let text = doc.to_string_pretty();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("schema").and_then(Json::as_str), Some(SCHEMA));
+        let scen = back.get("scenarios").unwrap();
+        let first = scen.get("azure_two_pool_length").unwrap();
+        assert!(first.get("events_per_sec").and_then(Json::as_f64).is_some());
+        // Reference not timed at this engine selection -> null.
+        assert_eq!(first.get("ref_events_per_sec"), Some(&Json::Null));
+        assert!(!render_table(&rows).is_empty());
+    }
+}

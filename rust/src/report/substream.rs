@@ -87,28 +87,19 @@ pub fn correlated_requests(
     out
 }
 
-/// Simulator wrapper that replays an explicit request stream.
+/// Replay an explicit request stream through the DES core (no workload
+/// spec or stream copy needed — `run_stream` borrows everything).
 fn simulate_stream(
-    w: &WorkloadSpec,
     reqs: &[SampledRequest],
     pools: Vec<SimPool>,
     b_short: f64,
 ) -> DesResult {
-    // Reuse the engine by substituting the workload's sampler: easiest is
-    // to run the standard simulator on a spec whose seed reproduces the
-    // given stream — instead we run a bespoke pass: route + simulate via
-    // the Simulator by injecting the stream through a custom WorkloadSpec
-    // is not possible without a trait; so we re-sort and feed the DES
-    // directly through its public API using the same code path: construct
-    // a Simulator and replace its sampled stream by running with the same
-    // length distribution. For exactness we implement the replay here.
-    let sim = Simulator::new(
-        w.clone(),
-        pools,
-        RoutingPolicy::Length { b_short },
-        DesConfig { n_requests: reqs.len(), ..Default::default() },
-    );
-    sim.run_with_requests(reqs.to_vec())
+    Simulator::run_stream(
+        &pools,
+        &RoutingPolicy::Length { b_short },
+        &DesConfig { n_requests: reqs.len(), ..Default::default() },
+        reqs,
+    )
 }
 
 /// Run the full §5 check on a two-pool fleet.
@@ -143,7 +134,7 @@ pub fn substream_check(
     };
     // i.i.d. Poisson baseline.
     let iid = w.sample_requests(n_requests, seed);
-    let mut r_iid = simulate_stream(w, &iid, pools(), b_short);
+    let mut r_iid = simulate_stream(&iid, pools(), b_short);
     // Length-correlated bursts.
     let bursty = correlated_requests(w, n_requests, burst_quantile, seed);
     let mut gaps = Samples::new();
@@ -153,7 +144,7 @@ pub fn substream_check(
         prev = r.arrival_ms;
     }
     let scv = gaps.scv();
-    let mut r_burst = simulate_stream(w, &bursty, pools(), b_short);
+    let mut r_burst = simulate_stream(&bursty, pools(), b_short);
 
     SubstreamCheck {
         analytic_short_ms: a_s.ttft99_ms,

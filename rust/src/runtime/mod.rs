@@ -2,12 +2,18 @@
 //! sweep.hlo.txt, produced once by python/compile/aot.py) and execute it
 //! from the planning hot path. Python is never on the request path.
 //!
-//! The real PJRT client wraps the `xla` crate, which is unavailable in the
-//! offline build; it is gated behind the `pjrt` cargo feature. Without the
-//! feature, [`sweep::AotSweep`] is a stub whose `load` fails gracefully,
-//! so `--backend aot` reports a clear error and everything else (the
-//! native evaluator, the whole scenario registry) works unchanged.
+//! Three build configurations (CI's feature matrix checks the first two):
+//!
+//! * default (no features): [`sweep::AotSweep`] is a stub whose `load`
+//!   fails gracefully, so `--backend aot` reports a clear error and
+//!   everything else (the native evaluator, the whole scenario registry)
+//!   works unchanged;
+//! * `--features pjrt`: the artifact-contract stub — `load` reads and
+//!   validates `sweep.meta.json` (field order, k_bins) but `eval` fails,
+//!   because no XLA client is linked;
+//! * `--features xla` (implies `pjrt`): the real PJRT CPU client, which
+//!   requires the `xla` crate and a local XLA extension build.
 
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", feature = "xla"))]
 pub mod pjrt;
 pub mod sweep;

@@ -7,9 +7,11 @@
 //! result. Padding lanes are inert (empty workload share, 1 GPU).
 //! `rust/tests/runtime_parity.rs` checks AotSweep == NativeSweep.
 //!
-//! Compiled without the `pjrt` feature (the offline default), the
-//! execution path is replaced by a stub whose `load` returns an error, so
-//! callers fall back to [`crate::optimizer::analytic::NativeSweep`].
+//! Build matrix (see [`crate::runtime`]): without `pjrt` the stub's
+//! `load` errors immediately; with `pjrt` but not `xla` the stub loads
+//! and validates the metadata sidecar but refuses to execute; with
+//! `xla` the real PJRT client runs. In the stub configurations callers
+//! fall back to [`crate::optimizer::analytic::NativeSweep`].
 
 use std::path::{Path, PathBuf};
 
@@ -82,7 +84,7 @@ fn default_artifacts_dir() -> PathBuf {
         .unwrap_or_else(|| PathBuf::from("artifacts"))
 }
 
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", feature = "xla"))]
 mod imp {
     use super::*;
     use crate::runtime::pjrt::PjrtContext;
@@ -221,6 +223,62 @@ mod imp {
     }
 }
 
+#[cfg(all(feature = "pjrt", not(feature = "xla")))]
+mod imp {
+    use super::*;
+
+    /// Artifact-contract stub (`pjrt` without `xla`): loads and validates
+    /// the sweep artifact's metadata sidecar — keeping the packing
+    /// contract (field order, k_bins) compiled and checkable in CI —
+    /// but cannot execute without a linked XLA client.
+    pub struct AotSweep {
+        pub meta: SweepMeta,
+        pub artifact_path: PathBuf,
+    }
+
+    impl AotSweep {
+        /// Read + validate `sweep.meta.json`; succeeds without touching
+        /// the HLO artifact (no compiler is linked to parse it).
+        pub fn load(artifacts_dir: &Path) -> Result<Self> {
+            let meta = SweepMeta::load(&artifacts_dir.join("sweep.meta.json"))?;
+            meta.validate()?;
+            Ok(AotSweep {
+                meta,
+                artifact_path: artifacts_dir.join("sweep.hlo.txt"),
+            })
+        }
+
+        /// Default artifacts directory: $FLEET_SIM_ARTIFACTS or ./artifacts.
+        pub fn default_dir() -> PathBuf {
+            super::default_artifacts_dir()
+        }
+
+        pub fn platform(&self) -> String {
+            "pjrt-stub (xla not linked)".to_string()
+        }
+    }
+
+    impl SweepEval for AotSweep {
+        fn eval(
+            &self,
+            _workload: &WorkloadSpec,
+            _candidates: &[Candidate],
+            _slo_ms: f64,
+        ) -> Result<Vec<CandidateResult>> {
+            anyhow::bail!(
+                "PJRT execution unavailable: built with `pjrt` but without \
+                 the `xla` feature (artifact: {}). Rebuild with `--features \
+                 xla` and the xla crate, or use the native backend.",
+                self.artifact_path.display()
+            )
+        }
+
+        fn backend(&self) -> &'static str {
+            "aot-pjrt"
+        }
+    }
+}
+
 #[cfg(not(feature = "pjrt"))]
 mod imp {
     use super::*;
@@ -286,6 +344,30 @@ mod tests {
         let err = AotSweep::load(Path::new("artifacts")).unwrap_err();
         let msg = format!("{err}");
         assert!(msg.contains("pjrt"), "{msg}");
+    }
+
+    #[cfg(all(feature = "pjrt", not(feature = "xla")))]
+    #[test]
+    fn pjrt_stub_loads_meta_and_refuses_eval() {
+        use crate::workload::spec::{BuiltinTrace, WorkloadSpec};
+        let dir = std::env::temp_dir().join("fleet_sim_pjrt_stub_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let fields: Vec<String> = CANDIDATE_FIELDS
+            .iter()
+            .map(|f| format!("\"{f}\""))
+            .collect();
+        let meta = format!(
+            "{{\"n_cand\": 64, \"k_bins\": {K_BINS}, \
+             \"candidate_fields\": [{}]}}",
+            fields.join(", ")
+        );
+        std::fs::write(dir.join("sweep.meta.json"), meta).unwrap();
+        let aot = AotSweep::load(&dir).expect("meta-only load succeeds");
+        assert_eq!(aot.meta.n_cand, 64);
+        assert!(aot.platform().contains("stub"));
+        let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 50.0);
+        let err = aot.eval(&w, &[], 500.0).unwrap_err();
+        assert!(format!("{err}").contains("xla"), "{err}");
     }
 
     #[test]

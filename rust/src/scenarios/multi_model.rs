@@ -51,7 +51,7 @@ pub fn evaluate_with(engine: &EvalEngine, lambda_rps: f64, opts: &ScenarioOpts)
         class_probs: Some(spec.iter().map(|c| c.1).collect()),
         ..Default::default()
     };
-    let mut r = engine.simulate(&w, pools, router, &cfg);
+    let mut r = engine.simulate(&w, &pools, &router, &cfg);
     spec.iter()
         .zip(r.per_pool.iter_mut())
         .map(|((name, ..), p)| {

@@ -64,9 +64,9 @@ impl Scenario for AgentSlo {
         let homo_rows = engine.par_map(vec![40usize, 64, 128], |&n| {
             let mut r = engine.simulate(
                 &w,
-                vec![SimPool { gpu: gpu.clone(), n_gpus: n, ctx_budget: ctx,
-                               batch_cap: None }],
-                RoutingPolicy::Random { n_pools: 1 },
+                &[SimPool { gpu: gpu.clone(), n_gpus: n, ctx_budget: ctx,
+                            batch_cap: None }],
+                &RoutingPolicy::Random { n_pools: 1 },
                 &opts.des(),
             );
             let a = analyze_pool(&hist, 0.0, 1e12, w.lambda_per_ms(),
@@ -97,7 +97,8 @@ impl Scenario for AgentSlo {
                       batch_cap: None },
         ];
         let mut r = engine.simulate(
-            &w, pools, RoutingPolicy::Length { b_short: 4096.0 }, &opts.des());
+            &w, &pools, &RoutingPolicy::Length { b_short: 4096.0 },
+            &opts.des());
         let short_p99 = r.per_pool[0].stats.ttft.p99();
         let long_p99 = r.per_pool[1].stats.ttft.p99();
         t.row(&[

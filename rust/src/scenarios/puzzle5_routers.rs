@@ -33,7 +33,9 @@ pub struct RouterRow {
 }
 
 /// Simulate the three routers in parallel through the given engine.
-pub fn evaluate_with(engine: &EvalEngine, opts: &ScenarioOpts) -> Vec<RouterRow> {
+pub fn evaluate_with(engine: &EvalEngine, opts: &ScenarioOpts)
+    -> Vec<RouterRow>
+{
     let gpu = engine.catalog.get("H100").unwrap().clone();
     let w = WorkloadSpec::builtin(BuiltinTrace::Agent, LAMBDA);
     let ctx = w.cdf.max_len();
@@ -51,7 +53,7 @@ pub fn evaluate_with(engine: &EvalEngine, opts: &ScenarioOpts) -> Vec<RouterRow>
         RoutingPolicy::Random { n_pools: 2 },
     ];
     engine.par_map(routers, |router| {
-        let mut r = engine.simulate(&w, pools(), router.clone(), &opts.des());
+        let mut r = engine.simulate(&w, &pools(), router, &opts.des());
         RouterRow {
             router: router.name().into(),
             p99_short: r.per_pool[0].stats.ttft.p99(),

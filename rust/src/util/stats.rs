@@ -1,15 +1,208 @@
 //! Sample statistics for DES metrics: percentiles, moments, SCV.
 //!
-//! The DES collects per-request latencies; the SLO check is a P99 over the
-//! sample (paper §3.1 Phase 2). Percentiles use the nearest-rank method on
-//! a sorted copy — exact, deterministic, and cheap at the 10^4–10^5 sample
-//! sizes the simulator produces.
+//! Two aggregation strategies share the [`Samples`] front end:
+//!
+//! * **Exact** (the default): store every value and answer percentiles by
+//!   the nearest-rank method on a sorted copy — exact, deterministic, and
+//!   cheap at the 10^4–10^5 sample sizes the simulator produces. Memory is
+//!   O(requests).
+//! * **Streaming**: a base-2 [`LogHistogram`] sketch (HDR-histogram style:
+//!   64 sub-bins per power of two, so every bin is ~1.6% wide in relative
+//!   terms). Memory is O(1) per metric regardless of request count, which
+//!   is what keeps high-volume DES runs at O(pools) instead of
+//!   O(requests). Quantiles are approximate within the bin width; moments
+//!   (mean/variance/SCV) and min/max stay exact because they are tracked
+//!   as running scalars.
+//!
+//! The paper's SLO check is a P99 over the sample (§3.1 Phase 2); exact
+//! mode is what every scenario table uses, so published numbers are
+//! unchanged. Streaming mode backs the perf harness (`fleet-sim bench`)
+//! and anything that simulates more requests than it wants to keep.
+
+use std::fmt;
+
+/// Sub-bin bits per power of two: 2^6 = 64 sub-bins, giving a relative
+/// bin width of 2^(1/64) - 1 ~ 1.1%.
+const SUB_BITS: u32 = 6;
+const SUBBINS: usize = 1 << SUB_BITS;
+/// Values below 2^-10 ms (~1 µs) collapse into the zero bin — the DES
+/// records exact zeros for no-wait admissions, which must stay exact.
+const MIN_EXP: i32 = -10;
+/// Values at or above 2^40 ms clamp into the top bin (reported as the
+/// exact tracked maximum).
+const MAX_EXP: i32 = 40;
+const N_BINS: usize = (MAX_EXP - MIN_EXP) as usize * SUBBINS + 2;
+/// `(value.to_bits() >> (52 - SUB_BITS))` of the smallest finite bin.
+const INDEX_OFFSET: u64 = ((1023 + MIN_EXP) as u64) << SUB_BITS;
+
+/// Streaming log-spaced histogram over non-negative values (ms).
+///
+/// Bins are derived from the IEEE-754 bit pattern (exponent plus the top
+/// `SUB_BITS` mantissa bits), so binning costs a couple of integer ops —
+/// no `ln` in the hot path — and is exactly deterministic.
+#[derive(Clone)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    n: u64,
+    sum: f64,
+    sum_sq: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl fmt::Debug for LogHistogram {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("LogHistogram")
+            .field("n", &self.n)
+            .field("min", &self.min)
+            .field("max", &self.max)
+            .field("mean", &self.mean())
+            .finish()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        LogHistogram {
+            counts: vec![0; N_BINS],
+            n: 0,
+            sum: 0.0,
+            sum_sq: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Bin index for a value. Bin 0 holds zeros / sub-µs values; the last
+    /// bin holds the (unreachable in practice) >= 2^40 ms overflow.
+    fn bin_of(v: f64) -> usize {
+        if !v.is_finite() || v <= 0.0 {
+            return 0;
+        }
+        const LO_BITS: u64 = ((1023 + MIN_EXP) as u64) << 52;
+        const HI_BITS: u64 = ((1023 + MAX_EXP) as u64) << 52;
+        let bits = v.to_bits();
+        if bits < LO_BITS {
+            return 0;
+        }
+        if bits >= HI_BITS {
+            return N_BINS - 1;
+        }
+        ((bits >> (52 - SUB_BITS)) - INDEX_OFFSET) as usize + 1
+    }
+
+    /// Arithmetic midpoint of a finite bin's edges.
+    fn value_of(bin: usize) -> f64 {
+        debug_assert!(bin > 0 && bin < N_BINS - 1);
+        let idx = bin as u64 - 1 + INDEX_OFFSET;
+        let lo = f64::from_bits(idx << (52 - SUB_BITS));
+        let hi = f64::from_bits((idx + 1) << (52 - SUB_BITS));
+        0.5 * (lo + hi)
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.counts[Self::bin_of(v)] += 1;
+        self.n += 1;
+        self.sum += v;
+        self.sum_sq += v * v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.sum / self.n as f64
+    }
+
+    /// Population variance (exact: tracked moments, not bin centers).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.sum_sq / self.n as f64 - m * m).max(0.0)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Nearest-rank quantile, `q` in [0, 1]. Returns the midpoint of the
+    /// selected bin, clamped into the exact observed [min, max] (so a
+    /// single-valued histogram answers exactly, and the zero bin answers
+    /// exactly 0).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.n as f64).ceil() as u64)
+            .clamp(1, self.n);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                if i == 0 {
+                    return 0.0f64.clamp(self.min, self.max);
+                }
+                if i == N_BINS - 1 {
+                    return self.max;
+                }
+                return Self::value_of(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Fraction of recorded values <= `x` (within one bin width).
+    pub fn fraction_le(&self, x: f64) -> f64 {
+        if self.n == 0 {
+            return 1.0;
+        }
+        if x >= self.max {
+            return 1.0;
+        }
+        if x < self.min {
+            return 0.0;
+        }
+        let b = Self::bin_of(x);
+        let cum: u64 = self.counts[..=b].iter().sum();
+        cum as f64 / self.n as f64
+    }
+}
+
+/// Internal storage for [`Samples`].
+#[derive(Debug, Clone)]
+enum Repr {
+    Exact { values: Vec<f64>, sorted: bool },
+    Sketch(LogHistogram),
+}
 
 /// Accumulates samples and answers percentile / moment queries.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct Samples {
-    values: Vec<f64>,
-    sorted: bool,
+    repr: Repr,
+}
+
+impl Default for Samples {
+    fn default() -> Self {
+        Samples { repr: Repr::Exact { values: Vec::new(), sorted: false } }
+    }
 }
 
 impl Samples {
@@ -18,37 +211,67 @@ impl Samples {
     }
 
     pub fn with_capacity(n: usize) -> Self {
-        Samples { values: Vec::with_capacity(n), sorted: false }
+        Samples {
+            repr: Repr::Exact { values: Vec::with_capacity(n), sorted: false },
+        }
+    }
+
+    /// O(1)-memory streaming variant (percentiles answered by the
+    /// [`LogHistogram`] sketch; `values()` returns an empty slice).
+    pub fn streaming() -> Self {
+        Samples { repr: Repr::Sketch(LogHistogram::new()) }
+    }
+
+    pub fn is_streaming(&self) -> bool {
+        matches!(self.repr, Repr::Sketch(_))
     }
 
     pub fn push(&mut self, v: f64) {
-        self.values.push(v);
-        self.sorted = false;
+        match &mut self.repr {
+            Repr::Exact { values, sorted } => {
+                values.push(v);
+                *sorted = false;
+            }
+            Repr::Sketch(h) => h.push(v),
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.values.len()
+        match &self.repr {
+            Repr::Exact { values, .. } => values.len(),
+            Repr::Sketch(h) => h.count() as usize,
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.values.is_empty()
+        self.len() == 0
     }
 
     pub fn mean(&self) -> f64 {
-        if self.values.is_empty() {
-            return 0.0;
+        match &self.repr {
+            Repr::Exact { values, .. } => {
+                if values.is_empty() {
+                    return 0.0;
+                }
+                values.iter().sum::<f64>() / values.len() as f64
+            }
+            Repr::Sketch(h) => h.mean(),
         }
-        self.values.iter().sum::<f64>() / self.values.len() as f64
     }
 
     /// Population variance.
     pub fn variance(&self) -> f64 {
-        if self.values.len() < 2 {
-            return 0.0;
+        match &self.repr {
+            Repr::Exact { values, .. } => {
+                if values.len() < 2 {
+                    return 0.0;
+                }
+                let m = self.mean();
+                values.iter().map(|v| (v - m) * (v - m)).sum::<f64>()
+                    / values.len() as f64
+            }
+            Repr::Sketch(h) => h.variance(),
         }
-        let m = self.mean();
-        self.values.iter().map(|v| (v - m) * (v - m)).sum::<f64>()
-            / self.values.len() as f64
     }
 
     /// Squared coefficient of variation Cs² = Var/Mean² (paper §2.2).
@@ -61,26 +284,44 @@ impl Samples {
     }
 
     pub fn min(&self) -> f64 {
-        self.values.iter().copied().fold(f64::INFINITY, f64::min)
+        match &self.repr {
+            Repr::Exact { values, .. } => {
+                values.iter().copied().fold(f64::INFINITY, f64::min)
+            }
+            Repr::Sketch(h) => h.min(),
+        }
     }
 
     pub fn max(&self) -> f64 {
-        self.values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+        match &self.repr {
+            Repr::Exact { values, .. } => {
+                values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+            }
+            Repr::Sketch(h) => h.max(),
+        }
     }
 
     /// Nearest-rank percentile, `q` in [0, 100]. Empty samples return 0.
+    /// Exact repr answers exactly; streaming repr answers within the
+    /// sketch's ~1% bin width.
     pub fn percentile(&mut self, q: f64) -> f64 {
-        if self.values.is_empty() {
-            return 0.0;
+        match &mut self.repr {
+            Repr::Exact { values, sorted } => {
+                if values.is_empty() {
+                    return 0.0;
+                }
+                if !*sorted {
+                    values.sort_by(|a, b| {
+                        a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal)
+                    });
+                    *sorted = true;
+                }
+                let n = values.len();
+                let rank = ((q / 100.0) * n as f64).ceil() as usize;
+                values[rank.clamp(1, n) - 1]
+            }
+            Repr::Sketch(h) => h.quantile(q / 100.0),
         }
-        if !self.sorted {
-            self.values
-                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-            self.sorted = true;
-        }
-        let n = self.values.len();
-        let rank = ((q / 100.0) * n as f64).ceil() as usize;
-        self.values[rank.clamp(1, n) - 1]
     }
 
     pub fn p50(&mut self) -> f64 {
@@ -91,8 +332,28 @@ impl Samples {
         self.percentile(99.0)
     }
 
+    /// Fraction of recorded values <= `x` (exact in exact mode; within one
+    /// bin width in streaming mode). Empty samples return 1.0.
+    pub fn fraction_le(&self, x: f64) -> f64 {
+        match &self.repr {
+            Repr::Exact { values, .. } => {
+                if values.is_empty() {
+                    return 1.0;
+                }
+                values.iter().filter(|&&v| v <= x).count() as f64
+                    / values.len() as f64
+            }
+            Repr::Sketch(h) => h.fraction_le(x),
+        }
+    }
+
+    /// The raw values in insertion order (sorted after a percentile
+    /// query). Streaming samples keep no values: returns `&[]`.
     pub fn values(&self) -> &[f64] {
-        &self.values
+        match &self.repr {
+            Repr::Exact { values, .. } => values,
+            Repr::Sketch(_) => &[],
+        }
     }
 }
 
@@ -178,7 +439,8 @@ mod tests {
 
     #[test]
     fn welford_matches_batch() {
-        let data: Vec<f64> = (0..1000).map(|i| ((i * 7919) % 100) as f64).collect();
+        let data: Vec<f64> =
+            (0..1000).map(|i| ((i * 7919) % 100) as f64).collect();
         let mut w = Welford::default();
         let mut s = Samples::new();
         for &x in &data {
@@ -199,5 +461,107 @@ mod tests {
             s.push(-(1.0 - u).ln());
         }
         assert!((s.scv() - 1.0).abs() < 0.02, "scv = {}", s.scv());
+    }
+
+    // ---- streaming sketch ----
+
+    #[test]
+    fn sketch_binning_round_trips_within_bin_width() {
+        // value -> bin -> midpoint must stay within half a bin (~0.6%).
+        for &v in &[1e-2, 0.5, 1.0, 3.7, 100.0, 1234.5, 9.9e6] {
+            let b = LogHistogram::bin_of(v);
+            assert!(b > 0 && b < N_BINS - 1, "v={v} bin={b}");
+            let mid = LogHistogram::value_of(b);
+            assert!(
+                (mid / v - 1.0).abs() < 0.01,
+                "v={v} mid={mid} rel={}",
+                (mid / v - 1.0).abs()
+            );
+        }
+    }
+
+    #[test]
+    fn sketch_bins_are_monotone_in_value() {
+        let mut prev = 0usize;
+        let mut v = 1e-4;
+        while v < 1e10 {
+            let b = LogHistogram::bin_of(v);
+            assert!(b >= prev, "bin({v}) = {b} < {prev}");
+            prev = b;
+            v *= 1.003;
+        }
+    }
+
+    #[test]
+    fn sketch_handles_zero_and_extremes() {
+        let mut h = LogHistogram::new();
+        for _ in 0..99 {
+            h.push(0.0);
+        }
+        h.push(2e12); // beyond 2^40 ms -> top bin, reported as exact max
+        assert_eq!(h.quantile(0.50), 0.0);
+        assert_eq!(h.quantile(1.0), 2e12);
+        assert_eq!(h.count(), 100);
+        assert!((h.fraction_le(0.0) - 0.99).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sketch_single_value_is_exact() {
+        let mut h = LogHistogram::new();
+        for _ in 0..10 {
+            h.push(123.456);
+        }
+        // Clamping into [min, max] recovers the exact value.
+        assert_eq!(h.quantile(0.5), 123.456);
+        assert_eq!(h.quantile(0.99), 123.456);
+        assert_eq!(h.min(), 123.456);
+        assert_eq!(h.max(), 123.456);
+    }
+
+    #[test]
+    fn streaming_percentiles_close_to_exact() {
+        let mut exact = Samples::new();
+        let mut sketch = Samples::streaming();
+        let n = 20000;
+        for i in 0..n {
+            // Heavy-tailed deterministic sample (Exp quantiles, scaled).
+            let u = (i as f64 + 0.5) / n as f64;
+            let v = 250.0 * -(1.0 - u).ln();
+            exact.push(v);
+            sketch.push(v);
+        }
+        assert!(sketch.is_streaming());
+        assert_eq!(exact.len(), sketch.len());
+        for q in [10.0, 50.0, 90.0, 99.0, 99.9] {
+            let e = exact.percentile(q);
+            let s = sketch.percentile(q);
+            assert!(
+                (s / e - 1.0).abs() < 0.02,
+                "q={q}: exact {e} sketch {s}"
+            );
+        }
+        assert!((exact.mean() - sketch.mean()).abs() < 1e-9);
+        assert!((exact.variance() - sketch.variance()).abs() < 1e-3);
+        assert_eq!(exact.min(), sketch.min());
+        assert_eq!(exact.max(), sketch.max());
+        assert!(sketch.values().is_empty());
+    }
+
+    #[test]
+    fn fraction_le_matches_between_reprs() {
+        let mut exact = Samples::new();
+        let mut sketch = Samples::streaming();
+        for i in 0..1000 {
+            let v = i as f64;
+            exact.push(v);
+            sketch.push(v);
+        }
+        for x in [0.0, 10.0, 499.5, 999.0, 2000.0] {
+            let e = exact.fraction_le(x);
+            let s = sketch.fraction_le(x);
+            assert!((e - s).abs() < 0.02, "x={x}: exact {e} sketch {s}");
+        }
+        assert_eq!(Samples::new().fraction_le(1.0), 1.0);
+        assert_eq!(Samples::streaming().fraction_le(1.0), 1.0);
     }
 }

@@ -273,6 +273,61 @@ mod tests {
     }
 
     #[test]
+    fn degenerate_single_point_table() {
+        // A one-breakpoint table (all mass at one budget) is valid and
+        // must stay well-behaved at both ends of the quantile range.
+        let c = EmpiricalCdf::new(vec![(1024.0, 1.0)]).unwrap();
+        assert_eq!(c.max_len(), 1024.0);
+        assert_eq!(c.quantile(1.0), 1024.0);
+        assert_eq!(c.cdf(1024.0), 1.0);
+        assert_eq!(c.cdf(1e9), 1.0);
+        // Support floor: min_len = 1024/4.
+        assert_eq!(c.cdf(255.0), 0.0);
+        let mut prev = 0.0;
+        for i in 0..=100 {
+            let q = i as f64 / 100.0;
+            let l = c.quantile(q);
+            assert!(l >= prev * (1.0 - 1e-12), "quantile({q}) = {l} < {prev}");
+            assert!((255.9..=1024.0).contains(&l), "quantile({q}) = {l}");
+            prev = l;
+        }
+        // Histogram of a single-point table still conserves mass.
+        let (p, _) = c.histogram(16);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_monotone_under_interpolation_on_builtin_traces() {
+        use crate::workload::builtin::Trace;
+        for t in [Trace::lmsys(), Trace::azure(), Trace::agent()] {
+            let c = &t.cdf;
+            let mut prev = 0.0;
+            for i in 0..=2_000 {
+                let q = i as f64 / 2_000.0;
+                let l = c.quantile(q);
+                assert!(
+                    l >= prev * (1.0 - 1e-12),
+                    "{}: quantile({q}) = {l} < previous {prev}",
+                    t.name
+                );
+                assert!(l <= c.max_len() + 1e-9, "{}: {l}", t.name);
+                prev = l;
+            }
+            assert_eq!(c.quantile(1.0), c.max_len(), "{}", t.name);
+            // And cdf() is monotone over a fine log grid of lengths.
+            let mut prev_f = -1.0;
+            let mut len = 1.0;
+            while len < c.max_len() * 2.0 {
+                let f = c.cdf(len);
+                assert!(f >= prev_f, "{}: cdf({len}) = {f}", t.name);
+                assert!((0.0..=1.0).contains(&f), "{}: cdf({len})", t.name);
+                prev_f = f;
+                len *= 1.05;
+            }
+        }
+    }
+
+    #[test]
     fn rejects_bad_input() {
         assert!(EmpiricalCdf::new(vec![]).is_err());
         assert!(EmpiricalCdf::new(vec![(10.0, 0.5)]).is_err()); // not 1.0

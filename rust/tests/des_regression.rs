@@ -1,21 +1,20 @@
-//! DES regression tests for the merge-consumed-arrivals fast path.
+//! DES regression suite: the calendar-queue production engine against
+//! the reference all-events-heap simulator.
 //!
-//! The production engine keeps only completions (and cap-window drains) in
-//! the event heap and merge-consumes the time-sorted arrival vector
-//! ("perf pass iteration 3"). This file re-implements the original
-//! all-events-in-the-heap semantics as a reference simulator and asserts
-//! the fast path is *bit-identical* to it — same P99s, same per-pool
-//! counts, same utilization — across workloads, routers, cap windows, and
-//! class mixes. A fixed seed therefore pins exact P99 TTFT values without
-//! golden files.
+//! The production engine ([`fleet_sim::des::engine`]) schedules
+//! completions and cap-window drains on a calendar queue and
+//! merge-consumes the time-sorted arrival slice; the reference
+//! ([`fleet_sim::des::reference`]) keeps every arrival in a `BinaryHeap`.
+//! This suite asserts the production engine is *bit-identical* to the
+//! reference — same P99s, same per-pool counts, same utilization, same
+//! event counts — across workloads, routers, cap windows, class mixes,
+//! and both metrics modes (exact vectors and the streaming sketch). A
+//! fixed seed therefore pins exact P99 TTFT values without golden files.
 
 use fleet_sim::des::engine::{CapWindow, DesConfig, SimPool, Simulator};
-use fleet_sim::des::event::{EventKind, EventQueue};
-use fleet_sim::des::pool::DesPool;
-use fleet_sim::gpu::catalog::GpuCatalog;
-use fleet_sim::router::{RouteRequest, RoutingPolicy};
-use fleet_sim::util::stats::Samples;
-use fleet_sim::workload::rng::Pcg64;
+use fleet_sim::des::metrics::{DesResult, MetricsMode};
+use fleet_sim::des::reference::run_reference;
+use fleet_sim::router::RoutingPolicy;
 use fleet_sim::workload::spec::{BuiltinTrace, WorkloadSpec};
 
 /// Reference summary of one simulation.
@@ -30,9 +29,10 @@ struct Summary {
     utilization: Vec<f64>,
     max_queue_depth: Vec<usize>,
     n_compressed: usize,
+    n_events: usize,
 }
 
-fn summarize(mut r: fleet_sim::des::metrics::DesResult) -> Summary {
+fn summarize(mut r: DesResult) -> Summary {
     Summary {
         overall_p99_ttft: r.overall.ttft.p99(),
         overall_p99_wait: r.overall.wait.p99(),
@@ -45,216 +45,11 @@ fn summarize(mut r: fleet_sim::des::metrics::DesResult) -> Summary {
         max_queue_depth: r.per_pool.iter().map(|p| p.max_queue_depth)
             .collect(),
         n_compressed: r.n_compressed,
+        n_events: r.n_events,
     }
 }
 
-struct RefReq {
-    arrival_ms: f64,
-    l_in: f64,
-    l_out: f64,
-    pool: usize,
-}
-
-/// The original all-events-heap DES: arrivals are heap events (pushed
-/// first, so they win time ties against completions and drains by
-/// sequence number), everything else mirrors the engine exactly.
-fn reference_run(
-    w: &WorkloadSpec,
-    pool_specs: &[SimPool],
-    router: &RoutingPolicy,
-    cfg: &DesConfig,
-) -> Summary {
-    let sampled = w.sample_requests(cfg.n_requests, cfg.seed);
-    let n = sampled.len();
-    let mut route_rng = Pcg64::new(cfg.seed, 3);
-    let mut pools: Vec<DesPool> = pool_specs
-        .iter()
-        .map(|p| DesPool::new(p.gpu.clone(), p.n_gpus, p.ctx_budget,
-                              p.batch_cap))
-        .collect();
-    let mut reqs: Vec<RefReq> = sampled
-        .iter()
-        .map(|s| RefReq { arrival_ms: s.arrival_ms, l_in: s.l_in,
-                          l_out: s.l_out, pool: 0 })
-        .collect();
-
-    let mut events = EventQueue::with_capacity(2 * n + 4);
-    for (i, r) in reqs.iter().enumerate() {
-        events.push(r.arrival_ms, EventKind::Arrival { req: i as u32 });
-    }
-    if let Some(win) = &cfg.cap_window {
-        for p in 0..pools.len() {
-            events.push(win.end_ms, EventKind::Drain { pool: p as u16 });
-        }
-    }
-
-    let warmup_cutoff = (cfg.warmup_frac * n as f64) as usize;
-    let mut pool_wait: Vec<Samples> = pools.iter().map(|_| Samples::new())
-        .collect();
-    let mut pool_ttft: Vec<Samples> = pools.iter().map(|_| Samples::new())
-        .collect();
-    let mut pool_count: Vec<usize> = vec![0; pools.len()];
-    let mut all_wait = Samples::new();
-    let mut all_ttft = Samples::new();
-    let mut all_e2e = Samples::new();
-    let mut all_count = 0usize;
-    let mut n_compressed = 0usize;
-    let mut horizon = 0.0f64;
-
-    let eff_cap = |pool: &DesPool, t: f64| -> u32 {
-        let mut cap = pool.slots_per_gpu;
-        if let Some(win) = &cfg.cap_window {
-            if t >= win.start_ms && t < win.end_ms {
-                cap = cap.min(win.cap.max(1));
-            }
-        }
-        cap
-    };
-
-    // Returns true if admitted (mirrors Simulator::try_admit).
-    #[allow(clippy::too_many_arguments)]
-    fn try_admit(
-        pools: &mut [DesPool],
-        pool_idx: usize,
-        req_id: u32,
-        reqs: &[RefReq],
-        now: f64,
-        events: &mut EventQueue,
-        eff: u32,
-        warmup_cutoff: usize,
-        pool_wait: &mut [Samples],
-        pool_ttft: &mut [Samples],
-        pool_count: &mut [usize],
-        all_wait: &mut Samples,
-        all_ttft: &mut Samples,
-        all_e2e: &mut Samples,
-        all_count: &mut usize,
-    ) -> bool {
-        let pool = &mut pools[pool_idx];
-        let mut best: Option<(usize, u32)> = None;
-        for (i, inst) in pool.instances.iter().enumerate() {
-            if inst.busy < eff {
-                let free = eff - inst.busy;
-                if best.map_or(true, |(_, bf)| free > bf) {
-                    best = Some((i, free));
-                }
-            }
-        }
-        let Some((inst, _)) = best else { return false };
-        pool.acquire(inst, now);
-        let req = &reqs[req_id as usize];
-        let n_at_admit = pool.instances[inst].busy as f64;
-        let t_iter = pool.gpu.t_iter(n_at_admit);
-        let hold = pool.gpu.iters(req.l_in, req.l_out) * t_iter;
-        events.push(
-            now + hold,
-            EventKind::Completion { req: req_id, pool: pool_idx as u16,
-                                    instance: inst as u16 },
-        );
-        let wait = now - req.arrival_ms;
-        let prefill = (req.l_in / pool.gpu.chunk).ceil() * t_iter;
-        let ttft = wait + prefill + t_iter;
-        let e2e = wait + hold;
-        if req_id as usize >= warmup_cutoff {
-            pool_wait[pool_idx].push(wait);
-            pool_ttft[pool_idx].push(ttft);
-            pool_count[pool_idx] += 1;
-            all_wait.push(wait);
-            all_ttft.push(ttft);
-            all_e2e.push(e2e);
-            *all_count += 1;
-        }
-        true
-    }
-
-    while let Some(ev) = events.pop() {
-        let now = ev.time_ms;
-        horizon = horizon.max(now);
-        match ev.kind {
-            EventKind::Arrival { req } => {
-                let r = &reqs[req as usize];
-                let class = match &cfg.class_probs {
-                    None => 0,
-                    Some(probs) => {
-                        let u = route_rng.uniform();
-                        let mut cum = 0.0;
-                        let mut cls = probs.len() - 1;
-                        for (i, p) in probs.iter().enumerate() {
-                            cum += p;
-                            if u < cum {
-                                cls = i;
-                                break;
-                            }
-                        }
-                        cls
-                    }
-                };
-                let decision = router.route(
-                    RouteRequest { l_in: r.l_in, l_out: r.l_out, class },
-                    &mut route_rng,
-                );
-                let r = &mut reqs[req as usize];
-                r.pool = decision.pool;
-                r.l_in = decision.request.l_in;
-                r.l_out = decision.request.l_out;
-                if decision.compressed {
-                    n_compressed += 1;
-                }
-                let eff = eff_cap(&pools[decision.pool], now);
-                if !try_admit(&mut pools, decision.pool, req, &reqs, now,
-                              &mut events, eff, warmup_cutoff,
-                              &mut pool_wait, &mut pool_ttft, &mut pool_count,
-                              &mut all_wait, &mut all_ttft, &mut all_e2e,
-                              &mut all_count) {
-                    pools[decision.pool].enqueue(req);
-                }
-            }
-            EventKind::Completion { req: _, pool, instance } => {
-                pools[pool as usize].release(instance as usize, now);
-                loop {
-                    let Some(&head) = pools[pool as usize].queue.front()
-                    else { break };
-                    let eff = eff_cap(&pools[pool as usize], now);
-                    if !try_admit(&mut pools, pool as usize, head, &reqs, now,
-                                  &mut events, eff, warmup_cutoff,
-                                  &mut pool_wait, &mut pool_ttft,
-                                  &mut pool_count, &mut all_wait,
-                                  &mut all_ttft, &mut all_e2e,
-                                  &mut all_count) {
-                        break;
-                    }
-                    pools[pool as usize].queue.pop_front();
-                }
-            }
-            EventKind::Drain { pool } => loop {
-                let Some(&head) = pools[pool as usize].queue.front()
-                else { break };
-                let eff = eff_cap(&pools[pool as usize], now);
-                if !try_admit(&mut pools, pool as usize, head, &reqs, now,
-                              &mut events, eff, warmup_cutoff,
-                              &mut pool_wait, &mut pool_ttft, &mut pool_count,
-                              &mut all_wait, &mut all_ttft, &mut all_e2e,
-                              &mut all_count) {
-                    break;
-                }
-                pools[pool as usize].queue.pop_front();
-            },
-        }
-    }
-
-    Summary {
-        overall_p99_ttft: all_ttft.p99(),
-        overall_p99_wait: all_wait.p99(),
-        overall_p99_e2e: all_e2e.p99(),
-        overall_count: all_count,
-        pool_p99_ttft: pool_ttft.iter_mut().map(|s| s.p99()).collect(),
-        pool_counts: pool_count,
-        utilization: pools.iter().map(|p| p.utilization(horizon)).collect(),
-        max_queue_depth: pools.iter().map(|p| p.max_queue_depth).collect(),
-        n_compressed,
-    }
-}
-
+/// Assert production == reference, bit for bit, in both metrics modes.
 fn assert_fast_path_matches(
     w: &WorkloadSpec,
     pools: Vec<SimPool>,
@@ -262,17 +57,36 @@ fn assert_fast_path_matches(
     cfg: DesConfig,
     label: &str,
 ) {
-    let fast = summarize(
+    let sampled = w.sample_requests(cfg.n_requests, cfg.seed);
+    for mode in [MetricsMode::Exact, MetricsMode::Streaming] {
+        let cfg = DesConfig { metrics: mode, ..cfg.clone() };
+        let fast = summarize(Simulator::run_stream(
+            &pools, &router, &cfg, &sampled,
+        ));
+        let reference = summarize(run_reference(&pools, &router, &cfg,
+                                                &sampled));
+        assert_eq!(
+            fast, reference,
+            "{label} [{mode:?}]: production engine diverged from reference"
+        );
+        assert!(fast.overall_p99_ttft > 0.0, "{label} [{mode:?}]");
+    }
+    // And `Simulator::run` (which samples internally) matches run_stream
+    // on the externally sampled stream.
+    let via_run = summarize(
         Simulator::new(w.clone(), pools.clone(), router.clone(), cfg.clone())
             .run(),
     );
-    let reference = reference_run(w, &pools, &router, &cfg);
-    assert_eq!(fast, reference, "{label}: fast path diverged from reference");
-    assert!(fast.overall_p99_ttft > 0.0, "{label}");
+    let via_stream = summarize(Simulator::run_stream(&pools, &router, &cfg,
+                                                     &sampled));
+    assert_eq!(via_run, via_stream, "{label}: run() vs run_stream()");
 }
 
 fn gpu(name: &str) -> fleet_sim::gpu::profile::GpuProfile {
-    GpuCatalog::standard().get(name).unwrap().clone()
+    fleet_sim::gpu::catalog::GpuCatalog::standard()
+        .get(name)
+        .unwrap()
+        .clone()
 }
 
 #[test]
@@ -324,7 +138,8 @@ fn fast_path_matches_reference_compress_router() {
 #[test]
 fn fast_path_matches_reference_with_cap_window_and_classes() {
     // Cap-window drains and class-probability routing both touch the
-    // event-ordering edge cases the merge fast path must preserve.
+    // event-ordering edge cases the calendar queue must preserve
+    // (same-time drain/arrival/completion ties resolve by push order).
     let w = WorkloadSpec::builtin(BuiltinTrace::Lmsys, 80.0);
     let pools = vec![
         SimPool { gpu: gpu("A10G"), n_gpus: 6, ctx_budget: 4096.0,
@@ -346,6 +161,20 @@ fn fast_path_matches_reference_with_cap_window_and_classes() {
         &w, pools,
         RoutingPolicy::Model { class_to_pool: vec![0, 1, 2] },
         cfg, "lmsys capped multi-pool",
+    );
+}
+
+#[test]
+fn fast_path_matches_reference_under_overload() {
+    // Deep FIFO backlogs keep hundreds of completions in flight — the
+    // calendar queue's resize/rewind paths see real churn here.
+    let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 300.0);
+    let pools = vec![SimPool { gpu: gpu("A100"), n_gpus: 2,
+                               ctx_budget: 8192.0, batch_cap: None }];
+    assert_fast_path_matches(
+        &w, pools, RoutingPolicy::Random { n_pools: 1 },
+        DesConfig { n_requests: 6_000, seed: 41, ..Default::default() },
+        "azure overload",
     );
 }
 
@@ -374,4 +203,30 @@ fn fixed_seed_p99_is_reproducible_across_runs() {
     let a = mk();
     let b = mk();
     assert_eq!(a, b);
+}
+
+#[test]
+fn streaming_sketch_p99_close_to_exact_on_des_output() {
+    // The streaming sketch is not bit-equal to exact collection (that is
+    // the point: it keeps O(pools) memory) but its P99s must stay within
+    // the sketch's documented ~1% bin width on real DES output.
+    let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 120.0);
+    let pools = vec![
+        SimPool { gpu: gpu("A100"), n_gpus: 4, ctx_budget: 4096.0,
+                  batch_cap: None },
+        SimPool { gpu: gpu("A100"), n_gpus: 4, ctx_budget: 8192.0,
+                  batch_cap: None },
+    ];
+    let router = RoutingPolicy::Length { b_short: 4096.0 };
+    let base = DesConfig { n_requests: 8_000, seed: 11, ..Default::default() };
+    let sampled = w.sample_requests(base.n_requests, base.seed);
+    let mut exact = Simulator::run_stream(&pools, &router, &base, &sampled);
+    let streaming_cfg = DesConfig { metrics: MetricsMode::Streaming, ..base };
+    let mut sketch = Simulator::run_stream(&pools, &router, &streaming_cfg,
+                                           &sampled);
+    let (e, s) = (exact.overall.p99_ttft(), sketch.overall.p99_ttft());
+    assert!((s / e - 1.0).abs() < 0.02, "exact {e} sketch {s}");
+    let (ee, se) = (exact.overall.e2e.p99(), sketch.overall.e2e.p99());
+    assert!((se / ee - 1.0).abs() < 0.02, "exact {ee} sketch {se}");
+    assert_eq!(exact.overall.count, sketch.overall.count);
 }

@@ -28,12 +28,14 @@ fn load_aot() -> Option<AotSweep> {
         );
         return None;
     }
-    if cfg!(not(feature = "pjrt")) {
-        // Artifacts are present but this build carries the offline stub:
-        // parity cannot be checked, which is a skip, not a failure.
+    if cfg!(not(all(feature = "pjrt", feature = "xla"))) {
+        // Artifacts are present but this build carries a stub (no XLA
+        // client linked): parity cannot be checked, which is a skip, not
+        // a failure.
         eprintln!(
-            "SKIP: built without the `pjrt` feature — rebuild with \
-             `--features pjrt` to run the AOT parity checks"
+            "SKIP: built without the `xla` feature — rebuild with \
+             `--features xla` (and the xla crate) to run the AOT parity \
+             checks"
         );
         return None;
     }

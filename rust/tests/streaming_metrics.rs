@@ -1,0 +1,83 @@
+//! Streaming-sketch accuracy against exact-sorted statistics, on the
+//! three embedded trace CDFs (the satellite check for the O(pools)-memory
+//! metrics path): sketch P99 must track exact P99 within the documented
+//! ~1% bin width on every workload the planner ships.
+
+use fleet_sim::des::engine::{DesConfig, SimPool, Simulator};
+use fleet_sim::des::metrics::MetricsMode;
+use fleet_sim::gpu::catalog::GpuCatalog;
+use fleet_sim::router::RoutingPolicy;
+use fleet_sim::util::stats::Samples;
+use fleet_sim::workload::rng::Pcg64;
+use fleet_sim::workload::spec::{BuiltinTrace, WorkloadSpec};
+
+const TRACES: [BuiltinTrace; 3] =
+    [BuiltinTrace::Lmsys, BuiltinTrace::Azure, BuiltinTrace::Agent];
+
+#[test]
+fn sketch_p99_matches_exact_p99_on_all_embedded_traces() {
+    for trace in TRACES {
+        let w = WorkloadSpec::builtin(trace, 50.0);
+        let mut rng = Pcg64::new(1234, 9);
+        let mut exact = Samples::new();
+        let mut sketch = Samples::streaming();
+        for _ in 0..20_000 {
+            let total = w.cdf.sample(&mut rng);
+            exact.push(total);
+            sketch.push(total);
+        }
+        for q in [50.0, 90.0, 99.0] {
+            let e = exact.percentile(q);
+            let s = sketch.percentile(q);
+            assert!(
+                (s / e - 1.0).abs() < 0.02,
+                "{}: q={q} exact {e} sketch {s}",
+                w.name
+            );
+        }
+        let (em, sm) = (exact.mean(), sketch.mean());
+        assert!((em - sm).abs() < em.abs() * 1e-9 + 1e-9, "{}", w.name);
+        assert_eq!(exact.min(), sketch.min(), "{}", w.name);
+        assert_eq!(exact.max(), sketch.max(), "{}", w.name);
+    }
+}
+
+#[test]
+fn sketch_attainment_matches_exact_on_des_runs() {
+    // End-to-end: run the same fleet in both metrics modes on each trace
+    // and compare SLO attainment (Table-5-style numbers) and P99 TTFT.
+    let gpu = GpuCatalog::standard().get("H100").unwrap().clone();
+    for (trace, lambda) in [
+        (BuiltinTrace::Lmsys, 60.0),
+        (BuiltinTrace::Azure, 60.0),
+        (BuiltinTrace::Agent, 10.0),
+    ] {
+        let w = WorkloadSpec::builtin(trace, lambda);
+        let max_len = w.cdf.max_len();
+        let pools = vec![
+            SimPool { gpu: gpu.clone(), n_gpus: 4, ctx_budget: 4096.0,
+                      batch_cap: None },
+            SimPool { gpu: gpu.clone(), n_gpus: 8, ctx_budget: max_len,
+                      batch_cap: None },
+        ];
+        let router = RoutingPolicy::Length { b_short: 4096.0 };
+        let base = DesConfig { n_requests: 6_000, seed: 3,
+                               ..Default::default() };
+        let sampled = w.sample_requests(base.n_requests, base.seed);
+        let mut exact = Simulator::run_stream(&pools, &router, &base,
+                                              &sampled);
+        let stream_cfg = DesConfig { metrics: MetricsMode::Streaming,
+                                     ..base };
+        let mut sketch = Simulator::run_stream(&pools, &router, &stream_cfg,
+                                               &sampled);
+        let (e, s) = (exact.overall.p99_ttft(), sketch.overall.p99_ttft());
+        assert!((s / e - 1.0).abs() < 0.02,
+                "{}: exact P99 {e} sketch P99 {s}", w.name);
+        for slo in [250.0, 500.0, 2_000.0] {
+            let ae = exact.attainment(slo);
+            let asx = sketch.attainment(slo);
+            assert!((ae - asx).abs() < 0.02,
+                    "{}: slo {slo} exact {ae} sketch {asx}", w.name);
+        }
+    }
+}

@@ -1,0 +1,184 @@
+#!/usr/bin/env python3
+"""Perf regression gate for `fleet-sim bench` snapshots.
+
+Compares a new BENCH_N.json against a baseline (normally the committed
+BENCH_1.json) and exits non-zero on regression:
+
+* For every scenario in the baseline, the new snapshot must contain the
+  scenario, its engines must not have disagreed (``bit_identical`` must
+  not be false), and each shared numeric metric must not have dropped by
+  more than ``--tolerance`` (default 15%).
+* Metrics that are null on either side are skipped: absolute numbers
+  (``events_per_sec``) are machine-dependent and the committed baseline
+  carries null there, while ``speedup_vs_reference`` — production-engine
+  events/sec divided by reference-engine events/sec *on the same host* —
+  is machine-portable and is the primary gated metric.
+* ``--min-speedup X`` additionally requires every scenario's new
+  ``speedup_vs_reference`` to be at least X (the repo's bar is 2.0: the
+  calendar-queue engine must simulate >= 2x the events/sec of the
+  all-events-heap baseline engine).
+
+``--selftest`` runs the embedded unit cases (including the "deliberate
+>15% slowdown must fail" check) with no snapshot files needed.
+"""
+
+import argparse
+import json
+import sys
+
+GATED_METRICS = ("speedup_vs_reference", "events_per_sec")
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def compare(baseline, new, tolerance, min_speedup):
+    """Return a list of human-readable failure strings (empty = pass)."""
+    failures = []
+    base_scenarios = baseline.get("scenarios", {})
+    new_scenarios = new.get("scenarios", {})
+    if not base_scenarios:
+        failures.append("baseline has no scenarios")
+    for name, base_row in base_scenarios.items():
+        new_row = new_scenarios.get(name)
+        if new_row is None:
+            failures.append(f"{name}: missing from new snapshot")
+            continue
+        if new_row.get("bit_identical") is False:
+            failures.append(
+                f"{name}: production and reference engines disagreed "
+                "(bit_identical = false)"
+            )
+        for metric in GATED_METRICS:
+            base_v = base_row.get(metric)
+            new_v = new_row.get(metric)
+            if base_v is None or new_v is None:
+                continue  # machine-dependent or not measured on this side
+            floor = base_v * (1.0 - tolerance)
+            if new_v < floor:
+                failures.append(
+                    f"{name}: {metric} regressed {base_v:.4g} -> "
+                    f"{new_v:.4g} (floor {floor:.4g} at "
+                    f"{tolerance:.0%} tolerance)"
+                )
+        if min_speedup is not None:
+            speedup = new_row.get("speedup_vs_reference")
+            if speedup is None:
+                failures.append(
+                    f"{name}: no speedup_vs_reference in new snapshot "
+                    "(run fleet-sim bench with --engine both)"
+                )
+            elif speedup < min_speedup:
+                failures.append(
+                    f"{name}: speedup {speedup:.2f}x below required "
+                    f"{min_speedup:.2f}x"
+                )
+    return failures
+
+
+def selftest():
+    base = {
+        "scenarios": {
+            "s": {"speedup_vs_reference": 2.5, "events_per_sec": 1000.0}
+        }
+    }
+    ok = {
+        "scenarios": {
+            "s": {
+                "speedup_vs_reference": 2.4,
+                "events_per_sec": 950.0,
+                "bit_identical": True,
+            }
+        }
+    }
+    assert compare(base, ok, 0.15, 2.0) == [], "healthy snapshot must pass"
+
+    slow = {
+        "scenarios": {
+            "s": {
+                "speedup_vs_reference": 2.0,
+                "events_per_sec": 800.0,
+                "bit_identical": True,
+            }
+        }
+    }
+    fails = compare(base, slow, 0.15, None)
+    assert fails, "a deliberate 20% slowdown must fail the 15% gate"
+
+    weak = {
+        "scenarios": {
+            "s": {
+                "speedup_vs_reference": 1.5,
+                "events_per_sec": 2000.0,
+                "bit_identical": True,
+            }
+        }
+    }
+    null_base = {
+        "scenarios": {
+            "s": {"speedup_vs_reference": None, "events_per_sec": None}
+        }
+    }
+    fails = compare(null_base, weak, 0.15, 2.0)
+    assert any("below required" in f for f in fails), "min-speedup gate"
+    assert not any("regressed" in f for f in fails), "nulls must be skipped"
+
+    fails = compare(
+        {"scenarios": {"s": {}, "t": {}}}, {"scenarios": {"s": {}}}, 0.15, None
+    )
+    assert any("missing" in f for f in fails), "scenario coverage gate"
+
+    fails = compare(
+        {"scenarios": {"s": {}}},
+        {"scenarios": {"s": {"bit_identical": False}}},
+        0.15,
+        None,
+    )
+    assert any("bit_identical" in f for f in fails), "bit-identity gate"
+
+    print("perf_gate selftest OK")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", help="baseline snapshot (BENCH_1.json)")
+    ap.add_argument("--new", dest="new_path", help="new snapshot to gate")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="allowed fractional regression (default 0.15)")
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="required speedup_vs_reference per scenario")
+    ap.add_argument("--selftest", action="store_true",
+                    help="run embedded unit cases and exit")
+    args = ap.parse_args()
+
+    if args.selftest:
+        selftest()
+        return 0
+
+    if not args.baseline or not args.new_path:
+        ap.error("--baseline and --new are required (or use --selftest)")
+
+    baseline = load(args.baseline)
+    new = load(args.new_path)
+    failures = compare(baseline, new, args.tolerance, args.min_speedup)
+    if failures:
+        print(f"PERF GATE FAILED ({len(failures)} problem(s)):")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(
+        f"perf gate passed: {len(baseline.get('scenarios', {}))} scenario(s) "
+        f"within {args.tolerance:.0%} of {args.baseline}"
+        + (
+            f", all >= {args.min_speedup:.2f}x over reference"
+            if args.min_speedup is not None
+            else ""
+        )
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
