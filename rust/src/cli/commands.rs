@@ -32,6 +32,7 @@ COMMANDS:
   simulate    DES one layout: --trace T --lambda RPS --gpu NAME
               --n-short N --n-long N --b-short TOKENS [--requests N]
               [--router length|compress|random] [--seed S]
+              [--window MS [--slo MS]]  (per-window P99/attainment table)
   whatif      λ step thresholds: --trace T --gpu NAME
               [--lambdas 25,50,...] [--slo MS]
   disagg      prefill/decode planning: --trace T --lambda RPS
@@ -81,6 +82,14 @@ fn scenario_opts(args: &Args) -> anyhow::Result<ScenarioOpts> {
     opts.n_requests = args.get_usize("requests", opts.n_requests)?;
     opts.seed = args.get_usize("seed", opts.seed as usize)? as u64;
     opts.threads = args.get_usize("threads", opts.threads)?.max(1);
+    if args.get("window").is_some() {
+        let w = args.get_f64("window", 0.0)?;
+        anyhow::ensure!(
+            w.is_finite() && w >= 1.0,
+            "--window must be a finite width of at least 1 ms"
+        );
+        opts.window_ms = Some(w);
+    }
     Ok(opts)
 }
 
@@ -227,23 +236,46 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<String> {
     let mut t = Table::new(&["Pool", "requests", "util", "wait99", "TTFT99",
                              "E2E99", "max queue"]);
     for (i, p) in r.per_pool.iter_mut().enumerate() {
+        // A pool that served nothing has no latency distribution: render
+        // "-", not a vacuous 0 ms.
+        let served = p.stats.count;
+        let lat = move |s: f64| if served == 0 {
+            millis(f64::NAN)
+        } else {
+            millis(s)
+        };
         t.row(&[
             if i == 0 { "short".into() } else { "long".into() },
             p.stats.count.to_string(),
             format!("{:.0}%", p.utilization * 100.0),
-            millis(p.stats.wait.p99()),
-            millis(p.stats.ttft.p99()),
-            millis(p.stats.e2e.p99()),
+            lat(p.stats.wait.p99()),
+            lat(p.stats.ttft.p99()),
+            lat(p.stats.e2e.p99()),
             p.max_queue_depth.to_string(),
         ]);
     }
-    Ok(format!(
-        "{}\noverall P99 TTFT = {} over {} requests ({} compressed)\n",
+    let overall_p99 = if r.overall.count == 0 {
+        f64::NAN
+    } else {
+        r.overall.p99_ttft()
+    };
+    let mut out = format!(
+        "{}\noverall P99 TTFT = {} over {} requests ({} compressed, {} \
+         unserved)\n",
         t.render(),
-        millis(r.overall.p99_ttft()),
+        millis(overall_p99),
         r.n_requests,
-        r.n_compressed
-    ))
+        r.n_compressed,
+        r.n_unserved,
+    );
+    if let Some(wt) = crate::report::windows::windowed_table(
+        &mut r,
+        args.get_f64("slo", 500.0)?,
+    ) {
+        out.push_str(&wt.render());
+        out.push('\n');
+    }
+    Ok(out)
 }
 
 fn cmd_whatif(args: &Args) -> anyhow::Result<String> {
@@ -512,7 +544,8 @@ mod tests {
     #[test]
     fn scenarios_lists_registry() {
         let out = run_cmd(&["scenarios"]).unwrap();
-        for key in ["puzzle1", "split-threshold", "multimodel", "gridflex"] {
+        for key in ["puzzle1", "split-threshold", "multimodel", "gridflex",
+                    "diurnal", "size-to-peak"] {
             assert!(out.contains(key), "{out}");
         }
     }
@@ -554,6 +587,28 @@ mod tests {
         ])
         .unwrap();
         assert!(out.contains("overall P99 TTFT"), "{out}");
+        assert!(!out.contains("Windowed SLO"), "{out}");
+    }
+
+    #[test]
+    fn simulate_with_window_emits_windowed_table() {
+        let out = run_cmd(&[
+            "simulate", "--trace", "azure", "--lambda", "50", "--gpu",
+            "H100", "--n-short", "2", "--n-long", "2", "--requests", "2000",
+            "--window", "10000", "--slo", "500",
+        ])
+        .unwrap();
+        assert!(out.contains("Windowed SLO evaluation"), "{out}");
+        assert!(out.contains("attainment"), "{out}");
+        // Full argument set so the error can only come from the window
+        // validation itself, not an earlier missing-option failure.
+        let err = run_cmd(&[
+            "simulate", "--trace", "azure", "--lambda", "50", "--gpu",
+            "H100", "--n-short", "2", "--n-long", "2", "--requests", "500",
+            "--window", "-5",
+        ])
+        .unwrap_err();
+        assert!(format!("{err}").contains("--window"), "{err}");
     }
 
     #[test]

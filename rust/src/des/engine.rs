@@ -9,7 +9,11 @@
 //! * TTFT = slot wait + chunked prefill + one iteration (paper Eq. 5,
 //!   measured rather than approximated);
 //! * exactly two events per request, so 10^4 requests simulate in
-//!   milliseconds.
+//!   milliseconds;
+//! * requests still queued when the event stream drains (a dead pool:
+//!   live pools always drain) are counted as unserved — never silently
+//!   censored out of the SLO numbers (see
+//!   [`crate::des::metrics::DesResult::n_unserved`]).
 //!
 //! Hot-path structure (perf pass iteration 4, this PR's tentpole):
 //! requests live in an index-based arena (`Vec<Req>`, ids flow through
@@ -27,7 +31,8 @@
 //! GPU; in-flight requests are never preempted.
 
 use crate::des::event::{CalendarQueue, EventKind};
-use crate::des::metrics::{DesResult, LatencyStats, MetricsMode, PoolResult};
+use crate::des::metrics::{DesResult, MetricsCollector, MetricsMode,
+                          PoolResult};
 use crate::des::pool::DesPool;
 use crate::gpu::profile::GpuProfile;
 use crate::router::{RouteRequest, RoutingPolicy};
@@ -58,8 +63,12 @@ pub struct CapWindow {
 pub struct DesConfig {
     pub n_requests: usize,
     pub seed: u64,
-    /// Fraction of initial requests excluded from statistics (0 = paper
-    /// behavior: measure the whole run from the empty state).
+    /// Warmup fraction: requests *arriving* before
+    /// `warmup_frac * last_arrival` are excluded from statistics (0 =
+    /// paper behavior: measure the whole run from the empty state).
+    /// Time-based on purpose — dropping the first K requests by index
+    /// diverges under non-stationary arrivals, where a burst front-loads
+    /// the discarded window.
     pub warmup_frac: f64,
     /// Optional demand-response window applied to every pool.
     pub cap_window: Option<CapWindow>,
@@ -69,6 +78,10 @@ pub struct DesConfig {
     /// Latency aggregation: exact sample vectors (default) or the
     /// O(pools)-memory streaming sketch.
     pub metrics: MetricsMode,
+    /// When set, additionally collect per-window TTFT stats over
+    /// fixed-width windows of this many ms (time-windowed SLO
+    /// evaluation; see [`crate::des::metrics::WindowedStats`]).
+    pub window_ms: Option<f64>,
 }
 
 impl Default for DesConfig {
@@ -80,6 +93,7 @@ impl Default for DesConfig {
             cap_window: None,
             class_probs: None,
             metrics: MetricsMode::Exact,
+            window_ms: None,
         }
     }
 }
@@ -120,9 +134,7 @@ fn try_admit(
     now: f64,
     events: &mut CalendarQueue,
     cap_window: &Option<CapWindow>,
-    per_pool: &mut [LatencyStats],
-    overall: &mut LatencyStats,
-    warmup_cutoff: usize,
+    metrics: &mut MetricsCollector,
 ) -> bool {
     let eff = eff_cap(cap_window, &pools[pool_idx], now);
     let pool = &mut pools[pool_idx];
@@ -156,15 +168,11 @@ fn try_admit(
     let prefill = (req.l_in / pool.gpu.chunk).ceil() * t_iter;
     let ttft = wait + prefill + t_iter;
     let e2e = wait + hold;
-    if req_id as usize >= warmup_cutoff {
-        per_pool[pool_idx].record(wait, ttft, e2e);
-        overall.record(wait, ttft, e2e);
-    }
+    metrics.record(pool_idx, req.arrival_ms, wait, ttft, e2e);
     true
 }
 
 /// Admit queued requests while capacity allows.
-#[allow(clippy::too_many_arguments)]
 fn drain_queue(
     pools: &mut [DesPool],
     pool_idx: usize,
@@ -172,14 +180,11 @@ fn drain_queue(
     now: f64,
     events: &mut CalendarQueue,
     cap_window: &Option<CapWindow>,
-    per_pool: &mut [LatencyStats],
-    overall: &mut LatencyStats,
-    warmup_cutoff: usize,
+    metrics: &mut MetricsCollector,
 ) {
     while let Some(&head) = pools[pool_idx].queue.front() {
         if !try_admit(
-            pools, pool_idx, head, reqs, now, events, cap_window, per_pool,
-            overall, warmup_cutoff,
+            pools, pool_idx, head, reqs, now, events, cap_window, metrics,
         ) {
             break;
         }
@@ -273,12 +278,14 @@ impl Simulator {
             }
         }
 
-        let warmup_cutoff = (config.warmup_frac * n as f64) as usize;
-        let per_pool_cap = n / pools.len().max(1) + 16;
-        let mut per_pool: Vec<LatencyStats> = (0..pools.len())
-            .map(|_| LatencyStats::for_mode(config.metrics, per_pool_cap))
-            .collect();
-        let mut overall = LatencyStats::for_mode(config.metrics, n);
+        // Time-based warmup: the stream is known upfront, so the cutoff
+        // instant is warmup_frac of the arrival span. warmup_frac = 0
+        // keeps every request (bit-identical to the historical behavior).
+        let warmup_time_ms = config.warmup_frac
+            * sampled.last().map_or(0.0, |r| r.arrival_ms);
+        let mut metrics = MetricsCollector::new(
+            config.metrics, pools.len(), n, config.window_ms, warmup_time_ms,
+        );
         let mut n_compressed = 0usize;
         let mut n_events = 0usize;
         let mut horizon = 0.0f64;
@@ -298,6 +305,7 @@ impl Simulator {
                 let r = &reqs[req as usize];
                 let now = r.arrival_ms;
                 horizon = horizon.max(now);
+                metrics.record_arrival(now);
                 let class = match &config.class_probs {
                     None => 0,
                     Some(probs) => {
@@ -326,8 +334,7 @@ impl Simulator {
                 }
                 if !try_admit(
                     &mut pools, decision.pool, req, &reqs, now, &mut events,
-                    &config.cap_window, &mut per_pool, &mut overall,
-                    warmup_cutoff,
+                    &config.cap_window, &mut metrics,
                 ) {
                     pools[decision.pool].enqueue(req);
                 }
@@ -343,37 +350,44 @@ impl Simulator {
                     pools[pool as usize].release(instance as usize, now);
                     drain_queue(
                         &mut pools, pool as usize, &reqs, now, &mut events,
-                        &config.cap_window, &mut per_pool, &mut overall,
-                        warmup_cutoff,
+                        &config.cap_window, &mut metrics,
                     );
                 }
                 EventKind::Drain { pool } => {
                     drain_queue(
                         &mut pools, pool as usize, &reqs, now, &mut events,
-                        &config.cap_window, &mut per_pool, &mut overall,
-                        warmup_cutoff,
+                        &config.cap_window, &mut metrics,
                     );
                 }
             }
         }
 
+        let (n_unserved, max_unserved_wait, pool_unserved) = metrics
+            .scan_unserved(&pools, |req| reqs[req as usize].arrival_ms,
+                           horizon);
+
         DesResult {
             per_pool: pools
                 .iter()
-                .zip(per_pool)
-                .map(|(p, stats)| PoolResult {
+                .zip(metrics.per_pool)
+                .zip(pool_unserved)
+                .map(|((p, stats), n_unserved)| PoolResult {
                     stats,
                     utilization: p.utilization(horizon),
                     max_queue_depth: p.max_queue_depth,
                     slots_per_gpu: p.slots_per_gpu,
                     n_gpus: p.instances.len(),
+                    n_unserved,
                 })
                 .collect(),
-            overall,
+            overall: metrics.overall,
             horizon_ms: horizon,
             n_requests: n,
             n_compressed,
             n_events,
+            n_unserved,
+            max_unserved_wait_ms: max_unserved_wait,
+            windows: metrics.windows,
         }
     }
 }
@@ -532,13 +546,80 @@ mod tests {
     }
 
     #[test]
-    fn warmup_excludes_early_requests() {
+    fn warmup_excludes_requests_by_arrival_time() {
+        // Time-based warmup: requests arriving before 20% of the arrival
+        // span are dropped — exactly those, as counted on the stream.
         let (pools, router) = two_pool(a100(), 2, 2, 4096.0, 8192.0);
         let cfg = DesConfig {
             n_requests: 1_000, warmup_frac: 0.2, ..Default::default()
         };
-        let r = Simulator::new(azure(50.0), pools, router, cfg).run();
-        assert_eq!(r.overall.count, 800);
+        let w = azure(50.0);
+        let sampled = w.sample_requests(cfg.n_requests, cfg.seed);
+        let cutoff = 0.2 * sampled.last().unwrap().arrival_ms;
+        let expected =
+            sampled.iter().filter(|r| r.arrival_ms >= cutoff).count();
+        let r = Simulator::new(w, pools, router, cfg).run();
+        assert_eq!(r.overall.count, expected);
+        // Poisson arrivals: the time-based count is near (but not
+        // necessarily exactly) the index-based 800.
+        assert!((700..=900).contains(&expected), "expected = {expected}");
+        assert_eq!(r.n_unserved, 0);
+    }
+
+    #[test]
+    fn dead_pool_requests_are_unserved_not_censored() {
+        // Long requests route to a pool with zero GPUs: they queue
+        // forever. Pre-fix, they simply vanished from the stats and the
+        // fleet "met" its SLO on the short traffic alone.
+        let pools = vec![
+            SimPool { gpu: h100(), n_gpus: 4, ctx_budget: 4096.0,
+                      batch_cap: None },
+            SimPool { gpu: h100(), n_gpus: 0, ctx_budget: 8192.0,
+                      batch_cap: None },
+        ];
+        let cfg = DesConfig { n_requests: 5_000, ..Default::default() };
+        let sim = Simulator::new(
+            azure(20.0), pools, RoutingPolicy::Length { b_short: 4096.0 },
+            cfg,
+        );
+        let mut r = sim.run();
+        assert!(r.n_unserved > 0);
+        assert_eq!(r.overall.count + r.n_unserved, 5_000);
+        assert_eq!(r.per_pool[1].stats.count, 0);
+        assert_eq!(r.per_pool[1].n_unserved, r.n_unserved);
+        // The served traffic is fast…
+        assert!(r.overall.p99_ttft() < 500.0);
+        // …but the backlog has waited essentially the whole horizon.
+        assert!(r.max_unserved_wait_ms > 500.0);
+        assert!(!r.meets_slo(500.0), "censored backlog must fail the SLO");
+        // Attainment counts the backlog in the denominator.
+        let att = r.attainment(500.0);
+        let served_frac = r.overall.count as f64 / 5_000.0;
+        assert!(att <= served_frac + 1e-12, "att {att} served {served_frac}");
+    }
+
+    #[test]
+    fn windowed_stats_cover_all_measured_requests() {
+        // 10 req/s on 4+4 A100s: comfortably stable, so every window
+        // must pass a generous SLO.
+        let (pools, router) = two_pool(a100(), 4, 4, 4096.0, 8192.0);
+        let cfg = DesConfig {
+            n_requests: 4_000,
+            window_ms: Some(5_000.0),
+            ..Default::default()
+        };
+        let mut r = Simulator::new(azure(10.0), pools, router, cfg).run();
+        let windows = r.windows.take().unwrap();
+        let arrived: usize =
+            (0..windows.n_windows()).map(|i| windows.n_arrived(i)).sum();
+        let served: usize =
+            (0..windows.n_windows()).map(|i| windows.n_served(i)).sum();
+        assert_eq!(arrived, 4_000);
+        assert_eq!(served, 4_000);
+        assert!(windows.n_windows() >= 4);
+        // A comfortable stationary fleet meets the SLO in every window.
+        let mut ws = windows;
+        assert!(ws.all_meet_slo(2_000.0));
     }
 
     #[test]

@@ -7,7 +7,27 @@
 //! O(1)-memory [`crate::util::stats::LogHistogram`] sketches so memory
 //! stays O(pools) instead of O(requests) — the mode the perf harness and
 //! high-volume sweeps run in.
+//!
+//! Three semantics matter for honest SLO numbers (this PR's bugfixes):
+//!
+//! * **No censoring.** Requests that are still queued when the event
+//!   stream drains (a dead or wedged pool) are counted as
+//!   [`DesResult::n_unserved`], included in the [`DesResult::attainment`]
+//!   denominator, and fail [`DesResult::meets_slo`] outright — at drain
+//!   they will never be served, so their TTFT is unbounded.
+//! * **No vacuous attainment.** An empty sample answers NaN, never 1.0
+//!   (see [`crate::util::stats::Samples::fraction_le`]).
+//! * **Time-based warmup.** `warmup_frac` discards requests *arriving*
+//!   before `warmup_frac * last_arrival`, not the first K by index —
+//!   index-based warmup diverges under non-stationary arrivals, where a
+//!   burst front-loads the discarded window.
+//!
+//! For non-stationary arrivals, [`WindowedStats`] additionally buckets
+//! TTFT by arrival time into fixed-width windows so the SLO can be
+//! checked *per window* (a fleet sized for the long-run mean passes the
+//! aggregate P99 while failing every peak window).
 
+use crate::des::pool::DesPool;
 use crate::util::stats::Samples;
 
 /// How the DES aggregates per-request latencies.
@@ -73,12 +93,261 @@ impl LatencyStats {
     }
 }
 
+/// TTFT statistics bucketed by arrival time into fixed-width windows
+/// (the time-windowed SLO evaluation behind `DesConfig::window_ms`).
+///
+/// Each window tracks how many measured requests *arrived* in it and the
+/// TTFTs of those that were eventually served; the difference is the
+/// window's unserved count. Works in both metrics modes, and both DES
+/// engines produce bit-identical windows (bucketing depends only on
+/// arrival time, which the engines share).
+#[derive(Debug, Clone)]
+pub struct WindowedStats {
+    width_ms: f64,
+    mode: MetricsMode,
+    /// Absolute index of window 0 (`floor(first_arrival / width)`), so a
+    /// replay trace with a large time offset (epoch-style timestamps, or
+    /// a long warmup) doesn't allocate empty windows from t = 0.
+    base: usize,
+    arrived: Vec<usize>,
+    ttft: Vec<Samples>,
+}
+
+impl WindowedStats {
+    pub fn new(width_ms: f64, mode: MetricsMode) -> Self {
+        assert!(width_ms > 0.0 && width_ms.is_finite());
+        WindowedStats {
+            width_ms,
+            mode,
+            base: 0,
+            arrived: Vec::new(),
+            ttft: Vec::new(),
+        }
+    }
+
+    pub fn width_ms(&self) -> f64 {
+        self.width_ms
+    }
+
+    /// Hard cap on allocated windows (~64 MB worst case): storage is
+    /// dense from the first measured arrival, so a tiny width over a
+    /// long horizon — or a replay trace with a huge internal gap — must
+    /// fail loudly instead of grinding into an OOM.
+    const MAX_WINDOWS: usize = 1 << 20;
+
+    /// Relative window slot for `arrival_ms`, growing storage as needed.
+    /// The first recorded arrival anchors window 0; recording happens in
+    /// arrival-time order (and a request's service is never recorded
+    /// before its arrival), so nothing can precede the anchor.
+    fn slot(&mut self, arrival_ms: f64) -> usize {
+        let abs = (arrival_ms / self.width_ms) as usize;
+        if self.ttft.is_empty() {
+            self.base = abs;
+        }
+        debug_assert!(abs >= self.base, "record precedes first arrival");
+        let i = abs.saturating_sub(self.base);
+        assert!(
+            i < Self::MAX_WINDOWS,
+            "window_ms = {} spans more than {} windows over this \
+             horizon; use a wider window",
+            self.width_ms,
+            Self::MAX_WINDOWS
+        );
+        while self.ttft.len() <= i {
+            self.arrived.push(0);
+            self.ttft.push(match self.mode {
+                MetricsMode::Exact => Samples::new(),
+                MetricsMode::Streaming => Samples::streaming(),
+            });
+        }
+        i
+    }
+
+    /// Count a measured request arriving at `arrival_ms` (the window's
+    /// attainment denominator).
+    pub fn record_arrival(&mut self, arrival_ms: f64) {
+        let i = self.slot(arrival_ms);
+        self.arrived[i] += 1;
+    }
+
+    /// Record the TTFT of a served request against its arrival window.
+    pub fn record_served(&mut self, arrival_ms: f64, ttft_ms: f64) {
+        let i = self.slot(arrival_ms);
+        self.ttft[i].push(ttft_ms);
+    }
+
+    pub fn n_windows(&self) -> usize {
+        self.ttft.len()
+    }
+
+    /// Window `i` covers `[start_ms(i), start_ms(i) + width_ms)` in
+    /// absolute simulation time.
+    pub fn start_ms(&self, i: usize) -> f64 {
+        (self.base + i) as f64 * self.width_ms
+    }
+
+    pub fn n_arrived(&self, i: usize) -> usize {
+        self.arrived[i]
+    }
+
+    pub fn n_served(&self, i: usize) -> usize {
+        self.ttft[i].len()
+    }
+
+    /// Arrived in window `i` but never admitted before the run drained.
+    pub fn n_unserved(&self, i: usize) -> usize {
+        self.arrived[i].saturating_sub(self.ttft[i].len())
+    }
+
+    /// P99 TTFT over requests that arrived in window `i`; NaN if none
+    /// were served.
+    pub fn p99_ttft(&mut self, i: usize) -> f64 {
+        if self.ttft[i].is_empty() {
+            return f64::NAN;
+        }
+        self.ttft[i].p99()
+    }
+
+    /// Fraction of window-`i` arrivals with TTFT <= `slo_ms`; unserved
+    /// arrivals count against attainment. NaN for an empty window.
+    pub fn attainment(&self, i: usize, slo_ms: f64) -> f64 {
+        let arrived = self.arrived[i];
+        if arrived == 0 {
+            return f64::NAN;
+        }
+        let served = self.ttft[i].len();
+        let served_le = if served == 0 {
+            0.0
+        } else {
+            self.ttft[i].fraction_le(slo_ms) * served as f64
+        };
+        served_le / arrived as f64
+    }
+
+    /// A window with no arrivals passes vacuously; otherwise every
+    /// arrival must have been served and the window P99 TTFT must meet
+    /// the SLO.
+    pub fn meets_slo(&mut self, i: usize, slo_ms: f64) -> bool {
+        if self.arrived[i] == 0 {
+            return true;
+        }
+        self.n_unserved(i) == 0 && self.p99_ttft(i) <= slo_ms
+    }
+
+    /// Size-to-peak feasibility: *every* window meets the SLO.
+    pub fn all_meet_slo(&mut self, slo_ms: f64) -> bool {
+        for i in 0..self.n_windows() {
+            if !self.meets_slo(i, slo_ms) {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// Shared per-run metric collection for both DES engines (production
+/// calendar-queue and the reference heap): per-pool + overall latency
+/// stats, optional windowed stats, and the time-based warmup gate.
+/// Keeping the recording rules here guarantees the two engines stay
+/// bit-identical.
+#[derive(Debug)]
+pub struct MetricsCollector {
+    pub per_pool: Vec<LatencyStats>,
+    pub overall: LatencyStats,
+    pub windows: Option<WindowedStats>,
+    /// Requests arriving before this instant are excluded from stats.
+    pub warmup_time_ms: f64,
+}
+
+impl MetricsCollector {
+    pub fn new(
+        mode: MetricsMode,
+        n_pools: usize,
+        n_requests: usize,
+        window_ms: Option<f64>,
+        warmup_time_ms: f64,
+    ) -> Self {
+        let per_pool_cap = n_requests / n_pools.max(1) + 16;
+        MetricsCollector {
+            per_pool: (0..n_pools)
+                .map(|_| LatencyStats::for_mode(mode, per_pool_cap))
+                .collect(),
+            overall: LatencyStats::for_mode(mode, n_requests),
+            windows: window_ms.map(|w| WindowedStats::new(w, mode)),
+            warmup_time_ms,
+        }
+    }
+
+    /// Whether a request arriving at `arrival_ms` is measured (past the
+    /// time-based warmup cutoff).
+    pub fn measured(&self, arrival_ms: f64) -> bool {
+        arrival_ms >= self.warmup_time_ms
+    }
+
+    /// Count an arrival (windowed attainment denominators).
+    pub fn record_arrival(&mut self, arrival_ms: f64) {
+        if !self.measured(arrival_ms) {
+            return;
+        }
+        if let Some(w) = &mut self.windows {
+            w.record_arrival(arrival_ms);
+        }
+    }
+
+    /// Record a served request's latencies (called at admission).
+    pub fn record(
+        &mut self,
+        pool: usize,
+        arrival_ms: f64,
+        wait_ms: f64,
+        ttft_ms: f64,
+        e2e_ms: f64,
+    ) {
+        if !self.measured(arrival_ms) {
+            return;
+        }
+        self.per_pool[pool].record(wait_ms, ttft_ms, e2e_ms);
+        self.overall.record(wait_ms, ttft_ms, e2e_ms);
+        if let Some(w) = &mut self.windows {
+            w.record_served(arrival_ms, ttft_ms);
+        }
+    }
+
+    /// Post-run anti-censoring scan, shared by both engines: every
+    /// measured request still sitting in a pool queue when the event
+    /// stream drained (a dead or wedged pool — live pools always drain)
+    /// is unserved, never silently dropped. Returns
+    /// `(n_unserved, max_unserved_wait_ms, per_pool_unserved)`.
+    pub fn scan_unserved<F: Fn(u32) -> f64>(
+        &self,
+        pools: &[DesPool],
+        arrival_of: F,
+        horizon_ms: f64,
+    ) -> (usize, f64, Vec<usize>) {
+        let mut n_unserved = 0usize;
+        let mut max_wait = 0.0f64;
+        let mut per_pool = vec![0usize; pools.len()];
+        for (p, pool) in pools.iter().enumerate() {
+            for &req in &pool.queue {
+                let arrival = arrival_of(req);
+                if !self.measured(arrival) {
+                    continue;
+                }
+                n_unserved += 1;
+                per_pool[p] += 1;
+                max_wait = max_wait.max(horizon_ms - arrival);
+            }
+        }
+        (n_unserved, max_wait, per_pool)
+    }
+}
+
 /// Full DES output: per-pool and overall stats plus run metadata.
 #[derive(Debug, Clone)]
 pub struct DesResult {
     pub per_pool: Vec<PoolResult>,
     pub overall: LatencyStats,
-    /// Simulated horizon, ms (last completion).
+    /// Simulated horizon, ms (last event processed).
     pub horizon_ms: f64,
     pub n_requests: usize,
     /// Requests the router compressed (CompressAndRoute).
@@ -86,6 +355,16 @@ pub struct DesResult {
     /// Simulation events processed (arrivals + completions + drains) —
     /// the numerator of the perf harness's events/sec metric.
     pub n_events: usize,
+    /// Measured requests still queued when the event stream drained
+    /// (e.g. routed to a dead pool). Censoring these silently is the bug
+    /// that let an overloaded-or-broken fleet report perfect attainment.
+    pub n_unserved: usize,
+    /// Largest wait-so-far (horizon - arrival) among unserved requests;
+    /// 0 when every request was served. Diagnostic — `meets_slo` fails
+    /// on any unserved request regardless of this value.
+    pub max_unserved_wait_ms: f64,
+    /// Per-window TTFT series when `DesConfig::window_ms` was set.
+    pub windows: Option<WindowedStats>,
 }
 
 /// Summary for one pool after the run.
@@ -97,25 +376,74 @@ pub struct PoolResult {
     pub max_queue_depth: usize,
     pub slots_per_gpu: u32,
     pub n_gpus: usize,
+    /// Measured requests still in this pool's queue at the end of the
+    /// run.
+    pub n_unserved: usize,
 }
 
 impl DesResult {
-    /// The paper's SLO check: overall P99 TTFT <= slo.
+    /// The paper's SLO check — overall P99 TTFT <= slo — hardened
+    /// against censoring: any unserved request fails it. Unserved means
+    /// still queued when the event stream *drained*, so it will never be
+    /// served — its TTFT is unbounded no matter how short its wait-so-far
+    /// looks when a short horizon cuts the run off.
     pub fn meets_slo(&mut self, slo_ms: f64) -> bool {
-        self.overall.p99_ttft() <= slo_ms
+        if self.overall.count == 0 {
+            // Nothing measured (e.g. warmup swallowed the whole run,
+            // which also hides unserved backlogs from the scan): with
+            // real traffic the check is undefined, and undefined must
+            // not read as passing. A zero-request run passes vacuously.
+            return self.n_requests == 0;
+        }
+        self.n_unserved == 0 && self.overall.p99_ttft() <= slo_ms
+    }
+
+    /// Windowed SLO check: every window must meet the SLO (the
+    /// size-to-peak feasibility criterion). Falls back to the aggregate
+    /// [`Self::meets_slo`] when the run collected no windows.
+    pub fn meets_slo_in_every_window(&mut self, slo_ms: f64) -> bool {
+        match &mut self.windows {
+            Some(w) => w.all_meet_slo(slo_ms),
+            None => self.meets_slo(slo_ms),
+        }
     }
 
     /// Fraction of requests with TTFT <= slo (the "99.98%" style numbers
     /// in Table 5). Exact in exact metrics mode; within one sketch bin in
-    /// streaming mode.
+    /// streaming mode. Unserved requests count against attainment (they
+    /// are in the denominator); NaN when nothing was measured at all.
     pub fn attainment(&self, slo_ms: f64) -> f64 {
-        self.overall.ttft.fraction_le(slo_ms)
+        let denom = self.overall.count + self.n_unserved;
+        if denom == 0 {
+            return f64::NAN;
+        }
+        let served_le = if self.overall.count == 0 {
+            0.0
+        } else {
+            self.overall.ttft.fraction_le(slo_ms)
+                * self.overall.count as f64
+        };
+        served_le / denom as f64
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn empty_result() -> DesResult {
+        DesResult {
+            per_pool: vec![],
+            overall: LatencyStats::default(),
+            horizon_ms: 1000.0,
+            n_requests: 100,
+            n_compressed: 0,
+            n_events: 200,
+            n_unserved: 0,
+            max_unserved_wait_ms: 0.0,
+            windows: None,
+        }
+    }
 
     #[test]
     fn record_and_percentiles() {
@@ -130,14 +458,7 @@ mod tests {
 
     #[test]
     fn slo_and_attainment() {
-        let mut r = DesResult {
-            per_pool: vec![],
-            overall: LatencyStats::default(),
-            horizon_ms: 1000.0,
-            n_requests: 100,
-            n_compressed: 0,
-            n_events: 200,
-        };
+        let mut r = empty_result();
         for i in 0..100 {
             let ttft = if i < 98 { 10.0 } else { 600.0 };
             r.overall.record(0.0, ttft, ttft + 5.0);
@@ -145,6 +466,47 @@ mod tests {
         assert!(!r.meets_slo(500.0)); // p99 = 600
         assert!(r.meets_slo(700.0));
         assert!((r.attainment(500.0) - 0.98).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unserved_requests_poison_slo_and_attainment() {
+        let mut r = empty_result();
+        for _ in 0..80 {
+            r.overall.record(0.0, 10.0, 15.0);
+        }
+        // 20 requests never served; the oldest has waited 900 ms.
+        r.n_unserved = 20;
+        r.max_unserved_wait_ms = 900.0;
+        // Served-only P99 is 10 ms, but the backlog is permanent (the
+        // event stream drained) — the pre-fix check (p99 only) would
+        // have passed.
+        assert!(r.overall.p99_ttft() <= 500.0);
+        assert!(!r.meets_slo(500.0));
+        // Attainment counts the unserved in the denominator: 80/100.
+        assert!((r.attainment(500.0) - 0.80).abs() < 1e-12);
+        // A short horizon (wait-so-far under the SLO) must not re-hide
+        // the backlog: unserved-at-drain means never-served.
+        r.max_unserved_wait_ms = 100.0;
+        assert!(!r.meets_slo(500.0));
+        r.n_unserved = 0;
+        assert!(r.meets_slo(500.0));
+    }
+
+    #[test]
+    fn empty_result_reports_nan_attainment_not_perfect() {
+        let mut r = empty_result();
+        assert!(r.attainment(500.0).is_nan());
+        // Real traffic but nothing measured: undefined, never "passing".
+        assert!(!r.meets_slo(500.0));
+        // A literally empty simulation passes vacuously.
+        r.n_requests = 0;
+        assert!(r.meets_slo(500.0));
+        // A dead pool: nothing served, everything unserved -> 0%, and
+        // the vacuous 0-ms P99 of the empty sample can never pass.
+        let mut dead = empty_result();
+        dead.n_unserved = 50;
+        assert_eq!(dead.attainment(500.0), 0.0);
+        assert!(!dead.meets_slo(500.0));
     }
 
     #[test]
@@ -162,5 +524,75 @@ mod tests {
         assert_eq!(sketch.wait.p99(), 0.0);
         let (e, s) = (exact.p99_ttft(), sketch.p99_ttft());
         assert!((s / e - 1.0).abs() < 0.02, "exact {e} sketch {s}");
+    }
+
+    #[test]
+    fn windowed_stats_bucket_by_arrival_time() {
+        for mode in [MetricsMode::Exact, MetricsMode::Streaming] {
+            let mut w = WindowedStats::new(1000.0, mode);
+            // Window 0: three arrivals, all served fast.
+            for t in [100.0, 400.0, 900.0] {
+                w.record_arrival(t);
+                w.record_served(t, 50.0);
+            }
+            // Window 2: two arrivals, one served slow, one never served.
+            w.record_arrival(2100.0);
+            w.record_served(2100.0, 800.0);
+            w.record_arrival(2500.0);
+            assert_eq!(w.n_windows(), 3);
+            assert_eq!(w.start_ms(2), 2000.0);
+            assert_eq!(w.n_arrived(0), 3);
+            assert_eq!(w.n_unserved(0), 0);
+            assert_eq!(w.n_arrived(1), 0);
+            assert_eq!(w.n_unserved(2), 1);
+            assert_eq!(w.p99_ttft(0), 50.0);
+            assert!(w.p99_ttft(1).is_nan());
+            assert!((w.attainment(0, 500.0) - 1.0).abs() < 1e-12);
+            assert!(w.attainment(1, 500.0).is_nan());
+            // Window 2: 0 of 2 arrivals attained (one slow, one unserved).
+            assert!((w.attainment(2, 500.0) - 0.0).abs() < 1e-12);
+            assert!((w.attainment(2, 900.0) - 0.5).abs() < 1e-12);
+            assert!(w.meets_slo(0, 500.0), "{mode:?}");
+            assert!(w.meets_slo(1, 500.0), "empty window passes vacuously");
+            assert!(!w.meets_slo(2, 900.0), "unserved arrival must fail");
+            assert!(!w.all_meet_slo(500.0));
+        }
+    }
+
+    #[test]
+    fn collector_gates_on_time_based_warmup() {
+        let mut c = MetricsCollector::new(
+            MetricsMode::Exact, 2, 100, Some(500.0), 1000.0,
+        );
+        c.record_arrival(400.0); // warmup: dropped
+        c.record(0, 400.0, 1.0, 2.0, 3.0);
+        assert_eq!(c.overall.count, 0);
+        c.record_arrival(1200.0);
+        c.record(1, 1200.0, 1.0, 2.0, 3.0);
+        assert_eq!(c.overall.count, 1);
+        assert_eq!(c.per_pool[0].count, 0);
+        assert_eq!(c.per_pool[1].count, 1);
+        // The first *measured* arrival anchors window 0 (base offset):
+        // no empty windows are allocated for the warmup span.
+        let w = c.windows.as_ref().unwrap();
+        assert_eq!(w.n_windows(), 1);
+        assert_eq!(w.start_ms(0), 1000.0);
+        assert_eq!(w.n_arrived(0), 1);
+        assert_eq!(w.n_served(0), 1);
+    }
+
+    #[test]
+    fn windowed_stats_anchor_at_first_arrival_not_time_zero() {
+        // An epoch-offset replay trace must not allocate ~10^8 empty
+        // windows between t = 0 and the first arrival.
+        let mut w = WindowedStats::new(10_000.0, MetricsMode::Exact);
+        let epoch = 1.7e12;
+        w.record_arrival(epoch + 500.0);
+        w.record_served(epoch + 500.0, 42.0);
+        w.record_arrival(epoch + 25_000.0);
+        assert_eq!(w.n_windows(), 3);
+        assert_eq!(w.start_ms(0), (epoch / 10_000.0).floor() * 10_000.0);
+        assert_eq!(w.n_arrived(0), 1);
+        assert_eq!(w.n_unserved(2), 1);
     }
 }

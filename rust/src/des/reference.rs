@@ -18,7 +18,7 @@
 
 use crate::des::engine::{CapWindow, DesConfig, SimPool};
 use crate::des::event::{EventKind, EventQueue};
-use crate::des::metrics::{DesResult, LatencyStats, PoolResult};
+use crate::des::metrics::{DesResult, MetricsCollector, PoolResult};
 use crate::des::pool::DesPool;
 use crate::router::{RouteRequest, RoutingPolicy};
 use crate::workload::rng::Pcg64;
@@ -49,9 +49,7 @@ fn try_admit(
     now: f64,
     events: &mut EventQueue,
     cap_window: &Option<CapWindow>,
-    per_pool: &mut [LatencyStats],
-    overall: &mut LatencyStats,
-    warmup_cutoff: usize,
+    metrics: &mut MetricsCollector,
 ) -> bool {
     let eff = eff_cap(cap_window, &pools[pool_idx], now);
     let pool = &mut pools[pool_idx];
@@ -82,14 +80,10 @@ fn try_admit(
     let prefill = (req.l_in / pool.gpu.chunk).ceil() * t_iter;
     let ttft = wait + prefill + t_iter;
     let e2e = wait + hold;
-    if req_id as usize >= warmup_cutoff {
-        per_pool[pool_idx].record(wait, ttft, e2e);
-        overall.record(wait, ttft, e2e);
-    }
+    metrics.record(pool_idx, req.arrival_ms, wait, ttft, e2e);
     true
 }
 
-#[allow(clippy::too_many_arguments)]
 fn drain_queue(
     pools: &mut [DesPool],
     pool_idx: usize,
@@ -97,14 +91,11 @@ fn drain_queue(
     now: f64,
     events: &mut EventQueue,
     cap_window: &Option<CapWindow>,
-    per_pool: &mut [LatencyStats],
-    overall: &mut LatencyStats,
-    warmup_cutoff: usize,
+    metrics: &mut MetricsCollector,
 ) {
     while let Some(&head) = pools[pool_idx].queue.front() {
         if !try_admit(
-            pools, pool_idx, head, reqs, now, events, cap_window, per_pool,
-            overall, warmup_cutoff,
+            pools, pool_idx, head, reqs, now, events, cap_window, metrics,
         ) {
             break;
         }
@@ -154,12 +145,11 @@ pub fn run_reference(
         }
     }
 
-    let warmup_cutoff = (config.warmup_frac * n as f64) as usize;
-    let per_pool_cap = n / pools.len().max(1) + 16;
-    let mut per_pool: Vec<LatencyStats> = (0..pools.len())
-        .map(|_| LatencyStats::for_mode(config.metrics, per_pool_cap))
-        .collect();
-    let mut overall = LatencyStats::for_mode(config.metrics, n);
+    let warmup_time_ms = config.warmup_frac
+        * sampled.last().map_or(0.0, |r| r.arrival_ms);
+    let mut metrics = MetricsCollector::new(
+        config.metrics, pools.len(), n, config.window_ms, warmup_time_ms,
+    );
     let mut n_compressed = 0usize;
     let mut n_events = 0usize;
     let mut horizon = 0.0f64;
@@ -171,6 +161,7 @@ pub fn run_reference(
         match ev.kind {
             EventKind::Arrival { req } => {
                 let r = &reqs[req as usize];
+                metrics.record_arrival(r.arrival_ms);
                 let class = match &config.class_probs {
                     None => 0,
                     Some(probs) => {
@@ -199,8 +190,7 @@ pub fn run_reference(
                 }
                 if !try_admit(
                     &mut pools, decision.pool, req, &reqs, now, &mut events,
-                    &config.cap_window, &mut per_pool, &mut overall,
-                    warmup_cutoff,
+                    &config.cap_window, &mut metrics,
                 ) {
                     pools[decision.pool].enqueue(req);
                 }
@@ -209,37 +199,43 @@ pub fn run_reference(
                 pools[pool as usize].release(instance as usize, now);
                 drain_queue(
                     &mut pools, pool as usize, &reqs, now, &mut events,
-                    &config.cap_window, &mut per_pool, &mut overall,
-                    warmup_cutoff,
+                    &config.cap_window, &mut metrics,
                 );
             }
             EventKind::Drain { pool } => {
                 drain_queue(
                     &mut pools, pool as usize, &reqs, now, &mut events,
-                    &config.cap_window, &mut per_pool, &mut overall,
-                    warmup_cutoff,
+                    &config.cap_window, &mut metrics,
                 );
             }
         }
     }
 
+    let (n_unserved, max_unserved_wait, pool_unserved) = metrics
+        .scan_unserved(&pools, |req| reqs[req as usize].arrival_ms, horizon);
+
     DesResult {
         per_pool: pools
             .iter()
-            .zip(per_pool)
-            .map(|(p, stats)| PoolResult {
+            .zip(metrics.per_pool)
+            .zip(pool_unserved)
+            .map(|((p, stats), n_unserved)| PoolResult {
                 stats,
                 utilization: p.utilization(horizon),
                 max_queue_depth: p.max_queue_depth,
                 slots_per_gpu: p.slots_per_gpu,
                 n_gpus: p.instances.len(),
+                n_unserved,
             })
             .collect(),
-        overall,
+        overall: metrics.overall,
         horizon_ms: horizon,
         n_requests: n,
         n_compressed,
         n_events,
+        n_unserved,
+        max_unserved_wait_ms: max_unserved_wait,
+        windows: metrics.windows,
     }
 }
 

@@ -33,7 +33,7 @@ use crate::optimizer::planner::{plan_pools, Verification};
 use crate::queueing::mgc::{analyze_pool, PoolSpec, WorkloadHist};
 use crate::router::RoutingPolicy;
 use crate::util::parallel::{default_threads, par_map};
-use crate::workload::spec::{SampledRequest, WorkloadSpec};
+use crate::workload::spec::{ArrivalSpec, SampledRequest, WorkloadSpec};
 
 /// Phase-1 evaluator owned by the engine.
 enum Backend {
@@ -77,6 +77,29 @@ fn workload_fingerprint(w: &WorkloadSpec) -> u64 {
     for &(l, p) in w.cdf.points() {
         fnv1a(&mut h, &l.to_bits().to_le_bytes());
         fnv1a(&mut h, &p.to_bits().to_le_bytes());
+    }
+    // The arrival spec is part of the stream identity: an NHPP workload
+    // at mean λ must never share a cached stream with stationary Poisson
+    // at the same λ. Replay traces hash every timestamp — O(trace) per
+    // cache lookup, but each lookup fronts a DES run over that same
+    // stream, which dwarfs the hash.
+    match &w.arrivals {
+        ArrivalSpec::Poisson => fnv1a(&mut h, &[0u8]),
+        ArrivalSpec::Nhpp { profile_rps, period_ms } => {
+            fnv1a(&mut h, &[1u8]);
+            fnv1a(&mut h, &period_ms.to_bits().to_le_bytes());
+            for &(t, r) in profile_rps {
+                fnv1a(&mut h, &t.to_bits().to_le_bytes());
+                fnv1a(&mut h, &r.to_bits().to_le_bytes());
+            }
+        }
+        ArrivalSpec::Replay { timestamps, rate_scale } => {
+            fnv1a(&mut h, &[2u8]);
+            fnv1a(&mut h, &rate_scale.to_bits().to_le_bytes());
+            for &t in timestamps {
+                fnv1a(&mut h, &t.to_bits().to_le_bytes());
+            }
+        }
     }
     h
 }
@@ -255,19 +278,82 @@ impl EvalEngine {
         let (pools, router) = plan_pools(cand);
         let mut r = self.simulate(workload, &pools, &router, cfg);
         let p99 = r.overall.p99_ttft();
-        let p99_s = r.per_pool[0].stats.ttft.p99();
-        let p99_l = if r.per_pool.len() > 1 {
-            r.per_pool[1].stats.ttft.p99()
-        } else {
-            0.0
+        // A pool that served nothing has no P99: report NaN (rendered
+        // "-"), never a healthy-looking vacuous 0 ms.
+        let mut pool_p99 = |i: usize| -> f64 {
+            match r.per_pool.get_mut(i) {
+                Some(p) if p.stats.count > 0 => p.stats.ttft.p99(),
+                Some(_) => f64::NAN,
+                None => 0.0,
+            }
         };
+        let p99_s = pool_p99(0);
+        let p99_l = pool_p99(1);
         Verification {
             p99_ttft_ms: p99,
             p99_ttft_short_ms: p99_s,
             p99_ttft_long_ms: p99_l,
             utilization: r.per_pool.iter().map(|p| p.utilization).collect(),
-            passed: p99 <= slo_ms,
+            // Unserved-aware: a candidate whose backlog never drained
+            // cannot pass on the strength of its served requests alone.
+            passed: r.meets_slo(slo_ms),
         }
+    }
+
+    /// Size-to-peak: smallest homogeneous fleet **at or above the
+    /// analytic peak-rate floor** whose DES run meets the SLO in every
+    /// time window, not just in the run aggregate (`cfg.window_ms` must
+    /// be set). This is the sizing mode for non-stationary workloads: a
+    /// fleet sized for the long-run mean passes the aggregate P99 while
+    /// failing every peak window.
+    ///
+    /// The search starts from the analytic utilization-cap floor at the
+    /// profile's *peak* rate (size-to-peak means sustained-peak
+    /// capacity; fleets below that floor, which could only survive by
+    /// riding short bursts out in queue, are deliberately out of scope)
+    /// and walks upward; each step replays the same cached request
+    /// stream, so the whole search costs a handful of DES runs. Returns
+    /// the fleet size and its DES result, or None if no fleet within
+    /// `max_gpus` satisfies every window.
+    pub fn size_to_peak(
+        &self,
+        w: &WorkloadSpec,
+        gpu: &GpuProfile,
+        slo_ms: f64,
+        max_gpus: u32,
+        cfg: &DesConfig,
+    ) -> Option<(u32, DesResult)> {
+        assert!(
+            cfg.window_ms.is_some(),
+            "size_to_peak requires DesConfig::window_ms"
+        );
+        let ctx = w.cdf.max_len();
+        let hist = WorkloadHist::from_cdf(&w.cdf, w.input_fraction);
+        let peak_rps = match &w.arrivals {
+            ArrivalSpec::Nhpp { profile_rps, .. } => profile_rps
+                .iter()
+                .map(|&(_, r)| r)
+                .fold(w.lambda_rps, f64::max),
+            _ => w.lambda_rps,
+        };
+        let start = n_min_for_slice(&hist, 0.0, ctx, peak_rps / 1000.0, gpu,
+                                    ctx)
+            .unwrap_or(1);
+        for n in start..=max_gpus {
+            let pools = [SimPool {
+                gpu: gpu.clone(),
+                n_gpus: n as usize,
+                ctx_budget: ctx,
+                batch_cap: None,
+            }];
+            let mut r = self.simulate(
+                w, &pools, &RoutingPolicy::Random { n_pools: 1 }, cfg,
+            );
+            if r.meets_slo_in_every_window(slo_ms) {
+                return Some((n, r));
+            }
+        }
+        None
     }
 
     // ------- minimal-fleet sizing (hoisted from scenarios::common) -------
@@ -470,6 +556,41 @@ mod tests {
             vec![SweepJob::two_pool(&h100, &h100, 2048.0)],
             500.0, 1, &des);
         assert!(infeasible[0].is_none());
+    }
+
+    #[test]
+    fn nhpp_and_poisson_streams_never_collide_in_cache() {
+        let e = EvalEngine::standard();
+        let poisson = azure(); // λ = 100 stationary
+        let nhpp = azure()
+            .with_nhpp(vec![(0.0, 50.0), (5_000.0, 150.0)], 10_000.0);
+        // Same mean λ (100 rps), same (n, seed) — distinct streams.
+        assert!((nhpp.lambda_rps - poisson.lambda_rps).abs() < 1e-9);
+        let a = e.sampled_stream(&poisson, 1_000, 7);
+        let b = e.sampled_stream(&nhpp, 1_000, 7);
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(e.cached_streams(), 2);
+        assert_ne!(*a, *b, "NHPP stream must differ from Poisson");
+    }
+
+    #[test]
+    fn size_to_peak_satisfies_every_window() {
+        let e = EvalEngine::standard();
+        let w = azure()
+            .with_nhpp(vec![(0.0, 40.0), (10_000.0, 200.0)], 20_000.0);
+        let gpu = e.catalog.get("H100").unwrap().clone();
+        let cfg = DesConfig {
+            n_requests: 4_000,
+            window_ms: Some(5_000.0),
+            ..Default::default()
+        };
+        let (n, mut r) =
+            e.size_to_peak(&w, &gpu, 500.0, 128, &cfg).expect("feasible");
+        assert!(n >= 1);
+        assert_eq!(r.n_unserved, 0);
+        assert!(r.meets_slo_in_every_window(500.0));
+        let ws = r.windows.as_ref().expect("windowed run");
+        assert!(ws.n_windows() >= 4);
     }
 
     #[test]

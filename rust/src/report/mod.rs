@@ -1,8 +1,9 @@
 //! Reporting: model-fidelity analysis (paper §3.2), the DES perf
-//! harness, and shared rendering.
+//! harness, windowed-SLO tables, and shared rendering.
 
 pub mod ablation;
 pub mod fidelity;
 pub mod perf;
 pub mod sensitivity;
 pub mod substream;
+pub mod windows;

@@ -1,13 +1,15 @@
 //! Deterministic DES perf harness (the engine behind `fleet-sim bench`).
 //!
-//! Three fixed scenarios — mirroring the des_regression matrix so the
+//! Four fixed scenarios — mirroring the des_regression matrix so the
 //! timed code path is exactly the verified one — are replayed on a
 //! pre-sampled request stream (sampling is excluded from timing):
 //!
 //! * `azure_two_pool_length` — the paper's core two-pool split fleet,
 //! * `agent_heavy_tail` — heavy-tailed agent trace on one large pool,
 //! * `lmsys_multipool_capped` — three pools, ModelRouter class mix, and a
-//!   mid-run demand-response cap window.
+//!   mid-run demand-response cap window,
+//! * `azure_diurnal_nhpp` — the two-phase diurnal NHPP profile (bursty
+//!   event cadence: peak phases churn deep completion backlogs).
 //!
 //! For each scenario the harness times the **production** engine
 //! (calendar queue + streaming metrics, the configuration high-volume
@@ -124,6 +126,7 @@ struct BenchCase {
 fn cases(n_requests: usize, seed: u64) -> Vec<BenchCase> {
     let cat = GpuCatalog::standard();
     let a100 = cat.get("A100").unwrap().clone();
+    let a100_d = a100.clone();
     let h100 = cat.get("H100").unwrap().clone();
     let a10g = cat.get("A10G").unwrap().clone();
     let base = DesConfig { n_requests, seed, ..Default::default() };
@@ -173,8 +176,21 @@ fn cases(n_requests: usize, seed: u64) -> Vec<BenchCase> {
                     cap: 2,
                 }),
                 class_probs: Some(vec![0.6, 0.3, 0.1]),
-                ..base
+                ..base.clone()
             },
+        },
+        BenchCase {
+            name: "azure_diurnal_nhpp",
+            workload: WorkloadSpec::builtin(BuiltinTrace::Azure, 120.0)
+                .with_nhpp(vec![(0.0, 40.0), (10_000.0, 200.0)], 20_000.0),
+            pools: vec![
+                SimPool { gpu: a100_d.clone(), n_gpus: 6,
+                          ctx_budget: 4096.0, batch_cap: None },
+                SimPool { gpu: a100_d, n_gpus: 6, ctx_budget: 8192.0,
+                          batch_cap: None },
+            ],
+            router: RoutingPolicy::Length { b_short: 4096.0 },
+            cfg: base,
         },
     ]
 }
@@ -363,7 +379,7 @@ mod tests {
             ..Default::default()
         };
         let rows = run_bench(&opts);
-        assert_eq!(rows.len(), 3);
+        assert_eq!(rows.len(), 4);
         for r in &rows {
             assert_eq!(r.bit_identical, Some(true), "{}", r.name);
             assert!(r.events >= 2 * 1_500, "{}: {}", r.name, r.events);
@@ -371,6 +387,7 @@ mod tests {
             assert!(r.ref_events_per_sec.unwrap() > 0.0);
             assert!(r.speedup_vs_reference.unwrap() > 0.0);
         }
+        assert!(rows.iter().any(|r| r.name == "azure_diurnal_nhpp"));
         // The capped multi-pool case processes its drain events too.
         let capped = rows.iter().find(|r| r.name == "lmsys_multipool_capped")
             .unwrap();

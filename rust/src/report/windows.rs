@@ -1,0 +1,109 @@
+//! Windowed-SLO reporting: render a DES run's per-window TTFT series
+//! (the table behind `fleet-sim simulate --window` and the diurnal
+//! scenario). Unserved arrivals and empty windows are shown honestly:
+//! `-` marks an undefined statistic, never a vacuous 100%.
+
+use crate::des::metrics::{DesResult, WindowedStats};
+use crate::util::table::{millis, percent, Table};
+
+/// Shared `[t0, t0+w) s` label so every windowed table (CLI simulate,
+/// the diurnal scenario) renders windows identically.
+pub fn window_label(w: &WindowedStats, i: usize) -> String {
+    let width_s = w.width_ms() / 1000.0;
+    let start_s = w.start_ms(i) / 1000.0;
+    format!("[{:.0}, {:.0}) s", start_s, start_s + width_s)
+}
+
+/// Shared SLO verdict cell: `-` for an empty window, else yes/FAIL.
+pub fn window_verdict(
+    w: &mut WindowedStats,
+    i: usize,
+    slo_ms: f64,
+) -> String {
+    if w.n_arrived(i) == 0 {
+        "-".to_string()
+    } else if w.meets_slo(i, slo_ms) {
+        "yes".to_string()
+    } else {
+        "FAIL".to_string()
+    }
+}
+
+/// One window's rendered row: `[t0, t0+w) | arrivals | unserved | P99 |
+/// attainment | SLO`.
+fn window_row(w: &mut WindowedStats, i: usize, slo_ms: f64) -> Vec<String> {
+    vec![
+        window_label(w, i),
+        w.n_arrived(i).to_string(),
+        w.n_unserved(i).to_string(),
+        millis(w.p99_ttft(i)),
+        percent(w.attainment(i, slo_ms)),
+        window_verdict(w, i, slo_ms),
+    ]
+}
+
+/// Per-window P99-TTFT / attainment table for a windowed DES run.
+/// Returns None when the run collected no windows (no
+/// `DesConfig::window_ms`).
+pub fn windowed_table(r: &mut DesResult, slo_ms: f64) -> Option<Table> {
+    let w = r.windows.as_mut()?;
+    let mut t = Table::new(&[
+        "window", "arrivals", "unserved", "P99 TTFT", "attainment", "SLO",
+    ])
+    .with_title(format!(
+        "Windowed SLO evaluation ({} ms windows, SLO {} ms)",
+        w.width_ms(),
+        slo_ms
+    ));
+    for i in 0..w.n_windows() {
+        t.row(&window_row(w, i, slo_ms));
+    }
+    Some(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::des::engine::{DesConfig, SimPool, Simulator};
+    use crate::gpu::catalog::GpuCatalog;
+    use crate::router::RoutingPolicy;
+    use crate::workload::spec::{BuiltinTrace, WorkloadSpec};
+
+    #[test]
+    fn renders_one_row_per_window() {
+        let gpu = GpuCatalog::standard().get("H100").unwrap().clone();
+        let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 80.0);
+        let pools = vec![SimPool {
+            gpu, n_gpus: 6, ctx_budget: 8192.0, batch_cap: None,
+        }];
+        let cfg = DesConfig {
+            n_requests: 3_000,
+            window_ms: Some(10_000.0),
+            ..Default::default()
+        };
+        let mut r = Simulator::new(
+            w, pools, RoutingPolicy::Random { n_pools: 1 }, cfg,
+        )
+        .run();
+        let n_windows = r.windows.as_ref().unwrap().n_windows();
+        let table = windowed_table(&mut r, 500.0).unwrap();
+        assert_eq!(table.n_rows(), n_windows);
+        let body = table.render();
+        assert!(body.contains("Windowed SLO evaluation"), "{body}");
+
+        // A run without window collection renders nothing.
+        let mut plain = Simulator::new(
+            WorkloadSpec::builtin(BuiltinTrace::Azure, 80.0),
+            vec![SimPool {
+                gpu: GpuCatalog::standard().get("H100").unwrap().clone(),
+                n_gpus: 6,
+                ctx_budget: 8192.0,
+                batch_cap: None,
+            }],
+            RoutingPolicy::Random { n_pools: 1 },
+            DesConfig { n_requests: 500, ..Default::default() },
+        )
+        .run();
+        assert!(windowed_table(&mut plain, 500.0).is_none());
+    }
+}

@@ -29,6 +29,12 @@ pub struct ScenarioOpts {
     pub max_gpus: u32,
     /// Worker threads for the engine's parallel sweeps (1 = serial).
     pub threads: usize,
+    /// Windowed-SLO evaluation: collect per-window TTFT stats over
+    /// fixed-width windows of this many ms (`--window`; None = aggregate
+    /// only, scenarios with windowed semantics supply their own
+    /// default). Commands that don't render windows still collect them
+    /// when this is set — harmless but unused there.
+    pub window_ms: Option<f64>,
 }
 
 impl Default for ScenarioOpts {
@@ -38,6 +44,7 @@ impl Default for ScenarioOpts {
             seed: 42,
             max_gpus: 256,
             threads: default_threads(),
+            window_ms: None,
         }
     }
 }
@@ -58,6 +65,7 @@ impl ScenarioOpts {
         DesConfig {
             n_requests: self.n_requests,
             seed: self.seed,
+            window_ms: self.window_ms,
             ..Default::default()
         }
     }

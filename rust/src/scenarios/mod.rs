@@ -17,6 +17,7 @@
 //! `Box::new(...)` into [`registry`].
 
 pub mod common;
+pub mod diurnal;
 pub mod multi_model;
 pub mod puzzle1_split;
 pub mod puzzle2_agent;
@@ -120,6 +121,7 @@ pub fn registry() -> Vec<Box<dyn Scenario>> {
         Box::new(puzzle7_disagg::DisaggServing),
         Box::new(puzzle8_gridflex::GridFlexibility),
         Box::new(multi_model::MultiModelFleet),
+        Box::new(diurnal::Diurnal),
     ]
 }
 
@@ -163,18 +165,20 @@ mod tests {
     #[test]
     fn registry_covers_all_scenarios_with_unique_keys() {
         let reg = registry();
-        assert_eq!(reg.len(), 9);
+        assert_eq!(reg.len(), 10);
         let mut ids: Vec<&str> = reg.iter().map(|s| s.id()).collect();
         let mut names: Vec<&str> = reg.iter().map(|s| s.name()).collect();
         ids.sort();
         ids.dedup();
         names.sort();
         names.dedup();
-        assert_eq!(ids.len(), 9, "duplicate scenario ids");
-        assert_eq!(names.len(), 9, "duplicate scenario names");
+        assert_eq!(ids.len(), 10, "duplicate scenario ids");
+        assert_eq!(names.len(), 10, "duplicate scenario names");
         for n in 1..=8 {
             assert!(find(&format!("puzzle{n}")).is_some());
         }
+        assert!(find("diurnal").is_some());
+        assert_eq!(find("size-to-peak").unwrap().id(), "diurnal");
     }
 
     #[test]

@@ -62,14 +62,18 @@ pub fn evaluate_with(
                 // Table 7 verdicts are per-pool: a long pool violating the
                 // SLO fails the config even though long traffic is too
                 // rare to move the fleet-wide P99.
+                // NaN P99 means the pool served nothing: an idle pool
+                // passes vacuously (!(NaN > SLO)), while a dead pool
+                // with queued traffic is caught by `v.passed`.
                 rows.push(MixRow {
                     config,
                     gpus: cand.total_gpus(),
                     cost_yr: cand.cost_per_year(),
                     p99_short: v.p99_ttft_short_ms,
                     p99_long: v.p99_ttft_long_ms,
-                    feasible: v.p99_ttft_short_ms <= SLO_MS
-                        && v.p99_ttft_long_ms <= SLO_MS,
+                    feasible: v.passed
+                        && !(v.p99_ttft_short_ms > SLO_MS)
+                        && !(v.p99_ttft_long_ms > SLO_MS),
                 });
             }
             None => rows.push(MixRow {

@@ -170,9 +170,11 @@ impl LogHistogram {
     }
 
     /// Fraction of recorded values <= `x` (within one bin width).
+    /// An empty histogram has no defined fraction and returns NaN — a
+    /// pool that served nothing must not report 100% SLO attainment.
     pub fn fraction_le(&self, x: f64) -> f64 {
         if self.n == 0 {
-            return 1.0;
+            return f64::NAN;
         }
         if x >= self.max {
             return 1.0;
@@ -301,9 +303,10 @@ impl Samples {
         }
     }
 
-    /// Nearest-rank percentile, `q` in [0, 100]. Empty samples return 0.
-    /// Exact repr answers exactly; streaming repr answers within the
-    /// sketch's ~1% bin width.
+    /// Nearest-rank percentile, `q` in [0, 100]. Empty samples return 0
+    /// (legacy convention — callers that must distinguish "no data" from
+    /// "instant" check `is_empty()` first or use [`Self::fraction_le`],
+    /// which answers NaN when empty).
     pub fn percentile(&mut self, q: f64) -> f64 {
         match &mut self.repr {
             Repr::Exact { values, sorted } => {
@@ -333,12 +336,14 @@ impl Samples {
     }
 
     /// Fraction of recorded values <= `x` (exact in exact mode; within one
-    /// bin width in streaming mode). Empty samples return 1.0.
+    /// bin width in streaming mode). Empty samples return NaN: "everything
+    /// we served met the SLO" is vacuous when nothing was served, and the
+    /// old `1.0` let dead pools report perfect attainment.
     pub fn fraction_le(&self, x: f64) -> f64 {
         match &self.repr {
             Repr::Exact { values, .. } => {
                 if values.is_empty() {
-                    return 1.0;
+                    return f64::NAN;
                 }
                 values.iter().filter(|&&v| v <= x).count() as f64
                     / values.len() as f64
@@ -561,7 +566,9 @@ mod tests {
             let s = sketch.fraction_le(x);
             assert!((e - s).abs() < 0.02, "x={x}: exact {e} sketch {s}");
         }
-        assert_eq!(Samples::new().fraction_le(1.0), 1.0);
-        assert_eq!(Samples::streaming().fraction_le(1.0), 1.0);
+        // Vacuous attainment: empty samples answer NaN in both reprs
+        // (never 1.0 — that hid dead pools behind "perfect" attainment).
+        assert!(Samples::new().fraction_le(1.0).is_nan());
+        assert!(Samples::streaming().fraction_le(1.0).is_nan());
     }
 }

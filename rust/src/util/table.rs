@@ -125,8 +125,13 @@ pub fn dollars(v: f64) -> String {
     }
 }
 
-/// Format milliseconds compactly: `17 ms`, `1,052 ms`, `inf`.
+/// Format milliseconds compactly: `17 ms`, `1,052 ms`, `inf`; NaN (an
+/// undefined statistic, e.g. the P99 of a pool that served nothing)
+/// renders as `-`.
 pub fn millis(v: f64) -> String {
+    if v.is_nan() {
+        return "-".to_string();
+    }
     if !v.is_finite() {
         return "inf".to_string();
     }
@@ -140,8 +145,12 @@ pub fn millis(v: f64) -> String {
     }
 }
 
-/// Format a percentage with one decimal: `98.4%`.
+/// Format a percentage with one decimal: `98.4%`. NaN (undefined — e.g.
+/// attainment over zero requests) renders as `-`, never `100%`.
 pub fn percent(frac: f64) -> String {
+    if frac.is_nan() {
+        return "-".to_string();
+    }
     format!("{:.1}%", frac * 100.0)
 }
 
@@ -184,10 +193,12 @@ mod tests {
         assert_eq!(millis(1052.0), "1,052 ms");
         assert_eq!(millis(7.9), "7.9 ms");
         assert_eq!(millis(f64::INFINITY), "inf");
+        assert_eq!(millis(f64::NAN), "-");
     }
 
     #[test]
     fn percent_formatting() {
         assert_eq!(percent(0.984), "98.4%");
+        assert_eq!(percent(f64::NAN), "-");
     }
 }

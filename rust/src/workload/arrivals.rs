@@ -1,13 +1,19 @@
-//! Poisson arrival process (paper §3.1 Phase 2, step 1).
+//! Arrival processes (paper §3.1 Phase 2, step 1).
 //!
-//! Inter-arrival gaps are Exp(λ); the generator also supports a bursty
-//! (Markov-modulated) variant used by the router case study to stress the
-//! sub-stream-Poisson approximation the paper calls out in §3.3.
+//! The stationary default draws Exp(λ) inter-arrival gaps; the generator
+//! also supports a bursty (Markov-modulated) variant used by the router
+//! case study to stress the sub-stream-Poisson approximation the paper
+//! calls out in §3.3, a piecewise-rate **non-homogeneous** Poisson
+//! process (NHPP, thinning-based) for diurnal/peaked load, and a
+//! **trace replay** variant that consumes explicit arrival timestamps.
+//! The last two are what the windowed-SLO scenarios run on: a fleet
+//! sized for the long-run mean rate can fail its P99 SLO during peak
+//! windows, which stationary arrivals cannot express.
 
 use crate::workload::rng::Pcg64;
 
 /// Generates arrival timestamps in milliseconds.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum ArrivalProcess {
     /// Stationary Poisson at `rate_per_ms`.
     Poisson { rate_per_ms: f64 },
@@ -20,6 +26,25 @@ pub enum ArrivalProcess {
         mean_base_dwell_ms: f64,
         mean_burst_dwell_ms: f64,
     },
+    /// Piecewise-constant-rate NHPP, sampled by thinning (Lewis &
+    /// Shedler): candidates are drawn at the profile's max rate and
+    /// accepted with probability `rate(t) / rate_max`.
+    ///
+    /// `profile` is a sorted list of `(t_ms, rate_per_ms)` breakpoints
+    /// starting at `t_ms = 0`; the rate at time `t` is the rate of the
+    /// last breakpoint at or before `t`. When `period_ms` is finite the
+    /// profile repeats cyclically (diurnal load); when infinite, the
+    /// final rate extends forever.
+    Nhpp { profile: Vec<(f64, f64)>, period_ms: f64 },
+    /// Replay explicit arrival timestamps (ms, ascending from ~0 — the
+    /// wrap-around lap offset and `mean_rate` treat the last timestamp
+    /// as the trace span, so offset traces must be normalized first;
+    /// [`crate::workload::spec::WorkloadSpec::with_replay`] does this),
+    /// with a rate-scaling knob: `rate_scale = 2.0` compresses every gap
+    /// so the trace arrives twice as fast. Asking for more arrivals than
+    /// the trace holds wraps around, offsetting each lap by the trace
+    /// span (so long simulations replay the trace end to end).
+    TraceReplay { timestamps: Vec<f64>, rate_scale: f64 },
 }
 
 impl ArrivalProcess {
@@ -28,10 +53,21 @@ impl ArrivalProcess {
         ArrivalProcess::Poisson { rate_per_ms: rate_per_s / 1000.0 }
     }
 
+    /// NHPP from `(t_ms, req/s)` breakpoints repeating every `period_ms`
+    /// (pass `f64::INFINITY` for a non-cyclic profile).
+    pub fn nhpp_rps(profile_rps: &[(f64, f64)], period_ms: f64) -> Self {
+        let profile: Vec<(f64, f64)> = profile_rps
+            .iter()
+            .map(|&(t, rps)| (t, rps / 1000.0))
+            .collect();
+        validate_profile(&profile, period_ms);
+        ArrivalProcess::Nhpp { profile, period_ms }
+    }
+
     /// Long-run mean arrival rate (req/ms).
     pub fn mean_rate(&self) -> f64 {
-        match *self {
-            ArrivalProcess::Poisson { rate_per_ms } => rate_per_ms,
+        match self {
+            ArrivalProcess::Poisson { rate_per_ms } => *rate_per_ms,
             ArrivalProcess::Mmpp {
                 base_per_ms,
                 burst_per_ms,
@@ -43,18 +79,40 @@ impl ArrivalProcess {
                     + burst_per_ms * mean_burst_dwell_ms)
                     / total
             }
+            ArrivalProcess::Nhpp { profile, period_ms } => {
+                if !period_ms.is_finite() {
+                    // Non-cyclic: the final segment dominates the long run.
+                    return profile.last().map_or(0.0, |&(_, r)| r);
+                }
+                // Time-weighted average over one period.
+                let mut acc = 0.0;
+                for (i, &(t, r)) in profile.iter().enumerate() {
+                    let end = profile
+                        .get(i + 1)
+                        .map_or(*period_ms, |&(t_next, _)| t_next);
+                    acc += r * (end - t);
+                }
+                acc / period_ms
+            }
+            ArrivalProcess::TraceReplay { timestamps, rate_scale } => {
+                let span = timestamps.last().copied().unwrap_or(0.0);
+                if span <= 0.0 {
+                    return 0.0;
+                }
+                timestamps.len() as f64 / span * rate_scale
+            }
         }
     }
 
     /// Generate the first `n` arrival times (ms, ascending from ~0).
     pub fn generate(&self, n: usize, rng: &mut Pcg64) -> Vec<f64> {
         let mut times = Vec::with_capacity(n);
-        match *self {
+        match self {
             ArrivalProcess::Poisson { rate_per_ms } => {
-                assert!(rate_per_ms > 0.0);
+                assert!(*rate_per_ms > 0.0);
                 let mut t = 0.0;
                 for _ in 0..n {
-                    t += rng.exponential(rate_per_ms);
+                    t += rng.exponential(*rate_per_ms);
                     times.push(t);
                 }
             }
@@ -64,20 +122,21 @@ impl ArrivalProcess {
                 mean_base_dwell_ms,
                 mean_burst_dwell_ms,
             } => {
-                assert!(base_per_ms > 0.0 && burst_per_ms > 0.0);
+                assert!(*base_per_ms > 0.0 && *burst_per_ms > 0.0);
                 let mut t = 0.0;
                 let mut in_burst = false;
                 let mut phase_end = rng.exponential(1.0 / mean_base_dwell_ms);
                 while times.len() < n {
-                    let rate = if in_burst { burst_per_ms } else { base_per_ms };
+                    let rate =
+                        if in_burst { *burst_per_ms } else { *base_per_ms };
                     let next = t + rng.exponential(rate);
                     if next > phase_end {
                         t = phase_end;
                         in_burst = !in_burst;
                         let dwell = if in_burst {
-                            mean_burst_dwell_ms
+                            *mean_burst_dwell_ms
                         } else {
-                            mean_base_dwell_ms
+                            *mean_base_dwell_ms
                         };
                         phase_end = t + rng.exponential(1.0 / dwell);
                     } else {
@@ -86,9 +145,72 @@ impl ArrivalProcess {
                     }
                 }
             }
+            ArrivalProcess::Nhpp { profile, period_ms } => {
+                validate_profile(profile, *period_ms);
+                let rate_max = profile
+                    .iter()
+                    .map(|&(_, r)| r)
+                    .fold(0.0f64, f64::max);
+                assert!(rate_max > 0.0);
+                let mut t = 0.0;
+                while times.len() < n {
+                    t += rng.exponential(rate_max);
+                    let rate = rate_at(profile, *period_ms, t);
+                    if rng.uniform() < rate / rate_max {
+                        times.push(t);
+                    }
+                }
+            }
+            ArrivalProcess::TraceReplay { timestamps, rate_scale } => {
+                assert!(!timestamps.is_empty(), "empty replay trace");
+                assert!(*rate_scale > 0.0);
+                assert!(
+                    timestamps[0] >= 0.0
+                        && timestamps.windows(2).all(|w| w[0] <= w[1]),
+                    "replay timestamps must be ascending and non-negative"
+                );
+                let span = *timestamps.last().unwrap();
+                assert!(span > 0.0, "replay trace span must be positive");
+                for i in 0..n {
+                    let lap = (i / timestamps.len()) as f64;
+                    let t = timestamps[i % timestamps.len()];
+                    times.push((lap * span + t) / rate_scale);
+                }
+            }
         }
         times
     }
+}
+
+/// The profile rate (req/ms) in effect at absolute time `t`.
+fn rate_at(profile: &[(f64, f64)], period_ms: f64, t: f64) -> f64 {
+    let phase = if period_ms.is_finite() { t % period_ms } else { t };
+    let mut rate = profile[0].1;
+    for &(start, r) in profile {
+        if start <= phase {
+            rate = r;
+        } else {
+            break;
+        }
+    }
+    rate
+}
+
+fn validate_profile(profile: &[(f64, f64)], period_ms: f64) {
+    assert!(!profile.is_empty(), "NHPP profile must have breakpoints");
+    assert!(profile[0].0 == 0.0, "NHPP profile must start at t = 0");
+    assert!(
+        profile.windows(2).all(|w| w[0].0 < w[1].0),
+        "NHPP breakpoints must be strictly ascending"
+    );
+    assert!(
+        profile.iter().all(|&(_, r)| r > 0.0 && r.is_finite()),
+        "NHPP rates must be positive"
+    );
+    assert!(
+        period_ms > profile.last().unwrap().0,
+        "NHPP period must cover the last breakpoint"
+    );
 }
 
 #[cfg(test)]
@@ -158,5 +280,82 @@ mod tests {
         let times = m.generate(n, &mut rng);
         let rate = n as f64 / times.last().unwrap();
         assert!((rate - 0.02).abs() / 0.02 < 0.05, "rate = {rate}");
+    }
+
+    /// Empirical per-phase rate of a cyclic NHPP must track the profile
+    /// within 3% (the calibration bar for the diurnal scenarios).
+    #[test]
+    fn nhpp_windowed_rate_matches_profile() {
+        let period = 20_000.0;
+        let p = ArrivalProcess::nhpp_rps(
+            &[(0.0, 40.0), (10_000.0, 200.0)],
+            period,
+        );
+        assert!((p.mean_rate() - 0.120).abs() < 1e-12);
+        let mut rng = Pcg64::new(26, 0);
+        let n = 240_000; // ~2000 s of simulated arrivals, ~100 cycles
+        let times = p.generate(n, &mut rng);
+        let horizon = *times.last().unwrap();
+        let full_cycles = (horizon / period).floor();
+        assert!(full_cycles >= 50.0, "cycles = {full_cycles}");
+        let (mut n_lo, mut n_hi) = (0u64, 0u64);
+        for &t in &times {
+            if t >= full_cycles * period {
+                break; // only count whole cycles
+            }
+            if t % period < 10_000.0 {
+                n_lo += 1;
+            } else {
+                n_hi += 1;
+            }
+        }
+        let lo_rate = n_lo as f64 / (full_cycles * 10_000.0);
+        let hi_rate = n_hi as f64 / (full_cycles * 10_000.0);
+        assert!((lo_rate - 0.040).abs() / 0.040 < 0.03, "lo = {lo_rate}");
+        assert!((hi_rate - 0.200).abs() / 0.200 < 0.03, "hi = {hi_rate}");
+    }
+
+    #[test]
+    fn nhpp_noncyclic_uses_last_segment_rate() {
+        let p = ArrivalProcess::nhpp_rps(
+            &[(0.0, 10.0), (1_000.0, 50.0)],
+            f64::INFINITY,
+        );
+        assert!((p.mean_rate() - 0.050).abs() < 1e-12);
+        let mut rng = Pcg64::new(27, 0);
+        let times = p.generate(50_000, &mut rng);
+        // Deep into the tail the empirical rate is the final 50 req/s.
+        let tail: Vec<f64> =
+            times.iter().copied().filter(|&t| t >= 10_000.0).collect();
+        let rate = tail.len() as f64 / (times.last().unwrap() - 10_000.0);
+        assert!((rate - 0.050).abs() / 0.050 < 0.03, "tail rate = {rate}");
+        assert!(times.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn replay_reproduces_and_scales_timestamps() {
+        let ts = vec![1.0, 4.0, 9.0, 10.0];
+        let p = ArrivalProcess::TraceReplay {
+            timestamps: ts.clone(),
+            rate_scale: 1.0,
+        };
+        let mut rng = Pcg64::new(28, 0);
+        assert_eq!(p.generate(4, &mut rng), ts);
+        // Wrap-around: lap 2 is offset by the trace span (10 ms).
+        let wrapped = p.generate(6, &mut rng);
+        assert_eq!(&wrapped[4..], &[11.0, 14.0]);
+        // rate_scale = 2 halves every timestamp (twice the arrival rate).
+        let fast = ArrivalProcess::TraceReplay {
+            timestamps: ts,
+            rate_scale: 2.0,
+        };
+        assert_eq!(fast.generate(4, &mut rng), vec![0.5, 2.0, 4.5, 5.0]);
+        assert!((fast.mean_rate() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "start at t = 0")]
+    fn nhpp_profile_must_start_at_zero() {
+        ArrivalProcess::nhpp_rps(&[(5.0, 10.0)], 100.0);
     }
 }

@@ -1,5 +1,6 @@
 //! WorkloadSpec: the planner's unit of workload description — a token-length
-//! CDF, a prompt fraction, and an arrival rate λ (paper §3.1 inputs).
+//! CDF, a prompt fraction, an arrival rate λ, and an arrival process
+//! (stationary Poisson by default; paper §3.1 inputs).
 
 use crate::workload::arrivals::ArrivalProcess;
 use crate::workload::builtin::Trace;
@@ -57,15 +58,36 @@ impl SampledRequest {
     }
 }
 
-/// A complete workload: lengths ~ CDF, arrivals ~ Poisson(λ).
+/// How a workload's arrival timestamps are generated. The default
+/// stationary Poisson is what every paper table uses; the other variants
+/// open the non-stationary scenario family (diurnal profiles, trace
+/// replay) that windowed SLO evaluation exists for.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum ArrivalSpec {
+    /// Stationary Poisson at the workload's `lambda_rps`.
+    #[default]
+    Poisson,
+    /// Piecewise-constant NHPP: `(t_ms, req/s)` breakpoints repeating
+    /// every `period_ms` (infinite = non-cyclic).
+    Nhpp { profile_rps: Vec<(f64, f64)>, period_ms: f64 },
+    /// Replay explicit arrival timestamps, rate-scaled by `rate_scale`.
+    Replay { timestamps: Vec<f64>, rate_scale: f64 },
+}
+
+/// A complete workload: lengths ~ CDF, arrivals ~ the arrival spec
+/// (Poisson(λ) unless overridden).
 #[derive(Debug, Clone)]
 pub struct WorkloadSpec {
     pub name: String,
     pub cdf: EmpiricalCdf,
     /// Fraction of the token budget that is prompt.
     pub input_fraction: f64,
-    /// Arrival rate in requests per second.
+    /// Long-run mean arrival rate in requests per second (for
+    /// non-stationary arrivals this is the mean the analytic Phase 1
+    /// sizes against; the DES sees the full profile).
     pub lambda_rps: f64,
+    /// Arrival-process selector (stationary Poisson by default).
+    pub arrivals: ArrivalSpec,
 }
 
 impl WorkloadSpec {
@@ -77,7 +99,13 @@ impl WorkloadSpec {
     ) -> Self {
         assert!((0.0..1.0).contains(&input_fraction));
         assert!(lambda_rps > 0.0);
-        WorkloadSpec { name: name.into(), cdf, input_fraction, lambda_rps }
+        WorkloadSpec {
+            name: name.into(),
+            cdf,
+            input_fraction,
+            lambda_rps,
+            arrivals: ArrivalSpec::Poisson,
+        }
     }
 
     pub fn builtin(trace: BuiltinTrace, lambda_rps: f64) -> Self {
@@ -101,12 +129,95 @@ impl WorkloadSpec {
             cdf: self.cdf.truncated(cap)?,
             input_fraction: self.input_fraction,
             lambda_rps: self.lambda_rps,
+            arrivals: self.arrivals.clone(),
         })
     }
 
-    /// Same workload at a different arrival rate (whatif sweeps).
+    /// Switch to a cyclic piecewise-rate NHPP arrival profile.
+    /// `lambda_rps` is reset to the profile's time-weighted mean so the
+    /// analytic Phase 1 keeps sizing against the long-run rate.
+    pub fn with_nhpp(
+        mut self,
+        profile_rps: Vec<(f64, f64)>,
+        period_ms: f64,
+    ) -> Self {
+        let proc = ArrivalProcess::nhpp_rps(&profile_rps, period_ms);
+        self.lambda_rps = proc.mean_rate() * 1000.0;
+        self.arrivals = ArrivalSpec::Nhpp { profile_rps, period_ms };
+        self
+    }
+
+    /// Switch to replaying explicit arrival timestamps (ms), rate-scaled
+    /// by `rate_scale`. Timestamps are normalized so the first arrival
+    /// lands at t = 0 (epoch-style exports replay correctly: the
+    /// absolute origin of a trace carries no workload information), and
+    /// `lambda_rps` is reset to the trace's effective mean rate.
+    pub fn with_replay(
+        mut self,
+        timestamps: Vec<f64>,
+        rate_scale: f64,
+    ) -> Self {
+        // Both DES engines assume a time-sorted arrival stream (the
+        // production engine merge-consumes it in index order): reject an
+        // out-of-order trace here instead of silently diverging later.
+        assert!(
+            timestamps.first().is_some_and(|&t| t >= 0.0),
+            "replay trace must be non-empty with non-negative timestamps"
+        );
+        assert!(
+            timestamps.windows(2).all(|w| w[0] <= w[1]),
+            "replay timestamps must be ascending"
+        );
+        let t0 = timestamps[0];
+        let timestamps: Vec<f64> =
+            timestamps.iter().map(|t| t - t0).collect();
+        let proc = ArrivalProcess::TraceReplay {
+            timestamps: timestamps.clone(),
+            rate_scale,
+        };
+        let mean = proc.mean_rate() * 1000.0;
+        assert!(mean > 0.0, "replay trace must span positive time");
+        self.lambda_rps = mean;
+        self.arrivals = ArrivalSpec::Replay { timestamps, rate_scale };
+        self
+    }
+
+    /// The concrete arrival process this workload samples from.
+    pub fn arrival_process(&self) -> ArrivalProcess {
+        match &self.arrivals {
+            ArrivalSpec::Poisson => {
+                ArrivalProcess::poisson_rps(self.lambda_rps)
+            }
+            ArrivalSpec::Nhpp { profile_rps, period_ms } => {
+                ArrivalProcess::nhpp_rps(profile_rps, *period_ms)
+            }
+            ArrivalSpec::Replay { timestamps, rate_scale } => {
+                ArrivalProcess::TraceReplay {
+                    timestamps: timestamps.clone(),
+                    rate_scale: *rate_scale,
+                }
+            }
+        }
+    }
+
+    /// Same workload at a different mean arrival rate (whatif sweeps).
+    /// Non-stationary arrival specs rescale proportionally: NHPP
+    /// breakpoint rates and the replay `rate_scale` are multiplied by
+    /// `lambda_rps / self.lambda_rps`, preserving the profile's shape.
     pub fn at_lambda(&self, lambda_rps: f64) -> Self {
         let mut s = self.clone();
+        let k = lambda_rps / self.lambda_rps;
+        match &mut s.arrivals {
+            ArrivalSpec::Poisson => {}
+            ArrivalSpec::Nhpp { profile_rps, .. } => {
+                for (_, r) in profile_rps.iter_mut() {
+                    *r *= k;
+                }
+            }
+            ArrivalSpec::Replay { rate_scale, .. } => {
+                *rate_scale *= k;
+            }
+        }
         s.lambda_rps = lambda_rps;
         s
     }
@@ -118,13 +229,12 @@ impl WorkloadSpec {
         (l_in, l_out)
     }
 
-    /// Sample `n` requests with Poisson arrivals and i.i.d. CDF lengths
+    /// Sample `n` requests from the arrival spec with i.i.d. CDF lengths
     /// (paper §3.1 Phase 2 steps 1–2).
     pub fn sample_requests(&self, n: usize, seed: u64) -> Vec<SampledRequest> {
         let mut arr_rng = Pcg64::new(seed, 1);
         let mut len_rng = Pcg64::new(seed, 2);
-        let arrivals =
-            ArrivalProcess::poisson_rps(self.lambda_rps).generate(n, &mut arr_rng);
+        let arrivals = self.arrival_process().generate(n, &mut arr_rng);
         arrivals
             .into_iter()
             .map(|t| {
@@ -183,6 +293,62 @@ mod tests {
         let w = WorkloadSpec::builtin(BuiltinTrace::Agent, 20.0);
         assert_eq!(w.sample_requests(100, 7), w.sample_requests(100, 7));
         assert_ne!(w.sample_requests(100, 7), w.sample_requests(100, 8));
+    }
+
+    #[test]
+    fn nhpp_workload_samples_the_profile() {
+        let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 100.0)
+            .with_nhpp(vec![(0.0, 40.0), (10_000.0, 200.0)], 20_000.0);
+        // λ is reset to the profile's time-weighted mean.
+        assert!((w.lambda_rps - 120.0).abs() < 1e-9);
+        let reqs = w.sample_requests(20_000, 5);
+        assert_eq!(reqs.len(), 20_000);
+        assert!(reqs.windows(2).all(|r| r[0].arrival_ms <= r[1].arrival_ms));
+        // Peak phases must be visibly denser than off-peak phases.
+        let (mut n_lo, mut n_hi) = (0usize, 0usize);
+        for r in &reqs {
+            if r.arrival_ms % 20_000.0 < 10_000.0 {
+                n_lo += 1;
+            } else {
+                n_hi += 1;
+            }
+        }
+        assert!(n_hi > 3 * n_lo, "lo {n_lo} hi {n_hi}");
+        // Determinism and λ-rescale of the profile.
+        assert_eq!(w.sample_requests(500, 7), w.sample_requests(500, 7));
+        let w2 = w.at_lambda(60.0);
+        assert!((w2.lambda_rps - 60.0).abs() < 1e-9);
+        match &w2.arrivals {
+            ArrivalSpec::Nhpp { profile_rps, .. } => {
+                assert!((profile_rps[0].1 - 20.0).abs() < 1e-9);
+                assert!((profile_rps[1].1 - 100.0).abs() < 1e-9);
+            }
+            other => panic!("expected NHPP, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn replay_workload_normalizes_and_reproduces_timestamps() {
+        // An epoch-offset export: first arrival at 1.7e12 ms. The offset
+        // carries no workload information and is stripped, so the gaps
+        // replay verbatim from t = 0.
+        let epoch = 1.7e12;
+        let ts: Vec<f64> =
+            (0..100).map(|i| epoch + i as f64 * 10.0).collect();
+        let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 100.0)
+            .with_replay(ts, 1.0);
+        // 100 arrivals over a 990 ms span.
+        let expect_rps = 100.0 / 990.0 * 1000.0;
+        assert!((w.lambda_rps - expect_rps).abs() < 1e-9, "{}", w.lambda_rps);
+        let reqs = w.sample_requests(100, 3);
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.arrival_ms, i as f64 * 10.0);
+        }
+        // Doubling λ compresses every replayed gap via rate_scale.
+        let w2 = w.at_lambda(2.0 * expect_rps);
+        let fast = w2.sample_requests(100, 3);
+        assert_eq!(fast[0].arrival_ms, 0.0);
+        assert!((fast[99].arrival_ms - 495.0).abs() < 1e-6);
     }
 
     #[test]

@@ -26,13 +26,29 @@ struct Summary {
     overall_count: usize,
     pool_p99_ttft: Vec<f64>,
     pool_counts: Vec<usize>,
+    pool_unserved: Vec<usize>,
     utilization: Vec<f64>,
     max_queue_depth: Vec<usize>,
     n_compressed: usize,
     n_events: usize,
+    n_unserved: usize,
+    max_unserved_wait_ms: f64,
+    /// Per-window (arrived, served, p99 TTFT) when windowed stats ran.
+    windows: Option<Vec<(usize, usize, f64)>>,
 }
 
 fn summarize(mut r: DesResult) -> Summary {
+    let windows = r.windows.as_mut().map(|w| {
+        (0..w.n_windows())
+            .map(|i| {
+                let p99 = w.p99_ttft(i);
+                // NaN != NaN would make empty windows "diverge"; compare
+                // them as a sentinel instead.
+                (w.n_arrived(i), w.n_served(i),
+                 if p99.is_nan() { -1.0 } else { p99 })
+            })
+            .collect()
+    });
     Summary {
         overall_p99_ttft: r.overall.ttft.p99(),
         overall_p99_wait: r.overall.wait.p99(),
@@ -41,11 +57,15 @@ fn summarize(mut r: DesResult) -> Summary {
         pool_p99_ttft: r.per_pool.iter_mut().map(|p| p.stats.ttft.p99())
             .collect(),
         pool_counts: r.per_pool.iter().map(|p| p.stats.count).collect(),
+        pool_unserved: r.per_pool.iter().map(|p| p.n_unserved).collect(),
         utilization: r.per_pool.iter().map(|p| p.utilization).collect(),
         max_queue_depth: r.per_pool.iter().map(|p| p.max_queue_depth)
             .collect(),
         n_compressed: r.n_compressed,
         n_events: r.n_events,
+        n_unserved: r.n_unserved,
+        max_unserved_wait_ms: r.max_unserved_wait_ms,
+        windows,
     }
 }
 
@@ -176,6 +196,120 @@ fn fast_path_matches_reference_under_overload() {
         DesConfig { n_requests: 6_000, seed: 41, ..Default::default() },
         "azure overload",
     );
+}
+
+#[test]
+fn fast_path_matches_reference_on_nhpp_stream() {
+    // Non-stationary arrivals (two-phase diurnal NHPP) with windowed
+    // stats enabled: production and reference must agree bit-for-bit on
+    // the aggregate AND the per-window series, in both metrics modes.
+    let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 120.0)
+        .with_nhpp(vec![(0.0, 40.0), (10_000.0, 200.0)], 20_000.0);
+    let pools = vec![
+        SimPool { gpu: gpu("A100"), n_gpus: 5, ctx_budget: 4096.0,
+                  batch_cap: None },
+        SimPool { gpu: gpu("A100"), n_gpus: 5, ctx_budget: 8192.0,
+                  batch_cap: None },
+    ];
+    assert_fast_path_matches(
+        &w, pools, RoutingPolicy::Length { b_short: 4096.0 },
+        DesConfig { n_requests: 5_000, seed: 19,
+                    window_ms: Some(5_000.0), ..Default::default() },
+        "azure diurnal NHPP",
+    );
+}
+
+#[test]
+fn fast_path_matches_reference_on_replayed_stream() {
+    // Replayed explicit timestamps (a bursty hand-built cadence, rate-
+    // scaled) — the trace-driven path the stationary pipeline could not
+    // express.
+    let mut ts = Vec::new();
+    let mut t = 0.0;
+    for i in 0..500 {
+        // Ten-request bursts every ~500 ms, tight 2 ms spacing inside.
+        t += if i % 10 == 0 { 480.0 } else { 2.0 };
+        ts.push(t);
+    }
+    let w = WorkloadSpec::builtin(BuiltinTrace::Lmsys, 50.0)
+        .with_replay(ts, 1.5);
+    let pools = vec![
+        SimPool { gpu: gpu("H100"), n_gpus: 2, ctx_budget: 4096.0,
+                  batch_cap: None },
+        SimPool { gpu: gpu("H100"), n_gpus: 3, ctx_budget: 65536.0,
+                  batch_cap: None },
+    ];
+    assert_fast_path_matches(
+        &w, pools, RoutingPolicy::Length { b_short: 4096.0 },
+        DesConfig { n_requests: 4_000, seed: 29,
+                    window_ms: Some(10_000.0), ..Default::default() },
+        "lmsys burst replay",
+    );
+}
+
+#[test]
+fn fast_path_matches_reference_with_time_based_warmup() {
+    // Nonzero warmup: both engines must drop exactly the same
+    // (time-based) prefix, stationary or not.
+    let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 100.0);
+    let pools = vec![
+        SimPool { gpu: gpu("A100"), n_gpus: 4, ctx_budget: 4096.0,
+                  batch_cap: None },
+        SimPool { gpu: gpu("A100"), n_gpus: 4, ctx_budget: 8192.0,
+                  batch_cap: None },
+    ];
+    assert_fast_path_matches(
+        &w, pools, RoutingPolicy::Length { b_short: 4096.0 },
+        DesConfig { n_requests: 4_000, seed: 37, warmup_frac: 0.25,
+                    ..Default::default() },
+        "azure warmup 25%",
+    );
+}
+
+#[test]
+fn overload_censoring_is_fixed_and_pinned_against_reference() {
+    // The regression the bugfix exists for: long requests route to a
+    // dead pool (zero GPUs) and sit in its queue until the event stream
+    // drains. The pre-fix engine recorded only at admission, so those
+    // requests vanished: served-only P99 was fast, `fraction_le` on the
+    // starved samples said 100%, and the broken fleet "met" its SLO.
+    // Post-fix they surface as n_unserved, poison attainment, and fail
+    // meets_slo — identically in both engines.
+    // 20 req/s keeps the live short pool comfortably under its SLO
+    // (ρ ≈ 0.4), which is exactly what made the censoring invisible.
+    let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 20.0);
+    let pools = vec![
+        SimPool { gpu: gpu("H100"), n_gpus: 4, ctx_budget: 4096.0,
+                  batch_cap: None },
+        SimPool { gpu: gpu("H100"), n_gpus: 0, ctx_budget: 8192.0,
+                  batch_cap: None },
+    ];
+    let router = RoutingPolicy::Length { b_short: 4096.0 };
+    let cfg = DesConfig { n_requests: 5_000, seed: 43,
+                          ..Default::default() };
+    let sampled = w.sample_requests(cfg.n_requests, cfg.seed);
+    let mut prod = Simulator::run_stream(&pools, &router, &cfg, &sampled);
+    let refr = run_reference(&pools, &router, &cfg, &sampled);
+    assert_eq!(summarize(prod.clone()), summarize(refr),
+               "dead-pool run diverged");
+
+    assert!(prod.n_unserved > 0, "expected a censored backlog");
+    assert_eq!(prod.overall.count + prod.n_unserved, 5_000);
+    // The buggy behavior would pass here: served-only P99 is well under
+    // the SLO…
+    assert!(prod.overall.p99_ttft() <= 500.0,
+            "served traffic should look healthy: {}",
+            prod.overall.p99_ttft());
+    // …and the fixed check fails anyway, because the backlog's wait
+    // already exceeds the SLO.
+    assert!(prod.max_unserved_wait_ms > 500.0);
+    assert!(!prod.meets_slo(500.0));
+    // Attainment includes the unserved in its denominator.
+    let att = prod.attainment(500.0);
+    assert!(att < 1.0 - prod.n_unserved as f64 / 5_000.0 + 1e-9,
+            "attainment {att} still censored");
+    // The dead pool itself reports NaN attainment, not a vacuous 100%.
+    assert!(prod.per_pool[1].stats.ttft.fraction_le(500.0).is_nan());
 }
 
 #[test]

@@ -43,6 +43,53 @@ fn sketch_p99_matches_exact_p99_on_all_embedded_traces() {
 }
 
 #[test]
+fn windowed_stats_parity_between_exact_and_streaming() {
+    // Windowed TTFT series on an embedded trace driven by the diurnal
+    // NHPP profile: window structure and counts must be identical across
+    // metrics modes, and per-window P99 / attainment must agree within
+    // the sketch's documented ~1-2% bin width.
+    let gpu = GpuCatalog::standard().get("H100").unwrap().clone();
+    let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 120.0)
+        .with_nhpp(vec![(0.0, 40.0), (10_000.0, 200.0)], 20_000.0);
+    let pools = vec![SimPool {
+        gpu, n_gpus: 24, ctx_budget: 8192.0, batch_cap: None,
+    }];
+    let router = RoutingPolicy::Random { n_pools: 1 };
+    let base = DesConfig {
+        n_requests: 8_000,
+        seed: 17,
+        window_ms: Some(5_000.0),
+        ..Default::default()
+    };
+    let sampled = w.sample_requests(base.n_requests, base.seed);
+    let mut exact = Simulator::run_stream(&pools, &router, &base, &sampled);
+    let stream_cfg =
+        DesConfig { metrics: MetricsMode::Streaming, ..base };
+    let mut sketch =
+        Simulator::run_stream(&pools, &router, &stream_cfg, &sampled);
+    let we = exact.windows.as_mut().expect("exact windows");
+    let ws = sketch.windows.as_mut().expect("streaming windows");
+    assert_eq!(we.n_windows(), ws.n_windows());
+    assert!(we.n_windows() >= 8, "windows = {}", we.n_windows());
+    for i in 0..we.n_windows() {
+        assert_eq!(we.n_arrived(i), ws.n_arrived(i), "window {i}");
+        assert_eq!(we.n_served(i), ws.n_served(i), "window {i}");
+        assert_eq!(we.n_unserved(i), 0, "window {i}");
+        let (pe, ps) = (we.p99_ttft(i), ws.p99_ttft(i));
+        assert!(
+            (ps / pe - 1.0).abs() < 0.02,
+            "window {i}: exact P99 {pe} sketch {ps}"
+        );
+        let (ae, asx) =
+            (we.attainment(i, 500.0), ws.attainment(i, 500.0));
+        assert!(
+            (ae - asx).abs() < 0.02,
+            "window {i}: exact att {ae} sketch {asx}"
+        );
+    }
+}
+
+#[test]
 fn sketch_attainment_matches_exact_on_des_runs() {
     // End-to-end: run the same fleet in both metrics modes on each trace
     // and compare SLO attainment (Table-5-style numbers) and P99 TTFT.

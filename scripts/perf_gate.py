@@ -125,6 +125,51 @@ def selftest():
     assert any("below required" in f for f in fails), "min-speedup gate"
     assert not any("regressed" in f for f in fails), "nulls must be skipped"
 
+    # Null-baseline fallback: the committed BENCH_1.json carries null
+    # absolute fields (and a machine-portable speedup). A healthy new
+    # snapshot must pass the tolerance gate outright, and the min-speedup
+    # bar must still be enforced from the new snapshot alone.
+    committed_style = {
+        "scenarios": {
+            "s": {
+                "events": None,
+                "wall_ms": None,
+                "events_per_sec": None,
+                "ref_events_per_sec": None,
+                "speedup_vs_reference": 1.0,
+                "bit_identical": None,
+            }
+        }
+    }
+    fresh = {
+        "scenarios": {
+            "s": {
+                "events": 60000,
+                "events_per_sec": 5.0e6,
+                "ref_events_per_sec": 2.0e6,
+                "speedup_vs_reference": 2.5,
+                "bit_identical": True,
+            }
+        }
+    }
+    assert compare(committed_style, fresh, 0.15, 2.0) == [], (
+        "null-baseline fallback: healthy snapshot must pass"
+    )
+    # bit_identical: null means "not cross-checked", which must not fail.
+    assert compare(committed_style, committed_style, 0.15, None) == [], (
+        "null bit_identical must not be treated as a disagreement"
+    )
+    # Metrics null on the NEW side are skipped too (reference-only run).
+    ref_only = {
+        "scenarios": {
+            "s": {"events_per_sec": None, "speedup_vs_reference": None}
+        }
+    }
+    fails = compare(fresh, ref_only, 0.15, None)
+    assert not any("regressed" in f for f in fails), (
+        "new-side nulls must be skipped"
+    )
+
     fails = compare(
         {"scenarios": {"s": {}, "t": {}}}, {"scenarios": {"s": {}}}, 0.15, None
     )
