@@ -33,9 +33,9 @@ impl Args {
                 } else if let Some((k, v)) = name.split_once('=') {
                     args.options.insert(k.to_string(), v.to_string());
                 } else {
-                    let v = it
-                        .next()
-                        .ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?;
+                    let v = it.next().ok_or_else(|| {
+                        anyhow::anyhow!("--{name} needs a value")
+                    })?;
                     args.options.insert(name.to_string(), v.clone());
                 }
             } else {
@@ -56,18 +56,22 @@ impl Args {
     pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
         match self.options.get(name) {
             None => Ok(default),
-            Some(v) => v
-                .parse()
-                .map_err(|_| anyhow::anyhow!("--{name}: '{v}' is not a number")),
+            Some(v) => v.parse().map_err(|_| {
+                anyhow::anyhow!("--{name}: '{v}' is not a number")
+            }),
         }
     }
 
-    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+    pub fn get_usize(
+        &self,
+        name: &str,
+        default: usize,
+    ) -> anyhow::Result<usize> {
         match self.options.get(name) {
             None => Ok(default),
-            Some(v) => v
-                .parse()
-                .map_err(|_| anyhow::anyhow!("--{name}: '{v}' is not an integer")),
+            Some(v) => v.parse().map_err(|_| {
+                anyhow::anyhow!("--{name}: '{v}' is not an integer")
+            }),
         }
     }
 
@@ -84,9 +88,9 @@ impl Args {
             Some(v) => v
                 .split(',')
                 .map(|x| {
-                    x.trim()
-                        .parse()
-                        .map_err(|_| anyhow::anyhow!("--{name}: bad number '{x}'"))
+                    x.trim().parse().map_err(|_| {
+                        anyhow::anyhow!("--{name}: bad number '{x}'")
+                    })
                 })
                 .collect(),
         }

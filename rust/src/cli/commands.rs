@@ -44,6 +44,9 @@ COMMANDS:
               and emits a BENCH_N.json snapshot for the CI perf gate
               [--json] [--out PATH] [--engine production|reference|both]
               [--requests N] [--samples K] [--seed S] [--fast]
+              [--scale [--scale-requests N] [--shards N]
+               [--chunk-size N]]  (adds the generator-driven sharded
+              lmsys_1e8 scenario: 10^8 requests in bounded memory)
   fidelity    Kimura-vs-DES model fidelity table [--requests N]
   ablation    service-model ablation (equilibrium vs n_max t_iter)
   sensitivity synthetic-length sensitivity sweep [--lambda RPS] [--slo MS]
@@ -359,16 +362,48 @@ fn cmd_gridflex(args: &Args) -> anyhow::Result<String> {
 }
 
 fn cmd_bench(args: &Args) -> anyhow::Result<String> {
-    use crate::report::perf::{render_table, run_bench, to_json, BenchEngine,
-                              BenchOpts};
-    let default_requests = if args.flag("fast") { 8_000 } else { 30_000 };
+    use crate::report::perf::{render_table, run_bench, run_scale_bench,
+                              to_json, BenchEngine, BenchOpts,
+                              ScaleBenchOpts};
+    let fast = args.flag("fast");
+    let default_requests = if fast { 8_000 } else { 30_000 };
     let opts = BenchOpts {
         n_requests: args.get_usize("requests", default_requests)?,
         seed: args.get_usize("seed", 42)? as u64,
         samples: args.get_usize("samples", 3)?.max(1),
         engine: BenchEngine::parse(args.get_str("engine", "both"))?,
     };
-    let rows = run_bench(&opts);
+    let mut rows = run_bench(&opts);
+    let mut scale_note = String::new();
+    if args.flag("scale") {
+        let defaults = ScaleBenchOpts::default();
+        let default_scale = if fast { 2_000_000 } else { defaults.n_requests };
+        let scale = ScaleBenchOpts {
+            n_requests: args.get_usize("scale-requests", default_scale)?,
+            seed: opts.seed,
+            n_shards: args
+                .get_usize("shards", defaults.n_shards)?
+                .max(1),
+            chunk_size: args
+                .get_usize("chunk-size", defaults.chunk_size)?
+                .max(1),
+            ..defaults
+        };
+        // The bit-identity prefix check materializes its stream; never
+        // verify more than the timed run simulates.
+        let scale = ScaleBenchOpts {
+            verify_requests: scale.verify_requests.min(scale.n_requests),
+            ..scale
+        };
+        let (row, stats) = run_scale_bench(&scale);
+        scale_note = format!(
+            "scale run: {} shards, chunk {}, arena peak {} slots \
+             ({} chunks)\n",
+            scale.n_shards, scale.chunk_size, stats.arena_peak_slots,
+            stats.n_chunks,
+        );
+        rows.push(row);
+    }
     let doc = to_json(&opts, &rows);
     let text = doc.to_string_pretty() + "\n";
     if let Some(path) = args.get("out") {
@@ -379,6 +414,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<String> {
         return Ok(text);
     }
     let mut out = render_table(&rows);
+    out.push_str(&scale_note);
     if let Some(path) = args.get("out") {
         out.push_str(&format!("snapshot written to {path}\n"));
     }
@@ -530,8 +566,11 @@ mod tests {
 
     fn run_cmd(parts: &[&str]) -> anyhow::Result<String> {
         let argv: Vec<String> = parts.iter().map(|s| s.to_string()).collect();
-        let args = Args::parse(&argv, &["fast", "mixed", "explain", "json"])
-            .unwrap();
+        let args = Args::parse(
+            &argv,
+            &["fast", "mixed", "explain", "json", "scale"],
+        )
+        .unwrap();
         run(&args)
     }
 
@@ -639,6 +678,25 @@ mod tests {
         assert!(js.contains("\"schema\""), "{js}");
         assert!(js.contains("events_per_sec"), "{js}");
         assert!(run_cmd(&["bench", "--engine", "warp"]).is_err());
+    }
+
+    #[test]
+    fn bench_scale_adds_sharded_row() {
+        let out = run_cmd(&[
+            "bench", "--requests", "800", "--samples", "1", "--engine",
+            "production", "--scale", "--scale-requests", "6000",
+            "--shards", "2", "--chunk-size", "1024",
+        ])
+        .unwrap();
+        assert!(out.contains("lmsys_1e8"), "{out}");
+        assert!(out.contains("arena peak"), "{out}");
+        let js = run_cmd(&[
+            "bench", "--requests", "800", "--samples", "1", "--engine",
+            "production", "--scale", "--scale-requests", "6000",
+            "--shards", "2", "--json",
+        ])
+        .unwrap();
+        assert!(js.contains("\"lmsys_1e8\""), "{js}");
     }
 
     #[test]

@@ -99,11 +99,13 @@ impl Default for DesConfig {
 }
 
 /// Arena slot for one request: arrival time plus the (router-transformed)
-/// prompt/completion lengths. Indexed by `u32` ids everywhere.
-struct Req {
-    arrival_ms: f64,
-    l_in: f64,
-    l_out: f64,
+/// prompt/completion lengths. Indexed by `u32` ids everywhere. Shared
+/// with the sharded executor in [`crate::des::shard`], whose arena
+/// recycles slots at admission instead of holding one per request.
+pub(crate) struct Req {
+    pub(crate) arrival_ms: f64,
+    pub(crate) l_in: f64,
+    pub(crate) l_out: f64,
 }
 
 /// Effective per-instance slot cap for `pool` at time `t`.
@@ -126,7 +128,7 @@ fn eff_cap(cap_window: &Option<CapWindow>, pool: &DesPool, t: f64) -> u32 {
 /// lightly-loaded TTFTs. Held for the request's full duration
 /// (conservative: the batch may shrink later).
 #[allow(clippy::too_many_arguments)]
-fn try_admit(
+pub(crate) fn try_admit(
     pools: &mut [DesPool],
     pool_idx: usize,
     req_id: u32,

@@ -91,6 +91,17 @@ impl LatencyStats {
     pub fn p99_ttft(&mut self) -> f64 {
         self.ttft.p99()
     }
+
+    /// Fold another collector into this one (shard-merge path): sample
+    /// multisets concatenate, so percentiles / attainment over the merge
+    /// are bit-identical to a single-collector run (see
+    /// [`crate::util::stats::Samples::merge`]).
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.wait.merge(&other.wait);
+        self.ttft.merge(&other.ttft);
+        self.e2e.merge(&other.e2e);
+        self.count += other.count;
+    }
 }
 
 /// TTFT statistics bucketed by arrival time into fixed-width windows
@@ -242,6 +253,63 @@ impl WindowedStats {
             }
         }
         true
+    }
+
+    /// Fold another windowed series into this one (shard-merge path).
+    /// Windows align on *absolute* indices — each side anchors its base
+    /// at its own first measured arrival, so the merged base is the
+    /// earlier of the two. Per-window arrival counts add and TTFT
+    /// samples merge multiset-exactly, making the merged series
+    /// bit-identical (counts, per-window percentiles, attainment) to a
+    /// single-collector run over the union of the streams.
+    pub fn merge(&mut self, other: &WindowedStats) {
+        assert!(
+            self.width_ms == other.width_ms,
+            "window width mismatch: {} vs {}",
+            self.width_ms,
+            other.width_ms
+        );
+        assert_eq!(self.mode, other.mode, "metrics mode mismatch");
+        if other.ttft.is_empty() {
+            return;
+        }
+        if self.ttft.is_empty() {
+            *self = other.clone();
+            return;
+        }
+        let new_base = self.base.min(other.base);
+        let self_end = self.base + self.ttft.len();
+        let other_end = other.base + other.ttft.len();
+        let new_len = self_end.max(other_end) - new_base;
+        assert!(
+            new_len <= Self::MAX_WINDOWS,
+            "merged series spans more than {} windows",
+            Self::MAX_WINDOWS
+        );
+        let mut arrived = vec![0usize; new_len];
+        let mut ttft: Vec<Samples> = (0..new_len)
+            .map(|_| match self.mode {
+                MetricsMode::Exact => Samples::new(),
+                MetricsMode::Streaming => Samples::streaming(),
+            })
+            .collect();
+        let off = self.base - new_base;
+        for (i, t) in self.ttft.drain(..).enumerate() {
+            ttft[off + i] = t;
+        }
+        for (i, &a) in self.arrived.iter().enumerate() {
+            arrived[off + i] = a;
+        }
+        let off = other.base - new_base;
+        for (i, t) in other.ttft.iter().enumerate() {
+            ttft[off + i].merge(t);
+        }
+        for (i, &a) in other.arrived.iter().enumerate() {
+            arrived[off + i] += a;
+        }
+        self.base = new_base;
+        self.arrived = arrived;
+        self.ttft = ttft;
     }
 }
 
@@ -579,6 +647,58 @@ mod tests {
         assert_eq!(w.start_ms(0), 1000.0);
         assert_eq!(w.n_arrived(0), 1);
         assert_eq!(w.n_served(0), 1);
+    }
+
+    #[test]
+    fn merged_windows_match_a_single_collector() {
+        for mode in [MetricsMode::Exact, MetricsMode::Streaming] {
+            // One collector sees everything; two shards split the same
+            // stream by parity and are merged (later-base into earlier).
+            let mut all = WindowedStats::new(1000.0, mode);
+            let mut a = WindowedStats::new(1000.0, mode);
+            let mut b = WindowedStats::new(1000.0, mode);
+            for i in 0..50usize {
+                let t = 3000.0 + i as f64 * 137.0;
+                let shard = if i % 2 == 0 { &mut a } else { &mut b };
+                all.record_arrival(t);
+                shard.record_arrival(t);
+                if i % 7 != 0 {
+                    all.record_served(t, 10.0 + i as f64);
+                    shard.record_served(t, 10.0 + i as f64);
+                }
+            }
+            let mut m = a.clone();
+            m.merge(&b);
+            assert_eq!(m.n_windows(), all.n_windows());
+            for i in 0..all.n_windows() {
+                assert_eq!(m.start_ms(i), all.start_ms(i));
+                assert_eq!(m.n_arrived(i), all.n_arrived(i));
+                assert_eq!(m.n_served(i), all.n_served(i));
+                let (x, y) = (m.p99_ttft(i), all.p99_ttft(i));
+                assert!(
+                    x == y || (x.is_nan() && y.is_nan()),
+                    "{mode:?} window {i}: {x} vs {y}"
+                );
+            }
+            // Merging into an empty series adopts the other verbatim,
+            // and an empty right-hand side is a no-op.
+            let mut empty = WindowedStats::new(1000.0, mode);
+            empty.merge(&all);
+            assert_eq!(empty.n_windows(), all.n_windows());
+            let before = m.n_windows();
+            m.merge(&WindowedStats::new(1000.0, mode));
+            assert_eq!(m.n_windows(), before);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "window width mismatch")]
+    fn merging_mismatched_window_widths_panics() {
+        let mut a = WindowedStats::new(1000.0, MetricsMode::Exact);
+        a.record_arrival(10.0);
+        let mut b = WindowedStats::new(500.0, MetricsMode::Exact);
+        b.record_arrival(10.0);
+        a.merge(&b);
     }
 
     #[test]

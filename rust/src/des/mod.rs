@@ -12,3 +12,4 @@ pub mod event;
 pub mod metrics;
 pub mod pool;
 pub mod reference;
+pub mod shard;

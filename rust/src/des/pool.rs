@@ -114,9 +114,14 @@ impl DesPool {
         let total: f64 = self
             .instances
             .iter()
-            .map(|i| i.busy_slot_ms + i.busy as f64 * (horizon_ms - i.last_change_ms))
+            .map(|i| {
+                i.busy_slot_ms
+                    + i.busy as f64 * (horizon_ms - i.last_change_ms)
+            })
             .sum();
-        total / (horizon_ms * self.instances.len() as f64 * self.slots_per_gpu as f64)
+        let slots =
+            self.instances.len() as f64 * self.slots_per_gpu as f64;
+        total / (horizon_ms * slots)
     }
 
     /// Total free slots across the pool.

@@ -1,0 +1,628 @@
+//! Generator-driven and sharded DES execution (the 10^8-request path).
+//!
+//! [`Simulator::run_stream`](crate::des::engine::Simulator::run_stream)
+//! needs the whole request stream materialized up front — O(requests)
+//! memory. This module runs the *same* simulation over a pull-based
+//! [`RequestGenerator`] in fixed-size chunks, holding only the chunk
+//! being consumed plus the in-flight request arena: O(in-flight) memory.
+//!
+//! # Sharding model
+//!
+//! Pools are coupled only through the router: a routing decision depends
+//! on the request and the routing RNG stream, never on pool state (see
+//! [`crate::router::RoutingPolicy::route`]). So the fleet partitions
+//! cleanly by destination pool — shard `s` of `N` owns every pool with
+//! `index % N == s`. Each shard replays the *entire* arrival sequence
+//! and the *identical* routing RNG stream (class draw + route per
+//! arrival, exactly as the serial engine consumes it), then simulates
+//! only the arrivals routed to its own pools.
+//!
+//! # Determinism: why the merge is bit-identical
+//!
+//! * Per-pool state (utilization accounting, queue depths, admission
+//!   order, per-pool latency samples) evolves through the same
+//!   acquire/release/record sequence as the serial run restricted to
+//!   that pool: events for one shard's pools are pushed in the same
+//!   relative order as in the serial run (drains in pool-index order,
+//!   completions at admission), so same-time ties resolve identically.
+//! * Overall latency distributions merge as sample *multisets*
+//!   (exact-mode vectors concatenate, streaming histogram bins add), so
+//!   percentiles, counts, and attainment are bit-identical to the
+//!   serial run; only sample-vector order (and thus the accumulation
+//!   order behind floating-point means) differs.
+//! * Shard results merge in shard-id order, the horizon is the max over
+//!   shards (each shard's horizon covers every arrival plus its own
+//!   completions), and `max_unserved_wait = horizon - min(unserved
+//!   arrival)` — algebraically and bit-wise what the serial scan
+//!   computes.
+//!
+//! The `shard_regression` suite pins sharded-vs-serial bit-identity in
+//! both metrics modes, generalizing the `des_regression` pattern that
+//! pins the production engine against the all-events-heap reference.
+//!
+//! # Constraints
+//!
+//! * `warmup_frac` must be 0 (the paper's measure-everything behavior):
+//!   the time-based cutoff needs the last arrival, which a streaming
+//!   run does not know up front.
+//! * Exact metrics mode still stores every sample — bounded *total*
+//!   memory requires [`MetricsMode::Streaming`]
+//!   (`crate::des::metrics::MetricsMode`); the arena and chunk buffers
+//!   are bounded in both modes.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::des::engine::{try_admit, DesConfig, Req, SimPool};
+use crate::des::event::{CalendarQueue, EventKind};
+use crate::des::metrics::{DesResult, LatencyStats, MetricsCollector,
+                          PoolResult, WindowedStats};
+use crate::des::pool::DesPool;
+use crate::router::{RouteRequest, RoutingPolicy};
+use crate::workload::generator::RequestGenerator;
+use crate::workload::rng::Pcg64;
+use crate::workload::spec::{SampledRequest, WorkloadSpec};
+
+/// Default consumer-side chunk size (requests per generator pull). A
+/// free tuning knob: chunking never changes results, only the
+/// generation/simulation interleave and producer-consumer batching.
+pub const DEFAULT_CHUNK_SIZE: usize = 65_536;
+
+/// Execution counters for the streaming/sharded paths (memory evidence
+/// for the bounded-memory claim, surfaced by the perf harness).
+#[derive(Debug, Clone, Copy)]
+pub struct StreamStats {
+    /// Summed high-water mark of the per-shard request arenas: an upper
+    /// bound on simultaneously-resident `Req` slots across the fleet.
+    /// Stays O(in-flight) — flat in the total request count.
+    pub arena_peak_slots: usize,
+    /// Generator chunks produced.
+    pub n_chunks: usize,
+}
+
+/// In-flight request arena with slot recycling. A slot is held from
+/// arrival until *admission* (completion events carry pool/instance and
+/// never read the request back), so the live set is queued requests
+/// only — the quantity that is O(in-flight) even at 10^8 requests.
+struct Arena {
+    slots: Vec<Req>,
+    free: Vec<u32>,
+}
+
+impl Arena {
+    fn new() -> Self {
+        Arena { slots: Vec::new(), free: Vec::new() }
+    }
+
+    fn alloc(&mut self, req: Req) -> u32 {
+        match self.free.pop() {
+            Some(i) => {
+                self.slots[i as usize] = req;
+                i
+            }
+            None => {
+                let i = self.slots.len() as u32;
+                self.slots.push(req);
+                i
+            }
+        }
+    }
+
+    fn release(&mut self, id: u32) {
+        self.free.push(id);
+    }
+
+    /// High-water mark of allocated slots.
+    fn peak(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+/// One shard's simulation state. With `n_shards == 1` this is the
+/// whole-fleet generator-driven engine.
+struct ShardSim<'a> {
+    shard_id: usize,
+    n_shards: usize,
+    router: &'a RoutingPolicy,
+    config: &'a DesConfig,
+    pools: Vec<DesPool>,
+    events: CalendarQueue,
+    route_rng: Pcg64,
+    metrics: MetricsCollector,
+    arena: Arena,
+    n_events: usize,
+    n_compressed: usize,
+    horizon: f64,
+}
+
+/// What a shard hands to the merge step.
+struct ShardOutput {
+    pools: Vec<DesPool>,
+    per_pool_stats: Vec<LatencyStats>,
+    overall: LatencyStats,
+    windows: Option<WindowedStats>,
+    n_events: usize,
+    n_compressed: usize,
+    horizon: f64,
+    per_pool_unserved: Vec<usize>,
+    min_unserved_arrival: f64,
+    arena_peak: usize,
+}
+
+impl<'a> ShardSim<'a> {
+    fn new(
+        pool_specs: &[SimPool],
+        router: &'a RoutingPolicy,
+        config: &'a DesConfig,
+        shard_id: usize,
+        n_shards: usize,
+    ) -> Self {
+        debug_assert!(shard_id < n_shards);
+        let pools: Vec<DesPool> = pool_specs
+            .iter()
+            .map(|p| {
+                DesPool::new(p.gpu.clone(), p.n_gpus, p.ctx_budget,
+                             p.batch_cap)
+            })
+            .collect();
+        let mut events = CalendarQueue::with_capacity(64);
+        if let Some(w) = &config.cap_window {
+            // Owned pools only, in pool-index order — the serial engine
+            // pushes all-pool drains in pool-index order, so the
+            // restriction to this shard's pools keeps the same relative
+            // (and hence tie-breaking) order.
+            for p in 0..pools.len() {
+                if p % n_shards == shard_id {
+                    events.push(w.end_ms, EventKind::Drain { pool: p as u16 });
+                }
+            }
+        }
+        // Exact-mode pre-size hint: this shard's expected share, capped
+        // so a 10^8-request config never pre-allocates gigabytes.
+        let hint = (config.n_requests / n_shards).min(1 << 20);
+        let metrics = MetricsCollector::new(
+            config.metrics, pools.len(), hint, config.window_ms, 0.0,
+        );
+        ShardSim {
+            shard_id,
+            n_shards,
+            router,
+            config,
+            pools,
+            events,
+            route_rng: Pcg64::new(config.seed, 3),
+            metrics,
+            arena: Arena::new(),
+            n_events: 0,
+            n_compressed: 0,
+            horizon: 0.0,
+        }
+    }
+
+    /// Process one arrival from the global stream. Every shard sees
+    /// every arrival (to replay the routing RNG and track the horizon);
+    /// only the owner of the routed pool simulates it.
+    fn feed(&mut self, r: &SampledRequest) {
+        // Arrivals win ties, exactly as in the serial merge loop
+        // (`arrival_ms <= next event time` takes the arrival).
+        while let Some(t) = self.events.next_time() {
+            if t < r.arrival_ms {
+                self.step_event();
+            } else {
+                break;
+            }
+        }
+        let now = r.arrival_ms;
+        self.horizon = self.horizon.max(now);
+        let class = match &self.config.class_probs {
+            None => 0,
+            Some(probs) => {
+                let u = self.route_rng.uniform();
+                let mut cum = 0.0;
+                let mut cls = probs.len() - 1;
+                for (i, p) in probs.iter().enumerate() {
+                    cum += p;
+                    if u < cum {
+                        cls = i;
+                        break;
+                    }
+                }
+                cls
+            }
+        };
+        let decision = self.router.route(
+            RouteRequest { l_in: r.l_in, l_out: r.l_out, class },
+            &mut self.route_rng,
+        );
+        if decision.pool % self.n_shards != self.shard_id {
+            return;
+        }
+        self.n_events += 1;
+        self.metrics.record_arrival(now);
+        if decision.compressed {
+            self.n_compressed += 1;
+        }
+        let id = self.arena.alloc(Req {
+            arrival_ms: now,
+            l_in: decision.request.l_in,
+            l_out: decision.request.l_out,
+        });
+        let admitted = try_admit(
+            &mut self.pools, decision.pool, id, &self.arena.slots, now,
+            &mut self.events, &self.config.cap_window, &mut self.metrics,
+        );
+        if admitted {
+            self.arena.release(id);
+        } else {
+            self.pools[decision.pool].enqueue(id);
+        }
+    }
+
+    fn step_event(&mut self) {
+        let Some(ev) = self.events.pop() else { return };
+        self.n_events += 1;
+        let now = ev.time_ms;
+        self.horizon = self.horizon.max(now);
+        match ev.kind {
+            EventKind::Arrival { .. } => {
+                unreachable!("arrivals come from the generator stream")
+            }
+            EventKind::Completion { req: _, pool, instance } => {
+                self.pools[pool as usize].release(instance as usize, now);
+                self.drain_pool(pool as usize, now);
+            }
+            EventKind::Drain { pool } => {
+                self.drain_pool(pool as usize, now);
+            }
+        }
+    }
+
+    /// Admit queued requests while capacity allows, recycling arena
+    /// slots at admission (the only divergence from the serial
+    /// `drain_queue`, which keeps its whole-stream arena).
+    fn drain_pool(&mut self, pool_idx: usize, now: f64) {
+        while let Some(&head) = self.pools[pool_idx].queue.front() {
+            let admitted = try_admit(
+                &mut self.pools, pool_idx, head, &self.arena.slots, now,
+                &mut self.events, &self.config.cap_window, &mut self.metrics,
+            );
+            if !admitted {
+                break;
+            }
+            self.pools[pool_idx].queue.pop_front();
+            self.arena.release(head);
+        }
+    }
+
+    /// Drain remaining events and scan for unserved requests (requests
+    /// still queued when the stream drained keep their arena slots, so
+    /// the anti-censoring scan works exactly as in the serial engine).
+    fn finish(mut self) -> ShardOutput {
+        while !self.events.is_empty() {
+            self.step_event();
+        }
+        let mut per_pool_unserved = vec![0usize; self.pools.len()];
+        let mut min_unserved_arrival = f64::INFINITY;
+        for (p, pool) in self.pools.iter().enumerate() {
+            for &req in &pool.queue {
+                let arrival = self.arena.slots[req as usize].arrival_ms;
+                if !self.metrics.measured(arrival) {
+                    continue;
+                }
+                per_pool_unserved[p] += 1;
+                min_unserved_arrival = min_unserved_arrival.min(arrival);
+            }
+        }
+        ShardOutput {
+            pools: self.pools,
+            per_pool_stats: self.metrics.per_pool,
+            overall: self.metrics.overall,
+            windows: self.metrics.windows,
+            n_events: self.n_events,
+            n_compressed: self.n_compressed,
+            horizon: self.horizon,
+            per_pool_unserved,
+            min_unserved_arrival,
+            arena_peak: self.arena.peak(),
+        }
+    }
+}
+
+/// Deterministic shard merge (shard-id order). See the module docs for
+/// the bit-identity argument.
+fn merge_outputs(
+    mut outputs: Vec<ShardOutput>,
+    n_requests: usize,
+) -> (DesResult, usize) {
+    let n_shards = outputs.len();
+    let n_pools = outputs[0].pools.len();
+    let horizon = outputs.iter().map(|o| o.horizon).fold(0.0f64, f64::max);
+    let n_events: usize = outputs.iter().map(|o| o.n_events).sum();
+    let n_compressed: usize =
+        outputs.iter().map(|o| o.n_compressed).sum();
+    let n_unserved: usize = outputs
+        .iter()
+        .map(|o| o.per_pool_unserved.iter().sum::<usize>())
+        .sum();
+    let arena_peak: usize = outputs.iter().map(|o| o.arena_peak).sum();
+    // max over unserved of (horizon - arrival) == horizon - min(arrival):
+    // f64 subtraction with a fixed minuend is monotone, so this is the
+    // serial scan's result bit-for-bit.
+    let max_unserved_wait = if n_unserved > 0 {
+        let min_arr = outputs
+            .iter()
+            .map(|o| o.min_unserved_arrival)
+            .fold(f64::INFINITY, f64::min);
+        horizon - min_arr
+    } else {
+        0.0
+    };
+    // Each pool's state lives wholly in its owner shard; utilization is
+    // evaluated against the *global* horizon, as in the serial run.
+    let per_pool: Vec<PoolResult> = (0..n_pools)
+        .map(|p| {
+            let o = &mut outputs[p % n_shards];
+            let stats = std::mem::take(&mut o.per_pool_stats[p]);
+            let pool = &o.pools[p];
+            PoolResult {
+                stats,
+                utilization: pool.utilization(horizon),
+                max_queue_depth: pool.max_queue_depth,
+                slots_per_gpu: pool.slots_per_gpu,
+                n_gpus: pool.instances.len(),
+                n_unserved: o.per_pool_unserved[p],
+            }
+        })
+        .collect();
+    let mut outputs = outputs.into_iter();
+    let first = outputs.next().expect("at least one shard");
+    let mut overall = first.overall;
+    let mut windows = first.windows;
+    for o in outputs {
+        overall.merge(&o.overall);
+        if let (Some(acc), Some(w)) = (&mut windows, &o.windows) {
+            acc.merge(w);
+        }
+    }
+    let result = DesResult {
+        per_pool,
+        overall,
+        horizon_ms: horizon,
+        n_requests,
+        n_compressed,
+        n_events,
+        n_unserved,
+        max_unserved_wait_ms: max_unserved_wait,
+        windows,
+    };
+    (result, arena_peak)
+}
+
+fn check_config(
+    pool_specs: &[SimPool],
+    router: &RoutingPolicy,
+    config: &DesConfig,
+) {
+    assert!(
+        router.n_pools() <= pool_specs.len(),
+        "router expects {} pools, got {}",
+        router.n_pools(),
+        pool_specs.len()
+    );
+    assert!(
+        config.warmup_frac == 0.0,
+        "generator-driven runs require warmup_frac = 0 (the time-based \
+         cutoff needs the last arrival, unknown while streaming)"
+    );
+}
+
+/// Generator-driven, single-threaded run: bit-identical to
+/// [`Simulator::run_stream`](crate::des::engine::Simulator::run_stream)
+/// on the materialized stream, in O(in-flight) memory.
+pub fn run_streamed(
+    pool_specs: &[SimPool],
+    router: &RoutingPolicy,
+    config: &DesConfig,
+    workload: &WorkloadSpec,
+    chunk_size: usize,
+) -> (DesResult, StreamStats) {
+    check_config(pool_specs, router, config);
+    let chunk_size = chunk_size.max(1);
+    let n = config.n_requests;
+    let mut sim = ShardSim::new(pool_specs, router, config, 0, 1);
+    let mut gen = RequestGenerator::new(workload, config.seed);
+    let mut chunk = Vec::with_capacity(chunk_size.min(n.max(1)));
+    let mut produced = 0usize;
+    let mut n_chunks = 0usize;
+    while produced < n {
+        let take = chunk_size.min(n - produced);
+        chunk.clear();
+        gen.fill(&mut chunk, take);
+        produced += take;
+        n_chunks += 1;
+        for r in &chunk {
+            sim.feed(r);
+        }
+    }
+    let (result, arena_peak) = merge_outputs(vec![sim.finish()], n);
+    (result, StreamStats { arena_peak_slots: arena_peak, n_chunks })
+}
+
+/// Generator-driven, sharded run: one thread per shard, pools
+/// partitioned by `index % n_shards`, results merged deterministically.
+/// Bit-identical to the serial engine for any shard count (pinned by
+/// the `shard_regression` suite); see the module docs.
+///
+/// `n_shards` is clamped to the pool count — a shard owning no pools
+/// would only burn a core replaying the routing stream.
+pub fn run_sharded(
+    pool_specs: &[SimPool],
+    router: &RoutingPolicy,
+    config: &DesConfig,
+    workload: &WorkloadSpec,
+    n_shards: usize,
+    chunk_size: usize,
+) -> (DesResult, StreamStats) {
+    check_config(pool_specs, router, config);
+    let n_shards = n_shards.clamp(1, pool_specs.len().max(1));
+    if n_shards == 1 {
+        return run_streamed(pool_specs, router, config, workload,
+                            chunk_size);
+    }
+    let chunk_size = chunk_size.max(1);
+    let n = config.n_requests;
+    let mut senders = Vec::with_capacity(n_shards);
+    let mut receivers = Vec::with_capacity(n_shards);
+    for _ in 0..n_shards {
+        // Bounded fan-out: the producer stays at most 2 chunks ahead of
+        // the slowest shard, so resident chunk memory is O(shards).
+        let (tx, rx) = mpsc::sync_channel::<Arc<Vec<SampledRequest>>>(2);
+        senders.push(tx);
+        receivers.push(rx);
+    }
+    let (outputs, n_chunks) = std::thread::scope(|s| {
+        let handles: Vec<_> = receivers
+            .into_iter()
+            .enumerate()
+            .map(|(sid, rx)| {
+                s.spawn(move || {
+                    let mut sim = ShardSim::new(
+                        pool_specs, router, config, sid, n_shards,
+                    );
+                    while let Ok(chunk) = rx.recv() {
+                        for r in chunk.iter() {
+                            sim.feed(r);
+                        }
+                    }
+                    sim.finish()
+                })
+            })
+            .collect();
+        // This thread is the producer: generate once, broadcast the Arc.
+        let mut gen = RequestGenerator::new(workload, config.seed);
+        let mut produced = 0usize;
+        let mut n_chunks = 0usize;
+        while produced < n {
+            let take = chunk_size.min(n - produced);
+            let mut chunk = Vec::with_capacity(take);
+            gen.fill(&mut chunk, take);
+            produced += take;
+            n_chunks += 1;
+            let chunk = Arc::new(chunk);
+            for tx in &senders {
+                tx.send(Arc::clone(&chunk)).expect("shard thread died");
+            }
+        }
+        drop(senders);
+        let outs: Vec<ShardOutput> = handles
+            .into_iter()
+            .map(|h| h.join().expect("shard thread panicked"))
+            .collect();
+        (outs, n_chunks)
+    });
+    let (result, arena_peak) = merge_outputs(outputs, n);
+    (result, StreamStats { arena_peak_slots: arena_peak, n_chunks })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::des::engine::Simulator;
+    use crate::des::metrics::MetricsMode;
+    use crate::gpu::catalog::GpuCatalog;
+    use crate::gpu::profile::GpuProfile;
+    use crate::workload::spec::{BuiltinTrace, WorkloadSpec};
+
+    fn a100() -> GpuProfile {
+        GpuCatalog::standard().get("A100").unwrap().clone()
+    }
+
+    fn setup() -> (WorkloadSpec, Vec<SimPool>, RoutingPolicy) {
+        let pools = vec![
+            SimPool { gpu: a100(), n_gpus: 4, ctx_budget: 4096.0,
+                      batch_cap: None },
+            SimPool { gpu: a100(), n_gpus: 4, ctx_budget: 8192.0,
+                      batch_cap: None },
+        ];
+        (
+            WorkloadSpec::builtin(BuiltinTrace::Azure, 100.0),
+            pools,
+            RoutingPolicy::Length { b_short: 4096.0 },
+        )
+    }
+
+    fn summary(r: &mut DesResult) -> Vec<f64> {
+        let mut v = vec![
+            r.overall.wait.p99(),
+            r.overall.ttft.p99(),
+            r.overall.e2e.p99(),
+            r.overall.count as f64,
+            r.horizon_ms,
+            r.n_events as f64,
+            r.n_unserved as f64,
+            r.max_unserved_wait_ms,
+        ];
+        for p in &mut r.per_pool {
+            v.push(p.stats.ttft.p99());
+            v.push(p.stats.count as f64);
+            v.push(p.utilization);
+            v.push(p.max_queue_depth as f64);
+        }
+        v
+    }
+
+    #[test]
+    fn streamed_and_sharded_match_serial_smoke() {
+        let (w, pools, router) = setup();
+        for mode in [MetricsMode::Exact, MetricsMode::Streaming] {
+            let cfg = DesConfig {
+                n_requests: 6_000,
+                seed: 11,
+                metrics: mode,
+                ..Default::default()
+            };
+            let sampled = w.sample_requests(cfg.n_requests, cfg.seed);
+            let mut serial =
+                Simulator::run_stream(&pools, &router, &cfg, &sampled);
+            let want = summary(&mut serial);
+            for shards in [1usize, 2] {
+                for chunk in [777usize, DEFAULT_CHUNK_SIZE] {
+                    let (mut got, stats) = run_sharded(
+                        &pools, &router, &cfg, &w, shards, chunk,
+                    );
+                    assert_eq!(summary(&mut got), want,
+                               "{mode:?} shards={shards} chunk={chunk}");
+                    assert!(stats.arena_peak_slots <= cfg.n_requests);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn arena_stays_small_on_a_stable_fleet() {
+        let (w, pools, router) = setup();
+        let cfg = DesConfig {
+            n_requests: 30_000,
+            metrics: MetricsMode::Streaming,
+            ..Default::default()
+        };
+        let (_, stats) = run_streamed(&pools, &router, &cfg, &w, 2_048);
+        // A stable fleet keeps the in-flight set tiny relative to the
+        // stream: the arena must not scale with n_requests.
+        assert!(stats.arena_peak_slots < 2_000,
+                "arena peak = {}", stats.arena_peak_slots);
+        assert_eq!(stats.n_chunks, 15);
+    }
+
+    #[test]
+    #[should_panic(expected = "warmup_frac = 0")]
+    fn warmup_is_rejected_in_streaming_mode() {
+        let (w, pools, router) = setup();
+        let cfg = DesConfig {
+            n_requests: 100,
+            warmup_frac: 0.1,
+            ..Default::default()
+        };
+        run_streamed(&pools, &router, &cfg, &w, 64);
+    }
+}

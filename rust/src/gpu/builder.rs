@@ -114,7 +114,12 @@ pub struct ProfileBuilder {
 
 impl ProfileBuilder {
     pub fn new(model: ModelSpec) -> Self {
-        ProfileBuilder { model, kernel_overhead_ms: 0.5, w_scale: 1.0, h_scale: 1.0 }
+        ProfileBuilder {
+            model,
+            kernel_overhead_ms: 0.5,
+            w_scale: 1.0,
+            h_scale: 1.0,
+        }
     }
 
     /// Raw roofline W (ms): weight streaming + kernel overhead.
@@ -223,7 +228,8 @@ mod tests {
         b.calibrate(&HardwareSpec::a100(), a100_manual);
         let rebuilt = b.build(&HardwareSpec::a100());
         assert!((rebuilt.w_ms - a100_manual.w_ms).abs() < 1e-9);
-        assert!((rebuilt.h_ms_per_slot - a100_manual.h_ms_per_slot).abs() < 1e-9);
+        let dh = (rebuilt.h_ms_per_slot - a100_manual.h_ms_per_slot).abs();
+        assert!(dh < 1e-9);
         // Transferred to H100, the derived constants land near the
         // hand-calibrated ones (within 2x).
         let h100 = b.build(&HardwareSpec::h100());

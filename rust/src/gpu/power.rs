@@ -19,8 +19,8 @@ impl GpuProfile {
         let b = b.max(1.0);
         let range = self.p_nom_w - self.p_idle_w;
         let x = b.log2();
-        range / (1.0 + (-self.power_logistic_k * (x - self.power_logistic_x0)).exp())
-            + self.p_idle_w
+        let z = -self.power_logistic_k * (x - self.power_logistic_x0);
+        range / (1.0 + z.exp()) + self.p_idle_w
     }
 
     /// Largest integer batch cap whose power draw is <= `target_w`,

@@ -187,7 +187,8 @@ mod tests {
         assert!((t - 4.0 * g.t_iter(g.n_eff(8192.0))).abs() < 1e-9);
         // H100's larger chunk roughly halves prefill time vs A100 (§4.6).
         let a = a100();
-        let ratio = a.prefill_ms(65536.0, 65536.0) / g.prefill_ms(65536.0, 65536.0);
+        let ratio =
+            a.prefill_ms(65536.0, 65536.0) / g.prefill_ms(65536.0, 65536.0);
         assert!(ratio > 2.0, "A100/H100 prefill ratio = {ratio}");
     }
 

@@ -9,7 +9,10 @@ use fleet_sim::cli::commands;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = match Args::parse(&argv, &["fast", "mixed", "explain", "json"]) {
+    let args = match Args::parse(
+        &argv,
+        &["fast", "mixed", "explain", "json", "scale"],
+    ) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");

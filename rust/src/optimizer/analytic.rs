@@ -174,7 +174,8 @@ impl SweepEval for NativeSweep {
         slo_ms: f64,
     ) -> anyhow::Result<Vec<CandidateResult>> {
         use crate::queueing::mgc::{PoolAnalysis, RHO_MAX};
-        let hist = WorkloadHist::from_cdf(&workload.cdf, workload.input_fraction);
+        let hist =
+            WorkloadHist::from_cdf(&workload.cdf, workload.input_fraction);
         let max_len = workload.cdf.max_len();
         let lam = workload.lambda_per_ms();
 
@@ -192,7 +193,10 @@ impl SweepEval for NativeSweep {
         let idxs: Vec<(usize, usize)> = candidates
             .iter()
             .map(|c| {
-                (cache_for(c.gpu_s.chunk, &hist), cache_for(c.gpu_l.chunk, &hist))
+                (
+                    cache_for(c.gpu_s.chunk, &hist),
+                    cache_for(c.gpu_l.chunk, &hist),
+                )
             })
             .collect();
 
@@ -237,8 +241,10 @@ impl SweepEval for NativeSweep {
                         .slice(&hist.lens, cand.b_short, max_len)
                         .0
                         > 1e-9;
+                let alpha_l_eff =
+                    if cand.is_homogeneous() { 0.0 } else { alpha_l };
                 let feasible = meets(&short, alpha_s)
-                    && meets(&long, if cand.is_homogeneous() { 0.0 } else { alpha_l })
+                    && meets(&long, alpha_l_eff)
                     && !dangling;
                 CandidateResult {
                     rho_s: short.rho,
@@ -303,7 +309,8 @@ mod tests {
     #[test]
     fn sweep_finds_feasible_candidates() {
         let w = lmsys100();
-        let cands = generate(&w, &GpuCatalog::standard(), &GenOptions::default());
+        let cands =
+            generate(&w, &GpuCatalog::standard(), &GenOptions::default());
         let res = NativeSweep.eval(&w, &cands, 500.0).unwrap();
         assert_eq!(res.len(), cands.len());
         let ranked = rank_feasible(&cands, &res);
@@ -352,7 +359,8 @@ mod tests {
     #[test]
     fn feasibility_requires_slo() {
         let w = lmsys100();
-        let cands = generate(&w, &GpuCatalog::standard(), &GenOptions::default());
+        let cands =
+            generate(&w, &GpuCatalog::standard(), &GenOptions::default());
         let relaxed = NativeSweep.eval(&w, &cands, 10_000.0).unwrap();
         let strict = NativeSweep.eval(&w, &cands, 1.0).unwrap();
         let n_relaxed = relaxed.iter().filter(|r| r.feasible).count();

@@ -48,7 +48,8 @@ impl Candidate {
         } else {
             format!(
                 "{}x{} short(B={}) + {}x{} long",
-                self.gpu_s.name, self.n_s, self.b_short, self.gpu_l.name, self.n_l
+                self.gpu_s.name, self.n_s, self.b_short, self.gpu_l.name,
+                self.n_l
             )
         }
     }

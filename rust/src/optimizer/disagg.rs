@@ -166,7 +166,11 @@ pub struct DisaggFleetOptimizer {
 }
 
 impl DisaggFleetOptimizer {
-    pub fn new(catalog: GpuCatalog, ttft_slo_ms: f64, tpot_slo_ms: f64) -> Self {
+    pub fn new(
+        catalog: GpuCatalog,
+        ttft_slo_ms: f64,
+        tpot_slo_ms: f64,
+    ) -> Self {
         DisaggFleetOptimizer { catalog, ttft_slo_ms, tpot_slo_ms,
                                max_gpus_per_pool: 256 }
     }
@@ -247,7 +251,8 @@ impl DisaggFleetOptimizer {
         workload: &WorkloadSpec,
         gpu: &GpuProfile,
     ) -> Option<(u32, f64, f64)> {
-        let hist = WorkloadHist::from_cdf(&workload.cdf, workload.input_fraction);
+        let hist =
+            WorkloadHist::from_cdf(&workload.cdf, workload.input_fraction);
         let ctx = workload.cdf.max_len();
         let lam = workload.lambda_per_ms();
         for n in 1..=self.max_gpus_per_pool {
@@ -332,10 +337,10 @@ pub fn simulate_disagg(
                     let nr = &reqs[next as usize];
                     let nraw = (nr.l_in / cfg.gpu_prefill.chunk).ceil()
                         * cfg.gpu_prefill.t_iter(1.0);
-                    events.push(
-                        now + nraw,
-                        EventKind::Completion { req: next, pool: 0, instance: 0 },
-                    );
+                    let kind =
+                        EventKind::Completion { req: next, pool: 0,
+                                                instance: 0 };
+                    events.push(now + nraw, kind);
                 } else {
                     prefill_busy -= 1;
                 }
@@ -367,10 +372,10 @@ pub fn simulate_disagg(
                     decode_busy += 1;
                     let nr = &reqs[next as usize];
                     ttft.push(now - nr.arrival_ms + t_decode);
-                    events.push(
-                        now + nr.l_out * t_decode,
-                        EventKind::Completion { req: next, pool: 1, instance: 0 },
-                    );
+                    let kind =
+                        EventKind::Completion { req: next, pool: 1,
+                                                instance: 0 };
+                    events.push(now + nr.l_out * t_decode, kind);
                 }
             }
             _ => {}
@@ -451,7 +456,8 @@ mod tests {
         // GPU (A100) for prefill and H100 for decode — not the reverse.
         let o = optimizer();
         let sweep = o.sweep(&azure100());
-        let feasible: Vec<_> = sweep.iter().filter(|(_, a)| a.feasible).collect();
+        let feasible: Vec<_> =
+            sweep.iter().filter(|(_, a)| a.feasible).collect();
         assert!(!feasible.is_empty());
         let best = &feasible[0];
         let reverse = sweep.iter().find(|(c, _)| {

@@ -252,10 +252,22 @@ impl EvalEngine {
         self.cache.lock().unwrap().len()
     }
 
+    /// Streams above this request count are never materialized (or
+    /// cached): the engine switches to the generator-driven executor,
+    /// which re-derives the stream from the same `(workload, seed)` key
+    /// on every run. The cutoff is a memory policy, not a semantic one —
+    /// both paths are bit-identical (pinned by `shard_regression`).
+    pub const STREAM_CACHE_MAX: usize = 1 << 20;
+
     /// DES run on an explicit pool layout, reusing the cached request
     /// stream. Bit-identical to `Simulator::run` with the same config —
     /// and everything is borrowed: no workload, pool, router, or
     /// request-vector clone per candidate.
+    ///
+    /// Above [`Self::STREAM_CACHE_MAX`] requests (with `warmup_frac` 0,
+    /// the generator path's precondition), the run switches to the
+    /// O(in-flight)-memory generator-driven executor instead of
+    /// materializing and caching a multi-gigabyte stream.
     pub fn simulate(
         &self,
         workload: &WorkloadSpec,
@@ -263,6 +275,14 @@ impl EvalEngine {
         router: &RoutingPolicy,
         cfg: &DesConfig,
     ) -> DesResult {
+        if cfg.n_requests > Self::STREAM_CACHE_MAX && cfg.warmup_frac == 0.0
+        {
+            let (r, _) = crate::des::shard::run_streamed(
+                pools, router, cfg, workload,
+                crate::des::shard::DEFAULT_CHUNK_SIZE,
+            );
+            return r;
+        }
         let stream = self.sampled_stream(workload, cfg.n_requests, cfg.seed);
         Simulator::run_stream(pools, router, cfg, &stream)
     }

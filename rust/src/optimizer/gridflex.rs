@@ -117,7 +117,8 @@ pub fn grid_flex_analysis(
         let (p99_analytic, rho) =
             analytic_p99_at_cap(workload, gpu, cfg.n_gpus, ctx, cap);
         let steady_ok = rho <= RHO_MAX && p99_analytic <= cfg.slo_ms;
-        let p99_analytic = if rho > RHO_MAX { f64::INFINITY } else { p99_analytic };
+        let p99_analytic =
+            if rho > RHO_MAX { f64::INFINITY } else { p99_analytic };
 
         // Steady-state DES at the cap.
         let pools = vec![SimPool {
@@ -165,7 +166,8 @@ pub fn grid_flex_analysis(
             // Re-derive arrival times to filter: same seed stream.
             let sampled = workload.sample_requests(cfg.n_requests, cfg.seed);
             for (s, &t) in sampled.iter().zip(event.overall.ttft.values()) {
-                if s.arrival_ms >= window.start_ms && s.arrival_ms < window.end_ms
+                if s.arrival_ms >= window.start_ms
+                    && s.arrival_ms < window.end_ms
                 {
                     in_window.push(t);
                 }
@@ -267,7 +269,8 @@ mod tests {
         // reflect that (paper §4.8 "recalibrated at each batch cap").
         let (w, gpu, _) = setup();
         let (p99_cap13, rho13) = analytic_p99_at_cap(&w, &gpu, 40, 8192.0, 13);
-        let (p99_full, rho_full) = analytic_p99_at_cap(&w, &gpu, 40, 8192.0, 128);
+        let (p99_full, rho_full) =
+            analytic_p99_at_cap(&w, &gpu, 40, 8192.0, 128);
         // Both stable; the recalibrated model keeps TTFT in the same
         // regime because the equilibrium batch sits below both caps
         // (Table 9's constant analytic column).

@@ -124,7 +124,11 @@ impl FleetOptimizer {
     }
 
     /// Phase 2: DES-verify one candidate with the production LengthRouter.
-    pub fn verify(&self, workload: &WorkloadSpec, cand: &Candidate) -> Verification {
+    pub fn verify(
+        &self,
+        workload: &WorkloadSpec,
+        cand: &Candidate,
+    ) -> Verification {
         EvalEngine::native(self.catalog.clone())
             .verify(workload, cand, &self.des, self.slo_ms)
     }

@@ -23,7 +23,10 @@ impl Default for NodeAvail {
 
 impl NodeAvail {
     /// Eq. 6: A = 1 / (1 + r_f * MTTR).
-    pub fn from_failure_model(failures_per_node_day: f64, mttr_days: f64) -> Self {
+    pub fn from_failure_model(
+        failures_per_node_day: f64,
+        mttr_days: f64,
+    ) -> Self {
         assert!(failures_per_node_day >= 0.0 && mttr_days >= 0.0);
         NodeAvail { a: 1.0 / (1.0 + failures_per_node_day * mttr_days) }
     }

@@ -87,7 +87,11 @@ impl WhatIfSweep {
     /// The full Table-4 style sweep. Each λ bracket (sizing + headroom
     /// bisection) is independent, so brackets fan out over worker threads
     /// while the output stays in input order.
-    pub fn sweep(&self, workload: &WorkloadSpec, lambdas: &[f64]) -> Vec<StepRow> {
+    pub fn sweep(
+        &self,
+        workload: &WorkloadSpec,
+        lambdas: &[f64],
+    ) -> Vec<StepRow> {
         let hi = lambdas.last().copied().unwrap_or(0.0) * 2.0;
         let indexed: Vec<(usize, f64)> =
             lambdas.iter().copied().enumerate().collect();

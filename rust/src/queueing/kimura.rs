@@ -28,7 +28,13 @@ pub fn mean_wait(rho: f64, c: usize, es_ms: f64, cs2: f64) -> f64 {
 }
 
 /// P-th percentile queue wait (ms), `p` in (0, 1).
-pub fn percentile_wait(rho: f64, c: usize, es_ms: f64, cs2: f64, p: f64) -> f64 {
+pub fn percentile_wait(
+    rho: f64,
+    c: usize,
+    es_ms: f64,
+    cs2: f64,
+    p: f64,
+) -> f64 {
     assert!((0.0..1.0).contains(&p));
     let w = mean_wait(rho, c, es_ms, cs2);
     if !w.is_finite() {
@@ -67,10 +73,9 @@ mod tests {
     fn deterministic_service_halves_exponential_wait() {
         // Cs² = 0 -> (1+0)/2 = half the exponential-service wait.
         let (rho, c, es) = (0.8, 2, 10.0);
-        assert!(
-            (mean_wait(rho, c, es, 0.0) * 2.0 - mean_wait(rho, c, es, 1.0)).abs()
-                < 1e-12
-        );
+        let diff =
+            mean_wait(rho, c, es, 0.0) * 2.0 - mean_wait(rho, c, es, 1.0);
+        assert!(diff.abs() < 1e-12);
     }
 
     #[test]

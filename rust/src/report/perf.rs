@@ -28,9 +28,11 @@ use std::time::Instant;
 use crate::des::engine::{CapWindow, DesConfig, SimPool, Simulator};
 use crate::des::metrics::MetricsMode;
 use crate::des::reference::run_reference;
+use crate::des::shard::{run_sharded, StreamStats, DEFAULT_CHUNK_SIZE};
 use crate::gpu::catalog::GpuCatalog;
 use crate::router::RoutingPolicy;
 use crate::util::json::Json;
+use crate::util::parallel::default_threads;
 use crate::util::table::{Align, Table};
 use crate::workload::spec::{BuiltinTrace, WorkloadSpec};
 
@@ -282,6 +284,114 @@ pub fn run_bench(opts: &BenchOpts) -> Vec<BenchRow> {
     rows
 }
 
+/// Knobs for the `lmsys_1e8` scale scenario (`fleet-sim bench --scale`):
+/// the generator-driven sharded executor at production volume. Unlike
+/// the four [`BenchOpts`] scenarios the stream is never materialized —
+/// that is the point — so the reference engine does not participate and
+/// the row's `ref_*`/`speedup` fields stay null; the gate instead checks
+/// an absolute events/sec floor and the process RSS.
+#[derive(Debug, Clone)]
+pub struct ScaleBenchOpts {
+    /// Requests in the timed run (default 10^8; `--fast` drops it to
+    /// 2 x 10^6 so CI finishes in seconds).
+    pub n_requests: usize,
+    pub seed: u64,
+    /// Shard threads (`--shards`; clamped to the pool count).
+    pub n_shards: usize,
+    /// Generator chunk size (`--chunk-size`).
+    pub chunk_size: usize,
+    /// Requests for the untimed sharded-vs-serial bit-identity prefix
+    /// check (this many *are* materialized, so keep it modest).
+    pub verify_requests: usize,
+}
+
+impl Default for ScaleBenchOpts {
+    fn default() -> Self {
+        ScaleBenchOpts {
+            n_requests: 100_000_000,
+            seed: 42,
+            n_shards: default_threads(),
+            chunk_size: DEFAULT_CHUNK_SIZE,
+            verify_requests: 200_000,
+        }
+    }
+}
+
+/// The scale scenario: the LMSYS trace at 1600 rps on a two-pool split
+/// fleet sized to run hot (~0.8 utilization) but stable, so the event
+/// loop is dominated by real queueing work rather than empty pools.
+fn scale_case(seed: u64) -> BenchCase {
+    let cat = GpuCatalog::standard();
+    let a100 = cat.get("A100").unwrap().clone();
+    let h100 = cat.get("H100").unwrap().clone();
+    BenchCase {
+        name: "lmsys_1e8",
+        workload: WorkloadSpec::builtin(BuiltinTrace::Lmsys, 1600.0),
+        pools: vec![
+            SimPool { gpu: a100, n_gpus: 64, ctx_budget: 4096.0,
+                      batch_cap: None },
+            SimPool { gpu: h100, n_gpus: 24, ctx_budget: 65536.0,
+                      batch_cap: None },
+        ],
+        router: RoutingPolicy::Length { b_short: 4096.0 },
+        cfg: DesConfig { seed, ..Default::default() },
+    }
+}
+
+/// Run the scale scenario: an untimed sharded-vs-serial bit-identity
+/// prefix check in *both* metrics modes, then one timed sharded run in
+/// the production configuration (streaming metrics). Returns the row
+/// plus the run's [`StreamStats`] (bounded-memory evidence).
+pub fn run_scale_bench(opts: &ScaleBenchOpts) -> (BenchRow, StreamStats) {
+    let case = scale_case(opts.seed);
+    let mut identical = true;
+    for mode in [MetricsMode::Exact, MetricsMode::Streaming] {
+        let cfg = DesConfig {
+            n_requests: opts.verify_requests,
+            metrics: mode,
+            ..case.cfg.clone()
+        };
+        let stream = case
+            .workload
+            .sample_requests(cfg.n_requests, cfg.seed);
+        let mut serial = Simulator::run_stream(&case.pools, &case.router,
+                                               &cfg, &stream);
+        let (mut sharded, _) = run_sharded(
+            &case.pools, &case.router, &cfg, &case.workload, opts.n_shards,
+            opts.chunk_size,
+        );
+        identical &= serial.overall.p99_ttft() == sharded.overall.p99_ttft()
+            && serial.overall.count == sharded.overall.count
+            && serial.n_events == sharded.n_events
+            && serial.horizon_ms == sharded.horizon_ms
+            && serial.n_unserved == sharded.n_unserved;
+    }
+
+    let cfg = DesConfig {
+        n_requests: opts.n_requests,
+        metrics: MetricsMode::Streaming,
+        ..case.cfg.clone()
+    };
+    let t0 = Instant::now();
+    let (r, stats) = run_sharded(
+        &case.pools, &case.router, &cfg, &case.workload, opts.n_shards,
+        opts.chunk_size,
+    );
+    let wall = t0.elapsed().as_secs_f64() * 1e3;
+    let events = std::hint::black_box(r.n_events);
+    let row = BenchRow {
+        name: case.name,
+        events,
+        wall_ms: Some(wall),
+        events_per_sec: Some(events as f64 / (wall / 1e3)),
+        ref_wall_ms: None,
+        ref_events_per_sec: None,
+        speedup_vs_reference: None,
+        bit_identical: Some(identical),
+    };
+    (row, stats)
+}
+
 /// Peak resident set size of this process, MB (linux `VmHWM`; `None`
 /// elsewhere). A process-lifetime high-water mark — a coarse memory
 /// proxy for the snapshot, not a per-scenario measurement.
@@ -392,6 +502,26 @@ mod tests {
         let capped = rows.iter().find(|r| r.name == "lmsys_multipool_capped")
             .unwrap();
         assert_eq!(capped.events, 2 * 1_500 + 3);
+    }
+
+    #[test]
+    fn scale_bench_verifies_and_times_a_reduced_run() {
+        let opts = ScaleBenchOpts {
+            n_requests: 20_000,
+            verify_requests: 4_000,
+            n_shards: 2,
+            chunk_size: 2_048,
+            ..Default::default()
+        };
+        let (row, stats) = run_scale_bench(&opts);
+        assert_eq!(row.name, "lmsys_1e8");
+        assert_eq!(row.bit_identical, Some(true));
+        // Live pools always drain: exactly two events per request.
+        assert_eq!(row.events, 2 * 20_000);
+        assert!(row.events_per_sec.unwrap() > 0.0);
+        assert!(row.speedup_vs_reference.is_none());
+        assert!(stats.arena_peak_slots > 0);
+        assert!(stats.arena_peak_slots < 20_000);
     }
 
     #[test]

@@ -63,7 +63,8 @@ impl RoutingPolicy {
     /// Number of pools this policy expects downstream.
     pub fn n_pools(&self) -> usize {
         match self {
-            RoutingPolicy::Length { .. } | RoutingPolicy::CompressAndRoute { .. } => 2,
+            RoutingPolicy::Length { .. }
+            | RoutingPolicy::CompressAndRoute { .. } => 2,
             RoutingPolicy::Random { n_pools } => *n_pools,
             RoutingPolicy::Model { class_to_pool } => {
                 class_to_pool.iter().copied().max().map_or(1, |m| m + 1)
@@ -171,7 +172,8 @@ mod tests {
         let r = RoutingPolicy::Model { class_to_pool: vec![0, 2, 1] };
         let mut rng = Pcg64::new(5, 0);
         for (class, want) in [(0usize, 0usize), (1, 2), (2, 1), (9, 1)] {
-            let d = r.route(RouteRequest { l_in: 10.0, l_out: 5.0, class }, &mut rng);
+            let req = RouteRequest { l_in: 10.0, l_out: 5.0, class };
+            let d = r.route(req, &mut rng);
             assert_eq!(d.pool, want, "class {class}");
         }
         assert_eq!(r.n_pools(), 3);

@@ -128,7 +128,10 @@ mod imp {
         ) -> Result<Vec<CandidateResult>> {
             let n = self.meta.n_cand;
             let f = CANDIDATE_FIELDS.len();
-            anyhow::ensure!(cands.len() <= n, "batch exceeds artifact capacity");
+            anyhow::ensure!(
+                cands.len() <= n,
+                "batch exceeds artifact capacity"
+            );
             let mut cbuf = vec![0f32; f * n];
             let lam_ms = workload.lambda_per_ms() as f32;
             let frac = workload.input_fraction as f32;
@@ -176,7 +179,11 @@ mod imp {
                     (&cbuf, &[f as i64, n as i64]),
                 ],
             )?;
-            anyhow::ensure!(out.len() == n * 8, "unexpected output size {}", out.len());
+            anyhow::ensure!(
+                out.len() == n * 8,
+                "unexpected output size {}",
+                out.len()
+            );
             Ok(cands
                 .iter()
                 .enumerate()

@@ -128,9 +128,9 @@ pub fn registry() -> Vec<Box<dyn Scenario>> {
 /// Look a scenario up by id or name (case-insensitive).
 pub fn find(key: &str) -> Option<Box<dyn Scenario>> {
     let k = key.trim();
-    registry()
-        .into_iter()
-        .find(|s| s.id().eq_ignore_ascii_case(k) || s.name().eq_ignore_ascii_case(k))
+    registry().into_iter().find(|s| {
+        s.id().eq_ignore_ascii_case(k) || s.name().eq_ignore_ascii_case(k)
+    })
 }
 
 /// Engine matching the options' thread budget (native backend, standard

@@ -40,8 +40,9 @@ fn sweep_table(
         .iter()
         .map(|&b| SweepJob::two_pool(&gpu, &gpu, b))
         .collect();
-    let rows =
-        engine.sweep_min_fleets(w, &hist, jobs, slo, opts.max_gpus, &opts.des());
+    let rows = engine.sweep_min_fleets(
+        w, &hist, jobs, slo, opts.max_gpus, &opts.des(),
+    );
 
     let mut t = Table::new(&["B_short", "alpha_s", "n_s", "n_l", "GPUs",
                              "$/yr", "saving", "P99 TTFT", "SLO"])

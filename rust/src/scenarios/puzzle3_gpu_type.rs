@@ -29,7 +29,10 @@ pub struct LayoutRow {
 
 /// Evaluate homogeneous + best-two-pool layouts for every GPU type, in
 /// parallel, through the given engine.
-pub fn evaluate_with(engine: &EvalEngine, opts: &ScenarioOpts) -> Vec<LayoutRow> {
+pub fn evaluate_with(
+    engine: &EvalEngine,
+    opts: &ScenarioOpts,
+) -> Vec<LayoutRow> {
     let w = WorkloadSpec::builtin(BuiltinTrace::Azure, LAMBDA);
     let hist = WorkloadHist::from_cdf(&w.cdf, w.input_fraction);
     let per_gpu = engine.par_map(vec!["A10G", "A100", "H100"], |name| {

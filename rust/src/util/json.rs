@@ -51,7 +51,9 @@ impl Json {
     /// Look up a key in an object.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
-            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            Json::Obj(pairs) => {
+                pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+            }
             _ => None,
         }
     }
@@ -315,25 +317,33 @@ impl<'a> Parser<'a> {
                         let cp = self.hex4()?;
                         let ch = if (0xD800..0xDC00).contains(&cp) {
                             // High surrogate: require a low surrogate next.
-                            if self.bump() != Some(b'\\') || self.bump() != Some(b'u') {
+                            if self.bump() != Some(b'\\')
+                                || self.bump() != Some(b'u')
+                            {
                                 return Err(self.err("unpaired surrogate"));
                             }
                             let lo = self.hex4()?;
                             if !(0xDC00..0xE000).contains(&lo) {
                                 return Err(self.err("invalid low surrogate"));
                             }
-                            let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
-                            char::from_u32(c).ok_or_else(|| self.err("bad codepoint"))?
+                            let c = 0x10000
+                                + ((cp - 0xD800) << 10)
+                                + (lo - 0xDC00);
+                            char::from_u32(c)
+                                .ok_or_else(|| self.err("bad codepoint"))?
                         } else if (0xDC00..0xE000).contains(&cp) {
                             return Err(self.err("unpaired surrogate"));
                         } else {
-                            char::from_u32(cp).ok_or_else(|| self.err("bad codepoint"))?
+                            char::from_u32(cp)
+                                .ok_or_else(|| self.err("bad codepoint"))?
                         };
                         s.push(ch);
                     }
                     _ => return Err(self.err("invalid escape")),
                 },
-                Some(b) if b < 0x20 => return Err(self.err("control char in string")),
+                Some(b) if b < 0x20 => {
+                    return Err(self.err("control char in string"))
+                }
                 Some(b) => {
                     // Re-assemble UTF-8 multibyte sequences.
                     let start = self.pos - 1;

@@ -169,6 +169,22 @@ impl LogHistogram {
         self.max
     }
 
+    /// Fold another histogram into this one (shard-merge path). Bin
+    /// counts, `n`, min and max merge exactly, so quantiles and
+    /// `fraction_le` over the merged histogram are bit-identical to a
+    /// single-collector run regardless of merge order; `sum`/`sum_sq`
+    /// (mean/variance) are order-dependent in the last ULPs.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.n += other.n;
+        self.sum += other.sum;
+        self.sum_sq += other.sum_sq;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
     /// Fraction of recorded values <= `x` (within one bin width).
     /// An empty histogram has no defined fraction and returns NaN — a
     /// pool that served nothing must not report 100% SLO attainment.
@@ -349,6 +365,25 @@ impl Samples {
                     / values.len() as f64
             }
             Repr::Sketch(h) => h.fraction_le(x),
+        }
+    }
+
+    /// Fold another collection into this one (shard-merge path). Both
+    /// sides must share a representation. Exact mode concatenates the
+    /// sample multisets, so every percentile / `fraction_le` answer over
+    /// the merge is bit-identical to a single-collector run; streaming
+    /// mode merges sketches (see [`LogHistogram::merge`]).
+    pub fn merge(&mut self, other: &Samples) {
+        match (&mut self.repr, &other.repr) {
+            (
+                Repr::Exact { values, sorted },
+                Repr::Exact { values: theirs, .. },
+            ) => {
+                values.extend_from_slice(theirs);
+                *sorted = false;
+            }
+            (Repr::Sketch(h), Repr::Sketch(theirs)) => h.merge(theirs),
+            _ => panic!("cannot merge samples across metrics modes"),
         }
     }
 
@@ -550,6 +585,59 @@ mod tests {
         assert_eq!(exact.min(), sketch.min());
         assert_eq!(exact.max(), sketch.max());
         assert!(sketch.values().is_empty());
+    }
+
+    #[test]
+    fn merge_matches_single_collector_in_both_reprs() {
+        // Quantiles and fraction_le over a merge must be bit-identical
+        // to pushing everything into one collector, in either repr.
+        let make = |streaming: bool| {
+            if streaming {
+                Samples::streaming()
+            } else {
+                Samples::new()
+            }
+        };
+        for streaming in [false, true] {
+            let mut whole = make(streaming);
+            let mut left = make(streaming);
+            let mut right = make(streaming);
+            for i in 0..5000 {
+                let v = 0.37 * ((i * 7919) % 997) as f64;
+                whole.push(v);
+                // Interleave so neither part is a sorted prefix.
+                if i % 3 == 0 {
+                    left.push(v);
+                } else {
+                    right.push(v);
+                }
+            }
+            left.merge(&right);
+            assert_eq!(left.len(), whole.len());
+            for q in [1.0, 50.0, 99.0, 99.9] {
+                assert_eq!(
+                    left.percentile(q),
+                    whole.percentile(q),
+                    "streaming={streaming} q={q}"
+                );
+            }
+            assert_eq!(left.min(), whole.min());
+            assert_eq!(left.max(), whole.max());
+            assert_eq!(left.fraction_le(100.0), whole.fraction_le(100.0));
+            assert!((left.mean() - whole.mean()).abs() < 1e-9);
+        }
+        // Merging an empty part is a no-op.
+        let mut s = Samples::new();
+        s.push(2.0);
+        s.merge(&Samples::new());
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "across metrics modes")]
+    fn merge_rejects_mixed_reprs() {
+        let mut a = Samples::new();
+        a.merge(&Samples::streaming());
     }
 
     #[test]

@@ -182,8 +182,9 @@ impl ArrivalProcess {
     }
 }
 
-/// The profile rate (req/ms) in effect at absolute time `t`.
-fn rate_at(profile: &[(f64, f64)], period_ms: f64, t: f64) -> f64 {
+/// The profile rate (req/ms) in effect at absolute time `t` (shared
+/// with the chunked generator in `workload::generator`).
+pub(crate) fn rate_at(profile: &[(f64, f64)], period_ms: f64, t: f64) -> f64 {
     let phase = if period_ms.is_finite() { t % period_ms } else { t };
     let mut rate = profile[0].1;
     for &(start, r) in profile {

@@ -30,7 +30,10 @@ impl EmpiricalCdf {
     /// Build from breakpoints. Requirements: non-empty, lengths strictly
     /// increasing, probabilities strictly increasing and ending at 1.0.
     pub fn new(points: Vec<(f64, f64)>) -> anyhow::Result<Self> {
-        anyhow::ensure!(!points.is_empty(), "CDF needs at least one breakpoint");
+        anyhow::ensure!(
+            !points.is_empty(),
+            "CDF needs at least one breakpoint"
+        );
         for w in points.windows(2) {
             anyhow::ensure!(w[0].0 < w[1].0, "lengths must strictly increase");
             anyhow::ensure!(w[0].1 < w[1].1, "probs must strictly increase");
@@ -43,7 +46,10 @@ impl EmpiricalCdf {
         );
         for &(l, p) in &points {
             anyhow::ensure!(l > 0.0, "lengths must be positive");
-            anyhow::ensure!(p > 0.0 && p <= 1.0 + 1e-12, "probs must be in (0,1]");
+            anyhow::ensure!(
+                p > 0.0 && p <= 1.0 + 1e-12,
+                "probs must be in (0,1]"
+            );
         }
         let min_len = (points[0].0 / 4.0).max(1.0);
         Ok(EmpiricalCdf { points, min_len })
@@ -58,12 +64,15 @@ impl EmpiricalCdf {
             .ok_or_else(|| anyhow::anyhow!("missing 'points' array"))?;
         let mut points = Vec::with_capacity(pts.len());
         for p in pts {
-            let pair = p
-                .as_arr()
-                .filter(|a| a.len() == 2)
-                .ok_or_else(|| anyhow::anyhow!("each point must be [len, prob]"))?;
-            let l = pair[0].as_f64().ok_or_else(|| anyhow::anyhow!("bad len"))?;
-            let q = pair[1].as_f64().ok_or_else(|| anyhow::anyhow!("bad prob"))?;
+            let pair = p.as_arr().filter(|a| a.len() == 2).ok_or_else(
+                || anyhow::anyhow!("each point must be [len, prob]"),
+            )?;
+            let l = pair[0]
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("bad len"))?;
+            let q = pair[1]
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("bad prob"))?;
             points.push((l, q));
         }
         Self::new(points)
@@ -117,7 +126,11 @@ impl EmpiricalCdf {
         let mut lo = (self.min_len, 0.0);
         for &(l, p) in &self.points {
             if q <= p {
-                let t = if p - lo.1 > 1e-15 { (q - lo.1) / (p - lo.1) } else { 1.0 };
+                let t = if p - lo.1 > 1e-15 {
+                    (q - lo.1) / (p - lo.1)
+                } else {
+                    1.0
+                };
                 if t >= 1.0 {
                     return l; // avoid exp(ln(l)) rounding at breakpoints
                 }

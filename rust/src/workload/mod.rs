@@ -4,6 +4,7 @@
 pub mod arrivals;
 pub mod builtin;
 pub mod cdf;
+pub mod generator;
 pub mod rng;
 pub mod spec;
 pub mod synth;

@@ -147,7 +147,8 @@ mod tests {
         let n = 200_000;
         let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
         let mean = xs.iter().sum::<f64>() / n as f64;
-        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
         assert!(mean.abs() < 0.01, "mean = {mean}");
         assert!((var - 1.0).abs() < 0.02, "var = {var}");
     }
@@ -164,7 +165,8 @@ mod tests {
     fn lognormal_median() {
         let mut rng = Pcg64::new(19, 0);
         let n = 100_001;
-        let mut xs: Vec<f64> = (0..n).map(|_| rng.lognormal(2.0, 0.7)).collect();
+        let mut xs: Vec<f64> =
+            (0..n).map(|_| rng.lognormal(2.0, 0.7)).collect();
         xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let median = xs[n / 2];
         // Median of lognormal is e^mu.

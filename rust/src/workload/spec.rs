@@ -5,7 +5,6 @@
 use crate::workload::arrivals::ArrivalProcess;
 use crate::workload::builtin::Trace;
 use crate::workload::cdf::EmpiricalCdf;
-use crate::workload::rng::Pcg64;
 
 /// The three traces that ship with the tool (paper §3.3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -21,7 +20,9 @@ impl BuiltinTrace {
             "lmsys" => Ok(BuiltinTrace::Lmsys),
             "azure" => Ok(BuiltinTrace::Azure),
             "agent" => Ok(BuiltinTrace::Agent),
-            other => anyhow::bail!("unknown trace '{other}' (lmsys|azure|agent)"),
+            other => {
+                anyhow::bail!("unknown trace '{other}' (lmsys|azure|agent)")
+            }
         }
     }
 
@@ -114,7 +115,12 @@ impl WorkloadSpec {
     }
 
     pub fn from_trace(t: &Trace, lambda_rps: f64) -> Self {
-        WorkloadSpec::new(t.name.clone(), t.cdf.clone(), t.input_fraction, lambda_rps)
+        WorkloadSpec::new(
+            t.name.clone(),
+            t.cdf.clone(),
+            t.input_fraction,
+            lambda_rps,
+        )
     }
 
     /// Arrival rate in req/ms (the simulator's native time unit).
@@ -231,18 +237,17 @@ impl WorkloadSpec {
 
     /// Sample `n` requests from the arrival spec with i.i.d. CDF lengths
     /// (paper §3.1 Phase 2 steps 1–2).
+    ///
+    /// Implemented on top of the chunked
+    /// [`RequestGenerator`](crate::workload::generator::RequestGenerator)
+    /// so the materialized stream is bit-identical to what a lazy
+    /// (chunked or sharded) consumer sees for the same `(self, seed)`.
     pub fn sample_requests(&self, n: usize, seed: u64) -> Vec<SampledRequest> {
-        let mut arr_rng = Pcg64::new(seed, 1);
-        let mut len_rng = Pcg64::new(seed, 2);
-        let arrivals = self.arrival_process().generate(n, &mut arr_rng);
-        arrivals
-            .into_iter()
-            .map(|t| {
-                let total = self.cdf.sample(&mut len_rng);
-                let (l_in, l_out) = self.split(total);
-                SampledRequest { arrival_ms: t, l_in, l_out }
-            })
-            .collect()
+        let mut gen =
+            crate::workload::generator::RequestGenerator::new(self, seed);
+        let mut out = Vec::new();
+        gen.fill(&mut out, n);
+        out
     }
 }
 
@@ -353,7 +358,8 @@ mod tests {
 
     #[test]
     fn truncation_and_rescale() {
-        let w = WorkloadSpec::builtin(BuiltinTrace::Agent, 20.0).truncated(65536.0)
+        let w = WorkloadSpec::builtin(BuiltinTrace::Agent, 20.0)
+            .truncated(65536.0)
             .unwrap();
         assert_eq!(w.cdf.max_len(), 65536.0);
         let w2 = w.at_lambda(50.0);

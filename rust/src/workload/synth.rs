@@ -23,7 +23,11 @@ pub struct SynthLengths {
 }
 
 impl SynthLengths {
-    pub fn new(dist: LengthDist, min_len: f64, max_len: f64) -> anyhow::Result<Self> {
+    pub fn new(
+        dist: LengthDist,
+        min_len: f64,
+        max_len: f64,
+    ) -> anyhow::Result<Self> {
         anyhow::ensure!(min_len > 0.0 && max_len > min_len, "bad support");
         Ok(SynthLengths { dist, min_len, max_len })
     }
@@ -41,7 +45,8 @@ impl SynthLengths {
     /// workload can flow through the same Phase-1 machinery as trace CDFs.
     pub fn to_cdf(&self, n: usize, seed: u64) -> anyhow::Result<EmpiricalCdf> {
         let mut rng = Pcg64::new(seed, 77);
-        let mut draws: Vec<f64> = (0..n).map(|_| self.sample(&mut rng)).collect();
+        let mut draws: Vec<f64> =
+            (0..n).map(|_| self.sample(&mut rng)).collect();
         draws.sort_by(|a, b| a.partial_cmp(b).unwrap());
         // Take ~64 quantile breakpoints; dedupe equal lengths.
         let mut points: Vec<(f64, f64)> = Vec::new();
@@ -100,7 +105,8 @@ mod tests {
         .unwrap();
         let mut rng = Pcg64::new(2, 0);
         let n = 50_000;
-        let big_p = (0..n).filter(|_| pareto.sample(&mut rng) > 10_000.0).count();
+        let big_p =
+            (0..n).filter(|_| pareto.sample(&mut rng) > 10_000.0).count();
         let big_l = (0..n).filter(|_| logn.sample(&mut rng) > 10_000.0).count();
         assert!(big_p > big_l * 5, "pareto {big_p} vs lognormal {big_l}");
     }

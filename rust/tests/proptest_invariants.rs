@@ -110,7 +110,11 @@ fn prop_des_conserves_and_orders() {
             w,
             pools,
             RoutingPolicy::Length { b_short: b },
-            DesConfig { n_requests: n, seed: 3000 + case, ..Default::default() },
+            DesConfig {
+                n_requests: n,
+                seed: 3000 + case,
+                ..Default::default()
+            },
         );
         let r = sim.run();
         assert_eq!(r.overall.count, n, "case {case}: lost requests");

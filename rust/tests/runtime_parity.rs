@@ -76,9 +76,12 @@ fn aot_matches_native_on_all_builtin_workloads() {
         assert_eq!(native.len(), aot_res.len());
         let mut feasible_agree = 0;
         for (i, (nv, av)) in native.iter().zip(&aot_res).enumerate() {
-            let what = format!("{} cand {i} ({})", trace.name(), cands[i].label());
-            assert_close(nv.rho_s, av.rho_s, 2e-3, 1e-4, &format!("{what} rho_s"));
-            assert_close(nv.rho_l, av.rho_l, 2e-3, 1e-4, &format!("{what} rho_l"));
+            let what =
+                format!("{} cand {i} ({})", trace.name(), cands[i].label());
+            assert_close(nv.rho_s, av.rho_s, 2e-3, 1e-4,
+                         &format!("{what} rho_s"));
+            assert_close(nv.rho_l, av.rho_l, 2e-3, 1e-4,
+                         &format!("{what} rho_l"));
             assert_close(nv.cost_yr, av.cost_yr, 1e-4, 1.0,
                          &format!("{what} cost"));
             assert_close(nv.ttft99_s, av.ttft99_s, 5e-3, 0.5,

@@ -1,0 +1,321 @@
+//! Shard regression suite: the generator-driven sharded executor
+//! against the serial production engine.
+//!
+//! Generalizes the `des_regression` pinning pattern one level up: that
+//! suite pins the calendar-queue engine against the all-events-heap
+//! reference; this one pins [`fleet_sim::des::shard::run_sharded`] (any
+//! shard count, any chunk size) against `Simulator::run_stream` on the
+//! materialized stream — bit-identical percentiles, counts, horizons,
+//! event counts, utilizations, windows, and unserved accounting, in
+//! both metrics modes. Generator-vs-materialized identity is implied
+//! transitively (`sample_requests` is itself generator-backed, pinned
+//! in `workload::generator` unit tests).
+//!
+//! Shard counts honor `FLEET_SIM_TEST_SHARDS` (CI runs a 1-vs-4 thread
+//! matrix); any value is also exercised against 1 and 2 because the
+//! executor clamps shards to the pool count.
+
+use fleet_sim::des::engine::{CapWindow, DesConfig, SimPool, Simulator};
+use fleet_sim::des::metrics::{DesResult, MetricsMode};
+use fleet_sim::des::shard::{run_sharded, run_streamed};
+use fleet_sim::router::RoutingPolicy;
+use fleet_sim::workload::spec::{BuiltinTrace, WorkloadSpec};
+
+/// Reference summary of one simulation (the `des_regression` shape plus
+/// the horizon; means are deliberately absent — merged overall stats
+/// accumulate in shard order, so float sums differ in the last ulp
+/// while every order-statistic and count is bit-identical).
+#[derive(Debug, PartialEq)]
+struct Summary {
+    overall_p99_ttft: f64,
+    overall_p99_wait: f64,
+    overall_p99_e2e: f64,
+    overall_count: usize,
+    pool_p99_ttft: Vec<f64>,
+    pool_counts: Vec<usize>,
+    pool_unserved: Vec<usize>,
+    utilization: Vec<f64>,
+    max_queue_depth: Vec<usize>,
+    n_compressed: usize,
+    n_events: usize,
+    n_unserved: usize,
+    max_unserved_wait_ms: f64,
+    horizon_ms: f64,
+    /// Per-window (start, arrived, served, p99 TTFT) when windowed.
+    windows: Option<Vec<(f64, usize, usize, f64)>>,
+}
+
+fn summarize(mut r: DesResult) -> Summary {
+    let windows = r.windows.as_mut().map(|w| {
+        (0..w.n_windows())
+            .map(|i| {
+                let p99 = w.p99_ttft(i);
+                (w.start_ms(i), w.n_arrived(i), w.n_served(i),
+                 if p99.is_nan() { -1.0 } else { p99 })
+            })
+            .collect()
+    });
+    Summary {
+        overall_p99_ttft: r.overall.ttft.p99(),
+        overall_p99_wait: r.overall.wait.p99(),
+        overall_p99_e2e: r.overall.e2e.p99(),
+        overall_count: r.overall.count,
+        pool_p99_ttft: r.per_pool.iter_mut().map(|p| p.stats.ttft.p99())
+            .collect(),
+        pool_counts: r.per_pool.iter().map(|p| p.stats.count).collect(),
+        pool_unserved: r.per_pool.iter().map(|p| p.n_unserved).collect(),
+        utilization: r.per_pool.iter().map(|p| p.utilization).collect(),
+        max_queue_depth: r.per_pool.iter().map(|p| p.max_queue_depth)
+            .collect(),
+        n_compressed: r.n_compressed,
+        n_events: r.n_events,
+        n_unserved: r.n_unserved,
+        max_unserved_wait_ms: r.max_unserved_wait_ms,
+        horizon_ms: r.horizon_ms,
+        windows,
+    }
+}
+
+/// Shard counts to exercise: always 1 (the pure generator path) and 2,
+/// plus the CI matrix value from `FLEET_SIM_TEST_SHARDS` if set (the
+/// executor clamps to the pool count, so oversubscription is also a
+/// valid — and tested — input).
+fn shard_counts() -> Vec<usize> {
+    let mut counts = vec![1usize, 2];
+    if let Some(n) = std::env::var("FLEET_SIM_TEST_SHARDS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+    {
+        let n = n.max(1);
+        if !counts.contains(&n) {
+            counts.push(n);
+        }
+    } else {
+        counts.push(4);
+    }
+    counts
+}
+
+/// Assert sharded == serial, bit for bit, in both metrics modes, for
+/// every shard count and a block-straddling chunk size.
+fn assert_sharded_matches(
+    w: &WorkloadSpec,
+    pools: Vec<SimPool>,
+    router: RoutingPolicy,
+    cfg: DesConfig,
+    label: &str,
+) {
+    let sampled = w.sample_requests(cfg.n_requests, cfg.seed);
+    for mode in [MetricsMode::Exact, MetricsMode::Streaming] {
+        let cfg = DesConfig { metrics: mode, ..cfg.clone() };
+        let serial = summarize(Simulator::run_stream(
+            &pools, &router, &cfg, &sampled,
+        ));
+        for shards in shard_counts() {
+            let (r, _) = run_sharded(&pools, &router, &cfg, w, shards, 997);
+            assert_eq!(
+                summarize(r), serial,
+                "{label} [{mode:?} shards={shards}]: sharded run \
+                 diverged from serial"
+            );
+        }
+    }
+}
+
+fn gpu(name: &str) -> fleet_sim::gpu::profile::GpuProfile {
+    fleet_sim::gpu::catalog::GpuCatalog::standard()
+        .get(name)
+        .unwrap()
+        .clone()
+}
+
+#[test]
+fn sharded_matches_serial_two_pool_length_router() {
+    let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 120.0);
+    let pools = vec![
+        SimPool { gpu: gpu("A100"), n_gpus: 4, ctx_budget: 4096.0,
+                  batch_cap: None },
+        SimPool { gpu: gpu("A100"), n_gpus: 4, ctx_budget: 8192.0,
+                  batch_cap: None },
+    ];
+    assert_sharded_matches(
+        &w, pools, RoutingPolicy::Length { b_short: 4096.0 },
+        DesConfig { n_requests: 4_000, seed: 11, ..Default::default() },
+        "azure two-pool",
+    );
+}
+
+#[test]
+fn sharded_matches_serial_compress_router() {
+    // CompressAndRoute mutates requests in flight and counts
+    // compressions — both must merge exactly.
+    let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 60.0);
+    let pools = vec![
+        SimPool { gpu: gpu("H100"), n_gpus: 2, ctx_budget: 2048.0,
+                  batch_cap: None },
+        SimPool { gpu: gpu("H100"), n_gpus: 3, ctx_budget: 8192.0,
+                  batch_cap: None },
+    ];
+    assert_sharded_matches(
+        &w, pools,
+        RoutingPolicy::CompressAndRoute { b_short: 2048.0, gamma: 1.5 },
+        DesConfig { n_requests: 3_000, seed: 23, ..Default::default() },
+        "azure compress",
+    );
+}
+
+#[test]
+fn sharded_matches_serial_on_nhpp_stream_with_windows() {
+    // Non-stationary arrivals + windowed stats: the per-window series
+    // must merge to the serial one exactly (bases re-anchor, counts
+    // add, per-window percentiles are order statistics).
+    let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 120.0)
+        .with_nhpp(vec![(0.0, 40.0), (10_000.0, 200.0)], 20_000.0);
+    let pools = vec![
+        SimPool { gpu: gpu("A100"), n_gpus: 5, ctx_budget: 4096.0,
+                  batch_cap: None },
+        SimPool { gpu: gpu("A100"), n_gpus: 5, ctx_budget: 8192.0,
+                  batch_cap: None },
+    ];
+    assert_sharded_matches(
+        &w, pools, RoutingPolicy::Length { b_short: 4096.0 },
+        DesConfig { n_requests: 4_000, seed: 19,
+                    window_ms: Some(5_000.0), ..Default::default() },
+        "azure diurnal NHPP",
+    );
+}
+
+#[test]
+fn sharded_matches_serial_on_replayed_stream_with_windows() {
+    let mut ts = Vec::new();
+    let mut t = 0.0;
+    for i in 0..500 {
+        t += if i % 10 == 0 { 480.0 } else { 2.0 };
+        ts.push(t);
+    }
+    let w = WorkloadSpec::builtin(BuiltinTrace::Lmsys, 50.0)
+        .with_replay(ts, 1.5);
+    let pools = vec![
+        SimPool { gpu: gpu("H100"), n_gpus: 2, ctx_budget: 4096.0,
+                  batch_cap: None },
+        SimPool { gpu: gpu("H100"), n_gpus: 3, ctx_budget: 65536.0,
+                  batch_cap: None },
+    ];
+    assert_sharded_matches(
+        &w, pools, RoutingPolicy::Length { b_short: 4096.0 },
+        DesConfig { n_requests: 3_000, seed: 29,
+                    window_ms: Some(10_000.0), ..Default::default() },
+        "lmsys burst replay",
+    );
+}
+
+#[test]
+fn sharded_matches_serial_with_cap_window_and_classes() {
+    // Three pools over two-to-four shards, cap-window drains, and the
+    // class-probability routing draw — the full tie-breaking and
+    // RNG-replay surface.
+    let w = WorkloadSpec::builtin(BuiltinTrace::Lmsys, 80.0);
+    let pools = vec![
+        SimPool { gpu: gpu("A10G"), n_gpus: 6, ctx_budget: 4096.0,
+                  batch_cap: Some(32) },
+        SimPool { gpu: gpu("A100"), n_gpus: 4, ctx_budget: 8192.0,
+                  batch_cap: None },
+        SimPool { gpu: gpu("H100"), n_gpus: 4, ctx_budget: 65536.0,
+                  batch_cap: None },
+    ];
+    let cfg = DesConfig {
+        n_requests: 3_000,
+        seed: 31,
+        cap_window: Some(CapWindow { start_ms: 10_000.0, end_ms: 40_000.0,
+                                     cap: 2 }),
+        class_probs: Some(vec![0.6, 0.3, 0.1]),
+        ..Default::default()
+    };
+    assert_sharded_matches(
+        &w, pools,
+        RoutingPolicy::Model { class_to_pool: vec![0, 1, 2] },
+        cfg, "lmsys capped multi-pool",
+    );
+}
+
+#[test]
+fn sharded_matches_serial_with_dead_pool_censoring() {
+    // Requests routed to a zero-GPU pool never drain: the unserved
+    // counts, the per-pool attribution, and `max_unserved_wait` (global
+    // horizon minus earliest unserved arrival) must merge exactly.
+    let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 20.0);
+    let pools = vec![
+        SimPool { gpu: gpu("H100"), n_gpus: 4, ctx_budget: 4096.0,
+                  batch_cap: None },
+        SimPool { gpu: gpu("H100"), n_gpus: 0, ctx_budget: 8192.0,
+                  batch_cap: None },
+    ];
+    let router = RoutingPolicy::Length { b_short: 4096.0 };
+    let cfg = DesConfig { n_requests: 3_000, seed: 43,
+                          ..Default::default() };
+    assert_sharded_matches(&w, pools.clone(), router.clone(), cfg.clone(),
+                           "dead long pool");
+    // And the backlog really exists (the test bites).
+    let (r, _) = run_sharded(&pools, &router, &cfg, &w, 2, 997);
+    assert!(r.n_unserved > 0, "expected a censored backlog");
+    assert!(r.max_unserved_wait_ms > 0.0);
+}
+
+#[test]
+fn chunk_size_never_changes_results() {
+    // The consumer-side chunk size is a pure batching knob: any size,
+    // aligned or straddling GEN_BLOCK, yields the identical result.
+    let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 120.0);
+    let pools = vec![
+        SimPool { gpu: gpu("A100"), n_gpus: 4, ctx_budget: 4096.0,
+                  batch_cap: None },
+        SimPool { gpu: gpu("A100"), n_gpus: 4, ctx_budget: 8192.0,
+                  batch_cap: None },
+    ];
+    let router = RoutingPolicy::Length { b_short: 4096.0 };
+    let cfg = DesConfig {
+        n_requests: 10_000,
+        seed: 7,
+        metrics: MetricsMode::Streaming,
+        ..Default::default()
+    };
+    let (base, _) = run_streamed(&pools, &router, &cfg, &w, 8_192);
+    let base = summarize(base);
+    for chunk in [1usize, 100, 8_191, 8_193, 100_000] {
+        let (r, _) = run_streamed(&pools, &router, &cfg, &w, chunk);
+        assert_eq!(summarize(r), base, "chunk={chunk}");
+    }
+}
+
+#[test]
+fn arena_memory_stays_flat_as_request_count_grows() {
+    // The bounded-memory claim, measured at the arena: quadrupling the
+    // stream must not grow the in-flight high-water mark with it (the
+    // fleet is stable, so in-flight depends on load, not run length).
+    // CI additionally gates whole-process RSS on the scale scenario.
+    let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 100.0);
+    let pools = vec![
+        SimPool { gpu: gpu("A100"), n_gpus: 4, ctx_budget: 4096.0,
+                  batch_cap: None },
+        SimPool { gpu: gpu("A100"), n_gpus: 4, ctx_budget: 8192.0,
+                  batch_cap: None },
+    ];
+    let router = RoutingPolicy::Length { b_short: 4096.0 };
+    let peak_at = |n: usize| {
+        let cfg = DesConfig {
+            n_requests: n,
+            metrics: MetricsMode::Streaming,
+            ..Default::default()
+        };
+        let (_, stats) = run_streamed(&pools, &router, &cfg, &w, 4_096);
+        stats.arena_peak_slots
+    };
+    let small = peak_at(20_000);
+    let big = peak_at(80_000);
+    assert!(small > 0);
+    assert!(
+        big <= small.max(64) * 3,
+        "arena peak grew with the stream: {small} -> {big}"
+    );
+    assert!(big < 20_000 / 4, "arena peak {big} is not O(in-flight)");
+}

@@ -1,0 +1,162 @@
+//! Minimal, vendored stand-in for the `anyhow` crate.
+//!
+//! The authoring environment is fully offline (no crates.io), so the
+//! workspace vendors the narrow slice of the anyhow API the planner
+//! actually uses: the type-erased [`Error`], the [`Result`] alias, the
+//! [`Context`] extension trait, and the `anyhow!` / `bail!` / `ensure!`
+//! macros. Keeping the crate name and paths identical means call sites
+//! are untouched and the build is hermetic, which in turn lets the
+//! repository commit an exact `Cargo.lock` with no registry checksums.
+//!
+//! Differences from real anyhow: errors are eagerly rendered to a
+//! `String` (no source chain, no backtrace, no `downcast`). Nothing in
+//! this workspace relies on those.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` — drop-in alias, default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A type-erased error message.
+///
+/// Like `anyhow::Error`, this deliberately does **not** implement
+/// `std::error::Error`, which is what makes the blanket
+/// `From<E: std::error::Error>` conversion below coherent.
+pub struct Error(String);
+
+impl Error {
+    /// Construct from anything displayable (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error(message.to_string())
+    }
+
+    fn wrap<C: fmt::Display>(self, context: C) -> Self {
+        Error(format!("{context}: {}", self.0))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error(e.to_string())
+    }
+}
+
+/// `anyhow::Context` — attach context to `Result` and `Option` errors.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).wrap(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*)
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/nonexistent/fleet-sim-shim")
+            .context("reading config")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(e.to_string().starts_with("reading config: "));
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let none: Option<u32> = None;
+        let e = none.context("missing field").unwrap_err();
+        assert_eq!(e.to_string(), "missing field");
+
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(format!("{e}"), "bad value 7");
+        assert_eq!(format!("{e:?}"), "bad value 7");
+
+        fn guarded(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(guarded(4).unwrap(), 4);
+        assert_eq!(guarded(12).unwrap_err().to_string(), "x too big: 12");
+        assert!(guarded(3).is_err());
+    }
+}

@@ -18,6 +18,17 @@ BENCH_1.json) and exits non-zero on regression:
   calendar-queue engine must simulate >= 2x the events/sec of the
   all-events-heap baseline engine).
 
+* ``--min-events-per-sec NAME=FLOOR`` (repeatable) gates absolute
+  throughput floors on the *new* snapshot alone — used for the sharded
+  scale scenario (``lmsys_1e8``), whose row has no reference engine to
+  compute a speedup against. The scenario must be present, its
+  ``events_per_sec`` non-null and at least FLOOR, and its
+  ``bit_identical`` (sharded-vs-serial cross-check) must not be false.
+* ``--max-peak-rss-mb X`` gates the snapshot's top-level ``peak_rss_mb``
+  — the bounded-memory claim for generator-driven runs.
+* When only floor/RSS gates are requested, ``--baseline`` is optional:
+  these are absolute bars, not regressions against a snapshot.
+
 ``--selftest`` runs the embedded unit cases (including the "deliberate
 >15% slowdown must fail" check) with no snapshot files needed.
 """
@@ -76,6 +87,55 @@ def compare(baseline, new, tolerance, min_speedup):
                     f"{min_speedup:.2f}x"
                 )
     return failures
+
+
+def parse_floors(specs):
+    """Parse repeated ``NAME=FLOOR`` strings into a dict."""
+    floors = {}
+    for spec in specs or []:
+        name, sep, value = spec.partition("=")
+        if not sep or not name:
+            raise ValueError(
+                f"bad --min-events-per-sec {spec!r} (want NAME=FLOOR)"
+            )
+        floors[name] = float(value)
+    return floors
+
+
+def check_floors(new, floors):
+    """Absolute events/sec floors on the new snapshot (no baseline)."""
+    failures = []
+    scenarios = new.get("scenarios", {})
+    for name, floor in floors.items():
+        row = scenarios.get(name)
+        if row is None:
+            failures.append(f"{name}: missing from new snapshot")
+            continue
+        if row.get("bit_identical") is False:
+            failures.append(
+                f"{name}: sharded and serial runs disagreed "
+                "(bit_identical = false)"
+            )
+        eps = row.get("events_per_sec")
+        if eps is None:
+            failures.append(f"{name}: events_per_sec not measured")
+        elif eps < floor:
+            failures.append(
+                f"{name}: events_per_sec {eps:.4g} below floor {floor:.4g}"
+            )
+    return failures
+
+
+def check_rss(new, max_rss_mb):
+    """Top-level peak-RSS ceiling (the bounded-memory gate)."""
+    rss = new.get("peak_rss_mb")
+    if rss is None:
+        return ["peak_rss_mb not recorded in new snapshot"]
+    if rss > max_rss_mb:
+        return [
+            f"peak_rss_mb {rss:.1f} exceeds ceiling {max_rss_mb:.1f}"
+        ]
+    return []
 
 
 def selftest():
@@ -183,6 +243,59 @@ def selftest():
     )
     assert any("bit_identical" in f for f in fails), "bit-identity gate"
 
+    # Absolute floors: the scale scenario has no reference speedup, so
+    # it is gated by events/sec floors on the new snapshot alone.
+    floors = parse_floors(["lmsys_1e8=1e6"])
+    assert floors == {"lmsys_1e8": 1e6}
+    scale_ok = {
+        "peak_rss_mb": 512.0,
+        "scenarios": {
+            "lmsys_1e8": {
+                "events_per_sec": 1.2e7,
+                "speedup_vs_reference": None,
+                "bit_identical": True,
+            }
+        },
+    }
+    assert check_floors(scale_ok, floors) == [], "healthy floor must pass"
+    slow_scale = {
+        "scenarios": {
+            "lmsys_1e8": {"events_per_sec": 5e5, "bit_identical": True}
+        }
+    }
+    fails = check_floors(slow_scale, floors)
+    assert any("below floor" in f for f in fails), "floor gate"
+    fails = check_floors({"scenarios": {}}, floors)
+    assert any("missing" in f for f in fails), "floor coverage gate"
+    fails = check_floors(
+        {"scenarios": {"lmsys_1e8": {"events_per_sec": None}}}, floors
+    )
+    assert any("not measured" in f for f in fails), "null floor gate"
+    fails = check_floors(
+        {
+            "scenarios": {
+                "lmsys_1e8": {
+                    "events_per_sec": 1.2e7,
+                    "bit_identical": False,
+                }
+            }
+        },
+        floors,
+    )
+    assert any("disagreed" in f for f in fails), "shard identity gate"
+    try:
+        parse_floors(["no_equals_sign"])
+        raise AssertionError("bad floor spec must raise")
+    except ValueError:
+        pass
+
+    # RSS ceiling.
+    assert check_rss(scale_ok, 1024.0) == [], "healthy RSS must pass"
+    fails = check_rss({"peak_rss_mb": 2048.0}, 1024.0)
+    assert any("exceeds ceiling" in f for f in fails), "RSS gate"
+    fails = check_rss({}, 1024.0)
+    assert any("not recorded" in f for f in fails), "missing RSS gate"
+
     print("perf_gate selftest OK")
 
 
@@ -194,6 +307,12 @@ def main():
                     help="allowed fractional regression (default 0.15)")
     ap.add_argument("--min-speedup", type=float, default=None,
                     help="required speedup_vs_reference per scenario")
+    ap.add_argument("--min-events-per-sec", action="append",
+                    metavar="NAME=FLOOR", dest="floors",
+                    help="absolute events/sec floor for one scenario in "
+                         "the new snapshot (repeatable)")
+    ap.add_argument("--max-peak-rss-mb", type=float, default=None,
+                    help="ceiling on the new snapshot's peak_rss_mb")
     ap.add_argument("--selftest", action="store_true",
                     help="run embedded unit cases and exit")
     args = ap.parse_args()
@@ -202,26 +321,44 @@ def main():
         selftest()
         return 0
 
-    if not args.baseline or not args.new_path:
-        ap.error("--baseline and --new are required (or use --selftest)")
+    try:
+        floors = parse_floors(args.floors)
+    except ValueError as e:
+        ap.error(str(e))
+    absolute_gates = bool(floors) or args.max_peak_rss_mb is not None
+    if not args.new_path:
+        ap.error("--new is required (or use --selftest)")
+    if not args.baseline and not absolute_gates:
+        ap.error("--baseline is required unless an absolute gate "
+                 "(--min-events-per-sec / --max-peak-rss-mb) is given")
 
-    baseline = load(args.baseline)
     new = load(args.new_path)
-    failures = compare(baseline, new, args.tolerance, args.min_speedup)
+    failures = []
+    checked = []
+    if args.baseline:
+        baseline = load(args.baseline)
+        failures += compare(baseline, new, args.tolerance,
+                            args.min_speedup)
+        checked.append(
+            f"{len(baseline.get('scenarios', {}))} scenario(s) within "
+            f"{args.tolerance:.0%} of {args.baseline}"
+        )
+        if args.min_speedup is not None:
+            checked.append(
+                f"all >= {args.min_speedup:.2f}x over reference"
+            )
+    if floors:
+        failures += check_floors(new, floors)
+        checked.append(f"{len(floors)} events/sec floor(s)")
+    if args.max_peak_rss_mb is not None:
+        failures += check_rss(new, args.max_peak_rss_mb)
+        checked.append(f"peak RSS <= {args.max_peak_rss_mb:.0f} MB")
     if failures:
         print(f"PERF GATE FAILED ({len(failures)} problem(s)):")
         for f in failures:
             print(f"  - {f}")
         return 1
-    print(
-        f"perf gate passed: {len(baseline.get('scenarios', {}))} scenario(s) "
-        f"within {args.tolerance:.0%} of {args.baseline}"
-        + (
-            f", all >= {args.min_speedup:.2f}x over reference"
-            if args.min_speedup is not None
-            else ""
-        )
-    )
+    print("perf gate passed: " + ", ".join(checked))
     return 0
 
 
