@@ -97,6 +97,90 @@ impl Args {
     }
 }
 
+/// The simulation-input flag group shared by every DES-driving
+/// subcommand: `--requests`, `--seed`, `--shards`, `--chunk-size`,
+/// `--window`, and an optional `--faults <path>` TOML fault script
+/// ([`crate::des::faults`]). Parsed once here instead of re-reading the
+/// same flags (with subtly different validation) in each command.
+///
+/// Every field is `None` when its flag was absent, so commands keep
+/// their own defaults via the `*_or` accessors; `--window` is validated
+/// centrally.
+#[derive(Debug, Clone, Default)]
+pub struct SimKnobs {
+    pub n_requests: Option<usize>,
+    pub seed: Option<u64>,
+    pub n_shards: Option<usize>,
+    pub chunk_size: Option<usize>,
+    pub window_ms: Option<f64>,
+    pub faults_path: Option<String>,
+}
+
+impl SimKnobs {
+    /// Extract the group from parsed argv.
+    pub fn from_args(args: &Args) -> anyhow::Result<SimKnobs> {
+        let opt_usize = |name: &str| -> anyhow::Result<Option<usize>> {
+            match args.get(name) {
+                None => Ok(None),
+                Some(_) => Ok(Some(args.get_usize(name, 0)?)),
+            }
+        };
+        let window_ms = match args.get("window") {
+            None => None,
+            Some(_) => {
+                let w = args.get_f64("window", 0.0)?;
+                anyhow::ensure!(
+                    w.is_finite() && w >= 1.0,
+                    "--window must be a finite width of at least 1 ms"
+                );
+                Some(w)
+            }
+        };
+        Ok(SimKnobs {
+            n_requests: opt_usize("requests")?,
+            seed: opt_usize("seed")?.map(|s| s as u64),
+            n_shards: opt_usize("shards")?,
+            chunk_size: opt_usize("chunk-size")?,
+            window_ms,
+            faults_path: args.get("faults").map(|s| s.to_string()),
+        })
+    }
+
+    pub fn requests_or(&self, default: usize) -> usize {
+        self.n_requests.unwrap_or(default)
+    }
+
+    pub fn seed_or(&self, default: u64) -> u64 {
+        self.seed.unwrap_or(default)
+    }
+
+    /// Shard count, clamped to at least 1.
+    pub fn shards_or(&self, default: usize) -> usize {
+        self.n_shards.unwrap_or(default).max(1)
+    }
+
+    /// Generator chunk size, clamped to at least 1.
+    pub fn chunk_size_or(&self, default: usize) -> usize {
+        self.chunk_size.unwrap_or(default).max(1)
+    }
+
+    /// Read and parse the `--faults` TOML script, if one was given.
+    /// Pool-range validation happens later, against the actual layout
+    /// ([`crate::des::faults::FaultScript::validate`]).
+    pub fn load_faults(
+        &self,
+    ) -> anyhow::Result<Option<crate::des::faults::FaultScript>> {
+        let Some(path) = &self.faults_path else {
+            return Ok(None);
+        };
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("--faults {path}: {e}"))?;
+        let script = crate::des::faults::FaultScript::from_toml_str(&text)
+            .map_err(|e| anyhow::anyhow!("--faults {path}: {e}"))?;
+        Ok(Some(script))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -133,6 +217,51 @@ mod tests {
         assert!(Args::parse(&sv(&["x", "--slo"]), &[]).is_err());
         let a = Args::parse(&sv(&["x", "--slo", "abc"]), &[]).unwrap();
         assert!(a.get_f64("slo", 0.0).is_err());
+    }
+
+    #[test]
+    fn sim_knobs_extracts_the_shared_flag_group() {
+        let a = Args::parse(
+            &sv(&["simulate", "--requests", "5000", "--seed", "7",
+                  "--shards", "4", "--chunk-size", "512", "--window",
+                  "1000", "--faults", "outage.toml"]),
+            &[],
+        )
+        .unwrap();
+        let k = SimKnobs::from_args(&a).unwrap();
+        assert_eq!(k.requests_or(1), 5_000);
+        assert_eq!(k.seed_or(0), 7);
+        assert_eq!(k.shards_or(1), 4);
+        assert_eq!(k.chunk_size_or(1), 512);
+        assert_eq!(k.window_ms, Some(1_000.0));
+        assert_eq!(k.faults_path.as_deref(), Some("outage.toml"));
+    }
+
+    #[test]
+    fn sim_knobs_defaults_clamps_and_validates() {
+        let a = Args::parse(&sv(&["simulate"]), &[]).unwrap();
+        let k = SimKnobs::from_args(&a).unwrap();
+        assert_eq!(k.requests_or(9), 9);
+        assert_eq!(k.seed_or(42), 42);
+        assert_eq!(k.shards_or(0), 1); // clamped to >= 1
+        assert_eq!(k.chunk_size_or(0), 1);
+        assert_eq!(k.window_ms, None);
+        assert!(k.load_faults().unwrap().is_none());
+
+        let bad = Args::parse(&sv(&["simulate", "--window", "-3"]), &[])
+            .unwrap();
+        assert!(SimKnobs::from_args(&bad).is_err());
+
+        let gone = Args::parse(
+            &sv(&["simulate", "--faults", "/no/such/file.toml"]),
+            &[],
+        )
+        .unwrap();
+        let err = SimKnobs::from_args(&gone)
+            .unwrap()
+            .load_faults()
+            .unwrap_err();
+        assert!(format!("{err}").contains("--faults"), "{err}");
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Subcommand implementations for the `fleet-sim` binary.
 
-use crate::cli::args::Args;
+use crate::cli::args::{Args, SimKnobs};
 use crate::des::engine::SimPool;
 use crate::gpu::catalog::GpuCatalog;
 use crate::optimizer::analytic::{NativeSweep, SweepEval};
@@ -26,6 +26,7 @@ COMMANDS:
   scenarios   list every registered scenario (id, name, spec summary)
   run         run one scenario by id or name: --scenario <id|name>
               [--fast] [--requests N] [--seed S] [--threads T]
+              (registry spans puzzle1..8, multimodel, diurnal, n_plus_k)
   plan        two-phase fleet plan: --trace lmsys|azure|agent|<path.json>
               --lambda RPS [--slo MS] [--mixed] [--backend native|aot]
               [--node-avail none|soft|hard|5pct] [--top-k K] [--explain]
@@ -33,6 +34,8 @@ COMMANDS:
               --n-short N --n-long N --b-short TOKENS [--requests N]
               [--router length|compress|random] [--seed S]
               [--window MS [--slo MS]]  (per-window P99/attainment table)
+              [--faults PATH]  (deterministic fault script, TOML:
+              [[failure]]/[[straggler]] sections; see data/faults/)
   whatif      λ step thresholds: --trace T --gpu NAME
               [--lambdas 25,50,...] [--slo MS]
   disagg      prefill/decode planning: --trace T --lambda RPS
@@ -77,21 +80,17 @@ fn workload_from(args: &Args) -> anyhow::Result<WorkloadSpec> {
 }
 
 fn scenario_opts(args: &Args) -> anyhow::Result<ScenarioOpts> {
+    let knobs = SimKnobs::from_args(args)?;
     let mut opts = if args.flag("fast") {
         ScenarioOpts::fast()
     } else {
         ScenarioOpts::default()
     };
-    opts.n_requests = args.get_usize("requests", opts.n_requests)?;
-    opts.seed = args.get_usize("seed", opts.seed as usize)? as u64;
+    opts.n_requests = knobs.requests_or(opts.n_requests);
+    opts.seed = knobs.seed_or(opts.seed);
     opts.threads = args.get_usize("threads", opts.threads)?.max(1);
-    if args.get("window").is_some() {
-        let w = args.get_f64("window", 0.0)?;
-        anyhow::ensure!(
-            w.is_finite() && w >= 1.0,
-            "--window must be a finite width of at least 1 ms"
-        );
-        opts.window_ms = Some(w);
+    if knobs.window_ms.is_some() {
+        opts.window_ms = knobs.window_ms;
     }
     Ok(opts)
 }
@@ -235,7 +234,22 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<String> {
         other => anyhow::bail!("--router: unknown '{other}'"),
     };
     let opts = scenario_opts(args)?;
-    let mut r = scenarios::common::simulate(&w, pools, router, &opts);
+    let knobs = SimKnobs::from_args(args)?;
+    let faults = knobs.load_faults()?;
+    if let Some(script) = &faults {
+        // Pool indices in the script must exist in this 2-pool layout.
+        script
+            .validate(pools.len())
+            .map_err(|e| anyhow::anyhow!("--faults: {e}"))?;
+    }
+    let engine = scenarios::default_engine(&opts);
+    let mut r = engine.simulate_faulted(
+        &w,
+        &pools,
+        &router,
+        &opts.des(),
+        faults.as_ref(),
+    );
     let mut t = Table::new(&["Pool", "requests", "util", "wait99", "TTFT99",
                              "E2E99", "max queue"]);
     for (i, p) in r.per_pool.iter_mut().enumerate() {
@@ -271,6 +285,13 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<String> {
         r.n_compressed,
         r.n_unserved,
     );
+    if let Some(script) = &faults {
+        out.push_str(&format!(
+            "fault script applied: {} failure(s), {} straggler(s)\n",
+            script.failures.len(),
+            script.stragglers.len(),
+        ));
+    }
     if let Some(wt) = crate::report::windows::windowed_table(
         &mut r,
         args.get_f64("slo", 500.0)?,
@@ -365,11 +386,12 @@ fn cmd_bench(args: &Args) -> anyhow::Result<String> {
     use crate::report::perf::{render_table, run_bench, run_scale_bench,
                               to_json, BenchEngine, BenchOpts,
                               ScaleBenchOpts};
+    let knobs = SimKnobs::from_args(args)?;
     let fast = args.flag("fast");
     let default_requests = if fast { 8_000 } else { 30_000 };
     let opts = BenchOpts {
-        n_requests: args.get_usize("requests", default_requests)?,
-        seed: args.get_usize("seed", 42)? as u64,
+        n_requests: knobs.requests_or(default_requests),
+        seed: knobs.seed_or(42),
         samples: args.get_usize("samples", 3)?.max(1),
         engine: BenchEngine::parse(args.get_str("engine", "both"))?,
     };
@@ -381,12 +403,8 @@ fn cmd_bench(args: &Args) -> anyhow::Result<String> {
         let scale = ScaleBenchOpts {
             n_requests: args.get_usize("scale-requests", default_scale)?,
             seed: opts.seed,
-            n_shards: args
-                .get_usize("shards", defaults.n_shards)?
-                .max(1),
-            chunk_size: args
-                .get_usize("chunk-size", defaults.chunk_size)?
-                .max(1),
+            n_shards: knobs.shards_or(defaults.n_shards),
+            chunk_size: knobs.chunk_size_or(defaults.chunk_size),
             ..defaults
         };
         // The bit-identity prefix check materializes its stream; never
@@ -584,7 +602,7 @@ mod tests {
     fn scenarios_lists_registry() {
         let out = run_cmd(&["scenarios"]).unwrap();
         for key in ["puzzle1", "split-threshold", "multimodel", "gridflex",
-                    "diurnal", "size-to-peak"] {
+                    "diurnal", "size-to-peak", "n_plus_k", "n-plus-k"] {
             assert!(out.contains(key), "{out}");
         }
     }
@@ -648,6 +666,67 @@ mod tests {
         ])
         .unwrap_err();
         assert!(format!("{err}").contains("--window"), "{err}");
+    }
+
+    #[test]
+    fn simulate_applies_and_validates_fault_scripts() {
+        let dir = std::env::temp_dir().join("fleet_sim_cli_faults");
+        std::fs::create_dir_all(&dir).unwrap();
+        let good = dir.join("outage.toml");
+        std::fs::write(
+            &good,
+            "# one failure + one straggler\n\
+             [[failure]]\n\
+             pool = 1\n\
+             n_gpus = 1\n\
+             start_ms = 2000\n\
+             recover_ms = 8000\n\
+             warm_ms = 1000\n\
+             warm_factor = 2.0\n\
+             \n\
+             [[straggler]]\n\
+             pool = 0\n\
+             n_gpus = 1\n\
+             start_ms = 0\n\
+             end_ms = 5000\n\
+             factor = 1.5\n",
+        )
+        .unwrap();
+        let out = run_cmd(&[
+            "simulate", "--trace", "azure", "--lambda", "50", "--gpu",
+            "H100", "--n-short", "2", "--n-long", "2", "--requests",
+            "2000", "--faults", good.to_str().unwrap(),
+        ])
+        .unwrap();
+        assert!(
+            out.contains("fault script applied: 1 failure(s), 1 \
+                          straggler(s)"),
+            "{out}"
+        );
+
+        // A pool index beyond the 2-pool layout is rejected up front.
+        let bad = dir.join("bad_pool.toml");
+        std::fs::write(
+            &bad,
+            "[[failure]]\npool = 7\nn_gpus = 1\nstart_ms = 0\n\
+             recover_ms = 1000\n",
+        )
+        .unwrap();
+        let err = run_cmd(&[
+            "simulate", "--trace", "azure", "--lambda", "50", "--gpu",
+            "H100", "--n-short", "2", "--n-long", "2", "--requests",
+            "500", "--faults", bad.to_str().unwrap(),
+        ])
+        .unwrap_err();
+        assert!(format!("{err}").contains("out of range"), "{err}");
+
+        // A missing script file is an error, not a silent no-fault run.
+        assert!(run_cmd(&[
+            "simulate", "--trace", "azure", "--lambda", "50", "--gpu",
+            "H100", "--n-short", "2", "--n-long", "2", "--requests",
+            "500", "--faults", "/no/such/file.toml",
+        ])
+        .is_err());
     }
 
     #[test]

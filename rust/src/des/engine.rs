@@ -28,9 +28,18 @@
 //!
 //! A `CapWindow` models a grid demand-response event (paper §4.8): during
 //! [start, end) the pool's admission capacity drops to `cap` slots per
-//! GPU; in-flight requests are never preempted.
+//! GPU; in-flight requests are never preempted. Fault injection
+//! ([`crate::des::faults`]) follows the same pattern: down instances and
+//! service-time inflation are evaluated functionally at admission, and
+//! the only fault events are queue re-examinations at each recovery.
+//!
+//! Entry points: [`Simulator::run_input`] consumes the unified
+//! [`SimInput`] (and is what everything routes through);
+//! [`Simulator::run_stream`] survives as a deprecated wrapper.
 
 use crate::des::event::{CalendarQueue, EventKind};
+use crate::des::faults::CompiledFaults;
+use crate::des::input::{ArrivalsSource, ConfigError, SimInput};
 use crate::des::metrics::{DesResult, MetricsCollector, MetricsMode,
                           PoolResult};
 use crate::des::pool::DesPool;
@@ -136,13 +145,19 @@ pub(crate) fn try_admit(
     now: f64,
     events: &mut CalendarQueue,
     cap_window: &Option<CapWindow>,
+    faults: Option<&CompiledFaults>,
     metrics: &mut MetricsCollector,
 ) -> bool {
     let eff = eff_cap(cap_window, &pools[pool_idx], now);
     let pool = &mut pools[pool_idx];
     // Least-loaded instance with headroom under the effective cap.
+    // Instances down under the fault script admit nothing (fail-stop
+    // without preemption: in-flight requests still complete).
     let mut best: Option<(usize, u32)> = None;
     for (i, inst) in pool.instances.iter().enumerate() {
+        if faults.is_some_and(|f| f.is_down(pool_idx, i, now)) {
+            continue;
+        }
         if inst.busy < eff {
             let free = eff - inst.busy;
             if best.map_or(true, |(_, bf)| free > bf) {
@@ -154,7 +169,11 @@ pub(crate) fn try_admit(
     pool.acquire(inst, now);
     let req = &reqs[req_id as usize];
     let n_at_admit = pool.instances[inst].busy as f64;
-    let t_iter = pool.gpu.t_iter(n_at_admit);
+    // Stragglers and post-recovery warm-up inflate the iteration
+    // latency at admission time (x1.0 with no active window), which
+    // propagates to hold, prefill, and TTFT below.
+    let slow = faults.map_or(1.0, |f| f.slowdown(pool_idx, inst, now));
+    let t_iter = pool.gpu.t_iter(n_at_admit) * slow;
     let hold = pool.gpu.iters(req.l_in, req.l_out) * t_iter;
     events.push(
         now + hold,
@@ -175,6 +194,7 @@ pub(crate) fn try_admit(
 }
 
 /// Admit queued requests while capacity allows.
+#[allow(clippy::too_many_arguments)]
 fn drain_queue(
     pools: &mut [DesPool],
     pool_idx: usize,
@@ -182,11 +202,13 @@ fn drain_queue(
     now: f64,
     events: &mut CalendarQueue,
     cap_window: &Option<CapWindow>,
+    faults: Option<&CompiledFaults>,
     metrics: &mut MetricsCollector,
 ) {
     while let Some(&head) = pools[pool_idx].queue.front() {
         if !try_admit(
-            pools, pool_idx, head, reqs, now, events, cap_window, metrics,
+            pools, pool_idx, head, reqs, now, events, cap_window, faults,
+            metrics,
         ) {
             break;
         }
@@ -223,7 +245,13 @@ impl Simulator {
         let sampled = self
             .workload
             .sample_requests(self.config.n_requests, self.config.seed);
-        Self::run_stream(&self.pools, &self.router, &self.config, &sampled)
+        let input =
+            SimInput::stream(&self.pools, &self.router, &self.config,
+                             &sampled);
+        match Self::run_input(&input) {
+            Ok(r) => r,
+            Err(e) => panic!("{e}"),
+        }
     }
 
     /// Run on an explicit, time-ordered request stream (used by the
@@ -231,23 +259,67 @@ impl Simulator {
     /// arrivals). The stream is borrowed — replaying one cached sample
     /// across many candidates copies nothing.
     pub fn run_with_requests(&self, sampled: &[SampledRequest]) -> DesResult {
-        Self::run_stream(&self.pools, &self.router, &self.config, sampled)
+        let input =
+            SimInput::stream(&self.pools, &self.router, &self.config,
+                             sampled);
+        match Self::run_input(&input) {
+            Ok(r) => r,
+            Err(e) => panic!("{e}"),
+        }
     }
 
-    /// The DES core: no `Simulator` construction (and no workload, pool,
-    /// or router clone) required — everything is borrowed.
+    /// The unified entry point: validate, compile the fault script,
+    /// materialize generator-driven arrivals if needed, and run the
+    /// core. Everything in the input is borrowed — replaying one
+    /// cached stream across many candidates copies nothing.
+    pub fn run_input(input: &SimInput<'_>) -> Result<DesResult, ConfigError> {
+        input.validate()?;
+        let faults = input.compiled_faults();
+        match input.arrivals {
+            ArrivalsSource::Stream(sampled) => Ok(run_core(
+                input.pools, input.router, input.config, sampled,
+                faults.as_ref(),
+            )),
+            ArrivalsSource::Generator(w) => {
+                let sampled = w.sample_requests(
+                    input.config.n_requests, input.config.seed,
+                );
+                Ok(run_core(
+                    input.pools, input.router, input.config, &sampled,
+                    faults.as_ref(),
+                ))
+            }
+        }
+    }
+
+    /// Run over a materialized stream — a compatibility wrapper that
+    /// panics on invalid input exactly as the pre-`SimInput` API did.
+    #[deprecated(note = "build a SimInput and call Simulator::run_input")]
     pub fn run_stream(
         pool_specs: &[SimPool],
         router: &RoutingPolicy,
         config: &DesConfig,
         sampled: &[SampledRequest],
     ) -> DesResult {
-        assert!(
-            router.n_pools() <= pool_specs.len(),
-            "router expects {} pools, got {}",
-            router.n_pools(),
-            pool_specs.len()
-        );
+        let input = SimInput::stream(pool_specs, router, config, sampled);
+        match Self::run_input(&input) {
+            Ok(r) => r,
+            Err(e) => panic!("{e}"),
+        }
+    }
+}
+
+/// The DES core: no `Simulator` construction (and no workload, pool,
+/// or router clone) required — everything is borrowed. Inputs are
+/// pre-validated by [`Simulator::run_input`].
+fn run_core(
+    pool_specs: &[SimPool],
+    router: &RoutingPolicy,
+    config: &DesConfig,
+    sampled: &[SampledRequest],
+    faults: Option<&CompiledFaults>,
+) -> DesResult {
+    {
         let n = sampled.len();
         debug_assert!(sampled
             .windows(2)
@@ -277,6 +349,14 @@ impl Simulator {
         if let Some(w) = &config.cap_window {
             for p in 0..pools.len() {
                 events.push(w.end_ms, EventKind::Drain { pool: p as u16 });
+            }
+        }
+        // Fault recoveries re-examine the pool's queue, exactly like a
+        // cap-window end. Pushed at init, after cap drains, in script
+        // order — the relative order the sharded engine preserves.
+        if let Some(f) = faults {
+            for &(t, pool) in f.drains() {
+                events.push(t, EventKind::Drain { pool });
             }
         }
 
@@ -336,7 +416,7 @@ impl Simulator {
                 }
                 if !try_admit(
                     &mut pools, decision.pool, req, &reqs, now, &mut events,
-                    &config.cap_window, &mut metrics,
+                    &config.cap_window, faults, &mut metrics,
                 ) {
                     pools[decision.pool].enqueue(req);
                 }
@@ -352,13 +432,13 @@ impl Simulator {
                     pools[pool as usize].release(instance as usize, now);
                     drain_queue(
                         &mut pools, pool as usize, &reqs, now, &mut events,
-                        &config.cap_window, &mut metrics,
+                        &config.cap_window, faults, &mut metrics,
                     );
                 }
                 EventKind::Drain { pool } => {
                     drain_queue(
                         &mut pools, pool as usize, &reqs, now, &mut events,
-                        &config.cap_window, &mut metrics,
+                        &config.cap_window, faults, &mut metrics,
                     );
                 }
             }
@@ -676,10 +756,122 @@ mod tests {
         let sampled = w.sample_requests(cfg.n_requests, cfg.seed);
         let mut via_run = Simulator::new(w, pools.clone(), router.clone(),
                                          cfg.clone()).run();
-        let mut via_stream = Simulator::run_stream(&pools, &router, &cfg,
-                                                   &sampled);
+        let input = SimInput::stream(&pools, &router, &cfg, &sampled);
+        let mut via_stream = Simulator::run_input(&input).unwrap();
         assert_eq!(via_run.overall.p99_ttft(), via_stream.overall.p99_ttft());
         assert_eq!(via_run.n_events, via_stream.n_events);
         assert_eq!(via_run.horizon_ms, via_stream.horizon_ms);
+    }
+
+    #[test]
+    fn run_input_rejects_router_pool_mismatch() {
+        let pools = vec![SimPool {
+            gpu: a100(), n_gpus: 2, ctx_budget: 8192.0, batch_cap: None,
+        }];
+        let router = RoutingPolicy::Length { b_short: 4096.0 };
+        let cfg = DesConfig::default();
+        let sampled: Vec<crate::workload::spec::SampledRequest> = vec![];
+        let input = SimInput::stream(&pools, &router, &cfg, &sampled);
+        let err = Simulator::run_input(&input).map(|_| ()).unwrap_err();
+        assert!(matches!(err,
+                         ConfigError::RouterPoolMismatch { expected: 2,
+                                                           got: 1 }));
+    }
+
+    #[test]
+    fn empty_fault_script_is_bit_identical_to_none() {
+        use crate::des::faults::FaultScript;
+        let (pools, router) = two_pool(a100(), 3, 3, 4096.0, 8192.0);
+        let cfg =
+            DesConfig { n_requests: 4_000, seed: 5, ..Default::default() };
+        let w = azure(120.0);
+        let sampled = w.sample_requests(cfg.n_requests, cfg.seed);
+        let plain = SimInput::stream(&pools, &router, &cfg, &sampled);
+        let script = FaultScript::default();
+        let faulted = SimInput::stream(&pools, &router, &cfg, &sampled)
+            .with_faults(&script);
+        let mut a = Simulator::run_input(&plain).unwrap();
+        let mut b = Simulator::run_input(&faulted).unwrap();
+        assert_eq!(a.overall.p99_ttft(), b.overall.p99_ttft());
+        assert_eq!(a.overall.wait.p99(), b.overall.wait.p99());
+        assert_eq!(a.n_events, b.n_events);
+        assert_eq!(a.horizon_ms, b.horizon_ms);
+    }
+
+    #[test]
+    fn failures_add_one_drain_event_each_and_raise_wait() {
+        use crate::des::faults::{FaultScript, GpuFailure};
+        // A comfortable single pool; kill all but one GPU mid-run.
+        let pools = vec![SimPool {
+            gpu: a100(), n_gpus: 4, ctx_budget: 8192.0, batch_cap: None,
+        }];
+        let router = RoutingPolicy::Random { n_pools: 1 };
+        let cfg =
+            DesConfig { n_requests: 6_000, seed: 9, ..Default::default() };
+        let w = azure(80.0);
+        let sampled = w.sample_requests(cfg.n_requests, cfg.seed);
+        let base = Simulator::run_input(
+            &SimInput::stream(&pools, &router, &cfg, &sampled),
+        )
+        .unwrap();
+        let script = FaultScript {
+            failures: vec![GpuFailure {
+                pool: 0,
+                n_gpus: 3,
+                start_ms: 10_000.0,
+                recover_ms: 40_000.0,
+                warm_ms: 0.0,
+                warm_factor: 1.0,
+            }],
+            stragglers: vec![],
+        };
+        let input = SimInput::stream(&pools, &router, &cfg, &sampled)
+            .with_faults(&script);
+        let faulted = Simulator::run_input(&input).unwrap();
+        assert_eq!(faulted.n_events, base.n_events + 1,
+                   "one drain per failure");
+        // Everything still completes after recovery…
+        assert_eq!(faulted.overall.count, 6_000);
+        assert_eq!(faulted.n_unserved, 0);
+        // …but the outage queue shows up in the wait distribution.
+        let (mut b, mut f) = (base.overall.clone(), faulted.overall.clone());
+        assert!(f.wait.p99() > b.wait.p99() + 100.0,
+                "base {} faulted {}", b.wait.p99(), f.wait.p99());
+    }
+
+    #[test]
+    fn stragglers_inflate_ttft_without_changing_counts() {
+        use crate::des::faults::{FaultScript, Straggler};
+        let pools = vec![SimPool {
+            gpu: h100(), n_gpus: 2, ctx_budget: 8192.0, batch_cap: None,
+        }];
+        let router = RoutingPolicy::Random { n_pools: 1 };
+        let cfg =
+            DesConfig { n_requests: 4_000, seed: 21, ..Default::default() };
+        let w = azure(30.0);
+        let sampled = w.sample_requests(cfg.n_requests, cfg.seed);
+        let base = Simulator::run_input(
+            &SimInput::stream(&pools, &router, &cfg, &sampled),
+        )
+        .unwrap();
+        let script = FaultScript {
+            failures: vec![],
+            stragglers: vec![Straggler {
+                pool: 0,
+                n_gpus: 2,
+                start_ms: 0.0,
+                end_ms: 1e12,
+                factor: 4.0,
+            }],
+        };
+        let input = SimInput::stream(&pools, &router, &cfg, &sampled)
+            .with_faults(&script);
+        let slow = Simulator::run_input(&input).unwrap();
+        // Stragglers add no events (inflation is admission-time only).
+        assert_eq!(slow.n_events, base.n_events);
+        assert_eq!(slow.overall.count, base.overall.count);
+        let (mut b, mut s) = (base.overall.clone(), slow.overall.clone());
+        assert!(s.ttft.p99() > b.ttft.p99() * 2.0,
+                "base {} straggler {}", b.ttft.p99(), s.ttft.p99());
     }
 }

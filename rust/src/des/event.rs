@@ -24,8 +24,10 @@ pub enum EventKind {
     Arrival { req: u32 },
     /// A request finishes service and frees its slot.
     Completion { req: u32, pool: u16, instance: u16 },
-    /// A batch-cap window boundary: re-examine the pool's queue (grid-flex
-    /// short events restore capacity without a completion to trigger it).
+    /// A capacity-restoring boundary — a batch-cap window ending or a
+    /// failed instance recovering ([`crate::des::faults`]): re-examine
+    /// the pool's queue (capacity returned without a completion to
+    /// trigger it).
     Drain { pool: u16 },
 }
 

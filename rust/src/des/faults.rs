@@ -1,0 +1,653 @@
+//! Deterministic fault injection for the DES (ROADMAP item 5).
+//!
+//! A [`FaultScript`] is plain data: GPU failures (with recovery times
+//! and an optional post-recovery warm-up inflation window) and
+//! stragglers (service-time inflation windows). Scripts come from three
+//! places — hand-written structs, a TOML file
+//! ([`FaultScript::from_toml_str`], see `data/faults/example.toml`), or
+//! a seeded stochastic model ([`FaultScript::generate`], Poisson
+//! failures with exponential MTTR draws) — and all three produce the
+//! same deterministic replay: the script fully determines every outage.
+//!
+//! # Execution model: faults as a pure function of (pool, instance, t)
+//!
+//! The engines never carry mutable fault state. A script compiles into
+//! a per-pool view ([`CompiledFaults`]) queried at admission time,
+//! mirroring how `CapWindow` membership is evaluated functionally in
+//! `eff_cap`:
+//!
+//! * **Failures** mark the *top* `n_gpus` instances of the pool as down
+//!   over `[start_ms, recover_ms)`: a down instance admits nothing, but
+//!   requests already running on it complete normally (fail-stop
+//!   without preemption, consistent with the cap-window rule that
+//!   in-flight requests are never preempted). Utilization stays
+//!   relative to *nominal* capacity, so an outage shows up as lost
+//!   utilization, not a shrunken denominator.
+//! * **Inflations** (stragglers, and the warm-up window
+//!   `[recover_ms, recover_ms + warm_ms)` after each failure) multiply
+//!   the iteration latency `t_iter` at admission by the product of all
+//!   windows covering the chosen instance — inflating hold, prefill,
+//!   and TTFT exactly as a slow or cold GPU would.
+//!
+//! Because admission-time evaluation needs no new events, the only
+//! events a script adds are queue re-examinations ([`Self::drains`],
+//! reusing `EventKind::Drain`) at each failure's `recover_ms` — the one
+//! moment admission capacity *increases* while a queue may be waiting.
+//! Straggler boundaries and failure starts change no admission
+//! capacity, so they need no events. Drains are pushed at init in
+//! script order (after cap-window drains); each shard pushes only its
+//! owned pools' drains in the same order, preserving the per-pool
+//! relative event order — which is exactly the invariant the sharded
+//! engine's bit-identity proof rests on (see `crate::des::shard`).
+
+use crate::des::engine::SimPool;
+use crate::des::input::ConfigError;
+use crate::workload::rng::Pcg64;
+
+/// Salt mixed into the user seed for [`FaultScript::generate`] so the
+/// fault stream never correlates with the arrival/length/routing
+/// streams drawn from the same seed (which own Pcg64 streams 1–3 and
+/// the generator's 4+2k/5+2k block streams).
+const FAULT_SEED_SALT: u64 = 0x9e37_79b9_7f4a_7c15;
+
+/// One GPU outage: the top `n_gpus` instances of `pool` stop admitting
+/// over `[start_ms, recover_ms)`, then serve at `warm_factor` x
+/// iteration latency over `[recover_ms, recover_ms + warm_ms)` while
+/// caches refill (cold start).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuFailure {
+    pub pool: usize,
+    /// Concurrently failed instances (the pool's top indices).
+    pub n_gpus: usize,
+    pub start_ms: f64,
+    pub recover_ms: f64,
+    /// Cold-start window length after recovery (0 = instant warm).
+    pub warm_ms: f64,
+    /// Iteration-latency multiplier during the warm-up window.
+    pub warm_factor: f64,
+}
+
+/// A straggler episode: the top `n_gpus` instances of `pool` serve at
+/// `factor` x iteration latency over `[start_ms, end_ms)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Straggler {
+    pub pool: usize,
+    pub n_gpus: usize,
+    pub start_ms: f64,
+    pub end_ms: f64,
+    pub factor: f64,
+}
+
+/// A deterministic fault schedule for one simulation run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultScript {
+    pub failures: Vec<GpuFailure>,
+    pub stragglers: Vec<Straggler>,
+}
+
+/// Parameters for the seeded stochastic script generator.
+#[derive(Debug, Clone)]
+pub struct FaultModel {
+    /// Per-GPU failure rate (failures per GPU-day); the paper's Eq. 6
+    /// presets use 0.0065/day.
+    pub failures_per_gpu_day: f64,
+    /// Mean time to recovery, drawn exponentially per failure.
+    pub mttr_ms: f64,
+    /// Cold-start window after each recovery.
+    pub warm_ms: f64,
+    /// Iteration-latency multiplier while warming up.
+    pub warm_factor: f64,
+}
+
+const MS_PER_DAY: f64 = 86_400_000.0;
+
+impl FaultScript {
+    pub fn is_empty(&self) -> bool {
+        self.failures.is_empty() && self.stragglers.is_empty()
+    }
+
+    /// Check the script against a fleet of `n_pools` pools. Run
+    /// automatically by every `SimInput`-based entry point.
+    pub fn validate(&self, n_pools: usize) -> Result<(), ConfigError> {
+        let bad = |msg: String| Err(ConfigError::InvalidFaults(msg));
+        for (i, f) in self.failures.iter().enumerate() {
+            if f.pool >= n_pools {
+                return bad(format!(
+                    "failure #{i}: pool {} out of range ({n_pools} pools)",
+                    f.pool
+                ));
+            }
+            if f.n_gpus == 0 {
+                return bad(format!("failure #{i}: n_gpus must be >= 1"));
+            }
+            if !(f.start_ms.is_finite() && f.start_ms >= 0.0) {
+                return bad(format!(
+                    "failure #{i}: start_ms {} invalid", f.start_ms
+                ));
+            }
+            if !(f.recover_ms.is_finite() && f.recover_ms > f.start_ms) {
+                return bad(format!(
+                    "failure #{i}: recover_ms {} must be finite and after \
+                     start_ms {}",
+                    f.recover_ms, f.start_ms
+                ));
+            }
+            if !(f.warm_ms.is_finite() && f.warm_ms >= 0.0) {
+                return bad(format!(
+                    "failure #{i}: warm_ms {} invalid", f.warm_ms
+                ));
+            }
+            if !(f.warm_factor.is_finite() && f.warm_factor > 0.0) {
+                return bad(format!(
+                    "failure #{i}: warm_factor {} must be finite and > 0",
+                    f.warm_factor
+                ));
+            }
+        }
+        for (i, s) in self.stragglers.iter().enumerate() {
+            if s.pool >= n_pools {
+                return bad(format!(
+                    "straggler #{i}: pool {} out of range ({n_pools} pools)",
+                    s.pool
+                ));
+            }
+            if s.n_gpus == 0 {
+                return bad(format!("straggler #{i}: n_gpus must be >= 1"));
+            }
+            if !(s.start_ms.is_finite() && s.start_ms >= 0.0) {
+                return bad(format!(
+                    "straggler #{i}: start_ms {} invalid", s.start_ms
+                ));
+            }
+            if !(s.end_ms.is_finite() && s.end_ms > s.start_ms) {
+                return bad(format!(
+                    "straggler #{i}: end_ms {} must be finite and after \
+                     start_ms {}",
+                    s.end_ms, s.start_ms
+                ));
+            }
+            if !(s.factor.is_finite() && s.factor > 0.0) {
+                return bad(format!(
+                    "straggler #{i}: factor {} must be finite and > 0",
+                    s.factor
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse a fault script from the shipped TOML subset: `[[failure]]`
+    /// and `[[straggler]]` sections with `key = value` lines and `#`
+    /// comments (see `data/faults/example.toml`). Hand-rolled on
+    /// purpose — the build is offline and vendors no TOML crate.
+    pub fn from_toml_str(text: &str) -> Result<Self, ConfigError> {
+        enum Section {
+            None,
+            Failure,
+            Straggler,
+        }
+        let bad = |line: usize, msg: String| {
+            Err(ConfigError::InvalidFaults(format!(
+                "fault script line {line}: {msg}"
+            )))
+        };
+        let mut script = FaultScript::default();
+        let mut section = Section::None;
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = match raw.split_once('#') {
+                Some((head, _)) => head.trim(),
+                None => raw.trim(),
+            };
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) =
+                line.strip_prefix("[[").and_then(|l| l.strip_suffix("]]"))
+            {
+                section = match name.trim() {
+                    "failure" => {
+                        script.failures.push(GpuFailure {
+                            pool: 0,
+                            n_gpus: 1,
+                            start_ms: 0.0,
+                            recover_ms: f64::NAN,
+                            warm_ms: 0.0,
+                            warm_factor: 1.0,
+                        });
+                        Section::Failure
+                    }
+                    "straggler" => {
+                        script.stragglers.push(Straggler {
+                            pool: 0,
+                            n_gpus: 1,
+                            start_ms: 0.0,
+                            end_ms: f64::NAN,
+                            factor: f64::NAN,
+                        });
+                        Section::Straggler
+                    }
+                    other => {
+                        return bad(
+                            lineno,
+                            format!("unknown section [[{other}]]"),
+                        )
+                    }
+                };
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                return bad(lineno, format!("expected key = value: {line}"));
+            };
+            let (key, value) = (key.trim(), value.trim());
+            let num = || -> Result<f64, ConfigError> {
+                value.parse::<f64>().map_err(|_| {
+                    ConfigError::InvalidFaults(format!(
+                        "fault script line {lineno}: {key} = {value} is \
+                         not a number"
+                    ))
+                })
+            };
+            let int = || -> Result<usize, ConfigError> {
+                value.parse::<usize>().map_err(|_| {
+                    ConfigError::InvalidFaults(format!(
+                        "fault script line {lineno}: {key} = {value} is \
+                         not a non-negative integer"
+                    ))
+                })
+            };
+            match section {
+                Section::None => {
+                    return bad(
+                        lineno,
+                        format!(
+                            "{key} outside a [[failure]]/[[straggler]] \
+                             section"
+                        ),
+                    )
+                }
+                Section::Failure => {
+                    let f = script.failures.last_mut().expect("pushed");
+                    match key {
+                        "pool" => f.pool = int()?,
+                        "n_gpus" => f.n_gpus = int()?,
+                        "start_ms" => f.start_ms = num()?,
+                        "recover_ms" => f.recover_ms = num()?,
+                        "warm_ms" => f.warm_ms = num()?,
+                        "warm_factor" => f.warm_factor = num()?,
+                        other => {
+                            return bad(
+                                lineno,
+                                format!("unknown failure key {other}"),
+                            )
+                        }
+                    }
+                }
+                Section::Straggler => {
+                    let s = script.stragglers.last_mut().expect("pushed");
+                    match key {
+                        "pool" => s.pool = int()?,
+                        "n_gpus" => s.n_gpus = int()?,
+                        "start_ms" => s.start_ms = num()?,
+                        "end_ms" => s.end_ms = num()?,
+                        "factor" => s.factor = num()?,
+                        other => {
+                            return bad(
+                                lineno,
+                                format!("unknown straggler key {other}"),
+                            )
+                        }
+                    }
+                }
+            }
+        }
+        for (i, f) in script.failures.iter().enumerate() {
+            if f.recover_ms.is_nan() {
+                return Err(ConfigError::InvalidFaults(format!(
+                    "failure #{i}: recover_ms is required"
+                )));
+            }
+        }
+        for (i, s) in script.stragglers.iter().enumerate() {
+            if s.end_ms.is_nan() || s.factor.is_nan() {
+                return Err(ConfigError::InvalidFaults(format!(
+                    "straggler #{i}: end_ms and factor are required"
+                )));
+            }
+        }
+        Ok(script)
+    }
+
+    /// Draw a script from a stochastic fault model: per pool, failure
+    /// times form a Poisson process at `n_gpus x failures_per_gpu_day`
+    /// and each failure's MTTR is an independent exponential draw.
+    /// Deterministic in `(model, pools, horizon_ms, seed)`; the RNG is
+    /// salted so it never correlates with the simulation's own streams.
+    pub fn generate(
+        model: &FaultModel,
+        pools: &[SimPool],
+        horizon_ms: f64,
+        seed: u64,
+    ) -> FaultScript {
+        let mut rng = Pcg64::new(seed.wrapping_add(FAULT_SEED_SALT), 1);
+        let mut script = FaultScript::default();
+        for (p, pool) in pools.iter().enumerate() {
+            if pool.n_gpus == 0 || model.failures_per_gpu_day <= 0.0 {
+                continue;
+            }
+            let rate_per_ms =
+                pool.n_gpus as f64 * model.failures_per_gpu_day / MS_PER_DAY;
+            let mut t = rng.exponential(rate_per_ms);
+            while t < horizon_ms {
+                let mttr = rng.exponential(1.0 / model.mttr_ms);
+                script.failures.push(GpuFailure {
+                    pool: p,
+                    n_gpus: 1,
+                    start_ms: t,
+                    recover_ms: t + mttr,
+                    warm_ms: model.warm_ms,
+                    warm_factor: model.warm_factor,
+                });
+                t += rng.exponential(rate_per_ms);
+            }
+        }
+        script
+    }
+}
+
+/// One outage shape for N+k sizing: `k` concurrent failures at
+/// `fail_at_ms`, recovering together after `mttr_ms` with a cold-start
+/// window. [`Self::script`] instantiates it for a pool;
+/// `EvalEngine::size_for_failures` searches the smallest fleet that
+/// rides it out in every SLO window.
+#[derive(Debug, Clone)]
+pub struct OutageSpec {
+    pub fail_at_ms: f64,
+    pub mttr_ms: f64,
+    pub warm_ms: f64,
+    pub warm_factor: f64,
+}
+
+impl OutageSpec {
+    /// The k-concurrent-failures script on `pool` (empty when k = 0,
+    /// which is bit-identical to running with no script at all).
+    pub fn script(&self, pool: usize, k: usize) -> FaultScript {
+        let mut s = FaultScript::default();
+        if k > 0 {
+            s.failures.push(GpuFailure {
+                pool,
+                n_gpus: k,
+                start_ms: self.fail_at_ms,
+                recover_ms: self.fail_at_ms + self.mttr_ms,
+                warm_ms: self.warm_ms,
+                warm_factor: self.warm_factor,
+            });
+        }
+        s
+    }
+}
+
+/// Per-run compiled view of a script: per-pool down/inflation windows
+/// plus the drain-event schedule. Pure data — shared read-only across
+/// shard threads.
+#[derive(Debug, Clone)]
+pub struct CompiledFaults {
+    /// Per pool: `(start_ms, end_ms, lo_inst)` — instances with index
+    /// >= `lo_inst` are down during `[start, end)`.
+    down: Vec<Vec<(f64, f64, usize)>>,
+    /// Per pool: `(start_ms, end_ms, lo_inst, factor)` inflation
+    /// windows (stragglers and post-recovery warm-ups).
+    slow: Vec<Vec<(f64, f64, usize, f64)>>,
+    /// Queue re-examination events `(time_ms, pool)`, in script order.
+    drains: Vec<(f64, u16)>,
+}
+
+impl CompiledFaults {
+    /// Compile `script` against the fleet. The script must have been
+    /// validated against `pools.len()` pools.
+    pub fn compile(script: &FaultScript, pools: &[SimPool]) -> Self {
+        let n_pools = pools.len();
+        let mut down = vec![Vec::new(); n_pools];
+        let mut slow = vec![Vec::new(); n_pools];
+        let mut drains = Vec::with_capacity(script.failures.len());
+        for f in &script.failures {
+            let lo = pools[f.pool].n_gpus.saturating_sub(f.n_gpus);
+            down[f.pool].push((f.start_ms, f.recover_ms, lo));
+            drains.push((f.recover_ms, f.pool as u16));
+            if f.warm_ms > 0.0 && f.warm_factor != 1.0 {
+                slow[f.pool].push((
+                    f.recover_ms,
+                    f.recover_ms + f.warm_ms,
+                    lo,
+                    f.warm_factor,
+                ));
+            }
+        }
+        for s in &script.stragglers {
+            let lo = pools[s.pool].n_gpus.saturating_sub(s.n_gpus);
+            slow[s.pool].push((s.start_ms, s.end_ms, lo, s.factor));
+        }
+        CompiledFaults { down, slow, drains }
+    }
+
+    /// Is instance `inst` of `pool` down (not admitting) at time `t`?
+    /// Windows are `[start, end)`: at `recover_ms` the instance is back
+    /// up, which is what the drain event at that instant relies on.
+    #[inline]
+    pub fn is_down(&self, pool: usize, inst: usize, t: f64) -> bool {
+        self.down[pool]
+            .iter()
+            .any(|&(s, e, lo)| inst >= lo && t >= s && t < e)
+    }
+
+    /// Iteration-latency multiplier for `inst` of `pool` at time `t`:
+    /// the product of all inflation windows covering it (1.0 outside
+    /// any window). Evaluated in fixed script order, so the f64
+    /// product is bit-identical wherever it is computed.
+    #[inline]
+    pub fn slowdown(&self, pool: usize, inst: usize, t: f64) -> f64 {
+        let mut factor = 1.0;
+        for &(s, e, lo, f) in &self.slow[pool] {
+            if inst >= lo && t >= s && t < e {
+                factor *= f;
+            }
+        }
+        factor
+    }
+
+    /// Queue re-examination schedule: one `(recover_ms, pool)` entry
+    /// per failure, in script order. The serial engines push these as
+    /// `Drain` events at init (after cap-window drains); shards push
+    /// only their owned pools' entries, in the same order.
+    pub fn drains(&self) -> &[(f64, u16)] {
+        &self.drains
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::catalog::GpuCatalog;
+
+    fn pools(n_gpus: usize) -> Vec<SimPool> {
+        let gpu = GpuCatalog::standard().get("A100").unwrap().clone();
+        vec![SimPool {
+            gpu,
+            n_gpus,
+            ctx_budget: 8192.0,
+            batch_cap: None,
+        }]
+    }
+
+    fn outage(pool: usize, k: usize, start: f64, end: f64) -> GpuFailure {
+        GpuFailure {
+            pool,
+            n_gpus: k,
+            start_ms: start,
+            recover_ms: end,
+            warm_ms: 0.0,
+            warm_factor: 1.0,
+        }
+    }
+
+    #[test]
+    fn compile_marks_top_instances_down_half_open() {
+        let script = FaultScript {
+            failures: vec![outage(0, 2, 100.0, 200.0)],
+            stragglers: vec![],
+        };
+        let c = CompiledFaults::compile(&script, &pools(4));
+        // Top two instances (2, 3) down during [100, 200).
+        assert!(!c.is_down(0, 1, 150.0));
+        assert!(c.is_down(0, 2, 150.0));
+        assert!(c.is_down(0, 3, 100.0), "start is inclusive");
+        assert!(!c.is_down(0, 3, 200.0), "recover instant is up");
+        assert!(!c.is_down(0, 3, 99.9));
+        assert_eq!(c.drains(), &[(200.0, 0)]);
+    }
+
+    #[test]
+    fn overlapping_failures_union_and_oversized_k_clamps() {
+        let script = FaultScript {
+            failures: vec![
+                outage(0, 1, 0.0, 300.0),
+                outage(0, 9, 100.0, 200.0), // > fleet size: whole pool
+            ],
+            stragglers: vec![],
+        };
+        let c = CompiledFaults::compile(&script, &pools(3));
+        assert!(c.is_down(0, 0, 150.0), "oversized failure covers all");
+        assert!(!c.is_down(0, 0, 250.0));
+        assert!(c.is_down(0, 2, 250.0), "first failure still active");
+    }
+
+    #[test]
+    fn slowdown_multiplies_overlapping_windows() {
+        let script = FaultScript {
+            failures: vec![GpuFailure {
+                pool: 0,
+                n_gpus: 1,
+                start_ms: 0.0,
+                recover_ms: 100.0,
+                warm_ms: 50.0,
+                warm_factor: 3.0,
+            }],
+            stragglers: vec![Straggler {
+                pool: 0,
+                n_gpus: 2,
+                start_ms: 120.0,
+                end_ms: 400.0,
+                factor: 2.0,
+            }],
+        };
+        let c = CompiledFaults::compile(&script, &pools(2));
+        // Warm window [100, 150) on instance 1; straggler [120, 400)
+        // on both.
+        assert_eq!(c.slowdown(0, 1, 110.0), 3.0);
+        assert_eq!(c.slowdown(0, 1, 130.0), 6.0, "windows multiply");
+        assert_eq!(c.slowdown(0, 0, 130.0), 2.0);
+        assert_eq!(c.slowdown(0, 1, 150.0), 2.0, "warm end exclusive");
+        assert_eq!(c.slowdown(0, 0, 500.0), 1.0);
+    }
+
+    #[test]
+    fn validate_rejects_bad_scripts() {
+        let ok = FaultScript {
+            failures: vec![outage(0, 1, 10.0, 20.0)],
+            stragglers: vec![],
+        };
+        assert!(ok.validate(1).is_ok());
+        assert!(matches!(
+            ok.validate(0),
+            Err(ConfigError::InvalidFaults(_))
+        ));
+        let backwards = FaultScript {
+            failures: vec![outage(0, 1, 20.0, 10.0)],
+            stragglers: vec![],
+        };
+        assert!(backwards.validate(1).is_err());
+        let zero_width = FaultScript {
+            failures: vec![],
+            stragglers: vec![Straggler {
+                pool: 0,
+                n_gpus: 1,
+                start_ms: 5.0,
+                end_ms: 5.0,
+                factor: 2.0,
+            }],
+        };
+        assert!(zero_width.validate(1).is_err());
+    }
+
+    #[test]
+    fn toml_round_trips_failures_and_stragglers() {
+        let text = "\
+# two GPUs die mid-peak, recover cold
+[[failure]]
+pool = 0
+n_gpus = 2
+start_ms = 10000    # mid-peak
+recover_ms = 20000
+warm_ms = 2000
+warm_factor = 2.0
+
+[[straggler]]
+pool = 1
+n_gpus = 1
+start_ms = 0
+end_ms = 5000
+factor = 1.5
+";
+        let s = FaultScript::from_toml_str(text).unwrap();
+        assert_eq!(s.failures.len(), 1);
+        assert_eq!(s.stragglers.len(), 1);
+        let f = &s.failures[0];
+        assert_eq!((f.pool, f.n_gpus), (0, 2));
+        assert_eq!((f.start_ms, f.recover_ms), (10_000.0, 20_000.0));
+        assert_eq!((f.warm_ms, f.warm_factor), (2_000.0, 2.0));
+        let g = &s.stragglers[0];
+        assert_eq!((g.pool, g.n_gpus), (1, 1));
+        assert_eq!((g.start_ms, g.end_ms, g.factor), (0.0, 5_000.0, 1.5));
+        assert!(s.validate(2).is_ok());
+    }
+
+    #[test]
+    fn toml_rejects_malformed_input() {
+        assert!(FaultScript::from_toml_str("pool = 0").is_err());
+        assert!(FaultScript::from_toml_str("[[explosion]]").is_err());
+        assert!(FaultScript::from_toml_str(
+            "[[failure]]\nrecover_ms = abc"
+        )
+        .is_err());
+        assert!(
+            FaultScript::from_toml_str("[[failure]]\npool = 0").is_err(),
+            "recover_ms is required"
+        );
+        assert!(FaultScript::from_toml_str("[[failure]]\nwat = 1").is_err());
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_bounded() {
+        let model = FaultModel {
+            failures_per_gpu_day: 400.0, // absurdly high to get draws
+            mttr_ms: 5_000.0,
+            warm_ms: 1_000.0,
+            warm_factor: 2.0,
+        };
+        let fleet = pools(8);
+        let a = FaultScript::generate(&model, &fleet, 3_600_000.0, 7);
+        let b = FaultScript::generate(&model, &fleet, 3_600_000.0, 7);
+        assert_eq!(a, b, "same seed, same script");
+        let c = FaultScript::generate(&model, &fleet, 3_600_000.0, 8);
+        assert_ne!(a, c, "different seed, different script");
+        assert!(!a.failures.is_empty());
+        assert!(a.validate(1).is_ok());
+        for f in &a.failures {
+            assert!(f.start_ms < 3_600_000.0);
+            assert!(f.recover_ms > f.start_ms);
+        }
+        // ~8 GPU-hours at 400/day ≈ 133 expected failures.
+        assert!((50..400).contains(&a.failures.len()),
+                "{} failures", a.failures.len());
+    }
+}

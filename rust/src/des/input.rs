@@ -1,0 +1,348 @@
+//! The unified simulation input (`SimInput`) and typed configuration
+//! errors — one front door for all four DES entry points.
+//!
+//! Historically `Simulator::run_stream`, `shard::run_streamed`,
+//! `shard::run_sharded`, and `reference::run_reference` drifted into
+//! four divergent argument lists, each re-asserting its own invariants
+//! with panics. A [`SimInput`] bundles what they all consume — pools,
+//! routing policy, config, an arrivals source, and an optional fault
+//! script — and every entry point now validates it up front, returning
+//! [`ConfigError`] instead of aborting the process:
+//!
+//! * [`Simulator::run_input`](crate::des::engine::Simulator::run_input)
+//! * [`run_reference_input`](crate::des::reference::run_reference_input)
+//! * [`run_streamed_input`](crate::des::shard::run_streamed_input)
+//! * [`run_sharded_input`](crate::des::shard::run_sharded_input)
+//!
+//! The old signatures survive as thin `#[deprecated]` wrappers that
+//! panic on invalid input exactly as before (the regression suites pin
+//! them); everything is still borrowed, so the zero-copy sweep
+//! contract is unchanged.
+
+use std::fmt;
+
+use crate::des::engine::{DesConfig, SimPool};
+use crate::des::faults::{CompiledFaults, FaultScript};
+use crate::router::RoutingPolicy;
+use crate::workload::spec::{SampledRequest, WorkloadSpec};
+
+/// Typed validation errors for simulation inputs. Display strings keep
+/// the historical panic texts, so the deprecated wrappers (which panic
+/// with `{error}`) abort with the same messages as before.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ConfigError {
+    /// The router addresses more pools than the fleet has.
+    RouterPoolMismatch { expected: usize, got: usize },
+    /// `warmup_frac` outside `[0, 1)` (or not finite).
+    InvalidWarmup { warmup_frac: f64 },
+    /// Nonzero warmup on a streaming entry point, where the time-based
+    /// cutoff is unknowable up front.
+    WarmupUnsupported { warmup_frac: f64 },
+    /// `window_ms` set but not finite and positive.
+    InvalidWindow { window_ms: f64 },
+    InvalidClassProbs(String),
+    InvalidCapWindow(String),
+    InvalidFaults(String),
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::RouterPoolMismatch { expected, got } => {
+                write!(f, "router expects {expected} pools, got {got}")
+            }
+            ConfigError::InvalidWarmup { warmup_frac } => {
+                write!(f, "warmup_frac must be in [0, 1), got {warmup_frac}")
+            }
+            ConfigError::WarmupUnsupported { warmup_frac } => {
+                write!(
+                    f,
+                    "generator-driven runs require warmup_frac = 0 (the \
+                     time-based cutoff needs the last arrival, unknown \
+                     while streaming); got {warmup_frac}"
+                )
+            }
+            ConfigError::InvalidWindow { window_ms } => {
+                write!(
+                    f,
+                    "window_ms must be finite and > 0, got {window_ms}"
+                )
+            }
+            ConfigError::InvalidClassProbs(msg) => {
+                write!(f, "invalid class_probs: {msg}")
+            }
+            ConfigError::InvalidCapWindow(msg) => {
+                write!(f, "invalid cap_window: {msg}")
+            }
+            ConfigError::InvalidFaults(msg) => {
+                write!(f, "invalid fault script: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl DesConfig {
+    /// Validate the entry-point-independent invariants. Called by every
+    /// `SimInput`-based entry point; streaming entry points additionally
+    /// require `warmup_frac == 0`.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if !(self.warmup_frac.is_finite()
+            && (0.0..1.0).contains(&self.warmup_frac))
+        {
+            return Err(ConfigError::InvalidWarmup {
+                warmup_frac: self.warmup_frac,
+            });
+        }
+        if let Some(w) = self.window_ms {
+            if !(w.is_finite() && w > 0.0) {
+                return Err(ConfigError::InvalidWindow { window_ms: w });
+            }
+        }
+        if let Some(w) = &self.cap_window {
+            if !(w.start_ms.is_finite()
+                && w.end_ms.is_finite()
+                && w.start_ms >= 0.0
+                && w.end_ms >= w.start_ms)
+            {
+                return Err(ConfigError::InvalidCapWindow(format!(
+                    "[{}, {}) is not a valid time window",
+                    w.start_ms, w.end_ms
+                )));
+            }
+        }
+        if let Some(probs) = &self.class_probs {
+            if probs.is_empty() {
+                return Err(ConfigError::InvalidClassProbs(
+                    "empty class distribution".to_string(),
+                ));
+            }
+            if probs.iter().any(|p| !p.is_finite() || *p < 0.0) {
+                return Err(ConfigError::InvalidClassProbs(format!(
+                    "probabilities must be finite and >= 0: {probs:?}"
+                )));
+            }
+            if probs.iter().sum::<f64>() <= 0.0 {
+                return Err(ConfigError::InvalidClassProbs(
+                    "probabilities sum to 0".to_string(),
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Where a run's arrivals come from.
+#[derive(Clone, Copy)]
+pub enum ArrivalsSource<'a> {
+    /// An explicit, time-ordered, materialized stream (the request
+    /// count is the slice length; `config.n_requests` is ignored).
+    Stream(&'a [SampledRequest]),
+    /// A workload sampled/generated on demand: serial entry points
+    /// materialize `config.n_requests` requests; streaming entry
+    /// points pull them chunk-by-chunk in O(in-flight) memory.
+    Generator(&'a WorkloadSpec),
+}
+
+/// The unified, borrowed input consumed by all four DES entry points.
+pub struct SimInput<'a> {
+    pub pools: &'a [SimPool],
+    pub router: &'a RoutingPolicy,
+    pub config: &'a DesConfig,
+    pub arrivals: ArrivalsSource<'a>,
+    /// Optional deterministic fault schedule (see
+    /// [`crate::des::faults`]).
+    pub faults: Option<&'a FaultScript>,
+}
+
+impl<'a> SimInput<'a> {
+    /// Input over a materialized request stream.
+    pub fn stream(
+        pools: &'a [SimPool],
+        router: &'a RoutingPolicy,
+        config: &'a DesConfig,
+        sampled: &'a [SampledRequest],
+    ) -> Self {
+        SimInput {
+            pools,
+            router,
+            config,
+            arrivals: ArrivalsSource::Stream(sampled),
+            faults: None,
+        }
+    }
+
+    /// Input over a generator-driven workload
+    /// (`config.n_requests` arrivals).
+    pub fn generated(
+        pools: &'a [SimPool],
+        router: &'a RoutingPolicy,
+        config: &'a DesConfig,
+        workload: &'a WorkloadSpec,
+    ) -> Self {
+        SimInput {
+            pools,
+            router,
+            config,
+            arrivals: ArrivalsSource::Generator(workload),
+            faults: None,
+        }
+    }
+
+    /// Attach a fault script.
+    pub fn with_faults(mut self, faults: &'a FaultScript) -> Self {
+        self.faults = Some(faults);
+        self
+    }
+
+    /// Validate router/pool coherence, the config, and the fault
+    /// script. Every entry point calls this before touching state.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.router.n_pools() > self.pools.len() {
+            return Err(ConfigError::RouterPoolMismatch {
+                expected: self.router.n_pools(),
+                got: self.pools.len(),
+            });
+        }
+        self.config.validate()?;
+        if let Some(f) = self.faults {
+            f.validate(self.pools.len())?;
+        }
+        Ok(())
+    }
+
+    /// Streaming-entry-point validation: everything above, plus the
+    /// no-warmup constraint (the time-based cutoff needs the last
+    /// arrival, which a streaming run does not know up front).
+    pub(crate) fn validate_streaming(&self) -> Result<(), ConfigError> {
+        self.validate()?;
+        if self.config.warmup_frac != 0.0 {
+            return Err(ConfigError::WarmupUnsupported {
+                warmup_frac: self.config.warmup_frac,
+            });
+        }
+        Ok(())
+    }
+
+    /// Compile the fault script (if any) against this fleet. `None`
+    /// scripts cost nothing; empty scripts compile to empty views that
+    /// are bit-identical to no script at all.
+    pub(crate) fn compiled_faults(&self) -> Option<CompiledFaults> {
+        self.faults.map(|f| CompiledFaults::compile(f, self.pools))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::des::engine::CapWindow;
+    use crate::gpu::catalog::GpuCatalog;
+
+    fn pools(n: usize) -> Vec<SimPool> {
+        let gpu = GpuCatalog::standard().get("A100").unwrap().clone();
+        vec![
+            SimPool {
+                gpu,
+                n_gpus: 2,
+                ctx_budget: 8192.0,
+                batch_cap: None
+            };
+            n
+        ]
+    }
+
+    #[test]
+    fn default_config_validates() {
+        assert!(DesConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn warmup_out_of_range_is_rejected() {
+        for bad in [-0.1, 1.0, 1.5, f64::NAN, f64::INFINITY] {
+            let cfg = DesConfig { warmup_frac: bad, ..Default::default() };
+            assert!(
+                matches!(
+                    cfg.validate(),
+                    Err(ConfigError::InvalidWarmup { .. })
+                ),
+                "warmup_frac = {bad}"
+            );
+        }
+        let ok = DesConfig { warmup_frac: 0.99, ..Default::default() };
+        assert!(ok.validate().is_ok());
+    }
+
+    #[test]
+    fn bad_windows_probs_and_caps_are_rejected() {
+        let cfg =
+            DesConfig { window_ms: Some(0.0), ..Default::default() };
+        assert!(matches!(
+            cfg.validate(),
+            Err(ConfigError::InvalidWindow { .. })
+        ));
+        let cfg = DesConfig {
+            class_probs: Some(vec![]),
+            ..Default::default()
+        };
+        assert!(matches!(
+            cfg.validate(),
+            Err(ConfigError::InvalidClassProbs(_))
+        ));
+        let cfg = DesConfig {
+            class_probs: Some(vec![0.5, -0.1]),
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
+        let cfg = DesConfig {
+            cap_window: Some(CapWindow {
+                start_ms: 10.0,
+                end_ms: 5.0,
+                cap: 1,
+            }),
+            ..Default::default()
+        };
+        assert!(matches!(
+            cfg.validate(),
+            Err(ConfigError::InvalidCapWindow(_))
+        ));
+    }
+
+    #[test]
+    fn input_catches_router_pool_mismatch() {
+        let fleet = pools(1);
+        let router = RoutingPolicy::Length { b_short: 4096.0 };
+        let cfg = DesConfig::default();
+        let sampled: Vec<crate::workload::spec::SampledRequest> = vec![];
+        let input = SimInput::stream(&fleet, &router, &cfg, &sampled);
+        let err = input.validate().unwrap_err();
+        assert_eq!(
+            err,
+            ConfigError::RouterPoolMismatch { expected: 2, got: 1 }
+        );
+        assert_eq!(err.to_string(), "router expects 2 pools, got 1");
+    }
+
+    #[test]
+    fn streaming_validation_rejects_warmup_with_the_legacy_message() {
+        let fleet = pools(2);
+        let router = RoutingPolicy::Length { b_short: 4096.0 };
+        let cfg =
+            DesConfig { warmup_frac: 0.2, ..Default::default() };
+        let w = crate::workload::spec::WorkloadSpec::builtin(
+            crate::workload::spec::BuiltinTrace::Azure,
+            50.0,
+        );
+        let input = SimInput::generated(&fleet, &router, &cfg, &w);
+        assert!(input.validate().is_ok(), "serial path allows warmup");
+        let err = input.validate_streaming().unwrap_err();
+        assert!(matches!(
+            err,
+            ConfigError::WarmupUnsupported { warmup_frac } if
+                warmup_frac == 0.2
+        ));
+        // The deprecated wrappers panic with this Display — it must
+        // keep the historical "warmup_frac = 0" substring.
+        assert!(err.to_string().contains("warmup_frac = 0"));
+    }
+}

@@ -9,6 +9,8 @@
 
 pub mod engine;
 pub mod event;
+pub mod faults;
+pub mod input;
 pub mod metrics;
 pub mod pool;
 pub mod reference;

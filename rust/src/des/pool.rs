@@ -106,7 +106,10 @@ impl DesPool {
         self.max_queue_depth = self.max_queue_depth.max(self.queue.len());
     }
 
-    /// Mean slot utilization over [0, horizon_ms].
+    /// Mean slot utilization over [0, horizon_ms]. The denominator is
+    /// always the *nominal* capacity — under a fault script
+    /// ([`crate::des::faults`]) an outage shows up as lost utilization,
+    /// never as a shrunken fleet.
     pub fn utilization(&self, horizon_ms: f64) -> f64 {
         if horizon_ms <= 0.0 || self.instances.is_empty() {
             return 0.0;

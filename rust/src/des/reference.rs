@@ -18,6 +18,8 @@
 
 use crate::des::engine::{CapWindow, DesConfig, SimPool};
 use crate::des::event::{EventKind, EventQueue};
+use crate::des::faults::CompiledFaults;
+use crate::des::input::{ArrivalsSource, ConfigError, SimInput};
 use crate::des::metrics::{DesResult, MetricsCollector, PoolResult};
 use crate::des::pool::DesPool;
 use crate::router::{RouteRequest, RoutingPolicy};
@@ -49,12 +51,16 @@ fn try_admit(
     now: f64,
     events: &mut EventQueue,
     cap_window: &Option<CapWindow>,
+    faults: Option<&CompiledFaults>,
     metrics: &mut MetricsCollector,
 ) -> bool {
     let eff = eff_cap(cap_window, &pools[pool_idx], now);
     let pool = &mut pools[pool_idx];
     let mut best: Option<(usize, u32)> = None;
     for (i, inst) in pool.instances.iter().enumerate() {
+        if faults.is_some_and(|f| f.is_down(pool_idx, i, now)) {
+            continue;
+        }
         if inst.busy < eff {
             let free = eff - inst.busy;
             if best.map_or(true, |(_, bf)| free > bf) {
@@ -66,7 +72,8 @@ fn try_admit(
     pool.acquire(inst, now);
     let req = &reqs[req_id as usize];
     let n_at_admit = pool.instances[inst].busy as f64;
-    let t_iter = pool.gpu.t_iter(n_at_admit);
+    let slow = faults.map_or(1.0, |f| f.slowdown(pool_idx, inst, now));
+    let t_iter = pool.gpu.t_iter(n_at_admit) * slow;
     let hold = pool.gpu.iters(req.l_in, req.l_out) * t_iter;
     events.push(
         now + hold,
@@ -84,6 +91,7 @@ fn try_admit(
     true
 }
 
+#[allow(clippy::too_many_arguments)]
 fn drain_queue(
     pools: &mut [DesPool],
     pool_idx: usize,
@@ -91,11 +99,13 @@ fn drain_queue(
     now: f64,
     events: &mut EventQueue,
     cap_window: &Option<CapWindow>,
+    faults: Option<&CompiledFaults>,
     metrics: &mut MetricsCollector,
 ) {
     while let Some(&head) = pools[pool_idx].queue.front() {
         if !try_admit(
-            pools, pool_idx, head, reqs, now, events, cap_window, metrics,
+            pools, pool_idx, head, reqs, now, events, cap_window, faults,
+            metrics,
         ) {
             break;
         }
@@ -106,18 +116,53 @@ fn drain_queue(
 /// Run the reference simulator on an explicit, time-ordered request
 /// stream. Honors `config.metrics` so both exact and streaming
 /// collection can be compared bit-for-bit against the production engine.
+#[deprecated(note = "build a SimInput and call run_reference_input")]
 pub fn run_reference(
     pool_specs: &[SimPool],
     router: &RoutingPolicy,
     config: &DesConfig,
     sampled: &[SampledRequest],
 ) -> DesResult {
-    assert!(
-        router.n_pools() <= pool_specs.len(),
-        "router expects {} pools, got {}",
-        router.n_pools(),
-        pool_specs.len()
-    );
+    let input = SimInput::stream(pool_specs, router, config, sampled);
+    match run_reference_input(&input) {
+        Ok(r) => r,
+        Err(e) => panic!("{e}"),
+    }
+}
+
+/// Run the reference simulator on a validated [`SimInput`]. A
+/// `Generator` arrivals source is materialized up front
+/// (`config.n_requests` requests) — the reference engine is the
+/// semantic anchor, not the streaming workhorse.
+pub fn run_reference_input(
+    input: &SimInput<'_>,
+) -> Result<DesResult, ConfigError> {
+    input.validate()?;
+    let faults = input.compiled_faults();
+    match input.arrivals {
+        ArrivalsSource::Stream(sampled) => Ok(run_core(
+            input.pools, input.router, input.config, sampled,
+            faults.as_ref(),
+        )),
+        ArrivalsSource::Generator(w) => {
+            let sampled = w.sample_requests(
+                input.config.n_requests, input.config.seed,
+            );
+            Ok(run_core(
+                input.pools, input.router, input.config, &sampled,
+                faults.as_ref(),
+            ))
+        }
+    }
+}
+
+fn run_core(
+    pool_specs: &[SimPool],
+    router: &RoutingPolicy,
+    config: &DesConfig,
+    sampled: &[SampledRequest],
+    faults: Option<&CompiledFaults>,
+) -> DesResult {
     let n = sampled.len();
     let mut route_rng = Pcg64::new(config.seed, 3);
     let mut pools: Vec<DesPool> = pool_specs
@@ -142,6 +187,15 @@ pub fn run_reference(
     if let Some(w) = &config.cap_window {
         for p in 0..pools.len() {
             events.push(w.end_ms, EventKind::Drain { pool: p as u16 });
+        }
+    }
+    // Fault-recovery drains, after cap drains and in script order — the
+    // same init order every engine uses, so sequence numbers (and thus
+    // same-time tie-breaks) agree bit-for-bit across engines and shard
+    // counts.
+    if let Some(f) = faults {
+        for &(t, pool) in f.drains() {
+            events.push(t, EventKind::Drain { pool });
         }
     }
 
@@ -190,7 +244,7 @@ pub fn run_reference(
                 }
                 if !try_admit(
                     &mut pools, decision.pool, req, &reqs, now, &mut events,
-                    &config.cap_window, &mut metrics,
+                    &config.cap_window, faults, &mut metrics,
                 ) {
                     pools[decision.pool].enqueue(req);
                 }
@@ -199,13 +253,13 @@ pub fn run_reference(
                 pools[pool as usize].release(instance as usize, now);
                 drain_queue(
                     &mut pools, pool as usize, &reqs, now, &mut events,
-                    &config.cap_window, &mut metrics,
+                    &config.cap_window, faults, &mut metrics,
                 );
             }
             EventKind::Drain { pool } => {
                 drain_queue(
                     &mut pools, pool as usize, &reqs, now, &mut events,
-                    &config.cap_window, &mut metrics,
+                    &config.cap_window, faults, &mut metrics,
                 );
             }
         }
@@ -259,8 +313,50 @@ mod tests {
         let cfg =
             DesConfig { n_requests: 3_000, seed: 17, ..Default::default() };
         let sampled = w.sample_requests(cfg.n_requests, cfg.seed);
-        let mut a = run_reference(&pools, &router, &cfg, &sampled);
-        let mut b = Simulator::run_stream(&pools, &router, &cfg, &sampled);
+        let input = SimInput::stream(&pools, &router, &cfg, &sampled);
+        let mut a = run_reference_input(&input).unwrap();
+        let mut b = Simulator::run_input(&input).unwrap();
+        assert_eq!(a.overall.p99_ttft(), b.overall.p99_ttft());
+        assert_eq!(a.overall.count, b.overall.count);
+        assert_eq!(a.horizon_ms, b.horizon_ms);
+        assert_eq!(a.n_events, b.n_events);
+    }
+
+    #[test]
+    fn reference_agrees_with_production_engine_under_faults() {
+        use crate::des::faults::{FaultScript, GpuFailure, Straggler};
+        let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 110.0);
+        let gpu = GpuCatalog::standard().get("A100").unwrap().clone();
+        let pools = vec![
+            SimPool { gpu: gpu.clone(), n_gpus: 3, ctx_budget: 4096.0,
+                      batch_cap: None },
+            SimPool { gpu, n_gpus: 3, ctx_budget: 8192.0, batch_cap: None },
+        ];
+        let router = RoutingPolicy::Length { b_short: 4096.0 };
+        let cfg =
+            DesConfig { n_requests: 3_000, seed: 23, ..Default::default() };
+        let sampled = w.sample_requests(cfg.n_requests, cfg.seed);
+        let script = FaultScript {
+            failures: vec![GpuFailure {
+                pool: 1,
+                n_gpus: 2,
+                start_ms: 4_000.0,
+                recover_ms: 12_000.0,
+                warm_ms: 2_000.0,
+                warm_factor: 2.0,
+            }],
+            stragglers: vec![Straggler {
+                pool: 0,
+                n_gpus: 1,
+                start_ms: 0.0,
+                end_ms: 8_000.0,
+                factor: 1.5,
+            }],
+        };
+        let input = SimInput::stream(&pools, &router, &cfg, &sampled)
+            .with_faults(&script);
+        let mut a = run_reference_input(&input).unwrap();
+        let mut b = Simulator::run_input(&input).unwrap();
         assert_eq!(a.overall.p99_ttft(), b.overall.p99_ttft());
         assert_eq!(a.overall.count, b.overall.count);
         assert_eq!(a.horizon_ms, b.horizon_ms);

@@ -55,6 +55,8 @@ use std::sync::Arc;
 
 use crate::des::engine::{try_admit, DesConfig, Req, SimPool};
 use crate::des::event::{CalendarQueue, EventKind};
+use crate::des::faults::CompiledFaults;
+use crate::des::input::{ArrivalsSource, ConfigError, SimInput};
 use crate::des::metrics::{DesResult, LatencyStats, MetricsCollector,
                           PoolResult, WindowedStats};
 use crate::des::pool::DesPool;
@@ -125,6 +127,7 @@ struct ShardSim<'a> {
     n_shards: usize,
     router: &'a RoutingPolicy,
     config: &'a DesConfig,
+    faults: Option<&'a CompiledFaults>,
     pools: Vec<DesPool>,
     events: CalendarQueue,
     route_rng: Pcg64,
@@ -154,6 +157,7 @@ impl<'a> ShardSim<'a> {
         pool_specs: &[SimPool],
         router: &'a RoutingPolicy,
         config: &'a DesConfig,
+        faults: Option<&'a CompiledFaults>,
         shard_id: usize,
         n_shards: usize,
     ) -> Self {
@@ -177,6 +181,17 @@ impl<'a> ShardSim<'a> {
                 }
             }
         }
+        // Fault-recovery drains for owned pools, after cap drains and in
+        // script order — the same relative order as the serial engine's
+        // all-pool push, so same-time ties resolve identically for any
+        // shard count.
+        if let Some(f) = faults {
+            for &(t, pool) in f.drains() {
+                if pool as usize % n_shards == shard_id {
+                    events.push(t, EventKind::Drain { pool });
+                }
+            }
+        }
         // Exact-mode pre-size hint: this shard's expected share, capped
         // so a 10^8-request config never pre-allocates gigabytes.
         let hint = (config.n_requests / n_shards).min(1 << 20);
@@ -188,6 +203,7 @@ impl<'a> ShardSim<'a> {
             n_shards,
             router,
             config,
+            faults,
             pools,
             events,
             route_rng: Pcg64::new(config.seed, 3),
@@ -249,7 +265,8 @@ impl<'a> ShardSim<'a> {
         });
         let admitted = try_admit(
             &mut self.pools, decision.pool, id, &self.arena.slots, now,
-            &mut self.events, &self.config.cap_window, &mut self.metrics,
+            &mut self.events, &self.config.cap_window, self.faults,
+            &mut self.metrics,
         );
         if admitted {
             self.arena.release(id);
@@ -284,7 +301,8 @@ impl<'a> ShardSim<'a> {
         while let Some(&head) = self.pools[pool_idx].queue.front() {
             let admitted = try_admit(
                 &mut self.pools, pool_idx, head, &self.arena.slots, now,
-                &mut self.events, &self.config.cap_window, &mut self.metrics,
+                &mut self.events, &self.config.cap_window, self.faults,
+                &mut self.metrics,
             );
             if !admitted {
                 break;
@@ -398,27 +416,10 @@ fn merge_outputs(
     (result, arena_peak)
 }
 
-fn check_config(
-    pool_specs: &[SimPool],
-    router: &RoutingPolicy,
-    config: &DesConfig,
-) {
-    assert!(
-        router.n_pools() <= pool_specs.len(),
-        "router expects {} pools, got {}",
-        router.n_pools(),
-        pool_specs.len()
-    );
-    assert!(
-        config.warmup_frac == 0.0,
-        "generator-driven runs require warmup_frac = 0 (the time-based \
-         cutoff needs the last arrival, unknown while streaming)"
-    );
-}
-
 /// Generator-driven, single-threaded run: bit-identical to
 /// [`Simulator::run_stream`](crate::des::engine::Simulator::run_stream)
 /// on the materialized stream, in O(in-flight) memory.
+#[deprecated(note = "build a SimInput and call run_streamed_input")]
 pub fn run_streamed(
     pool_specs: &[SimPool],
     router: &RoutingPolicy,
@@ -426,35 +427,18 @@ pub fn run_streamed(
     workload: &WorkloadSpec,
     chunk_size: usize,
 ) -> (DesResult, StreamStats) {
-    check_config(pool_specs, router, config);
-    let chunk_size = chunk_size.max(1);
-    let n = config.n_requests;
-    let mut sim = ShardSim::new(pool_specs, router, config, 0, 1);
-    let mut gen = RequestGenerator::new(workload, config.seed);
-    let mut chunk = Vec::with_capacity(chunk_size.min(n.max(1)));
-    let mut produced = 0usize;
-    let mut n_chunks = 0usize;
-    while produced < n {
-        let take = chunk_size.min(n - produced);
-        chunk.clear();
-        gen.fill(&mut chunk, take);
-        produced += take;
-        n_chunks += 1;
-        for r in &chunk {
-            sim.feed(r);
-        }
+    let input = SimInput::generated(pool_specs, router, config, workload);
+    match run_streamed_input(&input, chunk_size) {
+        Ok(r) => r,
+        Err(e) => panic!("{e}"),
     }
-    let (result, arena_peak) = merge_outputs(vec![sim.finish()], n);
-    (result, StreamStats { arena_peak_slots: arena_peak, n_chunks })
 }
 
 /// Generator-driven, sharded run: one thread per shard, pools
 /// partitioned by `index % n_shards`, results merged deterministically.
 /// Bit-identical to the serial engine for any shard count (pinned by
 /// the `shard_regression` suite); see the module docs.
-///
-/// `n_shards` is clamped to the pool count — a shard owning no pools
-/// would only burn a core replaying the routing stream.
+#[deprecated(note = "build a SimInput and call run_sharded_input")]
 pub fn run_sharded(
     pool_specs: &[SimPool],
     router: &RoutingPolicy,
@@ -463,13 +447,120 @@ pub fn run_sharded(
     n_shards: usize,
     chunk_size: usize,
 ) -> (DesResult, StreamStats) {
-    check_config(pool_specs, router, config);
-    let n_shards = n_shards.clamp(1, pool_specs.len().max(1));
-    if n_shards == 1 {
-        return run_streamed(pool_specs, router, config, workload,
-                            chunk_size);
+    let input = SimInput::generated(pool_specs, router, config, workload);
+    match run_sharded_input(&input, n_shards, chunk_size) {
+        Ok(r) => r,
+        Err(e) => panic!("{e}"),
     }
+}
+
+/// Single-threaded streaming run over a validated [`SimInput`], in
+/// O(in-flight) memory. A `Stream` arrivals source is consumed in
+/// place (`config.n_requests` is ignored — the slice is the stream); a
+/// `Generator` source pulls `config.n_requests` arrivals chunk by
+/// chunk. Bit-identical to
+/// [`Simulator::run_input`](crate::des::engine::Simulator::run_input)
+/// on the same arrivals, faulted or not.
+pub fn run_streamed_input(
+    input: &SimInput<'_>,
+    chunk_size: usize,
+) -> Result<(DesResult, StreamStats), ConfigError> {
+    input.validate_streaming()?;
+    let compiled = input.compiled_faults();
     let chunk_size = chunk_size.max(1);
+    let mut n_chunks = 0usize;
+    let n;
+    let mut sim = ShardSim::new(
+        input.pools, input.router, input.config, compiled.as_ref(), 0, 1,
+    );
+    match input.arrivals {
+        ArrivalsSource::Stream(sampled) => {
+            // Already materialized: no generator chunks to count.
+            n = sampled.len();
+            for r in sampled {
+                sim.feed(r);
+            }
+        }
+        ArrivalsSource::Generator(w) => {
+            n = input.config.n_requests;
+            let mut gen = RequestGenerator::new(w, input.config.seed);
+            let mut chunk = Vec::with_capacity(chunk_size.min(n.max(1)));
+            let mut produced = 0usize;
+            while produced < n {
+                let take = chunk_size.min(n - produced);
+                chunk.clear();
+                gen.fill(&mut chunk, take);
+                produced += take;
+                n_chunks += 1;
+                for r in &chunk {
+                    sim.feed(r);
+                }
+            }
+        }
+    }
+    let (result, arena_peak) = merge_outputs(vec![sim.finish()], n);
+    Ok((result, StreamStats { arena_peak_slots: arena_peak, n_chunks }))
+}
+
+/// Sharded run over a validated [`SimInput`]: one thread per shard,
+/// pools partitioned by `index % n_shards`, results merged
+/// deterministically — bit-identical to the serial engine for any
+/// shard count, with or without a fault script (pinned by the
+/// `shard_regression` suite).
+///
+/// A `Generator` source is produced once on the calling thread and
+/// Arc-broadcast in bounded chunks; a `Stream` source is already
+/// resident, so every shard just iterates the borrowed slice.
+///
+/// `n_shards` is clamped to the pool count — a shard owning no pools
+/// would only burn a core replaying the routing stream.
+pub fn run_sharded_input(
+    input: &SimInput<'_>,
+    n_shards: usize,
+    chunk_size: usize,
+) -> Result<(DesResult, StreamStats), ConfigError> {
+    input.validate_streaming()?;
+    let n_shards = n_shards.clamp(1, input.pools.len().max(1));
+    if n_shards == 1 {
+        return run_streamed_input(input, chunk_size);
+    }
+    let compiled = input.compiled_faults();
+    let faults = compiled.as_ref();
+    let chunk_size = chunk_size.max(1);
+    let (pool_specs, router, config) =
+        (input.pools, input.router, input.config);
+    if let ArrivalsSource::Stream(sampled) = input.arrivals {
+        // The stream is already materialized and shared — no producer
+        // thread, no channels; every shard walks the same slice.
+        let outputs: Vec<ShardOutput> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n_shards)
+                .map(|sid| {
+                    s.spawn(move || {
+                        let mut sim = ShardSim::new(
+                            pool_specs, router, config, faults, sid,
+                            n_shards,
+                        );
+                        for r in sampled {
+                            sim.feed(r);
+                        }
+                        sim.finish()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard thread panicked"))
+                .collect()
+        });
+        let (result, arena_peak) = merge_outputs(outputs, sampled.len());
+        return Ok((
+            result,
+            StreamStats { arena_peak_slots: arena_peak, n_chunks: 0 },
+        ));
+    }
+    let ArrivalsSource::Generator(workload) = input.arrivals else {
+        unreachable!("stream sources handled above")
+    };
     let n = config.n_requests;
     let mut senders = Vec::with_capacity(n_shards);
     let mut receivers = Vec::with_capacity(n_shards);
@@ -487,7 +578,7 @@ pub fn run_sharded(
             .map(|(sid, rx)| {
                 s.spawn(move || {
                     let mut sim = ShardSim::new(
-                        pool_specs, router, config, sid, n_shards,
+                        pool_specs, router, config, faults, sid, n_shards,
                     );
                     while let Ok(chunk) = rx.recv() {
                         for r in chunk.iter() {
@@ -521,13 +612,18 @@ pub fn run_sharded(
         (outs, n_chunks)
     });
     let (result, arena_peak) = merge_outputs(outputs, n);
-    (result, StreamStats { arena_peak_slots: arena_peak, n_chunks })
+    Ok((result, StreamStats { arena_peak_slots: arena_peak, n_chunks }))
 }
 
 #[cfg(test)]
+// The smoke test deliberately exercises the deprecated wrappers — they
+// are public API until the next major bump and must keep matching the
+// SimInput-based entry points bit-for-bit.
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::des::engine::Simulator;
+    use crate::des::faults::{FaultScript, GpuFailure, Straggler};
     use crate::des::metrics::MetricsMode;
     use crate::gpu::catalog::GpuCatalog;
     use crate::gpu::profile::GpuProfile;
@@ -615,7 +711,6 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "warmup_frac = 0")]
     fn warmup_is_rejected_in_streaming_mode() {
         let (w, pools, router) = setup();
         let cfg = DesConfig {
@@ -623,6 +718,80 @@ mod tests {
             warmup_frac: 0.1,
             ..Default::default()
         };
-        run_streamed(&pools, &router, &cfg, &w, 64);
+        let input = SimInput::generated(&pools, &router, &cfg, &w);
+        let err =
+            run_streamed_input(&input, 64).map(|_| ()).unwrap_err();
+        assert!(matches!(
+            err,
+            ConfigError::WarmupUnsupported { warmup_frac } if
+                warmup_frac == 0.1
+        ));
+        // The deprecated wrapper panics with this Display; it must keep
+        // the historical "warmup_frac = 0" substring.
+        assert!(err.to_string().contains("warmup_frac = 0"));
+    }
+
+    #[test]
+    fn stream_source_matches_generator_source_for_any_shard_count() {
+        let (w, pools, router) = setup();
+        let cfg = DesConfig {
+            n_requests: 6_000,
+            seed: 29,
+            ..Default::default()
+        };
+        let sampled = w.sample_requests(cfg.n_requests, cfg.seed);
+        let gen_input = SimInput::generated(&pools, &router, &cfg, &w);
+        let str_input = SimInput::stream(&pools, &router, &cfg, &sampled);
+        for shards in [1usize, 2] {
+            let (mut a, _) =
+                run_sharded_input(&gen_input, shards, 1_024).unwrap();
+            let (mut b, _) =
+                run_sharded_input(&str_input, shards, 1_024).unwrap();
+            assert_eq!(summary(&mut a), summary(&mut b),
+                       "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn faulted_runs_stay_bit_identical_across_shard_counts() {
+        let (w, pools, router) = setup();
+        let cfg = DesConfig {
+            n_requests: 6_000,
+            seed: 31,
+            ..Default::default()
+        };
+        let script = FaultScript {
+            failures: vec![GpuFailure {
+                pool: 1,
+                n_gpus: 3,
+                start_ms: 5_000.0,
+                recover_ms: 20_000.0,
+                warm_ms: 3_000.0,
+                warm_factor: 2.5,
+            }],
+            stragglers: vec![Straggler {
+                pool: 0,
+                n_gpus: 2,
+                start_ms: 10_000.0,
+                end_ms: 30_000.0,
+                factor: 1.7,
+            }],
+        };
+        let sampled = w.sample_requests(cfg.n_requests, cfg.seed);
+        let serial_in = SimInput::stream(&pools, &router, &cfg, &sampled)
+            .with_faults(&script);
+        let mut serial = Simulator::run_input(&serial_in).unwrap();
+        let want = summary(&mut serial);
+        let gen_in = SimInput::generated(&pools, &router, &cfg, &w)
+            .with_faults(&script);
+        for shards in [1usize, 2] {
+            let (mut got, _) =
+                run_sharded_input(&gen_in, shards, 777).unwrap();
+            assert_eq!(summary(&mut got), want, "shards={shards}");
+        }
+        // And the fault script actually bit: the unfaulted run differs.
+        let plain_in = SimInput::stream(&pools, &router, &cfg, &sampled);
+        let mut plain = Simulator::run_input(&plain_in).unwrap();
+        assert_ne!(summary(&mut plain), want);
     }
 }

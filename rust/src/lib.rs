@@ -59,7 +59,12 @@ pub mod workload;
 /// Convenience re-exports of the main planner API surface.
 pub mod prelude {
     pub use crate::des::engine::{DesConfig, SimPool, Simulator};
+    pub use crate::des::faults::{FaultModel, FaultScript, GpuFailure,
+                                 OutageSpec, Straggler};
+    pub use crate::des::input::{ArrivalsSource, ConfigError, SimInput};
     pub use crate::des::metrics::{DesResult, MetricsMode};
+    pub use crate::des::reference::run_reference_input;
+    pub use crate::des::shard::{run_sharded_input, run_streamed_input};
     pub use crate::gpu::catalog::GpuCatalog;
     pub use crate::gpu::profile::GpuProfile;
     pub use crate::optimizer::planner::{FleetOptimizer, FleetPlan};

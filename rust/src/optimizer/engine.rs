@@ -23,7 +23,10 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::des::engine::{DesConfig, SimPool, Simulator};
+use crate::des::faults::{FaultScript, OutageSpec};
+use crate::des::input::SimInput;
 use crate::des::metrics::DesResult;
+use crate::des::shard::{run_streamed_input, DEFAULT_CHUNK_SIZE};
 use crate::gpu::catalog::GpuCatalog;
 use crate::gpu::profile::GpuProfile;
 use crate::optimizer::analytic::{rank_feasible, NativeSweep, SweepEval};
@@ -275,16 +278,39 @@ impl EvalEngine {
         router: &RoutingPolicy,
         cfg: &DesConfig,
     ) -> DesResult {
+        self.simulate_faulted(workload, pools, router, cfg, None)
+    }
+
+    /// [`Self::simulate`] with an optional deterministic fault script
+    /// ([`crate::des::faults`]) applied to the fleet. `None` (and the
+    /// empty script) is bit-identical to the unfaulted run; both the
+    /// cached-stream and the generator-driven dispatch inject the same
+    /// script, so the memory-policy cutoff stays semantics-free.
+    pub fn simulate_faulted(
+        &self,
+        workload: &WorkloadSpec,
+        pools: &[SimPool],
+        router: &RoutingPolicy,
+        cfg: &DesConfig,
+        faults: Option<&FaultScript>,
+    ) -> DesResult {
         if cfg.n_requests > Self::STREAM_CACHE_MAX && cfg.warmup_frac == 0.0
         {
-            let (r, _) = crate::des::shard::run_streamed(
-                pools, router, cfg, workload,
-                crate::des::shard::DEFAULT_CHUNK_SIZE,
-            );
+            let mut input =
+                SimInput::generated(pools, router, cfg, workload);
+            if let Some(f) = faults {
+                input = input.with_faults(f);
+            }
+            let (r, _) = run_streamed_input(&input, DEFAULT_CHUNK_SIZE)
+                .unwrap_or_else(|e| panic!("{e}"));
             return r;
         }
         let stream = self.sampled_stream(workload, cfg.n_requests, cfg.seed);
-        Simulator::run_stream(pools, router, cfg, &stream)
+        let mut input = SimInput::stream(pools, router, cfg, &stream);
+        if let Some(f) = faults {
+            input = input.with_faults(f);
+        }
+        Simulator::run_input(&input).unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// Phase 2: DES-verify one candidate with the production router.
@@ -368,6 +394,65 @@ impl EvalEngine {
             }];
             let mut r = self.simulate(
                 w, &pools, &RoutingPolicy::Random { n_pools: 1 }, cfg,
+            );
+            if r.meets_slo_in_every_window(slo_ms) {
+                return Some((n, r));
+            }
+        }
+        None
+    }
+
+    /// Empirical N+k sizing: smallest homogeneous fleet that meets the
+    /// SLO **in every window while `k` of its GPUs are down** on the
+    /// `outage` schedule ([`OutageSpec::script`]) — failure at
+    /// `fail_at_ms`, recovery after `mttr_ms`, then a cold-start
+    /// window. The analytic counterpart is Eq. 6's availability-target
+    /// sizing ([`crate::optimizer::reliability`]); this mode answers
+    /// the question Eq. 6 cannot: does N+k *stay inside the SLO during
+    /// the outage*, not merely keep enough long-run capacity.
+    ///
+    /// `k = 0` degenerates to an empty fault script and is identical
+    /// to [`Self::size_to_peak`] by construction (same floor, same
+    /// walk, same windows test). Like `size_to_peak`, requires
+    /// `cfg.window_ms`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn size_for_failures(
+        &self,
+        w: &WorkloadSpec,
+        gpu: &GpuProfile,
+        slo_ms: f64,
+        k: u32,
+        max_gpus: u32,
+        cfg: &DesConfig,
+        outage: &OutageSpec,
+    ) -> Option<(u32, DesResult)> {
+        assert!(
+            cfg.window_ms.is_some(),
+            "size_for_failures requires DesConfig::window_ms"
+        );
+        let ctx = w.cdf.max_len();
+        let hist = WorkloadHist::from_cdf(&w.cdf, w.input_fraction);
+        let peak_rps = match &w.arrivals {
+            ArrivalSpec::Nhpp { profile_rps, .. } => profile_rps
+                .iter()
+                .map(|&(_, r)| r)
+                .fold(w.lambda_rps, f64::max),
+            _ => w.lambda_rps,
+        };
+        let start = n_min_for_slice(&hist, 0.0, ctx, peak_rps / 1000.0, gpu,
+                                    ctx)
+            .unwrap_or(1);
+        let script = outage.script(0, k as usize);
+        for n in start..=max_gpus {
+            let pools = [SimPool {
+                gpu: gpu.clone(),
+                n_gpus: n as usize,
+                ctx_budget: ctx,
+                batch_cap: None,
+            }];
+            let mut r = self.simulate_faulted(
+                w, &pools, &RoutingPolicy::Random { n_pools: 1 }, cfg,
+                Some(&script),
             );
             if r.meets_slo_in_every_window(slo_ms) {
                 return Some((n, r));
@@ -611,6 +696,69 @@ mod tests {
         assert!(r.meets_slo_in_every_window(500.0));
         let ws = r.windows.as_ref().expect("windowed run");
         assert!(ws.n_windows() >= 4);
+    }
+
+    #[test]
+    fn size_for_failures_zero_matches_size_to_peak() {
+        let e = EvalEngine::standard();
+        let w = azure()
+            .with_nhpp(vec![(0.0, 40.0), (10_000.0, 200.0)], 20_000.0);
+        let gpu = e.catalog.get("H100").unwrap().clone();
+        let cfg = DesConfig {
+            n_requests: 4_000,
+            window_ms: Some(5_000.0),
+            ..Default::default()
+        };
+        let outage = OutageSpec {
+            fail_at_ms: 10_000.0,
+            mttr_ms: 10_000.0,
+            warm_ms: 2_000.0,
+            warm_factor: 2.0,
+        };
+        let (n0, mut r0) =
+            e.size_to_peak(&w, &gpu, 500.0, 128, &cfg).expect("feasible");
+        let (nk, mut rk) = e
+            .size_for_failures(&w, &gpu, 500.0, 0, 128, &cfg, &outage)
+            .expect("feasible");
+        // k = 0 compiles to an empty script: same floor, same walk,
+        // bit-identical winner.
+        assert_eq!(nk, n0);
+        assert_eq!(rk.overall.p99_ttft(), r0.overall.p99_ttft());
+        assert_eq!(rk.n_events, r0.n_events);
+    }
+
+    #[test]
+    fn size_for_failures_is_monotone_in_k() {
+        // A whole-run outage (failure at t = 0, recovery beyond the
+        // horizon) makes k permanently-down GPUs *exactly* a fleet of
+        // n - k: the least-loaded scan skips the down tail, so the
+        // admission sequence over the alive prefix is bit-identical.
+        // Hence size(k) == size(0) + k, the strongest monotonicity.
+        let e = EvalEngine::standard();
+        let w = azure(); // stationary λ = 100
+        let gpu = e.catalog.get("H100").unwrap().clone();
+        let cfg = DesConfig {
+            n_requests: 3_000,
+            window_ms: Some(5_000.0),
+            ..Default::default()
+        };
+        let outage = OutageSpec {
+            fail_at_ms: 0.0,
+            mttr_ms: 600_000.0,
+            warm_ms: 0.0,
+            warm_factor: 1.0,
+        };
+        let n0 = e
+            .size_for_failures(&w, &gpu, 500.0, 0, 128, &cfg, &outage)
+            .expect("feasible")
+            .0;
+        for k in [1u32, 2] {
+            let nk = e
+                .size_for_failures(&w, &gpu, 500.0, k, 128, &cfg, &outage)
+                .expect("feasible")
+                .0;
+            assert_eq!(nk, n0 + k, "k = {k}");
+        }
     }
 
     #[test]

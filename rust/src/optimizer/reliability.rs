@@ -6,6 +6,13 @@
 //! production. The pre-computed constants come from published failure data
 //! (Kokolis et al. 2024: 6.50 failures / 1000 node-days on RSC-1;
 //! Cui et al. 2025: ~5% H100 overprovisioning recommendation).
+//!
+//! Eq. 6 restores *long-run average* capacity; it says nothing about
+//! SLO attainment *during* an outage. The empirical counterpart is
+//! [`crate::optimizer::engine::EvalEngine::size_for_failures`], which
+//! sizes the fleet so every SLO window holds while k GPUs are down on a
+//! deterministic fault script — the `n_plus_k` scenario contrasts the
+//! two on the diurnal trace.
 
 /// Node availability model.
 #[derive(Debug, Clone, Copy, PartialEq)]

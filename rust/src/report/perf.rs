@@ -27,8 +27,10 @@ use std::time::Instant;
 
 use crate::des::engine::{CapWindow, DesConfig, SimPool, Simulator};
 use crate::des::metrics::MetricsMode;
-use crate::des::reference::run_reference;
-use crate::des::shard::{run_sharded, StreamStats, DEFAULT_CHUNK_SIZE};
+use crate::des::input::SimInput;
+use crate::des::reference::run_reference_input;
+use crate::des::shard::{run_sharded_input, StreamStats,
+                        DEFAULT_CHUNK_SIZE};
 use crate::gpu::catalog::GpuCatalog;
 use crate::router::RoutingPolicy;
 use crate::util::json::Json;
@@ -232,11 +234,10 @@ pub fn run_bench(opts: &BenchOpts) -> Vec<BenchRow> {
         if opts.engine == BenchEngine::Both {
             // Untimed exact-mode cross-check: both engines, same stream,
             // must agree bit-for-bit before either timing is trusted.
-            let mut prod =
-                Simulator::run_stream(&case.pools, &case.router, &case.cfg,
-                                      &stream);
-            let mut refr =
-                run_reference(&case.pools, &case.router, &case.cfg, &stream);
+            let input = SimInput::stream(&case.pools, &case.router,
+                                         &case.cfg, &stream);
+            let mut prod = Simulator::run_input(&input).unwrap();
+            let mut refr = run_reference_input(&input).unwrap();
             row.events = prod.n_events;
             row.bit_identical = Some(
                 prod.overall.p99_ttft() == refr.overall.p99_ttft()
@@ -252,9 +253,10 @@ pub fn run_bench(opts: &BenchOpts) -> Vec<BenchRow> {
                 metrics: MetricsMode::Streaming,
                 ..case.cfg.clone()
             };
+            let input = SimInput::stream(&case.pools, &case.router, &cfg,
+                                         &stream);
             let (wall, events) = time_min(opts.samples, || {
-                let r = Simulator::run_stream(&case.pools, &case.router,
-                                              &cfg, &stream);
+                let r = Simulator::run_input(&input).unwrap();
                 std::hint::black_box(r.n_events)
             });
             row.events = events;
@@ -264,9 +266,10 @@ pub fn run_bench(opts: &BenchOpts) -> Vec<BenchRow> {
 
         if opts.engine.times_reference() {
             // Seed baseline: all-events heap + exact sample vectors.
+            let input = SimInput::stream(&case.pools, &case.router,
+                                         &case.cfg, &stream);
             let (wall, events) = time_min(opts.samples, || {
-                let r = run_reference(&case.pools, &case.router, &case.cfg,
-                                      &stream);
+                let r = run_reference_input(&input).unwrap();
                 std::hint::black_box(r.n_events)
             });
             row.events = events;
@@ -354,12 +357,14 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> (BenchRow, StreamStats) {
         let stream = case
             .workload
             .sample_requests(cfg.n_requests, cfg.seed);
-        let mut serial = Simulator::run_stream(&case.pools, &case.router,
-                                               &cfg, &stream);
-        let (mut sharded, _) = run_sharded(
-            &case.pools, &case.router, &cfg, &case.workload, opts.n_shards,
-            opts.chunk_size,
-        );
+        let serial_in = SimInput::stream(&case.pools, &case.router, &cfg,
+                                         &stream);
+        let mut serial = Simulator::run_input(&serial_in).unwrap();
+        let gen_in = SimInput::generated(&case.pools, &case.router, &cfg,
+                                         &case.workload);
+        let (mut sharded, _) =
+            run_sharded_input(&gen_in, opts.n_shards, opts.chunk_size)
+                .unwrap();
         identical &= serial.overall.p99_ttft() == sharded.overall.p99_ttft()
             && serial.overall.count == sharded.overall.count
             && serial.n_events == sharded.n_events
@@ -372,11 +377,11 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> (BenchRow, StreamStats) {
         metrics: MetricsMode::Streaming,
         ..case.cfg.clone()
     };
+    let input = SimInput::generated(&case.pools, &case.router, &cfg,
+                                    &case.workload);
     let t0 = Instant::now();
-    let (r, stats) = run_sharded(
-        &case.pools, &case.router, &cfg, &case.workload, opts.n_shards,
-        opts.chunk_size,
-    );
+    let (r, stats) =
+        run_sharded_input(&input, opts.n_shards, opts.chunk_size).unwrap();
     let wall = t0.elapsed().as_secs_f64() * 1e3;
     let events = std::hint::black_box(r.n_events);
     let row = BenchRow {

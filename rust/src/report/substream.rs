@@ -88,18 +88,18 @@ pub fn correlated_requests(
 }
 
 /// Replay an explicit request stream through the DES core (no workload
-/// spec or stream copy needed — `run_stream` borrows everything).
+/// spec or stream copy needed — `SimInput` borrows everything).
 fn simulate_stream(
     reqs: &[SampledRequest],
     pools: Vec<SimPool>,
     b_short: f64,
 ) -> DesResult {
-    Simulator::run_stream(
-        &pools,
-        &RoutingPolicy::Length { b_short },
-        &DesConfig { n_requests: reqs.len(), ..Default::default() },
-        reqs,
-    )
+    let router = RoutingPolicy::Length { b_short };
+    let cfg = DesConfig { n_requests: reqs.len(), ..Default::default() };
+    let input = crate::des::input::SimInput::stream(
+        &pools, &router, &cfg, reqs,
+    );
+    Simulator::run_input(&input).unwrap()
 }
 
 /// Run the full §5 check on a two-pool fleet.

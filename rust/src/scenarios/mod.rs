@@ -19,6 +19,7 @@
 pub mod common;
 pub mod diurnal;
 pub mod multi_model;
+pub mod n_plus_k;
 pub mod puzzle1_split;
 pub mod puzzle2_agent;
 pub mod puzzle3_gpu_type;
@@ -122,6 +123,7 @@ pub fn registry() -> Vec<Box<dyn Scenario>> {
         Box::new(puzzle8_gridflex::GridFlexibility),
         Box::new(multi_model::MultiModelFleet),
         Box::new(diurnal::Diurnal),
+        Box::new(n_plus_k::NPlusK),
     ]
 }
 
@@ -165,20 +167,22 @@ mod tests {
     #[test]
     fn registry_covers_all_scenarios_with_unique_keys() {
         let reg = registry();
-        assert_eq!(reg.len(), 10);
+        assert_eq!(reg.len(), 11);
         let mut ids: Vec<&str> = reg.iter().map(|s| s.id()).collect();
         let mut names: Vec<&str> = reg.iter().map(|s| s.name()).collect();
         ids.sort();
         ids.dedup();
         names.sort();
         names.dedup();
-        assert_eq!(ids.len(), 10, "duplicate scenario ids");
-        assert_eq!(names.len(), 10, "duplicate scenario names");
+        assert_eq!(ids.len(), 11, "duplicate scenario ids");
+        assert_eq!(names.len(), 11, "duplicate scenario names");
         for n in 1..=8 {
             assert!(find(&format!("puzzle{n}")).is_some());
         }
         assert!(find("diurnal").is_some());
         assert_eq!(find("size-to-peak").unwrap().id(), "diurnal");
+        assert!(find("n_plus_k").is_some());
+        assert_eq!(find("n-plus-k").unwrap().id(), "n_plus_k");
     }
 
     #[test]

@@ -11,9 +11,17 @@
 //! and both metrics modes (exact vectors and the streaming sketch). A
 //! fixed seed therefore pins exact P99 TTFT values without golden files.
 
+// This suite deliberately keeps calling the deprecated `run_stream` /
+// `run_reference` wrappers: they are part of the public API until the
+// next major bump, and the regression oracle must keep proving they
+// match the `SimInput`-based entry points bit for bit.
+#![allow(deprecated)]
+
 use fleet_sim::des::engine::{CapWindow, DesConfig, SimPool, Simulator};
+use fleet_sim::des::faults::{FaultScript, GpuFailure, Straggler};
+use fleet_sim::des::input::SimInput;
 use fleet_sim::des::metrics::{DesResult, MetricsMode};
-use fleet_sim::des::reference::run_reference;
+use fleet_sim::des::reference::{run_reference, run_reference_input};
 use fleet_sim::router::RoutingPolicy;
 use fleet_sim::workload::spec::{BuiltinTrace, WorkloadSpec};
 
@@ -310,6 +318,66 @@ fn overload_censoring_is_fixed_and_pinned_against_reference() {
             "attainment {att} still censored");
     // The dead pool itself reports NaN attainment, not a vacuous 100%.
     assert!(prod.per_pool[1].stats.ttft.fraction_le(500.0).is_nan());
+}
+
+#[test]
+fn fast_path_matches_reference_under_fault_scripts() {
+    // Fail-stop outage with a post-recovery cold start on the long pool,
+    // plus a straggler on the short pool, over a diurnal NHPP stream
+    // with windowed stats: the production engine must track the
+    // reference bit for bit through down-instance skipping, slowdown
+    // inflation, and the recovery Drain, in both metrics modes.
+    let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 120.0)
+        .with_nhpp(vec![(0.0, 40.0), (10_000.0, 200.0)], 20_000.0);
+    let pools = vec![
+        SimPool { gpu: gpu("A100"), n_gpus: 5, ctx_budget: 4096.0,
+                  batch_cap: None },
+        SimPool { gpu: gpu("A100"), n_gpus: 5, ctx_budget: 8192.0,
+                  batch_cap: None },
+    ];
+    let router = RoutingPolicy::Length { b_short: 4096.0 };
+    let script = FaultScript {
+        failures: vec![GpuFailure {
+            pool: 1,
+            n_gpus: 2,
+            start_ms: 10_000.0,
+            recover_ms: 18_000.0,
+            warm_ms: 3_000.0,
+            warm_factor: 2.0,
+        }],
+        stragglers: vec![Straggler {
+            pool: 0,
+            n_gpus: 1,
+            start_ms: 0.0,
+            end_ms: 15_000.0,
+            factor: 1.5,
+        }],
+    };
+    let base = DesConfig { n_requests: 4_000, seed: 13,
+                           window_ms: Some(5_000.0), ..Default::default() };
+    let sampled = w.sample_requests(base.n_requests, base.seed);
+    for mode in [MetricsMode::Exact, MetricsMode::Streaming] {
+        let cfg = DesConfig { metrics: mode, ..base.clone() };
+        let input = SimInput::stream(&pools, &router, &cfg, &sampled)
+            .with_faults(&script);
+        let fast = summarize(Simulator::run_input(&input).unwrap());
+        let reference = summarize(run_reference_input(&input).unwrap());
+        assert_eq!(
+            fast, reference,
+            "faulted run [{mode:?}]: production engine diverged from \
+             reference"
+        );
+        assert!(fast.overall_p99_ttft > 0.0, "[{mode:?}]");
+    }
+    // And the script really changed the run (the parity check bites).
+    let faulted_in = SimInput::stream(&pools, &router, &base, &sampled)
+        .with_faults(&script);
+    let clean_in = SimInput::stream(&pools, &router, &base, &sampled);
+    assert_ne!(
+        summarize(Simulator::run_input(&faulted_in).unwrap()),
+        summarize(Simulator::run_input(&clean_in).unwrap()),
+        "fault script was a no-op"
+    );
 }
 
 #[test]

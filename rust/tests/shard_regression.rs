@@ -15,9 +15,18 @@
 //! matrix); any value is also exercised against 1 and 2 because the
 //! executor clamps shards to the pool count.
 
+// This suite deliberately keeps calling the deprecated `run_stream` /
+// `run_sharded` / `run_streamed` wrappers: they stay public until the
+// next major bump, and the regression oracle must keep proving they
+// match the `SimInput`-based entry points bit for bit.
+#![allow(deprecated)]
+
 use fleet_sim::des::engine::{CapWindow, DesConfig, SimPool, Simulator};
+use fleet_sim::des::faults::{FaultScript, GpuFailure, Straggler};
+use fleet_sim::des::input::SimInput;
 use fleet_sim::des::metrics::{DesResult, MetricsMode};
-use fleet_sim::des::shard::{run_sharded, run_streamed};
+use fleet_sim::des::shard::{run_sharded, run_sharded_input, run_streamed,
+                            run_streamed_input};
 use fleet_sim::router::RoutingPolicy;
 use fleet_sim::workload::spec::{BuiltinTrace, WorkloadSpec};
 
@@ -259,6 +268,126 @@ fn sharded_matches_serial_with_dead_pool_censoring() {
     let (r, _) = run_sharded(&pools, &router, &cfg, &w, 2, 997);
     assert!(r.n_unserved > 0, "expected a censored backlog");
     assert!(r.max_unserved_wait_ms > 0.0);
+}
+
+/// Assert a fault-scripted run is bit-identical across the serial
+/// engine, the single-shard streamed executor, and every shard count —
+/// from both arrival sources (borrowed stream and generator) and in
+/// both metrics modes.
+fn assert_faulted_sharded_matches(
+    w: &WorkloadSpec,
+    pools: Vec<SimPool>,
+    router: RoutingPolicy,
+    cfg: DesConfig,
+    script: &FaultScript,
+    label: &str,
+) {
+    let sampled = w.sample_requests(cfg.n_requests, cfg.seed);
+    for mode in [MetricsMode::Exact, MetricsMode::Streaming] {
+        let cfg = DesConfig { metrics: mode, ..cfg.clone() };
+        let stream_in = SimInput::stream(&pools, &router, &cfg, &sampled)
+            .with_faults(script);
+        let gen_in = SimInput::generated(&pools, &router, &cfg, w)
+            .with_faults(script);
+        let serial = summarize(Simulator::run_input(&stream_in).unwrap());
+        let (r, _) = run_streamed_input(&gen_in, 1_024).unwrap();
+        assert_eq!(
+            summarize(r), serial,
+            "{label} [{mode:?}]: streamed generator run diverged"
+        );
+        for shards in shard_counts() {
+            let (r, _) = run_sharded_input(&gen_in, shards, 997).unwrap();
+            assert_eq!(
+                summarize(r), serial,
+                "{label} [{mode:?} shards={shards}]: faulted sharded run \
+                 diverged from serial (generator source)"
+            );
+            let (r, _) = run_sharded_input(&stream_in, shards, 997)
+                .unwrap();
+            assert_eq!(
+                summarize(r), serial,
+                "{label} [{mode:?} shards={shards}]: faulted sharded run \
+                 diverged from serial (stream source)"
+            );
+        }
+    }
+}
+
+#[test]
+fn faulted_mid_peak_failure_is_bit_identical_across_shards() {
+    // Two GPUs on the long pool fail through the diurnal peak; windowed
+    // stats on. Every executor must agree on the degraded windows.
+    let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 120.0)
+        .with_nhpp(vec![(0.0, 40.0), (10_000.0, 200.0)], 20_000.0);
+    let pools = vec![
+        SimPool { gpu: gpu("A100"), n_gpus: 5, ctx_budget: 4096.0,
+                  batch_cap: None },
+        SimPool { gpu: gpu("A100"), n_gpus: 5, ctx_budget: 8192.0,
+                  batch_cap: None },
+    ];
+    let script = FaultScript {
+        failures: vec![GpuFailure {
+            pool: 1,
+            n_gpus: 2,
+            start_ms: 10_000.0,
+            recover_ms: 18_000.0,
+            warm_ms: 0.0,
+            warm_factor: 1.0,
+        }],
+        stragglers: vec![],
+    };
+    assert_faulted_sharded_matches(
+        &w, pools, RoutingPolicy::Length { b_short: 4096.0 },
+        DesConfig { n_requests: 4_000, seed: 19,
+                    window_ms: Some(5_000.0), ..Default::default() },
+        &script, "mid-peak failure",
+    );
+}
+
+#[test]
+fn faulted_straggler_and_cold_start_is_bit_identical_across_shards() {
+    // A straggler on the short pool overlapping a failure whose
+    // recovery carries a cold-start inflation — the multiplicative
+    // slowdown path and the recovery Drain, across every shard count.
+    let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 100.0);
+    let pools = vec![
+        SimPool { gpu: gpu("H100"), n_gpus: 3, ctx_budget: 4096.0,
+                  batch_cap: None },
+        SimPool { gpu: gpu("H100"), n_gpus: 3, ctx_budget: 8192.0,
+                  batch_cap: None },
+    ];
+    let script = FaultScript {
+        failures: vec![GpuFailure {
+            pool: 0,
+            n_gpus: 1,
+            start_ms: 5_000.0,
+            recover_ms: 20_000.0,
+            warm_ms: 3_000.0,
+            warm_factor: 2.5,
+        }],
+        stragglers: vec![Straggler {
+            pool: 1,
+            n_gpus: 2,
+            start_ms: 10_000.0,
+            end_ms: 30_000.0,
+            factor: 1.7,
+        }],
+    };
+    let cfg = DesConfig { n_requests: 3_000, seed: 23,
+                          ..Default::default() };
+    assert_faulted_sharded_matches(
+        &w, pools.clone(), RoutingPolicy::Length { b_short: 4096.0 },
+        cfg.clone(), &script, "straggler + cold start",
+    );
+    // The script is not a no-op: faulted and clean runs differ.
+    let router = RoutingPolicy::Length { b_short: 4096.0 };
+    let clean_in = SimInput::generated(&pools, &router, &cfg, &w);
+    let (clean, _) = run_sharded_input(&clean_in, 2, 997).unwrap();
+    let faulted_in = SimInput::generated(&pools, &router, &cfg, &w)
+        .with_faults(&script);
+    let (faulted, _) = run_sharded_input(&faulted_in, 2, 997).unwrap();
+    assert_ne!(summarize(clean), summarize(faulted),
+               "fault script was a no-op");
 }
 
 #[test]

@@ -4,6 +4,7 @@
 //! ~1% bin width on every workload the planner ships.
 
 use fleet_sim::des::engine::{DesConfig, SimPool, Simulator};
+use fleet_sim::des::input::SimInput;
 use fleet_sim::des::metrics::MetricsMode;
 use fleet_sim::gpu::catalog::GpuCatalog;
 use fleet_sim::router::RoutingPolicy;
@@ -62,11 +63,16 @@ fn windowed_stats_parity_between_exact_and_streaming() {
         ..Default::default()
     };
     let sampled = w.sample_requests(base.n_requests, base.seed);
-    let mut exact = Simulator::run_stream(&pools, &router, &base, &sampled);
+    let mut exact = Simulator::run_input(&SimInput::stream(
+        &pools, &router, &base, &sampled,
+    ))
+    .unwrap();
     let stream_cfg =
         DesConfig { metrics: MetricsMode::Streaming, ..base };
-    let mut sketch =
-        Simulator::run_stream(&pools, &router, &stream_cfg, &sampled);
+    let mut sketch = Simulator::run_input(&SimInput::stream(
+        &pools, &router, &stream_cfg, &sampled,
+    ))
+    .unwrap();
     let we = exact.windows.as_mut().expect("exact windows");
     let ws = sketch.windows.as_mut().expect("streaming windows");
     assert_eq!(we.n_windows(), ws.n_windows());
@@ -111,12 +117,16 @@ fn sketch_attainment_matches_exact_on_des_runs() {
         let base = DesConfig { n_requests: 6_000, seed: 3,
                                ..Default::default() };
         let sampled = w.sample_requests(base.n_requests, base.seed);
-        let mut exact = Simulator::run_stream(&pools, &router, &base,
-                                              &sampled);
+        let mut exact = Simulator::run_input(&SimInput::stream(
+            &pools, &router, &base, &sampled,
+        ))
+        .unwrap();
         let stream_cfg = DesConfig { metrics: MetricsMode::Streaming,
                                      ..base };
-        let mut sketch = Simulator::run_stream(&pools, &router, &stream_cfg,
-                                               &sampled);
+        let mut sketch = Simulator::run_input(&SimInput::stream(
+            &pools, &router, &stream_cfg, &sampled,
+        ))
+        .unwrap();
         let (e, s) = (exact.overall.p99_ttft(), sketch.overall.p99_ttft());
         assert!((s / e - 1.0).abs() < 0.02,
                 "{}: exact P99 {e} sketch P99 {s}", w.name);
