@@ -47,6 +47,7 @@ use crate::gpu::profile::GpuProfile;
 use crate::router::{RouteRequest, RoutingPolicy};
 use crate::workload::rng::Pcg64;
 use crate::workload::spec::{SampledRequest, WorkloadSpec};
+use crate::workload::streams;
 
 /// Pool construction spec for the simulator.
 #[derive(Debug, Clone)]
@@ -254,10 +255,11 @@ impl Simulator {
         }
     }
 
-    /// Run on an explicit, time-ordered request stream (used by the
-    /// sub-stream Poisson check, §5, to inject length-correlated
-    /// arrivals). The stream is borrowed — replaying one cached sample
-    /// across many candidates copies nothing.
+    /// Run on an explicit, time-ordered request stream. The stream is
+    /// borrowed — replaying one cached sample across many candidates
+    /// copies nothing. Panics on invalid input exactly as the
+    /// pre-`SimInput` API did.
+    #[deprecated(note = "build a SimInput and call Simulator::run_input")]
     pub fn run_with_requests(&self, sampled: &[SampledRequest]) -> DesResult {
         let input =
             SimInput::stream(&self.pools, &self.router, &self.config,
@@ -324,7 +326,7 @@ fn run_core(
         debug_assert!(sampled
             .windows(2)
             .all(|w| w[0].arrival_ms <= w[1].arrival_ms));
-        let mut route_rng = Pcg64::new(config.seed, 3);
+        let mut route_rng = Pcg64::new(config.seed, streams::ROUTING);
 
         let mut pools: Vec<DesPool> = pool_specs
             .iter()

@@ -43,6 +43,7 @@
 use crate::des::engine::SimPool;
 use crate::des::input::ConfigError;
 use crate::workload::rng::Pcg64;
+use crate::workload::streams;
 
 /// Salt mixed into the user seed for [`FaultScript::generate`] so the
 /// fault stream never correlates with the arrival/length/routing
@@ -329,7 +330,10 @@ impl FaultScript {
         horizon_ms: f64,
         seed: u64,
     ) -> FaultScript {
-        let mut rng = Pcg64::new(seed.wrapping_add(FAULT_SEED_SALT), 1);
+        let mut rng = Pcg64::new(
+            seed.wrapping_add(FAULT_SEED_SALT),
+            streams::FAULT_SCRIPT,
+        );
         let mut script = FaultScript::default();
         for (p, pool) in pools.iter().enumerate() {
             if pool.n_gpus == 0 || model.failures_per_gpu_day <= 0.0 {

@@ -25,6 +25,7 @@ use crate::des::pool::DesPool;
 use crate::router::{RouteRequest, RoutingPolicy};
 use crate::workload::rng::Pcg64;
 use crate::workload::spec::SampledRequest;
+use crate::workload::streams;
 
 struct RefReq {
     arrival_ms: f64,
@@ -164,7 +165,7 @@ fn run_core(
     faults: Option<&CompiledFaults>,
 ) -> DesResult {
     let n = sampled.len();
-    let mut route_rng = Pcg64::new(config.seed, 3);
+    let mut route_rng = Pcg64::new(config.seed, streams::ROUTING);
     let mut pools: Vec<DesPool> = pool_specs
         .iter()
         .map(|p| {

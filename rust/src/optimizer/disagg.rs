@@ -26,6 +26,7 @@ use crate::queueing::mgc::{analyze_pool, PoolSpec, RHO_MAX, WorkloadHist};
 use crate::util::stats::Samples;
 use crate::workload::rng::Pcg64;
 use crate::workload::spec::WorkloadSpec;
+use crate::workload::streams;
 
 /// KV-transfer TTFT multiplier (paper Table 8: BETA_TTFT = 1.80).
 pub const BETA_TTFT: f64 = 1.80;
@@ -298,7 +299,7 @@ pub fn simulate_disagg(
     let mut e2e = Samples::with_capacity(n_requests);
     let mut occ_accum = 0.0;
     let mut occ_last = 0.0;
-    let mut _rng = Pcg64::new(seed, 9);
+    let mut _rng = Pcg64::new(seed, streams::DISAGG_SIM);
 
     // Event encoding: pool 0 = prefill worker done (server freed), pool 2
     // = KV transfer landed (decode admission), pool 1 = decode done. The

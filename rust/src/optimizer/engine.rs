@@ -19,7 +19,7 @@
 //! Scenarios declare *what* to evaluate ([`SweepJob`]s); the engine owns
 //! *how*.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
 use crate::des::engine::{DesConfig, SimPool, Simulator};
@@ -58,7 +58,7 @@ impl Backend {
 /// Cache key for one sampled request stream (paper §3.1 Phase 2 steps
 /// 1–2): the workload fingerprint (CDF breakpoints, prompt fraction, λ)
 /// plus the stream's `(n_requests, seed)`.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 struct StreamKey {
     workload: u64,
     n: usize,
@@ -148,7 +148,10 @@ pub struct EvalEngine {
     /// Worker threads for parallel sweeps and Phase-2 verification.
     pub threads: usize,
     backend: Backend,
-    cache: Mutex<HashMap<StreamKey, Arc<Vec<SampledRequest>>>>,
+    // BTreeMap, not HashMap: nothing iterates the cache today, but the
+    // determinism lint (R1) bans hash-ordered containers in result
+    // paths outright so an innocent `.values()` can never creep in.
+    cache: Mutex<BTreeMap<StreamKey, Arc<Vec<SampledRequest>>>>,
 }
 
 impl Default for EvalEngine {
@@ -164,7 +167,7 @@ impl EvalEngine {
             catalog,
             threads: default_threads(),
             backend: Backend::Native(NativeSweep),
-            cache: Mutex::new(HashMap::new()),
+            cache: Mutex::new(BTreeMap::new()),
         }
     }
 
@@ -181,7 +184,7 @@ impl EvalEngine {
             catalog,
             threads: default_threads(),
             backend: Backend::Aot(sweep),
-            cache: Mutex::new(HashMap::new()),
+            cache: Mutex::new(BTreeMap::new()),
         }
     }
 

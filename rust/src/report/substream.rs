@@ -18,6 +18,7 @@ use crate::router::RoutingPolicy;
 use crate::util::stats::Samples;
 use crate::workload::rng::Pcg64;
 use crate::workload::spec::{SampledRequest, WorkloadSpec};
+use crate::workload::streams;
 
 /// Result of one approximation check.
 #[derive(Debug, Clone)]
@@ -60,7 +61,7 @@ pub fn correlated_requests(
     burst_quantile: f64,
     seed: u64,
 ) -> Vec<SampledRequest> {
-    let mut rng = Pcg64::new(seed, 11);
+    let mut rng = Pcg64::new(seed, streams::CORRELATED_BURST);
     let base_rate = w.lambda_per_ms();
     let mut t = 0.0;
     let mut out = Vec::with_capacity(n);

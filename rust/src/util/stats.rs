@@ -179,7 +179,10 @@ impl LogHistogram {
             *a += b;
         }
         self.n += other.n;
+        // detlint: ulp-ok -- mean/variance are documented as
+        // order-dependent in the last ULPs; quantiles stay exact
         self.sum += other.sum;
+        // detlint: ulp-ok -- same contract as `sum` above
         self.sum_sq += other.sum_sq;
         self.min = self.min.min(other.min);
         self.max = self.max.max(other.max);
@@ -492,8 +495,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "needs the full 20k-sample volume")]
     fn exponential_scv_close_to_one() {
-        // Deterministic inverse-CDF samples of Exp(1).
+        // Deterministic inverse-CDF samples of Exp(1). The 0.02
+        // tolerance needs the full tail; do not shrink n.
         let mut s = Samples::new();
         let n = 20000;
         for i in 0..n {
@@ -562,7 +567,9 @@ mod tests {
     fn streaming_percentiles_close_to_exact() {
         let mut exact = Samples::new();
         let mut sketch = Samples::streaming();
-        let n = 20000;
+        // The 2% bound is set by bin width, not sample count, so the
+        // miri run can use a smaller volume.
+        let n = if cfg!(miri) { 2000 } else { 20000 };
         for i in 0..n {
             // Heavy-tailed deterministic sample (Exp quantiles, scaled).
             let u = (i as f64 + 0.5) / n as f64;
@@ -602,7 +609,8 @@ mod tests {
             let mut whole = make(streaming);
             let mut left = make(streaming);
             let mut right = make(streaming);
-            for i in 0..5000 {
+            let n: usize = if cfg!(miri) { 500 } else { 5000 };
+            for i in 0..n {
                 let v = 0.37 * ((i * 7919) % 997) as f64;
                 whole.push(v);
                 // Interleave so neither part is a sorted prefix.

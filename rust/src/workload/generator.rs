@@ -11,9 +11,10 @@
 //! # Determinism: per-block RNG substreams
 //!
 //! Request indices are split into fixed blocks of [`GEN_BLOCK`]. Block
-//! `k` draws arrivals from `Pcg64::new(seed, 4 + 2k)` and token lengths
-//! from `Pcg64::new(seed, 5 + 2k)` (streams 1-3 are reserved by the
-//! simulator for the legacy whole-run arrival/length/routing streams).
+//! `k` draws arrivals from stream `4 + 2k` and token lengths from
+//! stream `5 + 2k` — see [`crate::workload::streams`] for the full
+//! allocation map (streams 1-3 are reserved by the simulator for the
+//! legacy whole-run arrival/length/routing streams).
 //! Consequences:
 //!
 //! * a request's random draws depend only on its global index, the seed,
@@ -35,16 +36,12 @@
 use crate::workload::arrivals::{rate_at, ArrivalProcess};
 use crate::workload::rng::Pcg64;
 use crate::workload::spec::{SampledRequest, WorkloadSpec};
+use crate::workload::streams;
 
 /// Requests per RNG block. Fixed by the determinism contract — changing
 /// it changes every sampled stream (it is *not* a tuning knob; the
 /// consumer-side chunk size is independent and free to vary).
 pub const GEN_BLOCK: usize = 8192;
-
-/// First PCG stream id used by block substreams; block `k` uses streams
-/// `BLOCK_STREAM_BASE + 2k` (arrivals) and `BLOCK_STREAM_BASE + 2k + 1`
-/// (lengths).
-const BLOCK_STREAM_BASE: u64 = 4;
 
 /// A resumable generator position: the next global request index plus
 /// the arrival clock carried into it. Only block-boundary checkpoints
@@ -143,8 +140,8 @@ impl RequestGenerator {
     }
 
     fn block_rngs(seed: u64, block: u64) -> (Pcg64, Pcg64) {
-        let base = BLOCK_STREAM_BASE + 2 * block;
-        (Pcg64::new(seed, base), Pcg64::new(seed, base + 1))
+        let (arr, len) = streams::block_streams(block);
+        (Pcg64::new(seed, arr), Pcg64::new(seed, len))
     }
 
     /// The current position. Resumable via [`RequestGenerator::resume`]

@@ -7,4 +7,5 @@ pub mod cdf;
 pub mod generator;
 pub mod rng;
 pub mod spec;
+pub mod streams;
 pub mod synth;

@@ -1,0 +1,99 @@
+//! Named registry of PCG64 stream ids.
+//!
+//! Every non-test `Pcg64::new(seed, stream)` in the simulator must
+//! take its stream id from this module; detlint rule R3 rejects bare
+//! integer literals. Centralizing the ids makes collisions visible in
+//! one place: two call sites sharing a `(seed, stream)` pair silently
+//! correlate their draws, which breaks the independence assumptions
+//! behind the generator/stream equivalence tests and the
+//! fault-injection determinism contract.
+//!
+//! Allocation map:
+//!
+//! | stream        | owner                                        |
+//! |---------------|----------------------------------------------|
+//! | 0             | free (tests use it ad hoc)                   |
+//! | 1             | fault-script sampling (salted seed)          |
+//! | 2             | reserved                                     |
+//! | 3             | DES routing (all three engines)              |
+//! | 4 + 2k        | generator block `k`: arrival gaps            |
+//! | 5 + 2k        | generator block `k`: token lengths           |
+//! | 9             | disaggregated-pool sizing simulation         |
+//! | 11            | correlated-burst substream diagnostic        |
+//! | 77            | synthetic length-distribution CDF sampling   |
+//!
+//! The generator block lattice occupies every id from 4 upward, so
+//! `DISAGG_SIM`, `CORRELATED_BURST`, and `SYNTH_CDF` numerically
+//! coincide with the length streams of blocks 2, 3, and 36. The ids
+//! are kept anyway for bit-compatibility with existing results, and
+//! the overlap is harmless today: none of those three paths feeds
+//! draws into the same statistical estimate as a generator block at
+//! the same seed. The hard invariant — checked by the tests below —
+//! is that the streams which *do* coexist inside one DES run
+//! (`ROUTING`, `FAULT_SCRIPT`, and the block lattice) never collide.
+
+/// Routing decisions for the production, reference, and sharded DES
+/// engines. All three must draw from the same stream so their
+/// per-request pool choices are bit-identical.
+pub const ROUTING: u64 = 3;
+
+/// Fault-script sampling. Paired with a salted seed
+/// (`seed.wrapping_add(FAULT_SEED_SALT)`) so fault timing never
+/// correlates with workload draws even where stream ids coincide.
+pub const FAULT_SCRIPT: u64 = 1;
+
+/// First stream of the generator block lattice; block `k` uses
+/// `BLOCK_BASE + 2k` (arrivals) and `BLOCK_BASE + 2k + 1` (lengths).
+pub const BLOCK_BASE: u64 = 4;
+
+/// Sampling a synthetic length distribution into an empirical CDF.
+pub const SYNTH_CDF: u64 = 77;
+
+/// Monte-Carlo sizing runs inside the disaggregated-pool optimizer.
+pub const DISAGG_SIM: u64 = 9;
+
+/// Correlated-burst generator in the substream diagnostic report.
+pub const CORRELATED_BURST: u64 = 11;
+
+/// Stream ids for generator block `k`: `(arrivals, lengths)`.
+pub fn block_streams(block: u64) -> (u64, u64) {
+    let base = BLOCK_BASE + 2 * block;
+    (base, base + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn within_run_streams_never_collide() {
+        // ROUTING and FAULT_SCRIPT share a run (and FAULT_SCRIPT
+        // additionally salts its seed) with the block lattice; they
+        // must sit strictly below BLOCK_BASE.
+        assert!(ROUTING < BLOCK_BASE);
+        assert!(FAULT_SCRIPT < BLOCK_BASE);
+        assert_ne!(ROUTING, FAULT_SCRIPT);
+    }
+
+    #[test]
+    fn block_lattice_shape() {
+        for k in 0..64 {
+            let (a, l) = block_streams(k);
+            assert_eq!(a, 4 + 2 * k);
+            assert_eq!(l, a + 1);
+        }
+        // Adjacent blocks tile the id space without gaps or overlap.
+        let (_, l0) = block_streams(0);
+        let (a1, _) = block_streams(1);
+        assert_eq!(a1, l0 + 1);
+    }
+
+    #[test]
+    fn legacy_ids_are_pinned() {
+        // These values are part of the bit-compatibility surface:
+        // changing any of them changes published results.
+        assert_eq!(SYNTH_CDF, 77);
+        assert_eq!(DISAGG_SIM, 9);
+        assert_eq!(CORRELATED_BURST, 11);
+    }
+}

@@ -4,6 +4,7 @@
 
 use crate::workload::cdf::EmpiricalCdf;
 use crate::workload::rng::Pcg64;
+use crate::workload::streams;
 
 /// A parametric length distribution.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -44,7 +45,7 @@ impl SynthLengths {
     /// Build an empirical CDF from `n` Monte-Carlo draws so the synthetic
     /// workload can flow through the same Phase-1 machinery as trace CDFs.
     pub fn to_cdf(&self, n: usize, seed: u64) -> anyhow::Result<EmpiricalCdf> {
-        let mut rng = Pcg64::new(seed, 77);
+        let mut rng = Pcg64::new(seed, streams::SYNTH_CDF);
         let mut draws: Vec<f64> =
             (0..n).map(|_| self.sample(&mut rng)).collect();
         draws.sort_by(|a, b| a.partial_cmp(b).unwrap());

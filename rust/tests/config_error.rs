@@ -1,0 +1,231 @@
+//! Table-driven coverage of every [`ConfigError`] variant, plus the
+//! panic-text contract of the deprecated pre-`SimInput` wrappers.
+//!
+//! Two things are pinned here:
+//!
+//! 1. every variant is reachable through the public validation paths
+//!    and renders the exact Display text callers match on, and
+//! 2. the `#[deprecated]` wrappers keep panicking with that same text
+//!    (they are public API until the next major bump; scripts grep
+//!    their panic messages).
+
+#![allow(deprecated)]
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use fleet_sim::des::engine::CapWindow;
+use fleet_sim::prelude::*;
+
+fn a100_pools(n: usize) -> Vec<SimPool> {
+    let gpu = GpuCatalog::standard().get("A100").unwrap().clone();
+    (0..n)
+        .map(|_| SimPool {
+            gpu: gpu.clone(),
+            n_gpus: 2,
+            ctx_budget: 4096.0,
+            batch_cap: None,
+        })
+        .collect()
+}
+
+fn two_pool_router() -> RoutingPolicy {
+    RoutingPolicy::Length { b_short: 4096.0 }
+}
+
+fn workload() -> WorkloadSpec {
+    WorkloadSpec::builtin(BuiltinTrace::Azure, 100.0)
+}
+
+/// Validate a stream-source input built from `config` against a
+/// healthy two-pool fleet, returning the error.
+fn config_err(config: &DesConfig) -> ConfigError {
+    let pools = a100_pools(2);
+    let router = two_pool_router();
+    let input = SimInput::stream(&pools, &router, config, &[]);
+    input.validate().expect_err("config must be rejected")
+}
+
+#[test]
+fn every_variant_renders_its_contract_text() {
+    let router_mismatch = {
+        let pools = a100_pools(1);
+        let router = two_pool_router();
+        let config = DesConfig::default();
+        let input = SimInput::stream(&pools, &router, &config, &[]);
+        input.validate().expect_err("1 pool for a 2-pool router")
+    };
+    let invalid_warmup = config_err(&DesConfig {
+        warmup_frac: 1.5,
+        ..Default::default()
+    });
+    let warmup_unsupported = {
+        let pools = a100_pools(2);
+        let router = two_pool_router();
+        let w = workload();
+        let config = DesConfig {
+            warmup_frac: 0.5,
+            ..Default::default()
+        };
+        let input = SimInput::generated(&pools, &router, &config, &w);
+        run_streamed_input(&input, 64)
+            .map(|_| ())
+            .expect_err("streaming must reject warmup")
+    };
+    let invalid_window = config_err(&DesConfig {
+        window_ms: Some(0.0),
+        ..Default::default()
+    });
+    let invalid_class_probs = config_err(&DesConfig {
+        class_probs: Some(vec![]),
+        ..Default::default()
+    });
+    let invalid_cap_window = config_err(&DesConfig {
+        cap_window: Some(CapWindow {
+            start_ms: 5.0,
+            end_ms: 1.0,
+            cap: 1,
+        }),
+        ..Default::default()
+    });
+    let invalid_faults = {
+        let pools = a100_pools(1);
+        let router = RoutingPolicy::Random { n_pools: 1 };
+        let config = DesConfig::default();
+        let script = FaultScript {
+            failures: vec![GpuFailure {
+                pool: 7,
+                n_gpus: 1,
+                start_ms: 0.0,
+                recover_ms: 1.0,
+                warm_ms: 0.0,
+                warm_factor: 1.0,
+            }],
+            stragglers: vec![],
+        };
+        let input = SimInput::stream(&pools, &router, &config, &[])
+            .with_faults(&script);
+        input.validate().expect_err("pool 7 of 1 must be rejected")
+    };
+
+    let table: Vec<(&str, ConfigError, &str)> = vec![
+        (
+            "RouterPoolMismatch",
+            router_mismatch,
+            "router expects 2 pools, got 1",
+        ),
+        (
+            "InvalidWarmup",
+            invalid_warmup,
+            "warmup_frac must be in [0, 1), got 1.5",
+        ),
+        (
+            "WarmupUnsupported",
+            warmup_unsupported,
+            // The load-bearing historical substring is
+            // "warmup_frac = 0"; the trailing value is also pinned.
+            "warmup_frac = 0",
+        ),
+        (
+            "InvalidWindow",
+            invalid_window,
+            "window_ms must be finite and > 0, got 0",
+        ),
+        (
+            "InvalidClassProbs",
+            invalid_class_probs,
+            "invalid class_probs: empty class distribution",
+        ),
+        (
+            "InvalidCapWindow",
+            invalid_cap_window,
+            "invalid cap_window: [5, 1) is not a valid time window",
+        ),
+        (
+            "InvalidFaults",
+            invalid_faults,
+            "invalid fault script: failure #0: pool 7 out of range \
+             (1 pools)",
+        ),
+    ];
+    for (variant, err, want) in &table {
+        let text = err.to_string();
+        assert!(
+            text.contains(want),
+            "{variant}: Display {text:?} must contain {want:?}"
+        );
+    }
+
+    // Variant identity, not just text: the matches below fail to
+    // compile if a variant is renamed and fail to run if validation
+    // starts returning a different variant for the same input.
+    assert!(matches!(
+        table[0].1,
+        ConfigError::RouterPoolMismatch { expected: 2, got: 1 }
+    ));
+    assert!(matches!(
+        table[1].1,
+        ConfigError::InvalidWarmup { warmup_frac } if warmup_frac == 1.5
+    ));
+    assert!(matches!(
+        table[2].1,
+        ConfigError::WarmupUnsupported { warmup_frac }
+            if warmup_frac == 0.5
+    ));
+    assert!(matches!(
+        table[3].1,
+        ConfigError::InvalidWindow { window_ms } if window_ms == 0.0
+    ));
+    assert!(matches!(table[4].1, ConfigError::InvalidClassProbs(_)));
+    assert!(matches!(table[5].1, ConfigError::InvalidCapWindow(_)));
+    assert!(matches!(table[6].1, ConfigError::InvalidFaults(_)));
+}
+
+/// The deprecated wrappers turn `Err(ConfigError)` into a panic whose
+/// payload is exactly the error's Display — callers that predate
+/// `SimInput` grep these strings out of crash logs.
+fn panic_text<F: FnOnce()>(f: F) -> String {
+    let payload = catch_unwind(AssertUnwindSafe(f))
+        .expect_err("wrapper must panic on invalid input");
+    if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else {
+        panic!("panic payload is not a string")
+    }
+}
+
+#[test]
+fn deprecated_wrappers_preserve_legacy_panic_texts() {
+    let pools = a100_pools(1);
+    let router = two_pool_router();
+    let config = DesConfig::default();
+
+    let text = panic_text(|| {
+        Simulator::run_stream(&pools, &router, &config, &[]);
+    });
+    assert_eq!(text, "router expects 2 pools, got 1");
+
+    let w = workload();
+    let warm = DesConfig {
+        warmup_frac: 0.25,
+        n_requests: 10,
+        ..Default::default()
+    };
+    let pools2 = a100_pools(2);
+    let text = panic_text(|| {
+        run_streamed(&pools2, &router, &warm, &w, 64);
+    });
+    assert!(
+        text.contains("warmup_frac = 0") && text.contains("got 0.25"),
+        "streaming wrapper panic drifted: {text:?}"
+    );
+
+    let text = panic_text(|| {
+        run_sharded(&pools2, &router, &warm, &w, 2, 64);
+    });
+    assert!(
+        text.contains("warmup_frac = 0"),
+        "sharded wrapper panic drifted: {text:?}"
+    );
+}

@@ -1,0 +1,68 @@
+//! Clean fixtures: every escape hatch detlint honors, in one file.
+//! This tree must lint clean; each construct here is a regression
+//! test against a false positive.
+
+use crate::des::input::SimInput;
+use crate::des::metrics::DesResult;
+
+// A justified allow pragma scopes the next code line.
+// detlint: allow(R1) -- build-only scratch map, drained into a sorted Vec
+use std::collections::HashMap;
+
+pub struct Merged {
+    pub sum: f64,
+    pub count: u64,
+    pub lat_ms: Vec<f64>,
+}
+
+impl Merged {
+    pub fn merge(&mut self, other: &Merged) {
+        // detlint: ulp-ok -- commutative to within 1 ulp, asserted by tests
+        self.sum += other.sum;
+        // Integer accumulation needs no pragma.
+        self.count += other.count;
+        // Turbofish integer reductions are recognized as exact.
+        let n = other.lat_ms.iter().map(|_| 1).sum::<usize>();
+        let _ = n;
+    }
+}
+
+pub fn scratch_index(keys: &[u64]) -> usize {
+    // detlint: allow(R1) -- len-only use, no iteration over the map
+    let mut m: HashMap<u64, usize> = HashMap::new();
+    for (i, &k) in keys.iter().enumerate() {
+        m.insert(k, i);
+    }
+    m.len()
+}
+
+// Deprecated wrappers are the one sanctioned non-SimInput entry shape.
+#[deprecated(since = "0.2.0", note = "use run_input")]
+pub fn run_legacy(
+    pools: &[SimPool],
+    router: &RoutingPolicy,
+    config: &DesConfig,
+) -> DesResult {
+    unimplemented!()
+}
+
+// The replacement shape: SimInput in the signature satisfies R5.
+pub fn run_input(input: &SimInput<'_>) -> DesResult {
+    unimplemented!()
+}
+
+#[cfg(test)]
+mod tests {
+    // Test code is out of scope for every rule: wall clocks, hash
+    // iteration, and literal streams are all legal here.
+    use std::collections::HashSet;
+    use std::time::Instant;
+
+    #[test]
+    fn scope_exclusion_smoke() {
+        let t0 = Instant::now();
+        let s: HashSet<u32> = (0..3).collect();
+        assert!(t0.elapsed().as_secs() < 60);
+        assert_eq!(s.len(), 3);
+    }
+}

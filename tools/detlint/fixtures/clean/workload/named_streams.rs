@@ -1,0 +1,13 @@
+//! Clean fixture: RNG constructed from named registry constants only.
+
+use crate::workload::rng::Pcg64;
+use crate::workload::streams;
+
+pub fn routing_rng(seed: u64) -> Pcg64 {
+    Pcg64::new(seed, streams::ROUTING)
+}
+
+pub fn block_rngs(seed: u64, block: u64) -> (Pcg64, Pcg64) {
+    let (arrivals, lengths) = streams::block_streams(block);
+    (Pcg64::new(seed, arrivals), Pcg64::new(seed, lengths))
+}

@@ -1,0 +1,9 @@
+//! Seeded P0 violation: a pragma with no justification text. The
+//! suppression is ignored, so the R1 finding fires as well.
+
+// detlint: allow(R1)
+use std::collections::HashSet;
+
+pub fn distinct(xs: &[u32]) -> usize {
+    xs.iter().collect::<HashSet<_>>().len()
+}

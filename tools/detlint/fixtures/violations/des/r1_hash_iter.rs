@@ -1,0 +1,24 @@
+//! Seeded R1 violation: hash-order iteration in a result path.
+
+use std::collections::HashMap;
+
+pub fn per_pool_totals(samples: &[(usize, f64)]) -> Vec<f64> {
+    let mut by_pool: HashMap<usize, f64> = HashMap::new();
+    for &(pool, v) in samples {
+        *by_pool.entry(pool).or_insert(0.0) += v;
+    }
+    // Iteration order is randomized per process: the returned vector
+    // (and anything accumulated from it) differs run to run.
+    by_pool.values().copied().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashSet;
+
+    #[test]
+    fn hash_containers_are_fine_in_tests() {
+        let s: HashSet<u32> = (0..4).collect();
+        assert_eq!(s.len(), 4);
+    }
+}

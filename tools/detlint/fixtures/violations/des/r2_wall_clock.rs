@@ -1,0 +1,9 @@
+//! Seeded R2 violation: wall-clock input to simulation state.
+
+use std::time::Instant;
+
+pub fn jittered_seed(base: u64) -> u64 {
+    let t0 = Instant::now();
+    // Wall-clock-derived state: two identical runs now diverge.
+    base ^ t0.elapsed().subsec_nanos() as u64
+}

@@ -1,0 +1,20 @@
+//! Seeded R4 violations: order-dependent float reductions in a merge
+//! path, with no `// detlint: ulp-ok` acknowledgment.
+
+pub struct Stats {
+    pub sum: f64,
+    pub count: u64,
+    pub values: Vec<f64>,
+}
+
+impl Stats {
+    pub fn merge(&mut self, other: &Stats) {
+        // Float accumulation: result depends on merge order.
+        self.sum += other.sum;
+        // Integer accumulation is exact and passes unflagged.
+        self.count += other.count;
+        // Untyped reduction over a float container.
+        let total = other.values.iter().sum();
+        self.values.push(total);
+    }
+}

@@ -1,0 +1,14 @@
+//! Seeded R5 violation: a new public DES entry point with the legacy
+//! drifted argument shape and no `#[deprecated]` escape hatch.
+
+use crate::des::engine::{DesConfig, SimPool};
+use crate::des::metrics::DesResult;
+use crate::router::RoutingPolicy;
+
+pub fn run_adhoc(
+    pools: &[SimPool],
+    router: &RoutingPolicy,
+    config: &DesConfig,
+) -> DesResult {
+    unimplemented!("entry points must take SimInput")
+}

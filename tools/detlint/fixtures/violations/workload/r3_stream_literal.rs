@@ -1,0 +1,10 @@
+//! Seeded R3 violation: a bare integer RNG stream id. Stream 3 is the
+//! routing stream — this sampler would silently consume the same
+//! substream as the DES router.
+
+use crate::workload::rng::Pcg64;
+
+pub fn sample_noise(seed: u64, n: usize) -> Vec<f64> {
+    let mut rng = Pcg64::new(seed, 3);
+    (0..n).map(|_| rng.uniform()).collect()
+}

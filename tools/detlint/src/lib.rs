@@ -1,0 +1,75 @@
+//! detlint — the repo's determinism/soundness static-analysis pass.
+//!
+//! The load-bearing guarantee of this codebase is bit-identical
+//! results across the production, reference, and sharded DES engines
+//! for any shard count. The regression suites enforce it dynamically;
+//! detlint enforces the *static* discipline that keeps new code from
+//! eroding it: no hash-order iteration in result paths (R1), no
+//! wall-clock/thread/env input to sim state (R2), RNG stream ids from
+//! a single named registry (R3), acknowledged float-accumulation
+//! order in merge paths (R4), and `SimInput`-only public DES entry
+//! points (R5).
+//!
+//! Run it over a tree:
+//!
+//! ```text
+//! cargo run -p detlint -- rust/src
+//! ```
+//!
+//! Exit status is 0 iff no findings. See `src/rules.rs` for the rule
+//! table and CONTRIBUTING.md for the full contract and pragma format.
+
+pub mod rules;
+pub mod scan;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+pub use rules::{Finding, Rule, RuleKind, RULES};
+
+/// Lint every `.rs` file under `root` (which should be a source root
+/// like `rust/src`, so that rule directory scopes such as `des/`
+/// resolve). Findings are sorted by file, then line.
+pub fn lint_tree(root: &Path) -> io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for f in &files {
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(f)?;
+        out.extend(lint_source(&rel, &src));
+    }
+    Ok(out)
+}
+
+/// Lint one already-loaded source file. `rel` is the path relative to
+/// the source root (it drives rule scoping).
+pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
+    let scanned = scan::scan(src);
+    rules::apply_rules(rel, &scanned)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if path.is_dir() {
+            // Never descend into build output or vendored code.
+            if name == "target" || name == "vendor" || name == ".git" {
+                continue;
+            }
+            collect_rs_files(&path, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

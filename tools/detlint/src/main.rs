@@ -1,0 +1,63 @@
+//! CLI for the determinism/soundness lint. See lib.rs.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use detlint::{lint_tree, RuleKind, RULES};
+
+const USAGE: &str = "\
+usage: detlint [--rules] <source-root>...
+
+Lints every .rs file under each source root (e.g. rust/src) against
+the repo determinism/soundness rules R1-R5. Exits nonzero iff any
+finding is reported. --rules prints the rule table and exits.";
+
+fn print_rules() {
+    for r in RULES.iter() {
+        println!("{} {} (scope: {})", r.id, r.name, r.dirs.join(" "));
+        println!("    {}", r.rationale);
+        if let RuleKind::ForbiddenTokens(toks) = &r.kind {
+            for (tok, _) in toks.iter() {
+                println!("    forbids: {tok}");
+            }
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--help" || a == "-h") {
+        println!("{USAGE}");
+        return ExitCode::SUCCESS;
+    }
+    if args.iter().any(|a| a == "--rules") {
+        print_rules();
+        return ExitCode::SUCCESS;
+    }
+    if args.is_empty() {
+        eprintln!("{USAGE}");
+        return ExitCode::from(2);
+    }
+    let mut n_findings = 0usize;
+    for root in &args {
+        match lint_tree(Path::new(root)) {
+            Ok(findings) => {
+                for f in &findings {
+                    println!("{root}/{f}");
+                }
+                n_findings += findings.len();
+            }
+            Err(e) => {
+                eprintln!("detlint: {root}: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    if n_findings == 0 {
+        println!("detlint: clean");
+        ExitCode::SUCCESS
+    } else {
+        println!("detlint: {n_findings} finding(s)");
+        ExitCode::FAILURE
+    }
+}

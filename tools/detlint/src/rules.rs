@@ -1,0 +1,600 @@
+//! The declarative rule table (R1–R5) and each rule's matcher.
+//!
+//! Every rule is scoped to a set of directory prefixes (relative to
+//! the scanned root, e.g. `des/`), runs over the blanked code view
+//! produced by [`crate::scan`], and can be suppressed line-by-line
+//! with a justified `// detlint: allow(<rule>)` pragma.
+//!
+//! These are token-level heuristics, not type-aware analysis (the
+//! offline build image has no crates.io access, so there is no `syn`);
+//! each rule documents exactly what it matches. The fixture trees
+//! under `fixtures/` pin both directions: `violations/` must trip
+//! every rule, `clean/` must not.
+
+use crate::scan::Scanned;
+
+/// One diagnostic.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Path as given to the walker (root-relative for trees).
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    /// Rule id (`R1`..`R5`, or `P0` for pragma problems).
+    pub rule: &'static str,
+    /// Short rule name, e.g. `hash-iter`.
+    pub name: &'static str,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{} {}] {}",
+            self.file, self.line, self.rule, self.name, self.msg
+        )
+    }
+}
+
+/// Matcher kinds. `ForbiddenTokens` carries `(token, advice)` pairs.
+pub enum RuleKind {
+    ForbiddenTokens(&'static [(&'static str, &'static str)]),
+    RngStreamLiteral,
+    FloatMergeAccumulation,
+    EntryPointSignature,
+}
+
+/// One row of the rule table.
+pub struct Rule {
+    pub id: &'static str,
+    pub name: &'static str,
+    /// Directory prefixes (relative to the scan root) the rule polices.
+    pub dirs: &'static [&'static str],
+    pub rationale: &'static str,
+    pub kind: RuleKind,
+}
+
+/// The determinism/soundness rule table. CONTRIBUTING.md documents
+/// each rule with its full rationale; the one-liners here feed
+/// `detlint --rules`.
+pub static RULES: [Rule; 5] = [
+    Rule {
+        id: "R1",
+        name: "hash-iter",
+        dirs: &["des/", "workload/", "router/", "optimizer/"],
+        rationale: "HashMap/HashSet iteration order is randomized per \
+                    process; simulation-result paths must use BTreeMap/\
+                    BTreeSet or sorted iteration",
+        kind: RuleKind::ForbiddenTokens(&[
+            ("HashMap", "use BTreeMap (or collect + sort) instead"),
+            ("HashSet", "use BTreeSet (or collect + sort) instead"),
+        ]),
+    },
+    Rule {
+        id: "R2",
+        name: "wall-clock",
+        dirs: &["des/", "workload/"],
+        rationale: "wall-clock time, thread identity, and the \
+                    environment must never influence simulation state",
+        kind: RuleKind::ForbiddenTokens(&[
+            ("Instant", "wall-clock reads are nondeterministic here"),
+            ("SystemTime", "wall-clock reads are nondeterministic here"),
+            ("thread::current", "thread identity must not leak into \
+                                 sim state"),
+            ("env::var", "environment reads must stay in the CLI layer"),
+            ("env::var_os", "environment reads must stay in the CLI \
+                             layer"),
+            ("env::vars", "environment reads must stay in the CLI \
+                           layer"),
+            ("env::args", "argv parsing must stay in the CLI layer"),
+            ("temp_dir", "filesystem paths must not reach sim state"),
+        ]),
+    },
+    Rule {
+        id: "R3",
+        name: "rng-stream",
+        dirs: &["des/", "workload/"],
+        rationale: "every Pcg64 stream id must come from the \
+                    workload::streams registry so stream indices \
+                    (4+2k/5+2k, ...) cannot silently collide",
+        kind: RuleKind::RngStreamLiteral,
+    },
+    Rule {
+        id: "R4",
+        name: "float-merge-order",
+        dirs: &["des/", "util/"],
+        rationale: "float accumulation is order-dependent; merge paths \
+                    must keep reductions commutative-exact or mark the \
+                    ULP-level exception",
+        kind: RuleKind::FloatMergeAccumulation,
+    },
+    Rule {
+        id: "R5",
+        name: "siminput-entry",
+        dirs: &["des/"],
+        rationale: "public DES entry points must take SimInput; the \
+                    #[deprecated] wrappers are the only exceptions",
+        kind: RuleKind::EntryPointSignature,
+    },
+];
+
+fn is_ident(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+/// Byte offsets of `tok` in `code` with identifier boundaries: the
+/// char before must not be an identifier char (a `:` is fine — that
+/// is just path qualification), the char after must not be one.
+fn token_offsets(code: &str, tok: &str) -> Vec<usize> {
+    let hay = code.as_bytes();
+    let nee = tok.as_bytes();
+    let mut out = Vec::new();
+    if nee.is_empty() || hay.len() < nee.len() {
+        return out;
+    }
+    for i in 0..=hay.len() - nee.len() {
+        if &hay[i..i + nee.len()] != nee {
+            continue;
+        }
+        if i > 0 && is_ident(hay[i - 1]) {
+            continue;
+        }
+        let after = i + nee.len();
+        if after < hay.len() && is_ident(hay[after]) {
+            continue;
+        }
+        out.push(i);
+    }
+    out
+}
+
+/// Does this root-relative path fall under the rule's directories?
+fn in_scope(rule: &Rule, rel: &str) -> bool {
+    rule.dirs.iter().any(|d| rel.starts_with(d))
+}
+
+/// Run every applicable rule over one scanned file.
+pub fn apply_rules(rel: &str, scanned: &Scanned) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for rule in RULES.iter() {
+        if !in_scope(rule, rel) {
+            continue;
+        }
+        let found = match &rule.kind {
+            RuleKind::ForbiddenTokens(toks) => {
+                forbidden_tokens(rel, scanned, rule, toks)
+            }
+            RuleKind::RngStreamLiteral => {
+                rng_stream_literal(rel, scanned, rule)
+            }
+            RuleKind::FloatMergeAccumulation => {
+                float_merge(rel, scanned, rule)
+            }
+            RuleKind::EntryPointSignature => {
+                entry_points(rel, scanned, rule)
+            }
+        };
+        out.extend(found);
+    }
+    // Malformed / unjustified pragmas are findings everywhere.
+    for p in &scanned.pragmas {
+        if !p.justified {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: p.line,
+                rule: "P0",
+                name: "pragma",
+                msg: "detlint pragma without a `-- justification` \
+                      (or with an unknown directive)"
+                    .to_string(),
+            });
+        }
+    }
+    out.sort_by(|a, b| a.line.cmp(&b.line).then(a.rule.cmp(b.rule)));
+    out
+}
+
+fn forbidden_tokens(
+    rel: &str,
+    scanned: &Scanned,
+    rule: &'static Rule,
+    toks: &[(&'static str, &'static str)],
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (tok, advice) in toks {
+        for off in token_offsets(&scanned.code, tok) {
+            let line = scanned.line_of(off);
+            if scanned.allows(rule.id, line) {
+                continue;
+            }
+            out.push(Finding {
+                file: rel.to_string(),
+                line,
+                rule: rule.id,
+                name: rule.name,
+                msg: format!("`{tok}` is forbidden here: {advice}"),
+            });
+        }
+    }
+    out
+}
+
+/// R3: `Pcg64::new(seed, <literal>)` — the stream id (second argument)
+/// must be a named constant from `workload::streams`, never a bare
+/// integer literal.
+fn rng_stream_literal(
+    rel: &str,
+    scanned: &Scanned,
+    rule: &'static Rule,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if rel.ends_with("workload/streams.rs") {
+        return out; // the registry itself
+    }
+    let code = &scanned.code;
+    for off in token_offsets(code, "Pcg64::new") {
+        let Some(args) = call_args(code, off + "Pcg64::new".len()) else {
+            continue;
+        };
+        if args.len() < 2 {
+            continue;
+        }
+        let stream = args[1].trim();
+        let literal =
+            stream.bytes().next().is_some_and(|b| b.is_ascii_digit());
+        if !literal {
+            continue;
+        }
+        let line = scanned.line_of(off);
+        if scanned.allows(rule.id, line) {
+            continue;
+        }
+        out.push(Finding {
+            file: rel.to_string(),
+            line,
+            rule: rule.id,
+            name: rule.name,
+            msg: format!(
+                "literal RNG stream id `{stream}`: use a named \
+                 constant from workload::streams"
+            ),
+        });
+    }
+    out
+}
+
+/// Split the argument list starting at the `(` at/after `start` into
+/// top-level comma-separated pieces.
+fn call_args(code: &str, start: usize) -> Option<Vec<String>> {
+    let bytes = code.as_bytes();
+    let mut i = start;
+    while i < bytes.len() && bytes[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    if i >= bytes.len() || bytes[i] != b'(' {
+        return None;
+    }
+    let mut depth = 0usize;
+    let mut args = Vec::new();
+    let mut cur = String::new();
+    loop {
+        if i >= bytes.len() {
+            return None;
+        }
+        let c = bytes[i] as char;
+        match c {
+            '(' | '[' | '{' => {
+                depth += 1;
+                if depth > 1 {
+                    cur.push(c);
+                }
+            }
+            ')' | ']' | '}' => {
+                depth -= 1;
+                if depth == 0 {
+                    args.push(cur);
+                    return Some(args);
+                }
+                cur.push(c);
+            }
+            ',' if depth == 1 => {
+                args.push(std::mem::take(&mut cur));
+            }
+            _ => {
+                if depth >= 1 {
+                    cur.push(c);
+                }
+            }
+        }
+        i += 1;
+    }
+}
+
+const INT_EVIDENCE: [&str; 17] = [
+    "::<usize", "::<isize", "::<u8", "::<u16", "::<u32", "::<u64",
+    "::<u128", "::<i8", "::<i16", "::<i32", "::<i64", "::<i128",
+    ": usize", ": u64", ": u32", ": u16", ": isize",
+];
+
+const FLOAT_HINTS: [&str; 12] = [
+    "sum", "mean", "m2", "sq", "_ms", "ttft", "wait", "e2e", "frac",
+    "util", "weight", "var",
+];
+
+/// R4: inside any `fn` whose name contains `merge`, flag
+/// `.sum()`-style reductions without integer-type evidence and `+=`
+/// onto float-suggestive accumulators, unless marked
+/// `// detlint: ulp-ok` (== `allow(R4)`).
+fn float_merge(
+    rel: &str,
+    scanned: &Scanned,
+    rule: &'static Rule,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let code = &scanned.code;
+    for (body_start, body_end) in merge_fn_bodies(code) {
+        let body = &code[body_start..body_end];
+        // `.sum()` reductions, statement by statement.
+        let mut stmt_start = 0usize;
+        for (i, b) in body.bytes().enumerate() {
+            let boundary = b == b';' || b == b'{' || b == b'}';
+            if !boundary && i + 1 != body.len() {
+                continue;
+            }
+            let stmt = &body[stmt_start..i];
+            stmt_start = i + 1;
+            let Some(sum_at) = stmt.find(".sum(").or_else(|| {
+                stmt.find(".sum::<")
+            }) else {
+                continue;
+            };
+            let norm = normalize_ws(stmt);
+            if INT_EVIDENCE.iter().any(|e| norm.contains(e)) {
+                continue;
+            }
+            let line = scanned.line_of(body_start + stmt_start - 1
+                - (stmt.len() - sum_at));
+            if scanned.allows(rule.id, line) {
+                continue;
+            }
+            out.push(Finding {
+                file: rel.to_string(),
+                line,
+                rule: rule.id,
+                name: rule.name,
+                msg: "float (or untyped) `.sum()` in a merge path: \
+                      accumulation order is not commutative-exact; \
+                      state the integer type, restructure, or mark \
+                      `// detlint: ulp-ok -- <why>`"
+                    .to_string(),
+            });
+        }
+        // `+=` onto float-suggestive accumulators.
+        let bb = body.as_bytes();
+        for i in 0..bb.len().saturating_sub(1) {
+            if &bb[i..i + 2] != b"+=" {
+                continue;
+            }
+            let Some(ident) = lhs_ident(body, i) else {
+                continue;
+            };
+            let lower = ident.to_ascii_lowercase();
+            if !FLOAT_HINTS.iter().any(|h| lower.contains(h)) {
+                continue;
+            }
+            let line = scanned.line_of(body_start + i);
+            if scanned.allows(rule.id, line) {
+                continue;
+            }
+            out.push(Finding {
+                file: rel.to_string(),
+                line,
+                rule: rule.id,
+                name: rule.name,
+                msg: format!(
+                    "`{ident} += ...` in a merge path looks like a \
+                     float accumulation (order-dependent); make it \
+                     commutative-exact or mark \
+                     `// detlint: ulp-ok -- <why>`"
+                ),
+            });
+        }
+    }
+    out
+}
+
+fn normalize_ws(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut in_ws = false;
+    for c in s.chars() {
+        if c.is_whitespace() {
+            if !in_ws {
+                out.push(' ');
+            }
+            in_ws = true;
+        } else {
+            out.push(c);
+            in_ws = false;
+        }
+    }
+    out
+}
+
+/// Byte ranges of bodies of fns whose name contains `merge`.
+fn merge_fn_bodies(code: &str) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let bytes = code.as_bytes();
+    for off in token_offsets(code, "fn") {
+        let mut i = off + 2;
+        while i < bytes.len() && bytes[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        let name_start = i;
+        while i < bytes.len() && is_ident(bytes[i]) {
+            i += 1;
+        }
+        let name = &code[name_start..i];
+        if !name.contains("merge") {
+            continue;
+        }
+        // Find the body's opening brace (skipping the signature).
+        let mut depth = 0usize;
+        let mut open = None;
+        while i < bytes.len() {
+            match bytes[i] {
+                b'(' | b'[' => depth += 1,
+                b')' | b']' => depth = depth.saturating_sub(1),
+                b'{' if depth == 0 => {
+                    open = Some(i);
+                    break;
+                }
+                b';' if depth == 0 => break,
+                _ => {}
+            }
+            i += 1;
+        }
+        let Some(o) = open else { continue };
+        let mut d = 0usize;
+        let mut k = o;
+        while k < bytes.len() {
+            match bytes[k] {
+                b'{' => d += 1,
+                b'}' => {
+                    d -= 1;
+                    if d == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        out.push((o + 1, k.min(bytes.len())));
+    }
+    out
+}
+
+/// The identifier being assigned by a `+=` at byte offset `at`
+/// (e.g. `self.sum_sq +=` -> `sum_sq`, `arrived[off + i] +=` ->
+/// `arrived`, `*a +=` -> `a`).
+fn lhs_ident(body: &str, at: usize) -> Option<String> {
+    let bytes = body.as_bytes();
+    let mut i = at;
+    while i > 0 && bytes[i - 1].is_ascii_whitespace() {
+        i -= 1;
+    }
+    // Skip one balanced indexing suffix.
+    if i > 0 && bytes[i - 1] == b']' {
+        let mut depth = 0usize;
+        while i > 0 {
+            i -= 1;
+            match bytes[i] {
+                b']' => depth += 1,
+                b'[' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    let end = i;
+    while i > 0 && is_ident(bytes[i - 1]) {
+        i -= 1;
+    }
+    if i == end {
+        return None;
+    }
+    Some(body[i..end].to_string())
+}
+
+/// R5: a `pub fn run*` in `des/` whose signature carries the legacy
+/// drifted shape (`&[SimPool]` / `&[SampledRequest]`) without taking
+/// `SimInput` must be `#[deprecated]`.
+fn entry_points(
+    rel: &str,
+    scanned: &Scanned,
+    rule: &'static Rule,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let code = &scanned.code;
+    let bytes = code.as_bytes();
+    for off in token_offsets(code, "pub") {
+        // Expect `pub fn run...` (no visibility modifiers in scope).
+        let mut i = off + 3;
+        while i < bytes.len() && bytes[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        if !code[i..].starts_with("fn") {
+            continue;
+        }
+        i += 2;
+        while i < bytes.len() && bytes[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        let name_start = i;
+        while i < bytes.len() && is_ident(bytes[i]) {
+            i += 1;
+        }
+        let name = &code[name_start..i];
+        if !name.starts_with("run") {
+            continue;
+        }
+        // Signature: up to the body `{` or a `;`.
+        let sig_end = bytes[i..]
+            .iter()
+            .position(|&b| b == b'{' || b == b';')
+            .map(|p| p + i)
+            .unwrap_or(bytes.len());
+        let sig: String = code[i..sig_end]
+            .chars()
+            .filter(|c| !c.is_whitespace())
+            .collect();
+        let legacy_shape = sig.contains("&[SimPool]")
+            || sig.contains("&[SampledRequest]");
+        if !legacy_shape || sig.contains("SimInput") {
+            continue;
+        }
+        if preceded_by_deprecated(code, off) {
+            continue;
+        }
+        let line = scanned.line_of(off);
+        if scanned.allows(rule.id, line) {
+            continue;
+        }
+        out.push(Finding {
+            file: rel.to_string(),
+            line,
+            rule: rule.id,
+            name: rule.name,
+            msg: format!(
+                "`pub fn {name}` takes the legacy pools/router \
+                 argument shape without SimInput; route through \
+                 SimInput or mark the wrapper #[deprecated]"
+            ),
+        });
+    }
+    out
+}
+
+/// Look back a few lines for a `#[deprecated` attribute directly above
+/// the item (attributes and blanked doc comments only in between).
+fn preceded_by_deprecated(code: &str, off: usize) -> bool {
+    let before = &code[..off];
+    let tail: Vec<&str> = before.lines().rev().take(6).collect();
+    for l in &tail {
+        let t = l.trim();
+        if t.contains("#[deprecated") {
+            return true;
+        }
+        // Attributes, blank(ed) lines, and the item's own indentation
+        // may sit between; anything else ends the attribute block.
+        if !t.is_empty() && !t.starts_with("#[") && !t.ends_with(']') {
+            return false;
+        }
+    }
+    false
+}

@@ -1,0 +1,373 @@
+//! Source preprocessing: comment/string stripping, `#[cfg(test)]`
+//! blanking, and `// detlint:` pragma extraction.
+//!
+//! The scanner rewrites a source file into a same-shape "code view":
+//! every comment, string literal, and char literal is replaced by
+//! spaces (newlines preserved), so downstream rules can match tokens
+//! without tripping over prose. `#[cfg(test)]` items are blanked the
+//! same way — unit tests are free to use `HashMap`, wall clocks, and
+//! literal RNG streams.
+
+/// A `// detlint:` pragma attached to a source line.
+///
+/// Grammar (inside a line comment):
+///
+/// ```text
+/// // detlint: allow(R1) -- justification text
+/// // detlint: allow(R1, R4) -- justification text
+/// // detlint: ulp-ok -- justification text        (alias: allow(R4))
+/// ```
+///
+/// The justification after ` -- ` is mandatory; an unjustified pragma
+/// is itself reported (rule `P0`). A pragma on a line with code
+/// suppresses findings on that line; a pragma on its own line
+/// suppresses findings on the next *code* line (continuation comment
+/// lines and blank lines in between are skipped, so a justification
+/// may wrap).
+#[derive(Debug, Clone)]
+pub struct Pragma {
+    /// 1-based line the pragma comment sits on.
+    pub line: usize,
+    /// 1-based line whose findings it suppresses.
+    pub target: usize,
+    /// Uppercased rule ids, e.g. `["R1", "R4"]`.
+    pub rules: Vec<String>,
+    /// Whether a non-empty ` -- justification` was supplied.
+    pub justified: bool,
+}
+
+/// Result of scanning one file.
+pub struct Scanned {
+    /// The code view: same line structure as the input, with comments,
+    /// strings, chars, and `#[cfg(test)]` regions blanked to spaces.
+    pub code: String,
+    pub pragmas: Vec<Pragma>,
+}
+
+impl Scanned {
+    /// 1-based line number of a byte offset into `self.code`.
+    pub fn line_of(&self, offset: usize) -> usize {
+        self.code.as_bytes()[..offset]
+            .iter()
+            .filter(|&&b| b == b'\n')
+            .count()
+            + 1
+    }
+
+    /// True if `rule` is suppressed on `line` by a justified pragma.
+    pub fn allows(&self, rule: &str, line: usize) -> bool {
+        self.pragmas.iter().any(|p| {
+            p.justified
+                && p.target == line
+                && p.rules.iter().any(|r| r.eq_ignore_ascii_case(rule))
+        })
+    }
+}
+
+/// Parse the text of one line comment into a pragma, if it is one.
+fn parse_pragma(
+    comment: &str,
+    line: usize,
+    target: usize,
+) -> Option<Pragma> {
+    let body = comment.trim().strip_prefix("detlint:")?.trim();
+    let (directive, justification) = match body.split_once("--") {
+        Some((d, j)) => (d.trim(), j.trim()),
+        None => (body, ""),
+    };
+    let rules: Vec<String> = if directive == "ulp-ok" {
+        vec!["R4".to_string()]
+    } else if let Some(inner) = directive
+        .strip_prefix("allow(")
+        .and_then(|r| r.strip_suffix(')'))
+    {
+        inner
+            .split(',')
+            .map(|r| r.trim().to_ascii_uppercase())
+            .filter(|r| !r.is_empty())
+            .collect()
+    } else {
+        // Unknown directive: treat as an unjustified pragma so it
+        // surfaces instead of silently doing nothing.
+        Vec::new()
+    };
+    Some(Pragma {
+        line,
+        target,
+        justified: !justification.is_empty() && !rules.is_empty(),
+        rules,
+    })
+}
+
+/// Strip comments/strings/chars and collect pragmas.
+pub fn scan(src: &str) -> Scanned {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out = String::with_capacity(src.len());
+    let mut pragmas = Vec::new();
+    let mut i = 0;
+    let mut line = 1usize;
+    let mut line_has_code = false;
+
+    while i < n {
+        let c = chars[i];
+        // Line comment (and doc comment).
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i;
+            while i < n && chars[i] != '\n' {
+                i += 1;
+            }
+            let text: String = chars[start + 2..i].iter().collect();
+            let target = if line_has_code { line } else { line + 1 };
+            if let Some(p) = parse_pragma(&text, line, target) {
+                pragmas.push(p);
+            }
+            for _ in start..i {
+                out.push(' ');
+            }
+            continue;
+        }
+        // Block comment (nesting per the Rust grammar).
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let mut depth = 1;
+            i += 2;
+            out.push_str("  ");
+            while i < n && depth > 0 {
+                if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else if chars[i] == '*'
+                    && i + 1 < n
+                    && chars[i + 1] == '/'
+                {
+                    depth -= 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else {
+                    if chars[i] == '\n' {
+                        out.push('\n');
+                        line += 1;
+                        line_has_code = false;
+                    } else {
+                        out.push(' ');
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw string r"..." / r#"..."# (also br / b prefixes).
+        if (c == 'r' || c == 'b') && !prev_is_ident(&chars, i) {
+            if let Some(end) = raw_string_end(&chars, i) {
+                for j in i..end {
+                    if chars[j] == '\n' {
+                        out.push('\n');
+                        line += 1;
+                    } else {
+                        out.push(' ');
+                    }
+                }
+                line_has_code = true;
+                i = end;
+                continue;
+            }
+        }
+        // Ordinary string literal.
+        if c == '"' {
+            out.push(' ');
+            i += 1;
+            while i < n {
+                if chars[i] == '\\' && i + 1 < n {
+                    out.push_str("  ");
+                    i += 2;
+                    continue;
+                }
+                if chars[i] == '"' {
+                    out.push(' ');
+                    i += 1;
+                    break;
+                }
+                if chars[i] == '\n' {
+                    out.push('\n');
+                    line += 1;
+                } else {
+                    out.push(' ');
+                }
+                i += 1;
+            }
+            line_has_code = true;
+            continue;
+        }
+        // Char literal vs lifetime: 'x' or '\n' is a literal; 'a in
+        // `&'a str` is a lifetime and passes through untouched.
+        if c == '\'' {
+            let is_char = if i + 1 < n && chars[i + 1] == '\\' {
+                true
+            } else {
+                i + 2 < n && chars[i + 2] == '\''
+            };
+            if is_char {
+                out.push(' ');
+                i += 1;
+                while i < n && chars[i] != '\'' {
+                    if chars[i] == '\\' && i + 1 < n {
+                        out.push_str("  ");
+                        i += 2;
+                        continue;
+                    }
+                    out.push(' ');
+                    i += 1;
+                }
+                if i < n {
+                    out.push(' ');
+                    i += 1;
+                }
+                line_has_code = true;
+                continue;
+            }
+        }
+        if c == '\n' {
+            out.push('\n');
+            line += 1;
+            line_has_code = false;
+        } else {
+            if !c.is_whitespace() {
+                line_has_code = true;
+            }
+            out.push(c);
+        }
+        i += 1;
+    }
+
+    // Resolve own-line pragmas to the next line that actually has
+    // code: comments are already blanked in `out`, so "blank line in
+    // the code view" covers both empty lines and continuation
+    // comments (wrapped justifications).
+    let line_is_code: Vec<bool> = std::iter::once(false)
+        .chain(
+            out.lines()
+                .map(|l| l.chars().any(|c| !c.is_whitespace())),
+        )
+        .collect();
+    for p in pragmas.iter_mut() {
+        while p.target > p.line
+            && p.target < line_is_code.len()
+            && !line_is_code[p.target]
+        {
+            p.target += 1;
+        }
+    }
+
+    let code = blank_cfg_test(out);
+    Scanned { code, pragmas }
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && (chars[i - 1] == '_' || chars[i - 1].is_ascii_alphanumeric())
+}
+
+/// If `chars[i..]` opens a raw string literal, return the index one
+/// past its closing quote.
+fn raw_string_end(chars: &[char], i: usize) -> Option<usize> {
+    let n = chars.len();
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+        if j >= n || chars[j] != 'r' {
+            return None;
+        }
+    }
+    if j >= n || chars[j] != 'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while j < n && chars[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= n || chars[j] != '"' {
+        return None;
+    }
+    j += 1;
+    while j < n {
+        if chars[j] == '"' {
+            let mut k = j + 1;
+            let mut h = 0;
+            while k < n && chars[k] == '#' && h < hashes {
+                h += 1;
+                k += 1;
+            }
+            if h == hashes {
+                return Some(k);
+            }
+        }
+        j += 1;
+    }
+    Some(n)
+}
+
+/// Blank every `#[cfg(test)]` item (attribute through the matching
+/// close brace, or through `;` for block-less items), preserving
+/// newlines. Unit tests are exempt from every rule.
+fn blank_cfg_test(code: String) -> String {
+    let mut bytes = code.into_bytes();
+    let needle = b"#[cfg(test)]";
+    let mut from = 0;
+    while let Some(pos) = find_bytes(&bytes, needle, from) {
+        let mut j = pos + needle.len();
+        // Find the item's opening `{` or a terminating `;`.
+        let mut open = None;
+        while j < bytes.len() {
+            match bytes[j] {
+                b'{' => {
+                    open = Some(j);
+                    break;
+                }
+                b';' => break,
+                _ => j += 1,
+            }
+        }
+        let end = match open {
+            Some(o) => {
+                let mut depth = 0usize;
+                let mut k = o;
+                loop {
+                    if k >= bytes.len() {
+                        break k;
+                    }
+                    match bytes[k] {
+                        b'{' => depth += 1,
+                        b'}' => {
+                            depth -= 1;
+                            if depth == 0 {
+                                break k + 1;
+                            }
+                        }
+                        _ => {}
+                    }
+                    k += 1;
+                }
+            }
+            None => j.min(bytes.len()),
+        };
+        for b in bytes[pos..end].iter_mut() {
+            if *b != b'\n' {
+                *b = b' ';
+            }
+        }
+        from = end.max(pos + 1);
+    }
+    String::from_utf8(bytes).expect("blanking preserves UTF-8")
+}
+
+fn find_bytes(hay: &[u8], needle: &[u8], from: usize) -> Option<usize> {
+    if from >= hay.len() {
+        return None;
+    }
+    hay[from..]
+        .windows(needle.len())
+        .position(|w| w == needle)
+        .map(|p| p + from)
+}

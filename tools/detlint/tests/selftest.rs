@@ -1,0 +1,104 @@
+//! detlint self-tests.
+//!
+//! Three properties gate CI:
+//!   1. the real simulator tree (`rust/src`) lints clean,
+//!   2. the seeded fixture tree trips every rule R1-R5 plus P0,
+//!   3. the clean fixture tree (every sanctioned escape hatch)
+//!      produces no findings.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use detlint::lint_tree;
+
+fn fixture(sub: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("fixtures")
+        .join(sub)
+}
+
+#[test]
+fn real_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("..")
+        .join("rust")
+        .join("src");
+    let findings = lint_tree(&root).expect("lint rust/src");
+    assert!(
+        findings.is_empty(),
+        "rust/src must lint clean, got:\n{}",
+        findings
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+#[test]
+fn violations_tree_trips_every_rule() {
+    let findings =
+        lint_tree(&fixture("violations")).expect("lint fixtures");
+    let tripped: BTreeSet<&str> =
+        findings.iter().map(|f| f.rule).collect();
+    for rule in ["R1", "R2", "R3", "R4", "R5", "P0"] {
+        assert!(
+            tripped.contains(rule),
+            "fixture tree must trip {rule}, only saw {tripped:?}"
+        );
+    }
+}
+
+#[test]
+fn violations_are_attributed_to_the_seeded_files() {
+    let findings =
+        lint_tree(&fixture("violations")).expect("lint fixtures");
+    let has = |rule: &str, file: &str| {
+        findings
+            .iter()
+            .any(|f| f.rule == rule && f.file.ends_with(file))
+    };
+    assert!(has("R1", "des/r1_hash_iter.rs"));
+    assert!(has("R2", "des/r2_wall_clock.rs"));
+    assert!(has("R3", "workload/r3_stream_literal.rs"));
+    assert!(has("R4", "des/r4_float_merge.rs"));
+    assert!(has("R5", "des/r5_entry_point.rs"));
+    assert!(has("P0", "des/p0_bad_pragma.rs"));
+    // The unjustified pragma must not suppress its rule.
+    assert!(has("R1", "des/p0_bad_pragma.rs"));
+}
+
+#[test]
+fn r4_fixture_flags_floats_but_not_integer_counts() {
+    let findings =
+        lint_tree(&fixture("violations")).expect("lint fixtures");
+    let r4: Vec<_> = findings
+        .iter()
+        .filter(|f| {
+            f.rule == "R4" && f.file.ends_with("r4_float_merge.rs")
+        })
+        .collect();
+    // `self.sum += other.sum` and the untyped `.sum()` — exactly two;
+    // `self.count += other.count` stays unflagged.
+    assert_eq!(
+        r4.len(),
+        2,
+        "expected 2 R4 findings, got: {r4:?}"
+    );
+}
+
+#[test]
+fn clean_tree_has_no_findings() {
+    let findings =
+        lint_tree(&fixture("clean")).expect("lint clean fixtures");
+    assert!(
+        findings.is_empty(),
+        "clean fixtures must pass, got:\n{}",
+        findings
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
