@@ -99,9 +99,11 @@ impl Args {
 
 /// The simulation-input flag group shared by every DES-driving
 /// subcommand: `--requests`, `--seed`, `--shards`, `--chunk-size`,
-/// `--window`, and an optional `--faults <path>` TOML fault script
-/// ([`crate::des::faults`]). Parsed once here instead of re-reading the
-/// same flags (with subtly different validation) in each command.
+/// `--window`, an optional `--faults <path>` TOML fault script
+/// ([`crate::des::faults`]), and an optional `--retries <path>`
+/// closed-loop client config ([`crate::des::retry`]). Parsed once here
+/// instead of re-reading the same flags (with subtly different
+/// validation) in each command.
 ///
 /// Every field is `None` when its flag was absent, so commands keep
 /// their own defaults via the `*_or` accessors; `--window` is validated
@@ -114,6 +116,7 @@ pub struct SimKnobs {
     pub chunk_size: Option<usize>,
     pub window_ms: Option<f64>,
     pub faults_path: Option<String>,
+    pub retries_path: Option<String>,
 }
 
 impl SimKnobs {
@@ -143,6 +146,7 @@ impl SimKnobs {
             chunk_size: opt_usize("chunk-size")?,
             window_ms,
             faults_path: args.get("faults").map(|s| s.to_string()),
+            retries_path: args.get("retries").map(|s| s.to_string()),
         })
     }
 
@@ -178,6 +182,23 @@ impl SimKnobs {
         let script = crate::des::faults::FaultScript::from_toml_str(&text)
             .map_err(|e| anyhow::anyhow!("--faults {path}: {e}"))?;
         Ok(Some(script))
+    }
+
+    /// Read and parse the `--retries` TOML closed-loop config, if one
+    /// was given. Parsing also validates
+    /// ([`crate::des::retry::RetryConfig::validate`]), so a config that
+    /// loads here is ready to attach to a `SimInput`.
+    pub fn load_retries(
+        &self,
+    ) -> anyhow::Result<Option<crate::des::retry::RetryConfig>> {
+        let Some(path) = &self.retries_path else {
+            return Ok(None);
+        };
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("--retries {path}: {e}"))?;
+        let cfg = crate::des::retry::RetryConfig::from_toml_str(&text)
+            .map_err(|e| anyhow::anyhow!("--retries {path}: {e}"))?;
+        Ok(Some(cfg))
     }
 }
 
@@ -224,7 +245,8 @@ mod tests {
         let a = Args::parse(
             &sv(&["simulate", "--requests", "5000", "--seed", "7",
                   "--shards", "4", "--chunk-size", "512", "--window",
-                  "1000", "--faults", "outage.toml"]),
+                  "1000", "--faults", "outage.toml", "--retries",
+                  "clients.toml"]),
             &[],
         )
         .unwrap();
@@ -235,6 +257,7 @@ mod tests {
         assert_eq!(k.chunk_size_or(1), 512);
         assert_eq!(k.window_ms, Some(1_000.0));
         assert_eq!(k.faults_path.as_deref(), Some("outage.toml"));
+        assert_eq!(k.retries_path.as_deref(), Some("clients.toml"));
     }
 
     #[test]
@@ -247,6 +270,7 @@ mod tests {
         assert_eq!(k.chunk_size_or(0), 1);
         assert_eq!(k.window_ms, None);
         assert!(k.load_faults().unwrap().is_none());
+        assert!(k.load_retries().unwrap().is_none());
 
         let bad = Args::parse(&sv(&["simulate", "--window", "-3"]), &[])
             .unwrap();
@@ -262,6 +286,17 @@ mod tests {
             .load_faults()
             .unwrap_err();
         assert!(format!("{err}").contains("--faults"), "{err}");
+
+        let gone = Args::parse(
+            &sv(&["simulate", "--retries", "/no/such/clients.toml"]),
+            &[],
+        )
+        .unwrap();
+        let err = SimKnobs::from_args(&gone)
+            .unwrap()
+            .load_retries()
+            .unwrap_err();
+        assert!(format!("{err}").contains("--retries"), "{err}");
     }
 
     #[test]

@@ -26,7 +26,8 @@ COMMANDS:
   scenarios   list every registered scenario (id, name, spec summary)
   run         run one scenario by id or name: --scenario <id|name>
               [--fast] [--requests N] [--seed S] [--threads T]
-              (registry spans puzzle1..8, multimodel, diurnal, n_plus_k)
+              (registry spans puzzle1..8, multimodel, diurnal, n_plus_k,
+              retry_storm)
   plan        two-phase fleet plan: --trace lmsys|azure|agent|<path.json>
               --lambda RPS [--slo MS] [--mixed] [--backend native|aot]
               [--node-avail none|soft|hard|5pct] [--top-k K] [--explain]
@@ -36,6 +37,9 @@ COMMANDS:
               [--window MS [--slo MS]]  (per-window P99/attainment table)
               [--faults PATH]  (deterministic fault script, TOML:
               [[failure]]/[[straggler]] sections; see data/faults/)
+              [--retries PATH]  (closed-loop clients: deadlines, retries
+              with deterministic backoff, admission control; TOML
+              [retry]/[admission] sections; see data/retry/)
   whatif      λ step thresholds: --trace T --gpu NAME
               [--lambdas 25,50,...] [--slo MS]
   disagg      prefill/decode planning: --trace T --lambda RPS
@@ -242,13 +246,15 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<String> {
             .validate(pools.len())
             .map_err(|e| anyhow::anyhow!("--faults: {e}"))?;
     }
+    let retries = knobs.load_retries()?;
     let engine = scenarios::default_engine(&opts);
-    let mut r = engine.simulate_faulted(
+    let mut r = engine.simulate_robust(
         &w,
         &pools,
         &router,
         &opts.des(),
         faults.as_ref(),
+        retries.as_ref(),
     );
     let mut t = Table::new(&["Pool", "requests", "util", "wait99", "TTFT99",
                              "E2E99", "max queue"]);
@@ -290,6 +296,19 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<String> {
             "fault script applied: {} failure(s), {} straggler(s)\n",
             script.failures.len(),
             script.stragglers.len(),
+        ));
+    }
+    if retries.is_some() {
+        out.push_str(&format!(
+            "retry policy applied: {} attempt(s), amplification \
+             {:.2}x, goodput {:.1} rps vs throughput {:.1} rps, {} \
+             abandoned, {} shed\n",
+            r.n_attempts,
+            r.retry_amplification(),
+            r.goodput_rps(),
+            r.throughput_rps(),
+            r.n_abandoned,
+            r.n_shed,
         ));
     }
     if let Some(wt) = crate::report::windows::windowed_table(
@@ -602,7 +621,8 @@ mod tests {
     fn scenarios_lists_registry() {
         let out = run_cmd(&["scenarios"]).unwrap();
         for key in ["puzzle1", "split-threshold", "multimodel", "gridflex",
-                    "diurnal", "size-to-peak", "n_plus_k", "n-plus-k"] {
+                    "diurnal", "size-to-peak", "n_plus_k", "n-plus-k",
+                    "retry_storm", "retry-storm"] {
             assert!(out.contains(key), "{out}");
         }
     }
@@ -725,6 +745,50 @@ mod tests {
             "simulate", "--trace", "azure", "--lambda", "50", "--gpu",
             "H100", "--n-short", "2", "--n-long", "2", "--requests",
             "500", "--faults", "/no/such/file.toml",
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn simulate_applies_and_validates_retry_configs() {
+        let dir = std::env::temp_dir().join("fleet_sim_cli_retries");
+        std::fs::create_dir_all(&dir).unwrap();
+        let good = dir.join("clients.toml");
+        std::fs::write(
+            &good,
+            "# lenient closed loop\n\
+             [retry]\n\
+             max_attempts = 3\n\
+             timeout_ms = 60000\n\
+             backoff_base_ms = 250\n\
+             backoff_cap_ms = 1000\n",
+        )
+        .unwrap();
+        let out = run_cmd(&[
+            "simulate", "--trace", "azure", "--lambda", "50", "--gpu",
+            "H100", "--n-short", "2", "--n-long", "2", "--requests",
+            "2000", "--retries", good.to_str().unwrap(),
+        ])
+        .unwrap();
+        assert!(out.contains("retry policy applied"), "{out}");
+        assert!(out.contains("amplification"), "{out}");
+
+        // An invalid config is rejected up front, naming the flag.
+        let bad = dir.join("bad.toml");
+        std::fs::write(&bad, "[retry]\nmax_attempts = 2\n").unwrap();
+        let err = run_cmd(&[
+            "simulate", "--trace", "azure", "--lambda", "50", "--gpu",
+            "H100", "--n-short", "2", "--n-long", "2", "--requests",
+            "500", "--retries", bad.to_str().unwrap(),
+        ])
+        .unwrap_err();
+        assert!(format!("{err}").contains("--retries"), "{err}");
+
+        // A missing config file is an error, not a silent open-loop run.
+        assert!(run_cmd(&[
+            "simulate", "--trace", "azure", "--lambda", "50", "--gpu",
+            "H100", "--n-short", "2", "--n-long", "2", "--requests",
+            "500", "--retries", "/no/such/clients.toml",
         ])
         .is_err());
     }

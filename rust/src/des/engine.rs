@@ -43,6 +43,7 @@ use crate::des::input::{ArrivalsSource, ConfigError, SimInput};
 use crate::des::metrics::{DesResult, MetricsCollector, MetricsMode,
                           PoolResult};
 use crate::des::pool::DesPool;
+use crate::des::retry::{ClosedLoopState, Phase, RetryConfig};
 use crate::gpu::profile::GpuProfile;
 use crate::router::{RouteRequest, RoutingPolicy};
 use crate::workload::rng::Pcg64;
@@ -217,6 +218,198 @@ fn drain_queue(
     }
 }
 
+/// Closed-loop admission: identical slot selection and timing math to
+/// [`try_admit`], plus the attempt-deadline check. An attempt admitted
+/// with `now + hold <= deadline` completes normally — latency is
+/// recorded against the request's *first* arrival, so waits accumulate
+/// across failed attempts and backoffs (first-attempt-to-final-success,
+/// the client-visible number). An attempt admitted too late to finish
+/// in time is Doomed: it holds its slot (wasted work, the retry-storm
+/// metastability mechanism) until its timeout event releases it, and
+/// no completion is scheduled.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn try_admit_closed(
+    pools: &mut [DesPool],
+    pool_idx: usize,
+    req_id: u32,
+    reqs: &[Req],
+    now: f64,
+    events: &mut CalendarQueue,
+    cap_window: &Option<CapWindow>,
+    faults: Option<&CompiledFaults>,
+    metrics: &mut MetricsCollector,
+    closed: &mut ClosedLoopState,
+) -> bool {
+    let eff = eff_cap(cap_window, &pools[pool_idx], now);
+    let pool = &mut pools[pool_idx];
+    let mut best: Option<(usize, u32)> = None;
+    for (i, inst) in pool.instances.iter().enumerate() {
+        if faults.is_some_and(|f| f.is_down(pool_idx, i, now)) {
+            continue;
+        }
+        if inst.busy < eff {
+            let free = eff - inst.busy;
+            if best.map_or(true, |(_, bf)| free > bf) {
+                best = Some((i, free));
+            }
+        }
+    }
+    let Some((inst, _)) = best else { return false };
+    pool.acquire(inst, now);
+    let req = &reqs[req_id as usize];
+    let n_at_admit = pool.instances[inst].busy as f64;
+    let slow = faults.map_or(1.0, |f| f.slowdown(pool_idx, inst, now));
+    let t_iter = pool.gpu.t_iter(n_at_admit) * slow;
+    let hold = pool.gpu.iters(req.l_in, req.l_out) * t_iter;
+    let st = &mut closed.states[req_id as usize];
+    st.instance = inst as u16;
+    if now + hold <= st.deadline_ms {
+        st.phase = Phase::InFlight;
+        events.push(
+            now + hold,
+            EventKind::Completion {
+                req: req_id,
+                pool: pool_idx as u16,
+                instance: inst as u16,
+            },
+        );
+        let first = st.first_arrival_ms;
+        let wait = now - first;
+        let prefill = (req.l_in / pool.gpu.chunk).ceil() * t_iter;
+        let ttft = wait + prefill + t_iter;
+        let e2e = wait + hold;
+        metrics.record(pool_idx, first, wait, ttft, e2e);
+    } else {
+        // Doomed: slot stays busy until the pending timeout fires.
+        st.phase = Phase::Doomed;
+    }
+    true
+}
+
+/// Start (or restart) an attempt for `req_id` at time `now`: shed on
+/// an open breaker, admit, shed on a full queue, or enqueue. The
+/// attempt's timeout event is scheduled exactly once — for a Doomed
+/// immediate admission or on enqueue — never for an on-time in-flight
+/// admission (its completion precedes the deadline by construction).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn start_attempt(
+    pools: &mut [DesPool],
+    req_id: u32,
+    reqs: &[Req],
+    now: f64,
+    events: &mut CalendarQueue,
+    cap_window: &Option<CapWindow>,
+    faults: Option<&CompiledFaults>,
+    metrics: &mut MetricsCollector,
+    closed: &mut ClosedLoopState,
+) {
+    let (pool_idx, first, attempt) = {
+        let st = &closed.states[req_id as usize];
+        (st.pool as usize, st.first_arrival_ms, st.attempt)
+    };
+    metrics.record_attempt(first);
+    // An open breaker sheds instantly — terminal, the cheap rejection
+    // that lets a melted-down pool drain (see `des::retry`).
+    if closed.breaker_is_open(pool_idx) {
+        closed.states[req_id as usize].phase = Phase::Done;
+        metrics.record_shed(first);
+        return;
+    }
+    let deadline = closed.deadline_after(now);
+    closed.states[req_id as usize].deadline_ms = deadline;
+    if try_admit_closed(
+        pools, pool_idx, req_id, reqs, now, events, cap_window, faults,
+        metrics, closed,
+    ) {
+        // A doomed admission still needs its timeout to free the slot
+        // (a doomed deadline is always finite: infinite deadlines admit
+        // everything on time).
+        if closed.states[req_id as usize].phase == Phase::Doomed {
+            events.push(
+                deadline,
+                EventKind::Timeout {
+                    req: req_id,
+                    pool: pool_idx as u16,
+                    attempt,
+                },
+            );
+        }
+        return;
+    }
+    let bound = closed.queue_bound();
+    if bound > 0 && pools[pool_idx].queue.len() >= bound {
+        closed.states[req_id as usize].phase = Phase::Done;
+        metrics.record_shed(first);
+        return;
+    }
+    closed.states[req_id as usize].phase = Phase::Queued;
+    pools[pool_idx].enqueue(req_id);
+    if deadline.is_finite() {
+        events.push(
+            deadline,
+            EventKind::Timeout {
+                req: req_id,
+                pool: pool_idx as u16,
+                attempt,
+            },
+        );
+    }
+    let len = pools[pool_idx].queue.len();
+    closed.note_queue_len(pool_idx, len);
+}
+
+/// After a timeout (or terminal shed path): schedule the next attempt
+/// behind its deterministic backoff, or record a final abandonment.
+pub(crate) fn abandon_or_retry(
+    req_id: u32,
+    now: f64,
+    events: &mut CalendarQueue,
+    metrics: &mut MetricsCollector,
+    closed: &mut ClosedLoopState,
+) {
+    let st = closed.states[req_id as usize];
+    if st.attempt < closed.max_attempts() {
+        closed.states[req_id as usize].phase = Phase::Backoff;
+        let delay = closed.backoff_after(st.global_id, st.attempt);
+        events.push(
+            now + delay,
+            EventKind::Retry { req: req_id, pool: st.pool },
+        );
+    } else {
+        closed.states[req_id as usize].phase = Phase::Done;
+        metrics.record_abandoned(st.first_arrival_ms);
+    }
+}
+
+/// Closed-loop queue drain: like [`drain_queue`] but through
+/// [`try_admit_closed`], with a breaker-hysteresis check after every
+/// pop (queued attempts keep their already-scheduled timeouts, so no
+/// new timeout events are pushed here).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn drain_queue_closed(
+    pools: &mut [DesPool],
+    pool_idx: usize,
+    reqs: &[Req],
+    now: f64,
+    events: &mut CalendarQueue,
+    cap_window: &Option<CapWindow>,
+    faults: Option<&CompiledFaults>,
+    metrics: &mut MetricsCollector,
+    closed: &mut ClosedLoopState,
+) {
+    while let Some(&head) = pools[pool_idx].queue.front() {
+        if !try_admit_closed(
+            pools, pool_idx, head, reqs, now, events, cap_window, faults,
+            metrics, closed,
+        ) {
+            break;
+        }
+        pools[pool_idx].queue.pop_front();
+        let len = pools[pool_idx].queue.len();
+        closed.note_queue_len(pool_idx, len);
+    }
+}
+
 /// The simulator: workload x pools x router -> latency distributions.
 pub struct Simulator {
     pub workload: WorkloadSpec,
@@ -280,7 +473,7 @@ impl Simulator {
         match input.arrivals {
             ArrivalsSource::Stream(sampled) => Ok(run_core(
                 input.pools, input.router, input.config, sampled,
-                faults.as_ref(),
+                faults.as_ref(), input.retries,
             )),
             ArrivalsSource::Generator(w) => {
                 let sampled = w.sample_requests(
@@ -288,7 +481,7 @@ impl Simulator {
                 );
                 Ok(run_core(
                     input.pools, input.router, input.config, &sampled,
-                    faults.as_ref(),
+                    faults.as_ref(), input.retries,
                 ))
             }
         }
@@ -320,6 +513,7 @@ fn run_core(
     config: &DesConfig,
     sampled: &[SampledRequest],
     faults: Option<&CompiledFaults>,
+    retries: Option<&RetryConfig>,
 ) -> DesResult {
     {
         let n = sampled.len();
@@ -327,6 +521,11 @@ fn run_core(
             .windows(2)
             .all(|w| w[0].arrival_ms <= w[1].arrival_ms));
         let mut route_rng = Pcg64::new(config.seed, streams::ROUTING);
+        // Closed-loop state exists iff a retry config is attached; the
+        // None path below is byte-for-byte the open-loop simulator.
+        let mut closed: Option<ClosedLoopState> =
+            retries.map(|c| ClosedLoopState::new(c, config.seed,
+                                                 pool_specs.len()));
 
         let mut pools: Vec<DesPool> = pool_specs
             .iter()
@@ -416,7 +615,16 @@ fn run_core(
                 if decision.compressed {
                     n_compressed += 1;
                 }
-                if !try_admit(
+                if let Some(cl) = closed.as_mut() {
+                    // Stream index doubles as the global request id on
+                    // the serial engines.
+                    cl.init_request(req as usize, req as u64, now);
+                    cl.states[req as usize].pool = decision.pool as u16;
+                    start_attempt(
+                        &mut pools, req, &reqs, now, &mut events,
+                        &config.cap_window, faults, &mut metrics, cl,
+                    );
+                } else if !try_admit(
                     &mut pools, decision.pool, req, &reqs, now, &mut events,
                     &config.cap_window, faults, &mut metrics,
                 ) {
@@ -430,17 +638,88 @@ fn run_core(
             horizon = horizon.max(now);
             match ev.kind {
                 EventKind::Arrival { .. } => unreachable!("arrivals merged"),
-                EventKind::Completion { req: _, pool, instance } => {
+                EventKind::Completion { req, pool, instance } => {
                     pools[pool as usize].release(instance as usize, now);
-                    drain_queue(
-                        &mut pools, pool as usize, &reqs, now, &mut events,
-                        &config.cap_window, faults, &mut metrics,
-                    );
+                    if let Some(cl) = closed.as_mut() {
+                        cl.states[req as usize].phase = Phase::Done;
+                        drain_queue_closed(
+                            &mut pools, pool as usize, &reqs, now,
+                            &mut events, &config.cap_window, faults,
+                            &mut metrics, cl,
+                        );
+                    } else {
+                        drain_queue(
+                            &mut pools, pool as usize, &reqs, now,
+                            &mut events, &config.cap_window, faults,
+                            &mut metrics,
+                        );
+                    }
                 }
                 EventKind::Drain { pool } => {
-                    drain_queue(
-                        &mut pools, pool as usize, &reqs, now, &mut events,
-                        &config.cap_window, faults, &mut metrics,
+                    if let Some(cl) = closed.as_mut() {
+                        drain_queue_closed(
+                            &mut pools, pool as usize, &reqs, now,
+                            &mut events, &config.cap_window, faults,
+                            &mut metrics, cl,
+                        );
+                    } else {
+                        drain_queue(
+                            &mut pools, pool as usize, &reqs, now,
+                            &mut events, &config.cap_window, faults,
+                            &mut metrics,
+                        );
+                    }
+                }
+                EventKind::Timeout { req, pool, attempt } => {
+                    let cl = closed
+                        .as_mut()
+                        .expect("timeouts exist only in closed-loop runs");
+                    let st = cl.states[req as usize];
+                    if st.attempt != attempt {
+                        continue; // superseded by a later attempt
+                    }
+                    match st.phase {
+                        Phase::Queued => {
+                            // Eager removal: the queue never holds
+                            // expired requests, so the final unserved
+                            // scan and every drain see live ones only.
+                            let q = &mut pools[pool as usize].queue;
+                            if let Some(pos) =
+                                q.iter().position(|&r| r == req)
+                            {
+                                q.remove(pos);
+                            }
+                            let len = pools[pool as usize].queue.len();
+                            cl.note_queue_len(pool as usize, len);
+                            abandon_or_retry(
+                                req, now, &mut events, &mut metrics, cl,
+                            );
+                        }
+                        Phase::Doomed => {
+                            // The wasted-work slot frees only now.
+                            pools[pool as usize]
+                                .release(st.instance as usize, now);
+                            abandon_or_retry(
+                                req, now, &mut events, &mut metrics, cl,
+                            );
+                            drain_queue_closed(
+                                &mut pools, pool as usize, &reqs, now,
+                                &mut events, &config.cap_window, faults,
+                                &mut metrics, cl,
+                            );
+                        }
+                        // Completed (or already moved on): stale no-op.
+                        _ => {}
+                    }
+                }
+                EventKind::Retry { req, pool: _ } => {
+                    let cl = closed
+                        .as_mut()
+                        .expect("retries exist only in closed-loop runs");
+                    cl.states[req as usize].attempt += 1;
+                    start_attempt(
+                        &mut pools, req, &reqs, now, &mut events,
+                        &config.cap_window, faults, &mut metrics, cl,
                     );
                 }
             }
@@ -471,6 +750,9 @@ fn run_core(
             n_events,
             n_unserved,
             max_unserved_wait_ms: max_unserved_wait,
+            n_attempts: metrics.n_attempts,
+            n_abandoned: metrics.n_abandoned,
+            n_shed: metrics.n_shed,
             windows: metrics.windows,
         }
     }
@@ -839,6 +1121,175 @@ mod tests {
         let (mut b, mut f) = (base.overall.clone(), faulted.overall.clone());
         assert!(f.wait.p99() > b.wait.p99() + 100.0,
                 "base {} faulted {}", b.wait.p99(), f.wait.p99());
+    }
+
+    #[test]
+    fn lenient_closed_loop_is_bit_identical_when_nothing_queues() {
+        use crate::des::retry::{RetryConfig, RetrySpec};
+        // Light load: no attempt ever queues, so a huge client timeout
+        // schedules no timeout events and the closed-loop run matches
+        // the open-loop one bit for bit — events, horizon, latencies.
+        let (pools, router) = two_pool(h100(), 4, 4, 4096.0, 8192.0);
+        let cfg = DesConfig { n_requests: 2_000, ..Default::default() };
+        let w = azure(2.0);
+        let sampled = w.sample_requests(cfg.n_requests, cfg.seed);
+        let open = SimInput::stream(&pools, &router, &cfg, &sampled);
+        let rc = RetryConfig {
+            retry: Some(RetrySpec {
+                max_attempts: 3,
+                timeout_ms: 1e9,
+                backoff_base_ms: 100.0,
+                backoff_cap_ms: 400.0,
+            }),
+            admission: None,
+        };
+        let closed = SimInput::stream(&pools, &router, &cfg, &sampled)
+            .with_retries(&rc);
+        let mut a = Simulator::run_input(&open).unwrap();
+        let mut b = Simulator::run_input(&closed).unwrap();
+        assert_eq!(a.n_events, b.n_events);
+        assert_eq!(a.horizon_ms, b.horizon_ms);
+        assert_eq!(a.overall.count, b.overall.count);
+        assert_eq!(a.overall.p99_ttft(), b.overall.p99_ttft());
+        assert_eq!(a.overall.wait.p99(), b.overall.wait.p99());
+        assert_eq!(b.n_attempts, 2_000);
+        assert_eq!(b.n_abandoned, 0);
+        assert_eq!(b.n_shed, 0);
+        assert_eq!(b.retry_amplification(), 1.0);
+    }
+
+    #[test]
+    fn timeouts_abandon_requests_and_conserve_counts() {
+        use crate::des::retry::{RetryConfig, RetrySpec};
+        // 400 req/s on 1 A100 with a 2 s deadline and no retries:
+        // most of the queue times out instead of waiting forever.
+        let pools = vec![SimPool {
+            gpu: a100(), n_gpus: 1, ctx_budget: 8192.0, batch_cap: None,
+        }];
+        let router = RoutingPolicy::Random { n_pools: 1 };
+        let cfg =
+            DesConfig { n_requests: 4_000, seed: 11, ..Default::default() };
+        let w = azure(400.0);
+        let sampled = w.sample_requests(cfg.n_requests, cfg.seed);
+        let rc = RetryConfig {
+            retry: Some(RetrySpec {
+                max_attempts: 1,
+                timeout_ms: 2_000.0,
+                backoff_base_ms: 0.0,
+                backoff_cap_ms: 0.0,
+            }),
+            admission: None,
+        };
+        let input = SimInput::stream(&pools, &router, &cfg, &sampled)
+            .with_retries(&rc);
+        let mut r = Simulator::run_input(&input).unwrap();
+        assert_eq!(r.n_attempts, 4_000, "one attempt per request");
+        assert!(r.n_abandoned > 1_000, "abandoned = {}", r.n_abandoned);
+        assert_eq!(r.n_shed, 0);
+        // Timeouts empty the queues, so nothing is left unserved.
+        assert_eq!(r.n_unserved, 0);
+        assert_eq!(
+            r.overall.count + r.n_abandoned, 4_000,
+            "served + abandoned must conserve the stream"
+        );
+        assert_eq!(r.retry_amplification(), 1.0);
+        assert!(r.goodput_rps() < r.throughput_rps());
+        assert!(!r.meets_slo(500.0), "abandonment must poison the SLO");
+        // Served requests all finished within their deadline.
+        assert!(r.overall.e2e.p99() <= 2_000.0 + 1e-9);
+    }
+
+    #[test]
+    fn naive_retries_amplify_offered_load() {
+        use crate::des::retry::{RetryConfig, RetrySpec};
+        let pools = vec![SimPool {
+            gpu: a100(), n_gpus: 1, ctx_budget: 8192.0, batch_cap: None,
+        }];
+        let router = RoutingPolicy::Random { n_pools: 1 };
+        let cfg =
+            DesConfig { n_requests: 4_000, seed: 11, ..Default::default() };
+        let w = azure(400.0);
+        let sampled = w.sample_requests(cfg.n_requests, cfg.seed);
+        let rc = RetryConfig {
+            retry: Some(RetrySpec {
+                max_attempts: 3,
+                timeout_ms: 2_000.0,
+                backoff_base_ms: 100.0,
+                backoff_cap_ms: 400.0,
+            }),
+            admission: None,
+        };
+        let input = SimInput::stream(&pools, &router, &cfg, &sampled)
+            .with_retries(&rc);
+        let r = Simulator::run_input(&input).unwrap();
+        assert!(r.n_attempts > 4_000, "attempts = {}", r.n_attempts);
+        assert!(r.retry_amplification() > 1.2,
+                "amplification = {}", r.retry_amplification());
+        assert_eq!(r.overall.count + r.n_abandoned, 4_000);
+        assert_eq!(r.n_unserved, 0);
+    }
+
+    #[test]
+    fn queue_bound_sheds_and_bounds_depth() {
+        use crate::des::retry::{AdmissionSpec, RetryConfig};
+        let pools = vec![SimPool {
+            gpu: a100(), n_gpus: 1, ctx_budget: 8192.0, batch_cap: None,
+        }];
+        let router = RoutingPolicy::Random { n_pools: 1 };
+        let cfg =
+            DesConfig { n_requests: 4_000, seed: 11, ..Default::default() };
+        let w = azure(400.0);
+        let sampled = w.sample_requests(cfg.n_requests, cfg.seed);
+        let rc = RetryConfig {
+            retry: None,
+            admission: Some(AdmissionSpec {
+                max_queue_depth: 8,
+                breaker_open_depth: 0,
+                breaker_close_depth: 0,
+            }),
+        };
+        let input = SimInput::stream(&pools, &router, &cfg, &sampled)
+            .with_retries(&rc);
+        let r = Simulator::run_input(&input).unwrap();
+        assert!(r.n_shed > 0, "shed = {}", r.n_shed);
+        assert!(r.per_pool[0].max_queue_depth <= 8,
+                "depth = {}", r.per_pool[0].max_queue_depth);
+        // No timeouts: the bounded queue fully drains after the last
+        // arrival, so everything is either served or shed.
+        assert_eq!(r.overall.count + r.n_shed, 4_000);
+        assert_eq!(r.n_unserved, 0);
+        assert_eq!(r.n_attempts, 4_000);
+    }
+
+    #[test]
+    fn circuit_breaker_sheds_with_hysteresis() {
+        use crate::des::retry::{AdmissionSpec, RetryConfig};
+        let pools = vec![SimPool {
+            gpu: a100(), n_gpus: 1, ctx_budget: 8192.0, batch_cap: None,
+        }];
+        let router = RoutingPolicy::Random { n_pools: 1 };
+        let cfg =
+            DesConfig { n_requests: 4_000, seed: 11, ..Default::default() };
+        let w = azure(400.0);
+        let sampled = w.sample_requests(cfg.n_requests, cfg.seed);
+        let rc = RetryConfig {
+            retry: None,
+            admission: Some(AdmissionSpec {
+                max_queue_depth: 0,
+                breaker_open_depth: 16,
+                breaker_close_depth: 4,
+            }),
+        };
+        let input = SimInput::stream(&pools, &router, &cfg, &sampled)
+            .with_retries(&rc);
+        let r = Simulator::run_input(&input).unwrap();
+        assert!(r.n_shed > 0, "shed = {}", r.n_shed);
+        // The queue only grows while the breaker is closed, so its peak
+        // stays near the open threshold.
+        assert!(r.per_pool[0].max_queue_depth <= 17,
+                "depth = {}", r.per_pool[0].max_queue_depth);
+        assert_eq!(r.overall.count + r.n_shed, 4_000);
+        assert_eq!(r.n_unserved, 0);
     }
 
     #[test]

@@ -29,6 +29,13 @@ pub enum EventKind {
     /// the pool's queue (capacity returned without a completion to
     /// trigger it).
     Drain { pool: u16 },
+    /// Closed-loop only ([`crate::des::retry`]): the client deadline
+    /// of `req`'s attempt number `attempt` expires. Stale once the
+    /// request completed or moved on to a later attempt.
+    Timeout { req: u32, pool: u16, attempt: u32 },
+    /// Closed-loop only: `req`'s backoff ends; start its next attempt
+    /// against the same pool.
+    Retry { req: u32, pool: u16 },
 }
 
 /// A timestamped event. Earlier `time_ms` pops first; ties break on a

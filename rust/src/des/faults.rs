@@ -145,6 +145,26 @@ impl FaultScript {
                 ));
             }
         }
+        // Same-pool outage windows must not overlap: the compiled
+        // down-set would silently union them, so "2 GPUs down twice"
+        // and "2 GPUs down once" become indistinguishable and the
+        // script no longer means what it says. Adjacent half-open
+        // windows ([a,b) then [b,c)) are fine.
+        for (i, a) in self.failures.iter().enumerate() {
+            for (j, b) in self.failures.iter().enumerate().skip(i + 1) {
+                if a.pool == b.pool
+                    && a.start_ms < b.recover_ms
+                    && b.start_ms < a.recover_ms
+                {
+                    return bad(format!(
+                        "failures #{i} and #{j} overlap on pool {}: \
+                         [{}, {}) and [{}, {})",
+                        a.pool, a.start_ms, a.recover_ms, b.start_ms,
+                        b.recover_ms
+                    ));
+                }
+            }
+        }
         for (i, s) in self.stragglers.iter().enumerate() {
             if s.pool >= n_pools {
                 return bad(format!(
@@ -352,7 +372,10 @@ impl FaultScript {
                     warm_ms: model.warm_ms,
                     warm_factor: model.warm_factor,
                 });
-                t += rng.exponential(rate_per_ms);
+                // Serialized per pool: the next failure draws from the
+                // recovery instant, so generated scripts always pass
+                // the overlap check in [`Self::validate`].
+                t += mttr + rng.exponential(rate_per_ms);
             }
         }
         script
@@ -512,6 +535,10 @@ mod tests {
 
     #[test]
     fn overlapping_failures_union_and_oversized_k_clamps() {
+        // `validate` rejects same-pool overlaps at the API boundary
+        // (see validate_rejects_bad_scripts); this pins the
+        // compile-level union semantics directly, plus the clamp of an
+        // oversized n_gpus to the whole pool.
         let script = FaultScript {
             failures: vec![
                 outage(0, 1, 0.0, 300.0),
@@ -584,6 +611,41 @@ mod tests {
     }
 
     #[test]
+    fn validate_rejects_overlapping_same_pool_outages() {
+        let overlapping = FaultScript {
+            failures: vec![
+                outage(0, 1, 0.0, 300.0),
+                outage(0, 2, 100.0, 200.0),
+            ],
+            stragglers: vec![],
+        };
+        let err = overlapping.validate(1).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("overlap"), "{msg}");
+        assert!(msg.contains("pool 0"), "{msg}");
+        assert!(msg.contains("[0, 300)") && msg.contains("[100, 200)"),
+                "message must name both windows: {msg}");
+        // Different pools may overlap freely…
+        let cross_pool = FaultScript {
+            failures: vec![
+                outage(0, 1, 0.0, 300.0),
+                outage(1, 2, 100.0, 200.0),
+            ],
+            stragglers: vec![],
+        };
+        assert!(cross_pool.validate(2).is_ok());
+        // …and adjacent half-open windows on one pool are not overlaps.
+        let adjacent = FaultScript {
+            failures: vec![
+                outage(0, 1, 0.0, 100.0),
+                outage(0, 1, 100.0, 200.0),
+            ],
+            stragglers: vec![],
+        };
+        assert!(adjacent.validate(1).is_ok());
+    }
+
+    #[test]
     fn toml_round_trips_failures_and_stragglers() {
         let text = "\
 # two GPUs die mid-peak, recover cold
@@ -650,7 +712,8 @@ factor = 1.5
             assert!(f.start_ms < 3_600_000.0);
             assert!(f.recover_ms > f.start_ms);
         }
-        // ~8 GPU-hours at 400/day ≈ 133 expected failures.
+        // ~8 GPU-hours at 400/day, serialized behind ~5 s MTTRs:
+        // ≈ 112 expected failures.
         assert!((50..400).contains(&a.failures.len()),
                 "{} failures", a.failures.len());
     }

@@ -23,6 +23,7 @@ use std::fmt;
 
 use crate::des::engine::{DesConfig, SimPool};
 use crate::des::faults::{CompiledFaults, FaultScript};
+use crate::des::retry::RetryConfig;
 use crate::router::RoutingPolicy;
 use crate::workload::spec::{SampledRequest, WorkloadSpec};
 
@@ -43,6 +44,9 @@ pub enum ConfigError {
     InvalidClassProbs(String),
     InvalidCapWindow(String),
     InvalidFaults(String),
+    /// Malformed closed-loop retry/admission config
+    /// ([`crate::des::retry`]).
+    InvalidRetries(String),
 }
 
 impl fmt::Display for ConfigError {
@@ -76,6 +80,9 @@ impl fmt::Display for ConfigError {
             }
             ConfigError::InvalidFaults(msg) => {
                 write!(f, "invalid fault script: {msg}")
+            }
+            ConfigError::InvalidRetries(msg) => {
+                write!(f, "invalid retry config: {msg}")
             }
         }
     }
@@ -154,6 +161,10 @@ pub struct SimInput<'a> {
     /// Optional deterministic fault schedule (see
     /// [`crate::des::faults`]).
     pub faults: Option<&'a FaultScript>,
+    /// Optional closed-loop client/admission behavior (see
+    /// [`crate::des::retry`]). `None` keeps the open-loop semantics
+    /// bit-identically.
+    pub retries: Option<&'a RetryConfig>,
 }
 
 impl<'a> SimInput<'a> {
@@ -170,6 +181,7 @@ impl<'a> SimInput<'a> {
             config,
             arrivals: ArrivalsSource::Stream(sampled),
             faults: None,
+            retries: None,
         }
     }
 
@@ -187,12 +199,19 @@ impl<'a> SimInput<'a> {
             config,
             arrivals: ArrivalsSource::Generator(workload),
             faults: None,
+            retries: None,
         }
     }
 
     /// Attach a fault script.
     pub fn with_faults(mut self, faults: &'a FaultScript) -> Self {
         self.faults = Some(faults);
+        self
+    }
+
+    /// Attach a closed-loop retry/admission config.
+    pub fn with_retries(mut self, retries: &'a RetryConfig) -> Self {
+        self.retries = Some(retries);
         self
     }
 
@@ -208,6 +227,9 @@ impl<'a> SimInput<'a> {
         self.config.validate()?;
         if let Some(f) = self.faults {
             f.validate(self.pools.len())?;
+        }
+        if let Some(r) = self.retries {
+            r.validate()?;
         }
         Ok(())
     }

@@ -122,6 +122,11 @@ pub struct WindowedStats {
     base: usize,
     arrived: Vec<usize>,
     ttft: Vec<Samples>,
+    /// Closed-loop only: requests shed by admission control, bucketed
+    /// by *first* arrival time (all zero on open-loop runs).
+    shed: Vec<usize>,
+    /// Closed-loop only: requests that exhausted their retry budget.
+    abandoned: Vec<usize>,
 }
 
 impl WindowedStats {
@@ -133,6 +138,8 @@ impl WindowedStats {
             base: 0,
             arrived: Vec::new(),
             ttft: Vec::new(),
+            shed: Vec::new(),
+            abandoned: Vec::new(),
         }
     }
 
@@ -166,6 +173,8 @@ impl WindowedStats {
         );
         while self.ttft.len() <= i {
             self.arrived.push(0);
+            self.shed.push(0);
+            self.abandoned.push(0);
             self.ttft.push(match self.mode {
                 MetricsMode::Exact => Samples::new(),
                 MetricsMode::Streaming => Samples::streaming(),
@@ -187,6 +196,20 @@ impl WindowedStats {
         self.ttft[i].push(ttft_ms);
     }
 
+    /// Count a request shed by admission control against its *first*
+    /// arrival's window (closed-loop runs only).
+    pub fn record_shed(&mut self, arrival_ms: f64) {
+        let i = self.slot(arrival_ms);
+        self.shed[i] += 1;
+    }
+
+    /// Count a request that exhausted its retry budget against its
+    /// first arrival's window (closed-loop runs only).
+    pub fn record_abandoned(&mut self, arrival_ms: f64) {
+        let i = self.slot(arrival_ms);
+        self.abandoned[i] += 1;
+    }
+
     pub fn n_windows(&self) -> usize {
         self.ttft.len()
     }
@@ -205,9 +228,27 @@ impl WindowedStats {
         self.ttft[i].len()
     }
 
-    /// Arrived in window `i` but never admitted before the run drained.
+    /// Arrived in window `i` but never admitted before the run
+    /// drained. Shed and abandoned requests reached a terminal answer
+    /// (just not service), so they are not "unserved" — each arrival
+    /// lands in exactly one of served/shed/abandoned/unserved.
     pub fn n_unserved(&self, i: usize) -> usize {
-        self.arrived[i].saturating_sub(self.ttft[i].len())
+        self.arrived[i]
+            .saturating_sub(self.ttft[i].len())
+            .saturating_sub(self.shed[i])
+            .saturating_sub(self.abandoned[i])
+    }
+
+    /// Requests first arriving in window `i` that were shed by
+    /// admission control.
+    pub fn n_shed(&self, i: usize) -> usize {
+        self.shed[i]
+    }
+
+    /// Requests first arriving in window `i` that ran out of retry
+    /// attempts.
+    pub fn n_abandoned(&self, i: usize) -> usize {
+        self.abandoned[i]
     }
 
     /// P99 TTFT over requests that arrived in window `i`; NaN if none
@@ -236,13 +277,16 @@ impl WindowedStats {
     }
 
     /// A window with no arrivals passes vacuously; otherwise every
-    /// arrival must have been served and the window P99 TTFT must meet
-    /// the SLO.
+    /// arrival must have been *served* — not shed, not abandoned, not
+    /// left queued — and the window P99 TTFT must meet the SLO.
     pub fn meets_slo(&mut self, i: usize, slo_ms: f64) -> bool {
         if self.arrived[i] == 0 {
             return true;
         }
-        self.n_unserved(i) == 0 && self.p99_ttft(i) <= slo_ms
+        self.n_unserved(i) == 0
+            && self.shed[i] == 0
+            && self.abandoned[i] == 0
+            && self.p99_ttft(i) <= slo_ms
     }
 
     /// Size-to-peak feasibility: *every* window meets the SLO.
@@ -287,6 +331,8 @@ impl WindowedStats {
             Self::MAX_WINDOWS
         );
         let mut arrived = vec![0usize; new_len];
+        let mut shed = vec![0usize; new_len];
+        let mut abandoned = vec![0usize; new_len];
         let mut ttft: Vec<Samples> = (0..new_len)
             .map(|_| match self.mode {
                 MetricsMode::Exact => Samples::new(),
@@ -300,6 +346,12 @@ impl WindowedStats {
         for (i, &a) in self.arrived.iter().enumerate() {
             arrived[off + i] = a;
         }
+        for (i, &s) in self.shed.iter().enumerate() {
+            shed[off + i] = s;
+        }
+        for (i, &a) in self.abandoned.iter().enumerate() {
+            abandoned[off + i] = a;
+        }
         let off = other.base - new_base;
         for (i, t) in other.ttft.iter().enumerate() {
             ttft[off + i].merge(t);
@@ -307,8 +359,16 @@ impl WindowedStats {
         for (i, &a) in other.arrived.iter().enumerate() {
             arrived[off + i] += a;
         }
+        for (i, &s) in other.shed.iter().enumerate() {
+            shed[off + i] += s;
+        }
+        for (i, &a) in other.abandoned.iter().enumerate() {
+            abandoned[off + i] += a;
+        }
         self.base = new_base;
         self.arrived = arrived;
+        self.shed = shed;
+        self.abandoned = abandoned;
         self.ttft = ttft;
     }
 }
@@ -325,6 +385,13 @@ pub struct MetricsCollector {
     pub windows: Option<WindowedStats>,
     /// Requests arriving before this instant are excluded from stats.
     pub warmup_time_ms: f64,
+    /// Closed-loop counters (all zero on open-loop runs): attempts
+    /// started, requests abandoned after exhausting retries, and
+    /// requests shed by admission control. Warmup-gated on the
+    /// request's *first* arrival, like every other stat.
+    pub n_attempts: usize,
+    pub n_abandoned: usize,
+    pub n_shed: usize,
 }
 
 impl MetricsCollector {
@@ -343,6 +410,9 @@ impl MetricsCollector {
             overall: LatencyStats::for_mode(mode, n_requests),
             windows: window_ms.map(|w| WindowedStats::new(w, mode)),
             warmup_time_ms,
+            n_attempts: 0,
+            n_abandoned: 0,
+            n_shed: 0,
         }
     }
 
@@ -378,6 +448,37 @@ impl MetricsCollector {
         self.overall.record(wait_ms, ttft_ms, e2e_ms);
         if let Some(w) = &mut self.windows {
             w.record_served(arrival_ms, ttft_ms);
+        }
+    }
+
+    /// Count one attempt of a request that first arrived at
+    /// `first_arrival_ms` (closed-loop runs; retries make this exceed
+    /// the request count — the retry-amplification numerator).
+    pub fn record_attempt(&mut self, first_arrival_ms: f64) {
+        if self.measured(first_arrival_ms) {
+            self.n_attempts += 1;
+        }
+    }
+
+    /// Count a request abandoned after its last allowed attempt.
+    pub fn record_abandoned(&mut self, first_arrival_ms: f64) {
+        if !self.measured(first_arrival_ms) {
+            return;
+        }
+        self.n_abandoned += 1;
+        if let Some(w) = &mut self.windows {
+            w.record_abandoned(first_arrival_ms);
+        }
+    }
+
+    /// Count a request shed (terminally) by admission control.
+    pub fn record_shed(&mut self, first_arrival_ms: f64) {
+        if !self.measured(first_arrival_ms) {
+            return;
+        }
+        self.n_shed += 1;
+        if let Some(w) = &mut self.windows {
+            w.record_shed(first_arrival_ms);
         }
     }
 
@@ -431,6 +532,16 @@ pub struct DesResult {
     /// 0 when every request was served. Diagnostic — `meets_slo` fails
     /// on any unserved request regardless of this value.
     pub max_unserved_wait_ms: f64,
+    /// Closed-loop only: attempts started for measured requests
+    /// (retries inflate this past the request count). 0 on open-loop
+    /// runs.
+    pub n_attempts: usize,
+    /// Closed-loop only: measured requests that timed out on their
+    /// last allowed attempt (the client gave up).
+    pub n_abandoned: usize,
+    /// Closed-loop only: measured requests terminally rejected by
+    /// admission control (bounded queue or open circuit breaker).
+    pub n_shed: usize,
     /// Per-window TTFT series when `DesConfig::window_ms` was set.
     pub windows: Option<WindowedStats>,
 }
@@ -461,9 +572,18 @@ impl DesResult {
             // which also hides unserved backlogs from the scan): with
             // real traffic the check is undefined, and undefined must
             // not read as passing. A zero-request run passes vacuously.
-            return self.n_requests == 0;
+            return self.n_requests == 0
+                && self.n_abandoned == 0
+                && self.n_shed == 0;
         }
-        self.n_unserved == 0 && self.overall.p99_ttft() <= slo_ms
+        // Closed-loop runs measure first-attempt-to-final-success
+        // latency (waits/TTFT are against the *first* arrival), and
+        // a request whose final answer was "give up" or "go away"
+        // fails the SLO no matter how fast the answer came.
+        self.n_unserved == 0
+            && self.n_abandoned == 0
+            && self.n_shed == 0
+            && self.overall.p99_ttft() <= slo_ms
     }
 
     /// Windowed SLO check: every window must meet the SLO (the
@@ -476,12 +596,20 @@ impl DesResult {
         }
     }
 
+    /// Measured requests that reached *any* terminal answer or were
+    /// stranded: served + abandoned + shed + unserved. The attainment
+    /// and retry-amplification denominator.
+    pub fn n_measured(&self) -> usize {
+        self.overall.count + self.n_unserved + self.n_abandoned + self.n_shed
+    }
+
     /// Fraction of requests with TTFT <= slo (the "99.98%" style numbers
     /// in Table 5). Exact in exact metrics mode; within one sketch bin in
-    /// streaming mode. Unserved requests count against attainment (they
-    /// are in the denominator); NaN when nothing was measured at all.
+    /// streaming mode. Unserved, abandoned, and shed requests count
+    /// against attainment (they are in the denominator); NaN when
+    /// nothing was measured at all.
     pub fn attainment(&self, slo_ms: f64) -> f64 {
-        let denom = self.overall.count + self.n_unserved;
+        let denom = self.n_measured();
         if denom == 0 {
             return f64::NAN;
         }
@@ -492,6 +620,43 @@ impl DesResult {
                 * self.overall.count as f64
         };
         served_le / denom as f64
+    }
+
+    /// Useful work per second: requests *served to completion* over
+    /// the horizon. Open-loop runs have goodput == throughput.
+    pub fn goodput_rps(&self) -> f64 {
+        if self.horizon_ms <= 0.0 {
+            return 0.0;
+        }
+        self.overall.count as f64 / (self.horizon_ms / 1000.0)
+    }
+
+    /// Offered work per second: *attempts* over the horizon (each
+    /// retry is another unit of offered load). Falls back to the
+    /// served count on open-loop runs, where attempts are not
+    /// tracked and every request is exactly one attempt.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.horizon_ms <= 0.0 {
+            return 0.0;
+        }
+        let offered =
+            if self.n_attempts > 0 { self.n_attempts } else {
+                self.overall.count
+            };
+        offered as f64 / (self.horizon_ms / 1000.0)
+    }
+
+    /// Attempts per measured request — 1.0 means no retries; a
+    /// sustained value above 1 after the triggering perturbation has
+    /// passed is the metastable retry-storm signature. 1.0 on
+    /// open-loop runs (attempts untracked) and when nothing was
+    /// measured.
+    pub fn retry_amplification(&self) -> f64 {
+        let denom = self.n_measured();
+        if self.n_attempts == 0 || denom == 0 {
+            return 1.0;
+        }
+        self.n_attempts as f64 / denom as f64
     }
 }
 
@@ -509,6 +674,9 @@ mod tests {
             n_events: 200,
             n_unserved: 0,
             max_unserved_wait_ms: 0.0,
+            n_attempts: 0,
+            n_abandoned: 0,
+            n_shed: 0,
             windows: None,
         }
     }
@@ -575,6 +743,74 @@ mod tests {
         dead.n_unserved = 50;
         assert_eq!(dead.attainment(500.0), 0.0);
         assert!(!dead.meets_slo(500.0));
+    }
+
+    #[test]
+    fn closed_loop_counters_poison_slo_and_feed_amplification() {
+        let mut r = empty_result();
+        for _ in 0..90 {
+            r.overall.record(0.0, 10.0, 15.0);
+        }
+        r.n_abandoned = 6;
+        r.n_shed = 4;
+        r.n_attempts = 150;
+        // Served P99 is fine, but 10 requests got a terminal "no".
+        assert!(!r.meets_slo(500.0));
+        assert_eq!(r.n_measured(), 100);
+        assert!((r.attainment(500.0) - 0.90).abs() < 1e-12);
+        assert!((r.retry_amplification() - 1.5).abs() < 1e-12);
+        // horizon 1000 ms: goodput 90 rps, throughput 150 rps.
+        assert!((r.goodput_rps() - 90.0).abs() < 1e-9);
+        assert!((r.throughput_rps() - 150.0).abs() < 1e-9);
+        r.n_abandoned = 0;
+        r.n_shed = 0;
+        assert!(r.meets_slo(500.0));
+    }
+
+    #[test]
+    fn open_loop_results_report_unit_amplification() {
+        let mut r = empty_result();
+        for _ in 0..50 {
+            r.overall.record(0.0, 10.0, 15.0);
+        }
+        assert_eq!(r.retry_amplification(), 1.0);
+        assert!((r.goodput_rps() - r.throughput_rps()).abs() < 1e-12);
+        assert_eq!(empty_result().retry_amplification(), 1.0);
+    }
+
+    #[test]
+    fn windowed_shed_and_abandoned_fail_their_window_only() {
+        for mode in [MetricsMode::Exact, MetricsMode::Streaming] {
+            let mut w = WindowedStats::new(1000.0, mode);
+            // Window 0: clean.
+            w.record_arrival(100.0);
+            w.record_served(100.0, 50.0);
+            // Window 1: one served, one shed, one abandoned.
+            for t in [1100.0, 1200.0, 1300.0] {
+                w.record_arrival(t);
+            }
+            w.record_served(1100.0, 50.0);
+            w.record_shed(1200.0);
+            w.record_abandoned(1300.0);
+            assert_eq!(w.n_shed(1), 1);
+            assert_eq!(w.n_abandoned(1), 1);
+            // Shed/abandoned are terminal, not "unserved".
+            assert_eq!(w.n_unserved(1), 0);
+            assert!(w.meets_slo(0, 500.0), "{mode:?}");
+            assert!(!w.meets_slo(1, 500.0), "{mode:?}");
+            // They count against window attainment: 1 of 3 attained.
+            assert!((w.attainment(1, 500.0) - 1.0 / 3.0).abs() < 1e-12);
+
+            // Shard-merge carries the counters through re-anchoring.
+            let mut early = WindowedStats::new(1000.0, mode);
+            early.record_arrival(100.0);
+            early.record_served(100.0, 10.0);
+            let mut m = w.clone();
+            m.merge(&early);
+            assert_eq!(m.n_shed(1), 1);
+            assert_eq!(m.n_abandoned(1), 1);
+            assert_eq!(m.n_arrived(0), 2);
+        }
     }
 
     #[test]

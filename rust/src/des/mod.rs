@@ -14,4 +14,5 @@ pub mod input;
 pub mod metrics;
 pub mod pool;
 pub mod reference;
+pub mod retry;
 pub mod shard;

@@ -22,6 +22,7 @@ use crate::des::faults::CompiledFaults;
 use crate::des::input::{ArrivalsSource, ConfigError, SimInput};
 use crate::des::metrics::{DesResult, MetricsCollector, PoolResult};
 use crate::des::pool::DesPool;
+use crate::des::retry::{ClosedLoopState, Phase, RetryConfig};
 use crate::router::{RouteRequest, RoutingPolicy};
 use crate::workload::rng::Pcg64;
 use crate::workload::spec::SampledRequest;
@@ -114,6 +115,178 @@ fn drain_queue(
     }
 }
 
+/// Closed-loop mirror of `try_admit`: same slot selection and timing
+/// math, plus the attempt-deadline check (see
+/// `crate::des::engine::try_admit_closed`, which this pins).
+#[allow(clippy::too_many_arguments)]
+fn try_admit_closed(
+    pools: &mut [DesPool],
+    pool_idx: usize,
+    req_id: u32,
+    reqs: &[RefReq],
+    now: f64,
+    events: &mut EventQueue,
+    cap_window: &Option<CapWindow>,
+    faults: Option<&CompiledFaults>,
+    metrics: &mut MetricsCollector,
+    closed: &mut ClosedLoopState,
+) -> bool {
+    let eff = eff_cap(cap_window, &pools[pool_idx], now);
+    let pool = &mut pools[pool_idx];
+    let mut best: Option<(usize, u32)> = None;
+    for (i, inst) in pool.instances.iter().enumerate() {
+        if faults.is_some_and(|f| f.is_down(pool_idx, i, now)) {
+            continue;
+        }
+        if inst.busy < eff {
+            let free = eff - inst.busy;
+            if best.map_or(true, |(_, bf)| free > bf) {
+                best = Some((i, free));
+            }
+        }
+    }
+    let Some((inst, _)) = best else { return false };
+    pool.acquire(inst, now);
+    let req = &reqs[req_id as usize];
+    let n_at_admit = pool.instances[inst].busy as f64;
+    let slow = faults.map_or(1.0, |f| f.slowdown(pool_idx, inst, now));
+    let t_iter = pool.gpu.t_iter(n_at_admit) * slow;
+    let hold = pool.gpu.iters(req.l_in, req.l_out) * t_iter;
+    let st = &mut closed.states[req_id as usize];
+    st.instance = inst as u16;
+    if now + hold <= st.deadline_ms {
+        st.phase = Phase::InFlight;
+        events.push(
+            now + hold,
+            EventKind::Completion {
+                req: req_id,
+                pool: pool_idx as u16,
+                instance: inst as u16,
+            },
+        );
+        let first = st.first_arrival_ms;
+        let wait = now - first;
+        let prefill = (req.l_in / pool.gpu.chunk).ceil() * t_iter;
+        let ttft = wait + prefill + t_iter;
+        let e2e = wait + hold;
+        metrics.record(pool_idx, first, wait, ttft, e2e);
+    } else {
+        st.phase = Phase::Doomed;
+    }
+    true
+}
+
+/// Closed-loop mirror of `crate::des::engine::start_attempt`.
+#[allow(clippy::too_many_arguments)]
+fn start_attempt(
+    pools: &mut [DesPool],
+    req_id: u32,
+    reqs: &[RefReq],
+    now: f64,
+    events: &mut EventQueue,
+    cap_window: &Option<CapWindow>,
+    faults: Option<&CompiledFaults>,
+    metrics: &mut MetricsCollector,
+    closed: &mut ClosedLoopState,
+) {
+    let (pool_idx, first, attempt) = {
+        let st = &closed.states[req_id as usize];
+        (st.pool as usize, st.first_arrival_ms, st.attempt)
+    };
+    metrics.record_attempt(first);
+    if closed.breaker_is_open(pool_idx) {
+        closed.states[req_id as usize].phase = Phase::Done;
+        metrics.record_shed(first);
+        return;
+    }
+    let deadline = closed.deadline_after(now);
+    closed.states[req_id as usize].deadline_ms = deadline;
+    if try_admit_closed(
+        pools, pool_idx, req_id, reqs, now, events, cap_window, faults,
+        metrics, closed,
+    ) {
+        if closed.states[req_id as usize].phase == Phase::Doomed {
+            events.push(
+                deadline,
+                EventKind::Timeout {
+                    req: req_id,
+                    pool: pool_idx as u16,
+                    attempt,
+                },
+            );
+        }
+        return;
+    }
+    let bound = closed.queue_bound();
+    if bound > 0 && pools[pool_idx].queue.len() >= bound {
+        closed.states[req_id as usize].phase = Phase::Done;
+        metrics.record_shed(first);
+        return;
+    }
+    closed.states[req_id as usize].phase = Phase::Queued;
+    pools[pool_idx].enqueue(req_id);
+    if deadline.is_finite() {
+        events.push(
+            deadline,
+            EventKind::Timeout {
+                req: req_id,
+                pool: pool_idx as u16,
+                attempt,
+            },
+        );
+    }
+    let len = pools[pool_idx].queue.len();
+    closed.note_queue_len(pool_idx, len);
+}
+
+/// Closed-loop mirror of `crate::des::engine::abandon_or_retry`.
+fn abandon_or_retry(
+    req_id: u32,
+    now: f64,
+    events: &mut EventQueue,
+    metrics: &mut MetricsCollector,
+    closed: &mut ClosedLoopState,
+) {
+    let st = closed.states[req_id as usize];
+    if st.attempt < closed.max_attempts() {
+        closed.states[req_id as usize].phase = Phase::Backoff;
+        let delay = closed.backoff_after(st.global_id, st.attempt);
+        events.push(
+            now + delay,
+            EventKind::Retry { req: req_id, pool: st.pool },
+        );
+    } else {
+        closed.states[req_id as usize].phase = Phase::Done;
+        metrics.record_abandoned(st.first_arrival_ms);
+    }
+}
+
+/// Closed-loop mirror of `crate::des::engine::drain_queue_closed`.
+#[allow(clippy::too_many_arguments)]
+fn drain_queue_closed(
+    pools: &mut [DesPool],
+    pool_idx: usize,
+    reqs: &[RefReq],
+    now: f64,
+    events: &mut EventQueue,
+    cap_window: &Option<CapWindow>,
+    faults: Option<&CompiledFaults>,
+    metrics: &mut MetricsCollector,
+    closed: &mut ClosedLoopState,
+) {
+    while let Some(&head) = pools[pool_idx].queue.front() {
+        if !try_admit_closed(
+            pools, pool_idx, head, reqs, now, events, cap_window, faults,
+            metrics, closed,
+        ) {
+            break;
+        }
+        pools[pool_idx].queue.pop_front();
+        let len = pools[pool_idx].queue.len();
+        closed.note_queue_len(pool_idx, len);
+    }
+}
+
 /// Run the reference simulator on an explicit, time-ordered request
 /// stream. Honors `config.metrics` so both exact and streaming
 /// collection can be compared bit-for-bit against the production engine.
@@ -143,7 +316,7 @@ pub fn run_reference_input(
     match input.arrivals {
         ArrivalsSource::Stream(sampled) => Ok(run_core(
             input.pools, input.router, input.config, sampled,
-            faults.as_ref(),
+            faults.as_ref(), input.retries,
         )),
         ArrivalsSource::Generator(w) => {
             let sampled = w.sample_requests(
@@ -151,7 +324,7 @@ pub fn run_reference_input(
             );
             Ok(run_core(
                 input.pools, input.router, input.config, &sampled,
-                faults.as_ref(),
+                faults.as_ref(), input.retries,
             ))
         }
     }
@@ -163,9 +336,13 @@ fn run_core(
     config: &DesConfig,
     sampled: &[SampledRequest],
     faults: Option<&CompiledFaults>,
+    retries: Option<&RetryConfig>,
 ) -> DesResult {
     let n = sampled.len();
     let mut route_rng = Pcg64::new(config.seed, streams::ROUTING);
+    let mut closed: Option<ClosedLoopState> =
+        retries.map(|c| ClosedLoopState::new(c, config.seed,
+                                             pool_specs.len()));
     let mut pools: Vec<DesPool> = pool_specs
         .iter()
         .map(|p| {
@@ -243,24 +420,91 @@ fn run_core(
                 if decision.compressed {
                     n_compressed += 1;
                 }
-                if !try_admit(
+                if let Some(cl) = closed.as_mut() {
+                    cl.init_request(req as usize, u64::from(req), now);
+                    cl.states[req as usize].pool = decision.pool as u16;
+                    start_attempt(
+                        &mut pools, req, &reqs, now, &mut events,
+                        &config.cap_window, faults, &mut metrics, cl,
+                    );
+                } else if !try_admit(
                     &mut pools, decision.pool, req, &reqs, now, &mut events,
                     &config.cap_window, faults, &mut metrics,
                 ) {
                     pools[decision.pool].enqueue(req);
                 }
             }
-            EventKind::Completion { req: _, pool, instance } => {
+            EventKind::Completion { req, pool, instance } => {
                 pools[pool as usize].release(instance as usize, now);
-                drain_queue(
-                    &mut pools, pool as usize, &reqs, now, &mut events,
-                    &config.cap_window, faults, &mut metrics,
-                );
+                if let Some(cl) = closed.as_mut() {
+                    cl.states[req as usize].phase = Phase::Done;
+                    drain_queue_closed(
+                        &mut pools, pool as usize, &reqs, now, &mut events,
+                        &config.cap_window, faults, &mut metrics, cl,
+                    );
+                } else {
+                    drain_queue(
+                        &mut pools, pool as usize, &reqs, now, &mut events,
+                        &config.cap_window, faults, &mut metrics,
+                    );
+                }
             }
             EventKind::Drain { pool } => {
-                drain_queue(
-                    &mut pools, pool as usize, &reqs, now, &mut events,
-                    &config.cap_window, faults, &mut metrics,
+                if let Some(cl) = closed.as_mut() {
+                    drain_queue_closed(
+                        &mut pools, pool as usize, &reqs, now, &mut events,
+                        &config.cap_window, faults, &mut metrics, cl,
+                    );
+                } else {
+                    drain_queue(
+                        &mut pools, pool as usize, &reqs, now, &mut events,
+                        &config.cap_window, faults, &mut metrics,
+                    );
+                }
+            }
+            EventKind::Timeout { req, pool, attempt } => {
+                let cl = closed
+                    .as_mut()
+                    .expect("timeouts exist only in closed-loop runs");
+                let st = cl.states[req as usize];
+                if st.attempt != attempt {
+                    continue; // superseded by a later attempt
+                }
+                match st.phase {
+                    Phase::Queued => {
+                        let q = &mut pools[pool as usize].queue;
+                        if let Some(pos) = q.iter().position(|&r| r == req) {
+                            q.remove(pos);
+                        }
+                        let len = pools[pool as usize].queue.len();
+                        cl.note_queue_len(pool as usize, len);
+                        abandon_or_retry(
+                            req, now, &mut events, &mut metrics, cl,
+                        );
+                    }
+                    Phase::Doomed => {
+                        pools[pool as usize]
+                            .release(st.instance as usize, now);
+                        abandon_or_retry(
+                            req, now, &mut events, &mut metrics, cl,
+                        );
+                        drain_queue_closed(
+                            &mut pools, pool as usize, &reqs, now,
+                            &mut events, &config.cap_window, faults,
+                            &mut metrics, cl,
+                        );
+                    }
+                    _ => {}
+                }
+            }
+            EventKind::Retry { req, pool: _ } => {
+                let cl = closed
+                    .as_mut()
+                    .expect("retries exist only in closed-loop runs");
+                cl.states[req as usize].attempt += 1;
+                start_attempt(
+                    &mut pools, req, &reqs, now, &mut events,
+                    &config.cap_window, faults, &mut metrics, cl,
                 );
             }
         }
@@ -290,6 +534,9 @@ fn run_core(
         n_events,
         n_unserved,
         max_unserved_wait_ms: max_unserved_wait,
+        n_attempts: metrics.n_attempts,
+        n_abandoned: metrics.n_abandoned,
+        n_shed: metrics.n_shed,
         windows: metrics.windows,
     }
 }
@@ -362,5 +609,52 @@ mod tests {
         assert_eq!(a.overall.count, b.overall.count);
         assert_eq!(a.horizon_ms, b.horizon_ms);
         assert_eq!(a.n_events, b.n_events);
+    }
+
+    #[test]
+    fn reference_agrees_with_production_engine_under_retries() {
+        use crate::des::retry::{AdmissionSpec, RetryConfig, RetrySpec};
+        // Saturate a small fleet so timeouts, retries, doomed
+        // admissions, sheds, and the breaker all fire, then pin the
+        // two serial engines against each other bit for bit.
+        let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 200.0);
+        let gpu = GpuCatalog::standard().get("A100").unwrap().clone();
+        let pools = vec![
+            SimPool { gpu: gpu.clone(), n_gpus: 1, ctx_budget: 4096.0,
+                      batch_cap: None },
+            SimPool { gpu, n_gpus: 1, ctx_budget: 8192.0, batch_cap: None },
+        ];
+        let router = RoutingPolicy::Length { b_short: 4096.0 };
+        let cfg =
+            DesConfig { n_requests: 3_000, seed: 31, ..Default::default() };
+        let sampled = w.sample_requests(cfg.n_requests, cfg.seed);
+        let rc = RetryConfig {
+            retry: Some(RetrySpec {
+                max_attempts: 3,
+                timeout_ms: 2_000.0,
+                backoff_base_ms: 250.0,
+                backoff_cap_ms: 1_000.0,
+            }),
+            admission: Some(AdmissionSpec {
+                max_queue_depth: 64,
+                breaker_open_depth: 32,
+                breaker_close_depth: 8,
+            }),
+        };
+        let input = SimInput::stream(&pools, &router, &cfg, &sampled)
+            .with_retries(&rc);
+        let mut a = run_reference_input(&input).unwrap();
+        let mut b = Simulator::run_input(&input).unwrap();
+        assert_eq!(a.overall.p99_ttft(), b.overall.p99_ttft());
+        assert_eq!(a.overall.wait.p99(), b.overall.wait.p99());
+        assert_eq!(a.overall.count, b.overall.count);
+        assert_eq!(a.horizon_ms, b.horizon_ms);
+        assert_eq!(a.n_events, b.n_events);
+        assert_eq!(a.n_attempts, b.n_attempts);
+        assert_eq!(a.n_abandoned, b.n_abandoned);
+        assert_eq!(a.n_shed, b.n_shed);
+        // And the run actually exercised the closed loop.
+        assert!(a.n_attempts > 3_000);
+        assert!(a.n_abandoned + a.n_shed > 0);
     }
 }

@@ -1,0 +1,639 @@
+//! Closed-loop client behavior: deadlines, retries, and admission
+//! control (ISSUE 9 / the retry-storm metastability family).
+//!
+//! Open-loop clients wait forever, so the simulator could not express
+//! the most common real-fleet robustness failure: a transient overload
+//! that turns into a sustained outage because timed-out clients retry
+//! into an already-saturated fleet. This module adds the plain-data
+//! configuration ([`RetrySpec`], [`AdmissionSpec`], [`RetryConfig`])
+//! plus the deterministic backoff function and the per-request state
+//! machine shared by all three engines.
+//!
+//! # Execution model
+//!
+//! Everything here is gated on a [`RetryConfig`] being attached to the
+//! `SimInput` (`with_retries`): runs without one are bit-identical to
+//! the open-loop simulator, event for event.
+//!
+//! With a config attached, each *request* becomes a sequence of
+//! *attempts* against one pool (retries are sticky: they re-enter the
+//! pool the router originally chose, consuming no extra routing
+//! draws, so a request's whole lifecycle stays inside one shard):
+//!
+//! * **Deadlines.** Every attempt carries a client deadline
+//!   `start + timeout_ms`. A timed-out attempt abandons its queue slot
+//!   — and, if it was admitted too late to finish in time, its
+//!   in-flight decode keeps the GPU slot busy until the deadline
+//!   (wasted work, the mechanism behind retry-storm metastability).
+//! * **Retries.** A failed attempt (timeout or shed) retries up to
+//!   `max_attempts` total attempts, after an exponential backoff with
+//!   deterministic jitter: a pure function of
+//!   `(seed, request id, attempt)` via the named
+//!   [`workload::streams::RETRY`](crate::workload::streams::RETRY)
+//!   substream — bit-identical on every engine at every shard count.
+//! * **Admission control.** A pool may bound its queue depth
+//!   (arrivals beyond `max_queue_depth` are shed — terminal, clients
+//!   do not retry sheds into a pool that told them to go away until
+//!   the breaker half of the spec lets them) and may run a hysteretic
+//!   circuit breaker: the breaker opens when the queue reaches
+//!   `breaker_open_depth` and closes once it drains to
+//!   `breaker_close_depth`; while open, every new attempt is shed
+//!   immediately.
+//!
+//! Shed is terminal by design: a shed is the *server* telling the
+//! client to back off, and modelling it as instant cheap rejection is
+//! exactly what lets the breaker regime recover in the `retry_storm`
+//! scenario. A timeout, by contrast, is the *client* giving up, and
+//! does retry.
+
+use crate::des::input::ConfigError;
+use crate::workload::rng::Pcg64;
+use crate::workload::streams;
+
+/// Salt mixed into the user seed for backoff jitter so the retry
+/// stream never correlates with workload, routing, or fault draws at
+/// the same seed (mirrors `FAULT_SEED_SALT` in `des::faults`).
+const RETRY_SEED_SALT: u64 = 0x517c_c1b7_2722_0a95;
+
+/// Client-side retry/timeout policy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetrySpec {
+    /// Total attempts per request (1 = timeout only, no retries).
+    pub max_attempts: u32,
+    /// Client deadline per attempt, ms after the attempt starts.
+    pub timeout_ms: f64,
+    /// First backoff interval; attempt `a` (1-based) waits
+    /// `min(cap, base * 2^(a-1))` scaled by jitter in `[0.5, 1.5)`.
+    pub backoff_base_ms: f64,
+    /// Ceiling on the exponential backoff interval.
+    pub backoff_cap_ms: f64,
+}
+
+/// Server-side admission policy for every pool. Zero values disable
+/// the corresponding mechanism.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AdmissionSpec {
+    /// Shed arrivals once the pool queue holds this many requests
+    /// (0 = unbounded queue).
+    pub max_queue_depth: usize,
+    /// Open the circuit breaker when the queue reaches this depth
+    /// (0 = no breaker).
+    pub breaker_open_depth: usize,
+    /// Close the breaker once the queue drains to this depth; must be
+    /// strictly below `breaker_open_depth` (hysteresis).
+    pub breaker_close_depth: usize,
+}
+
+/// The closed-loop configuration attached to a `SimInput` via
+/// `with_retries`. At least one of the two specs must be present.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RetryConfig {
+    pub retry: Option<RetrySpec>,
+    pub admission: Option<AdmissionSpec>,
+}
+
+/// Deterministic backoff interval before attempt `attempt + 1` of the
+/// request with global id `global_id`: exponential in the attempt
+/// number, capped, with jitter in `[0.5, 1.5)` drawn from a fresh
+/// [`streams::RETRY`] generator keyed on `(seed, global_id, attempt)`.
+/// A pure function — no engine state, no draw-order coupling — which
+/// is what makes retry schedules bit-identical across engines and
+/// shard counts.
+pub fn backoff_ms(
+    seed: u64,
+    global_id: u64,
+    attempt: u32,
+    spec: &RetrySpec,
+) -> f64 {
+    let exp = attempt.saturating_sub(1).min(63);
+    let base = (spec.backoff_base_ms * (1u64 << exp) as f64)
+        .min(spec.backoff_cap_ms);
+    let mix = global_id
+        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        .wrapping_add(u64::from(attempt).wrapping_mul(0xbf58_476d_1ce4_e5b9));
+    let mut rng = Pcg64::new(
+        seed.wrapping_add(RETRY_SEED_SALT) ^ mix,
+        streams::RETRY,
+    );
+    base * (0.5 + rng.uniform())
+}
+
+impl RetryConfig {
+    /// Check the config. Run automatically by every `SimInput`-based
+    /// entry point when a config is attached.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let bad = |msg: String| Err(ConfigError::InvalidRetries(msg));
+        if self.retry.is_none() && self.admission.is_none() {
+            return bad(
+                "at least one of [retry] or [admission] is required"
+                    .to_string(),
+            );
+        }
+        if let Some(r) = &self.retry {
+            if r.max_attempts == 0 {
+                return bad("max_attempts must be >= 1".to_string());
+            }
+            if !(r.timeout_ms.is_finite() && r.timeout_ms > 0.0) {
+                return bad(format!(
+                    "timeout_ms {} must be finite and > 0",
+                    r.timeout_ms
+                ));
+            }
+            if !(r.backoff_base_ms.is_finite() && r.backoff_base_ms >= 0.0) {
+                return bad(format!(
+                    "backoff_base_ms {} invalid",
+                    r.backoff_base_ms
+                ));
+            }
+            if !(r.backoff_cap_ms.is_finite()
+                && r.backoff_cap_ms >= r.backoff_base_ms)
+            {
+                return bad(format!(
+                    "backoff_cap_ms {} must be finite and >= \
+                     backoff_base_ms {}",
+                    r.backoff_cap_ms, r.backoff_base_ms
+                ));
+            }
+        }
+        if let Some(a) = &self.admission {
+            if a.max_queue_depth == 0 && a.breaker_open_depth == 0 {
+                return bad(
+                    "admission spec enables nothing (max_queue_depth \
+                     and breaker_open_depth are both 0)"
+                        .to_string(),
+                );
+            }
+            if a.breaker_open_depth == 0 && a.breaker_close_depth != 0 {
+                return bad(format!(
+                    "breaker_close_depth {} without breaker_open_depth",
+                    a.breaker_close_depth
+                ));
+            }
+            if a.breaker_open_depth > 0
+                && a.breaker_close_depth >= a.breaker_open_depth
+            {
+                return bad(format!(
+                    "breaker_close_depth {} must be < \
+                     breaker_open_depth {} (hysteresis)",
+                    a.breaker_close_depth, a.breaker_open_depth
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse a retry config from the shipped TOML subset: `[retry]`
+    /// and `[admission]` sections with `key = value` lines and `#`
+    /// comments (see `data/retry/example.toml`). Hand-rolled like
+    /// `FaultScript::from_toml_str` — the build is offline and vendors
+    /// no TOML crate.
+    pub fn from_toml_str(text: &str) -> Result<Self, ConfigError> {
+        enum Section {
+            None,
+            Retry,
+            Admission,
+        }
+        let bad = |line: usize, msg: String| {
+            Err(ConfigError::InvalidRetries(format!(
+                "retry config line {line}: {msg}"
+            )))
+        };
+        let mut cfg = RetryConfig::default();
+        let mut section = Section::None;
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = match raw.split_once('#') {
+                Some((head, _)) => head.trim(),
+                None => raw.trim(),
+            };
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) =
+                line.strip_prefix('[').and_then(|l| l.strip_suffix(']'))
+            {
+                section = match name.trim() {
+                    "retry" => {
+                        if cfg.retry.is_some() {
+                            return bad(
+                                lineno,
+                                "duplicate [retry] section".to_string(),
+                            );
+                        }
+                        cfg.retry = Some(RetrySpec {
+                            max_attempts: 1,
+                            timeout_ms: f64::NAN,
+                            backoff_base_ms: 0.0,
+                            backoff_cap_ms: f64::NAN,
+                        });
+                        Section::Retry
+                    }
+                    "admission" => {
+                        if cfg.admission.is_some() {
+                            return bad(
+                                lineno,
+                                "duplicate [admission] section".to_string(),
+                            );
+                        }
+                        cfg.admission = Some(AdmissionSpec::default());
+                        Section::Admission
+                    }
+                    other => {
+                        return bad(
+                            lineno,
+                            format!("unknown section [{other}]"),
+                        )
+                    }
+                };
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                return bad(lineno, format!("expected key = value: {line}"));
+            };
+            let (key, value) = (key.trim(), value.trim());
+            let num = || -> Result<f64, ConfigError> {
+                value.parse::<f64>().map_err(|_| {
+                    ConfigError::InvalidRetries(format!(
+                        "retry config line {lineno}: {key} = {value} is \
+                         not a number"
+                    ))
+                })
+            };
+            let int = || -> Result<usize, ConfigError> {
+                value.parse::<usize>().map_err(|_| {
+                    ConfigError::InvalidRetries(format!(
+                        "retry config line {lineno}: {key} = {value} is \
+                         not a non-negative integer"
+                    ))
+                })
+            };
+            match section {
+                Section::None => {
+                    return bad(
+                        lineno,
+                        format!(
+                            "{key} outside a [retry]/[admission] section"
+                        ),
+                    )
+                }
+                Section::Retry => {
+                    let r = cfg.retry.as_mut().expect("pushed");
+                    match key {
+                        "max_attempts" => {
+                            r.max_attempts = int()?.min(u32::MAX as usize)
+                                as u32
+                        }
+                        "timeout_ms" => r.timeout_ms = num()?,
+                        "backoff_base_ms" => r.backoff_base_ms = num()?,
+                        "backoff_cap_ms" => r.backoff_cap_ms = num()?,
+                        other => {
+                            return bad(
+                                lineno,
+                                format!("unknown retry key {other}"),
+                            )
+                        }
+                    }
+                }
+                Section::Admission => {
+                    let a = cfg.admission.as_mut().expect("pushed");
+                    match key {
+                        "max_queue_depth" => a.max_queue_depth = int()?,
+                        "breaker_open_depth" => {
+                            a.breaker_open_depth = int()?
+                        }
+                        "breaker_close_depth" => {
+                            a.breaker_close_depth = int()?
+                        }
+                        other => {
+                            return bad(
+                                lineno,
+                                format!("unknown admission key {other}"),
+                            )
+                        }
+                    }
+                }
+            }
+        }
+        if let Some(r) = &mut cfg.retry {
+            if r.timeout_ms.is_nan() {
+                return Err(ConfigError::InvalidRetries(
+                    "[retry]: timeout_ms is required".to_string(),
+                ));
+            }
+            if r.backoff_cap_ms.is_nan() {
+                r.backoff_cap_ms = r.backoff_base_ms;
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// Attempt lifecycle of one request under a [`RetryConfig`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Phase {
+    /// Waiting in a pool queue.
+    Queued,
+    /// Admitted and on track to complete before its deadline.
+    InFlight,
+    /// Admitted but mathematically unable to finish before the
+    /// deadline: the slot stays busy (wasted work) until the timeout
+    /// event releases it.
+    Doomed,
+    /// Timed out / waiting out a backoff before the next attempt.
+    Backoff,
+    /// Terminal: served, abandoned, or shed.
+    Done,
+}
+
+/// Per-request closed-loop state, indexed by the engine's request id
+/// (stream index on the serial engines, arena slot on the sharded
+/// one — `global_id` carries the stream-global id in either case so
+/// backoff draws agree everywhere).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct ReqState {
+    pub global_id: u64,
+    pub first_arrival_ms: f64,
+    pub deadline_ms: f64,
+    /// 1-based attempt counter.
+    pub attempt: u32,
+    pub pool: u16,
+    pub instance: u16,
+    pub phase: Phase,
+}
+
+/// The engine-side closed-loop machine: owned config, per-request
+/// states, and per-pool breaker flags. Engines consult it at arrival,
+/// admission, timeout, and retry time; every decision is a pure
+/// function of `(config, seed, request, queue length)`, which keeps
+/// the three engines bit-identical.
+#[derive(Debug, Clone)]
+pub(crate) struct ClosedLoopState {
+    pub cfg: RetryConfig,
+    pub seed: u64,
+    pub states: Vec<ReqState>,
+    pub breaker_open: Vec<bool>,
+}
+
+impl ClosedLoopState {
+    pub fn new(cfg: &RetryConfig, seed: u64, n_pools: usize) -> Self {
+        ClosedLoopState {
+            cfg: cfg.clone(),
+            seed,
+            states: Vec::new(),
+            breaker_open: vec![false; n_pools],
+        }
+    }
+
+    /// (Re)initialize the state slot for a request starting attempt 1.
+    pub fn init_request(
+        &mut self,
+        id: usize,
+        global_id: u64,
+        arrival_ms: f64,
+    ) {
+        if self.states.len() <= id {
+            self.states.resize(
+                id + 1,
+                ReqState {
+                    global_id: 0,
+                    first_arrival_ms: 0.0,
+                    deadline_ms: f64::INFINITY,
+                    attempt: 1,
+                    pool: 0,
+                    instance: 0,
+                    phase: Phase::Done,
+                },
+            );
+        }
+        self.states[id] = ReqState {
+            global_id,
+            first_arrival_ms: arrival_ms,
+            deadline_ms: f64::INFINITY,
+            attempt: 1,
+            pool: 0,
+            instance: 0,
+            phase: Phase::Done,
+        };
+    }
+
+    /// Deadline for an attempt starting at `now`: infinite when no
+    /// retry spec is attached (admission-only configs time nothing
+    /// out, and no timeout event is ever scheduled).
+    pub fn deadline_after(&self, now: f64) -> f64 {
+        match &self.cfg.retry {
+            Some(r) => now + r.timeout_ms,
+            None => f64::INFINITY,
+        }
+    }
+
+    pub fn max_attempts(&self) -> u32 {
+        self.cfg.retry.as_ref().map_or(1, |r| r.max_attempts)
+    }
+
+    /// Backoff before the attempt after `attempt`, for the request
+    /// with stream-global id `global_id`.
+    pub fn backoff_after(&self, global_id: u64, attempt: u32) -> f64 {
+        let spec = self.cfg.retry.as_ref().expect("retries enabled");
+        backoff_ms(self.seed, global_id, attempt, spec)
+    }
+
+    /// Queue-depth bound (0 = unbounded).
+    pub fn queue_bound(&self) -> usize {
+        self.cfg.admission.as_ref().map_or(0, |a| a.max_queue_depth)
+    }
+
+    pub fn breaker_is_open(&self, pool: usize) -> bool {
+        self.breaker_open[pool]
+    }
+
+    /// Hysteresis update after a queue-length change: opens at
+    /// `>= breaker_open_depth` (on growth), closes at
+    /// `<= breaker_close_depth` (on drain). Called with the queue
+    /// length *after* every enqueue and dequeue, in event order, so
+    /// every engine sees the identical open/close history.
+    pub fn note_queue_len(&mut self, pool: usize, len: usize) {
+        let Some(a) = &self.cfg.admission else { return };
+        if a.breaker_open_depth == 0 {
+            return;
+        }
+        let open = &mut self.breaker_open[pool];
+        if !*open && len >= a.breaker_open_depth {
+            *open = true;
+        } else if *open && len <= a.breaker_close_depth {
+            *open = false;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> RetrySpec {
+        RetrySpec {
+            max_attempts: 4,
+            timeout_ms: 8_000.0,
+            backoff_base_ms: 1_000.0,
+            backoff_cap_ms: 8_000.0,
+        }
+    }
+
+    #[test]
+    fn backoff_is_a_pure_function_with_bounded_jitter() {
+        let s = spec();
+        for attempt in 1..=6u32 {
+            let nominal = (1_000.0 * (1u64 << (attempt - 1)) as f64)
+                .min(8_000.0);
+            for id in [0u64, 1, 17, 1 << 40] {
+                let a = backoff_ms(42, id, attempt, &s);
+                let b = backoff_ms(42, id, attempt, &s);
+                assert_eq!(a.to_bits(), b.to_bits(), "pure function");
+                assert!(
+                    a >= 0.5 * nominal && a < 1.5 * nominal,
+                    "attempt {attempt} id {id}: {a} vs nominal {nominal}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn backoff_varies_with_request_seed_and_attempt() {
+        let s = spec();
+        let base = backoff_ms(42, 7, 1, &s);
+        assert_ne!(base.to_bits(), backoff_ms(42, 8, 1, &s).to_bits());
+        assert_ne!(base.to_bits(), backoff_ms(43, 7, 1, &s).to_bits());
+        assert_ne!(base.to_bits(), backoff_ms(42, 7, 2, &s).to_bits());
+    }
+
+    #[test]
+    fn validate_rejects_bad_configs() {
+        assert!(RetryConfig::default().validate().is_err());
+        let mut c = RetryConfig {
+            retry: Some(spec()),
+            admission: None,
+        };
+        assert!(c.validate().is_ok());
+        c.retry.as_mut().unwrap().max_attempts = 0;
+        assert!(matches!(
+            c.validate(),
+            Err(ConfigError::InvalidRetries(_))
+        ));
+        let c = RetryConfig {
+            retry: Some(RetrySpec { timeout_ms: 0.0, ..spec() }),
+            admission: None,
+        };
+        assert!(c.validate().is_err());
+        let c = RetryConfig {
+            retry: Some(RetrySpec {
+                backoff_cap_ms: 10.0,
+                backoff_base_ms: 100.0,
+                ..spec()
+            }),
+            admission: None,
+        };
+        assert!(c.validate().is_err(), "cap below base");
+        let c = RetryConfig {
+            retry: None,
+            admission: Some(AdmissionSpec::default()),
+        };
+        assert!(c.validate().is_err(), "admission enabling nothing");
+        let c = RetryConfig {
+            retry: None,
+            admission: Some(AdmissionSpec {
+                max_queue_depth: 0,
+                breaker_open_depth: 8,
+                breaker_close_depth: 8,
+            }),
+        };
+        assert!(c.validate().is_err(), "no hysteresis gap");
+    }
+
+    #[test]
+    fn toml_round_trips_both_sections() {
+        let text = "\
+# closed-loop example
+[retry]
+max_attempts = 4
+timeout_ms = 8000    # client deadline
+backoff_base_ms = 1000
+backoff_cap_ms = 8000
+
+[admission]
+max_queue_depth = 64
+breaker_open_depth = 32
+breaker_close_depth = 8
+";
+        let c = RetryConfig::from_toml_str(text).unwrap();
+        assert_eq!(c.retry.as_ref().unwrap(), &spec());
+        assert_eq!(
+            c.admission.as_ref().unwrap(),
+            &AdmissionSpec {
+                max_queue_depth: 64,
+                breaker_open_depth: 32,
+                breaker_close_depth: 8,
+            }
+        );
+    }
+
+    #[test]
+    fn toml_defaults_cap_to_base_and_requires_timeout() {
+        let c = RetryConfig::from_toml_str(
+            "[retry]\ntimeout_ms = 500\nbackoff_base_ms = 100",
+        )
+        .unwrap();
+        let r = c.retry.unwrap();
+        assert_eq!(r.max_attempts, 1);
+        assert_eq!(r.backoff_cap_ms, 100.0);
+        assert!(RetryConfig::from_toml_str("[retry]\nmax_attempts = 2")
+            .is_err());
+    }
+
+    #[test]
+    fn toml_rejects_malformed_input() {
+        assert!(RetryConfig::from_toml_str("timeout_ms = 5").is_err());
+        assert!(RetryConfig::from_toml_str("[explosion]").is_err());
+        assert!(RetryConfig::from_toml_str(
+            "[retry]\ntimeout_ms = abc"
+        )
+        .is_err());
+        assert!(RetryConfig::from_toml_str(
+            "[retry]\ntimeout_ms = 5\n[retry]\ntimeout_ms = 5"
+        )
+        .is_err());
+        assert!(RetryConfig::from_toml_str(
+            "[admission]\nwat = 1"
+        )
+        .is_err());
+        assert!(RetryConfig::from_toml_str("").is_err());
+    }
+
+    #[test]
+    fn breaker_hysteresis_opens_high_closes_low() {
+        let cfg = RetryConfig {
+            retry: None,
+            admission: Some(AdmissionSpec {
+                max_queue_depth: 0,
+                breaker_open_depth: 4,
+                breaker_close_depth: 1,
+            }),
+        };
+        let mut s = ClosedLoopState::new(&cfg, 1, 1);
+        for len in [1usize, 2, 3] {
+            s.note_queue_len(0, len);
+            assert!(!s.breaker_is_open(0), "len {len}");
+        }
+        s.note_queue_len(0, 4);
+        assert!(s.breaker_is_open(0));
+        // Stays open through the hysteresis band...
+        for len in [3usize, 2] {
+            s.note_queue_len(0, len);
+            assert!(s.breaker_is_open(0), "len {len}");
+        }
+        // ...and closes only at the close depth.
+        s.note_queue_len(0, 1);
+        assert!(!s.breaker_is_open(0));
+        s.note_queue_len(0, 4);
+        assert!(s.breaker_is_open(0), "reopens on the next spike");
+    }
+}

@@ -53,13 +53,15 @@
 use std::sync::mpsc;
 use std::sync::Arc;
 
-use crate::des::engine::{try_admit, DesConfig, Req, SimPool};
+use crate::des::engine::{abandon_or_retry, drain_queue_closed,
+                         start_attempt, try_admit, DesConfig, Req, SimPool};
 use crate::des::event::{CalendarQueue, EventKind};
 use crate::des::faults::CompiledFaults;
 use crate::des::input::{ArrivalsSource, ConfigError, SimInput};
 use crate::des::metrics::{DesResult, LatencyStats, MetricsCollector,
                           PoolResult, WindowedStats};
 use crate::des::pool::DesPool;
+use crate::des::retry::{ClosedLoopState, Phase, RetryConfig};
 use crate::router::{RouteRequest, RoutingPolicy};
 use crate::workload::generator::RequestGenerator;
 use crate::workload::rng::Pcg64;
@@ -137,6 +139,15 @@ struct ShardSim<'a> {
     n_events: usize,
     n_compressed: usize,
     horizon: f64,
+    /// Closed-loop state, indexed by *arena slot*; present iff a retry
+    /// config is attached. In closed-loop mode arena slots are held
+    /// until the request is terminal (served/abandoned/shed), because
+    /// timeout and retry events read the request back.
+    closed: Option<ClosedLoopState>,
+    /// Stream-global arrival counter: every shard sees every arrival,
+    /// so this is the serial engines' stream index — the id backoff
+    /// jitter is keyed on, making retry schedules shard-invariant.
+    global_arrivals: u64,
 }
 
 /// What a shard hands to the merge step.
@@ -151,6 +162,9 @@ struct ShardOutput {
     per_pool_unserved: Vec<usize>,
     min_unserved_arrival: f64,
     arena_peak: usize,
+    n_attempts: usize,
+    n_abandoned: usize,
+    n_shed: usize,
 }
 
 impl<'a> ShardSim<'a> {
@@ -159,6 +173,7 @@ impl<'a> ShardSim<'a> {
         router: &'a RoutingPolicy,
         config: &'a DesConfig,
         faults: Option<&'a CompiledFaults>,
+        retries: Option<&'a RetryConfig>,
         shard_id: usize,
         n_shards: usize,
     ) -> Self {
@@ -199,6 +214,7 @@ impl<'a> ShardSim<'a> {
         let metrics = MetricsCollector::new(
             config.metrics, pools.len(), hint, config.window_ms, 0.0,
         );
+        let n_pools = pools.len();
         ShardSim {
             shard_id,
             n_shards,
@@ -213,6 +229,9 @@ impl<'a> ShardSim<'a> {
             n_events: 0,
             n_compressed: 0,
             horizon: 0.0,
+            closed: retries
+                .map(|c| ClosedLoopState::new(c, config.seed, n_pools)),
+            global_arrivals: 0,
         }
     }
 
@@ -251,6 +270,10 @@ impl<'a> ShardSim<'a> {
             RouteRequest { l_in: r.l_in, l_out: r.l_out, class },
             &mut self.route_rng,
         );
+        // Stream-global id of this arrival: counted on every shard
+        // (serial engines use the stream index; see `global_arrivals`).
+        let gid = self.global_arrivals;
+        self.global_arrivals += 1;
         if decision.pool % self.n_shards != self.shard_id {
             return;
         }
@@ -264,6 +287,21 @@ impl<'a> ShardSim<'a> {
             l_in: decision.request.l_in,
             l_out: decision.request.l_out,
         });
+        if let Some(cl) = self.closed.as_mut() {
+            cl.init_request(id as usize, gid, now);
+            cl.states[id as usize].pool = decision.pool as u16;
+            start_attempt(
+                &mut self.pools, id, &self.arena.slots, now,
+                &mut self.events, &self.config.cap_window, self.faults,
+                &mut self.metrics, cl,
+            );
+            // Immediate shed is the only terminal outcome of a fresh
+            // attempt — recycle the slot right away.
+            if cl.states[id as usize].phase == Phase::Done {
+                self.arena.release(id);
+            }
+            return;
+        }
         let admitted = try_admit(
             &mut self.pools, decision.pool, id, &self.arena.slots, now,
             &mut self.events, &self.config.cap_window, self.faults,
@@ -285,12 +323,91 @@ impl<'a> ShardSim<'a> {
             EventKind::Arrival { .. } => {
                 unreachable!("arrivals come from the generator stream")
             }
-            EventKind::Completion { req: _, pool, instance } => {
+            EventKind::Completion { req, pool, instance } => {
                 self.pools[pool as usize].release(instance as usize, now);
-                self.drain_pool(pool as usize, now);
+                if let Some(cl) = self.closed.as_mut() {
+                    cl.states[req as usize].phase = Phase::Done;
+                    self.arena.release(req);
+                    drain_queue_closed(
+                        &mut self.pools, pool as usize, &self.arena.slots,
+                        now, &mut self.events, &self.config.cap_window,
+                        self.faults, &mut self.metrics, cl,
+                    );
+                } else {
+                    self.drain_pool(pool as usize, now);
+                }
             }
             EventKind::Drain { pool } => {
-                self.drain_pool(pool as usize, now);
+                if let Some(cl) = self.closed.as_mut() {
+                    drain_queue_closed(
+                        &mut self.pools, pool as usize, &self.arena.slots,
+                        now, &mut self.events, &self.config.cap_window,
+                        self.faults, &mut self.metrics, cl,
+                    );
+                } else {
+                    self.drain_pool(pool as usize, now);
+                }
+            }
+            EventKind::Timeout { req, pool, attempt } => {
+                let cl = self
+                    .closed
+                    .as_mut()
+                    .expect("timeouts exist only in closed-loop runs");
+                let st = cl.states[req as usize];
+                if st.attempt != attempt {
+                    return; // superseded by a later attempt
+                }
+                match st.phase {
+                    Phase::Queued => {
+                        let q = &mut self.pools[pool as usize].queue;
+                        if let Some(pos) = q.iter().position(|&r| r == req)
+                        {
+                            q.remove(pos);
+                        }
+                        let len = self.pools[pool as usize].queue.len();
+                        cl.note_queue_len(pool as usize, len);
+                        abandon_or_retry(
+                            req, now, &mut self.events, &mut self.metrics,
+                            cl,
+                        );
+                        if cl.states[req as usize].phase == Phase::Done {
+                            self.arena.release(req);
+                        }
+                    }
+                    Phase::Doomed => {
+                        self.pools[pool as usize]
+                            .release(st.instance as usize, now);
+                        abandon_or_retry(
+                            req, now, &mut self.events, &mut self.metrics,
+                            cl,
+                        );
+                        if cl.states[req as usize].phase == Phase::Done {
+                            self.arena.release(req);
+                        }
+                        drain_queue_closed(
+                            &mut self.pools, pool as usize,
+                            &self.arena.slots, now, &mut self.events,
+                            &self.config.cap_window, self.faults,
+                            &mut self.metrics, cl,
+                        );
+                    }
+                    _ => {}
+                }
+            }
+            EventKind::Retry { req, pool: _ } => {
+                let cl = self
+                    .closed
+                    .as_mut()
+                    .expect("retries exist only in closed-loop runs");
+                cl.states[req as usize].attempt += 1;
+                start_attempt(
+                    &mut self.pools, req, &self.arena.slots, now,
+                    &mut self.events, &self.config.cap_window, self.faults,
+                    &mut self.metrics, cl,
+                );
+                if cl.states[req as usize].phase == Phase::Done {
+                    self.arena.release(req);
+                }
             }
         }
     }
@@ -343,6 +460,9 @@ impl<'a> ShardSim<'a> {
             per_pool_unserved,
             min_unserved_arrival,
             arena_peak: self.arena.peak(),
+            n_attempts: self.metrics.n_attempts,
+            n_abandoned: self.metrics.n_abandoned,
+            n_shed: self.metrics.n_shed,
         }
     }
 }
@@ -364,6 +484,9 @@ fn merge_outputs(
         .map(|o| o.per_pool_unserved.iter().sum::<usize>())
         .sum();
     let arena_peak: usize = outputs.iter().map(|o| o.arena_peak).sum();
+    let n_attempts: usize = outputs.iter().map(|o| o.n_attempts).sum();
+    let n_abandoned: usize = outputs.iter().map(|o| o.n_abandoned).sum();
+    let n_shed: usize = outputs.iter().map(|o| o.n_shed).sum();
     // max over unserved of (horizon - arrival) == horizon - min(arrival):
     // f64 subtraction with a fixed minuend is monotone, so this is the
     // serial scan's result bit-for-bit.
@@ -412,6 +535,9 @@ fn merge_outputs(
         n_events,
         n_unserved,
         max_unserved_wait_ms: max_unserved_wait,
+        n_attempts,
+        n_abandoned,
+        n_shed,
         windows,
     };
     (result, arena_peak)
@@ -472,7 +598,8 @@ pub fn run_streamed_input(
     let mut n_chunks = 0usize;
     let n;
     let mut sim = ShardSim::new(
-        input.pools, input.router, input.config, compiled.as_ref(), 0, 1,
+        input.pools, input.router, input.config, compiled.as_ref(),
+        input.retries, 0, 1,
     );
     match input.arrivals {
         ArrivalsSource::Stream(sampled) => {
@@ -527,6 +654,7 @@ pub fn run_sharded_input(
     }
     let compiled = input.compiled_faults();
     let faults = compiled.as_ref();
+    let retries = input.retries;
     let chunk_size = chunk_size.max(1);
     let (pool_specs, router, config) =
         (input.pools, input.router, input.config);
@@ -538,8 +666,8 @@ pub fn run_sharded_input(
                 .map(|sid| {
                     s.spawn(move || {
                         let mut sim = ShardSim::new(
-                            pool_specs, router, config, faults, sid,
-                            n_shards,
+                            pool_specs, router, config, faults, retries,
+                            sid, n_shards,
                         );
                         for r in sampled {
                             sim.feed(r);
@@ -579,7 +707,8 @@ pub fn run_sharded_input(
             .map(|(sid, rx)| {
                 s.spawn(move || {
                     let mut sim = ShardSim::new(
-                        pool_specs, router, config, faults, sid, n_shards,
+                        pool_specs, router, config, faults, retries, sid,
+                        n_shards,
                     );
                     while let Ok(chunk) = rx.recv() {
                         for r in chunk.iter() {
@@ -658,6 +787,9 @@ mod tests {
             r.n_events as f64,
             r.n_unserved as f64,
             r.max_unserved_wait_ms,
+            r.n_attempts as f64,
+            r.n_abandoned as f64,
+            r.n_shed as f64,
         ];
         for p in &mut r.per_pool {
             v.push(p.stats.ttft.p99());
@@ -825,5 +957,60 @@ mod tests {
         let plain_in = SimInput::stream(&pools, &router, &cfg, &sampled);
         let mut plain = Simulator::run_input(&plain_in).unwrap();
         assert_ne!(summary(&mut plain), want);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "drives full simulations; too slow")]
+    fn retry_runs_stay_bit_identical_across_shard_counts() {
+        use crate::des::retry::{AdmissionSpec, RetryConfig, RetrySpec};
+        // Saturating load so timeouts, retries, doomed admissions, and
+        // the breaker all fire in both pools.
+        let pools = vec![
+            SimPool { gpu: a100(), n_gpus: 1, ctx_budget: 4096.0,
+                      batch_cap: None },
+            SimPool { gpu: a100(), n_gpus: 1, ctx_budget: 8192.0,
+                      batch_cap: None },
+        ];
+        let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 200.0);
+        let router = RoutingPolicy::Length { b_short: 4096.0 };
+        let rc = RetryConfig {
+            retry: Some(RetrySpec {
+                max_attempts: 3,
+                timeout_ms: 2_000.0,
+                backoff_base_ms: 250.0,
+                backoff_cap_ms: 1_000.0,
+            }),
+            admission: Some(AdmissionSpec {
+                max_queue_depth: 64,
+                breaker_open_depth: 32,
+                breaker_close_depth: 8,
+            }),
+        };
+        for mode in [MetricsMode::Exact, MetricsMode::Streaming] {
+            let cfg = DesConfig {
+                n_requests: 4_000,
+                seed: 37,
+                metrics: mode,
+                ..Default::default()
+            };
+            let sampled = w.sample_requests(cfg.n_requests, cfg.seed);
+            let serial_in = SimInput::stream(&pools, &router, &cfg,
+                                             &sampled)
+                .with_retries(&rc);
+            let mut serial = Simulator::run_input(&serial_in).unwrap();
+            let want = summary(&mut serial);
+            assert!(serial.n_attempts > 4_000, "retries must fire");
+            assert!(serial.n_abandoned + serial.n_shed > 0);
+            let gen_in = SimInput::generated(&pools, &router, &cfg, &w)
+                .with_retries(&rc);
+            for shards in [1usize, 2] {
+                for chunk in [777usize, DEFAULT_CHUNK_SIZE] {
+                    let (mut got, _) =
+                        run_sharded_input(&gen_in, shards, chunk).unwrap();
+                    assert_eq!(summary(&mut got), want,
+                               "{mode:?} shards={shards} chunk={chunk}");
+                }
+            }
+        }
     }
 }

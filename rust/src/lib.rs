@@ -64,6 +64,8 @@ pub mod prelude {
     pub use crate::des::input::{ArrivalsSource, ConfigError, SimInput};
     pub use crate::des::metrics::{DesResult, MetricsMode};
     pub use crate::des::reference::run_reference_input;
+    pub use crate::des::retry::{backoff_ms, AdmissionSpec, RetryConfig,
+                                RetrySpec};
     pub use crate::des::shard::{run_sharded_input, run_streamed_input};
     pub use crate::gpu::catalog::GpuCatalog;
     pub use crate::gpu::profile::GpuProfile;

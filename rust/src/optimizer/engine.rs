@@ -25,6 +25,7 @@ use std::sync::{Arc, Mutex};
 use crate::des::engine::{DesConfig, SimPool, Simulator};
 use crate::des::faults::{FaultScript, OutageSpec};
 use crate::des::input::SimInput;
+use crate::des::retry::RetryConfig;
 use crate::des::metrics::DesResult;
 use crate::des::shard::{run_streamed_input, DEFAULT_CHUNK_SIZE};
 use crate::gpu::catalog::GpuCatalog;
@@ -297,12 +298,34 @@ impl EvalEngine {
         cfg: &DesConfig,
         faults: Option<&FaultScript>,
     ) -> DesResult {
+        self.simulate_robust(workload, pools, router, cfg, faults, None)
+    }
+
+    /// [`Self::simulate_faulted`] with an optional closed-loop client
+    /// behavior layer ([`crate::des::retry`]): deadlines, retries with
+    /// deterministic backoff, and server-side admission control. `None`
+    /// is bit-identical to the open-loop run; both the cached-stream and
+    /// the generator-driven dispatch attach the same config, so the
+    /// memory-policy cutoff stays semantics-free.
+    #[allow(clippy::too_many_arguments)]
+    pub fn simulate_robust(
+        &self,
+        workload: &WorkloadSpec,
+        pools: &[SimPool],
+        router: &RoutingPolicy,
+        cfg: &DesConfig,
+        faults: Option<&FaultScript>,
+        retries: Option<&RetryConfig>,
+    ) -> DesResult {
         if cfg.n_requests > Self::STREAM_CACHE_MAX && cfg.warmup_frac == 0.0
         {
             let mut input =
                 SimInput::generated(pools, router, cfg, workload);
             if let Some(f) = faults {
                 input = input.with_faults(f);
+            }
+            if let Some(r) = retries {
+                input = input.with_retries(r);
             }
             let (r, _) = run_streamed_input(&input, DEFAULT_CHUNK_SIZE)
                 .unwrap_or_else(|e| panic!("{e}"));
@@ -312,6 +335,9 @@ impl EvalEngine {
         let mut input = SimInput::stream(pools, router, cfg, &stream);
         if let Some(f) = faults {
             input = input.with_faults(f);
+        }
+        if let Some(r) = retries {
+            input = input.with_retries(r);
         }
         Simulator::run_input(&input).unwrap_or_else(|e| panic!("{e}"))
     }
@@ -762,6 +788,47 @@ mod tests {
                 .0;
             assert_eq!(nk, n0 + k, "k = {k}");
         }
+    }
+
+    #[test]
+    fn simulate_robust_none_is_open_loop_and_some_counts_attempts() {
+        use crate::des::retry::{RetryConfig, RetrySpec};
+        let e = EvalEngine::standard();
+        let w = azure();
+        let gpu = e.catalog.get("H100").unwrap().clone();
+        // Generously over-provisioned: with a 60 s deadline nothing can
+        // time out, so the closed-loop run serves every request on its
+        // first attempt.
+        let pools = [SimPool {
+            gpu,
+            n_gpus: 16,
+            ctx_budget: w.cdf.max_len(),
+            batch_cap: None,
+        }];
+        let router = RoutingPolicy::Random { n_pools: 1 };
+        let cfg = DesConfig { n_requests: 2_000, ..Default::default() };
+        let open = e.simulate_faulted(&w, &pools, &router, &cfg, None);
+        let robust =
+            e.simulate_robust(&w, &pools, &router, &cfg, None, None);
+        assert_eq!(open.n_events, robust.n_events);
+        assert_eq!(open.horizon_ms, robust.horizon_ms);
+        assert_eq!(robust.n_attempts, 0, "open loop records no attempts");
+        let rc = RetryConfig {
+            retry: Some(RetrySpec {
+                max_attempts: 3,
+                timeout_ms: 60_000.0,
+                backoff_base_ms: 250.0,
+                backoff_cap_ms: 1_000.0,
+            }),
+            admission: None,
+        };
+        let closed =
+            e.simulate_robust(&w, &pools, &router, &cfg, None, Some(&rc));
+        assert_eq!(closed.n_attempts, 2_000, "lenient config: one per req");
+        assert_eq!(
+            closed.overall.count + closed.n_abandoned + closed.n_shed,
+            2_000
+        );
     }
 
     #[test]

@@ -5,7 +5,10 @@
 //! request on the way (CompressAndRoute shrinks borderline prompts back
 //! under the threshold, paper §2.1 / Chen et al. 2026). Routers are
 //! deterministic given the request and the RNG stream, so DES runs are
-//! reproducible.
+//! reproducible. Closed-loop retries ([`crate::des::retry`]) are sticky:
+//! a retry re-enters the pool chosen for attempt 1 and consumes **no**
+//! additional routing draws, so attaching a retry config never perturbs
+//! the ROUTING stream.
 
 use crate::workload::rng::Pcg64;
 

@@ -28,6 +28,7 @@ pub mod puzzle5_routers;
 pub mod puzzle6_mixed;
 pub mod puzzle7_disagg;
 pub mod puzzle8_gridflex;
+pub mod retry_storm;
 
 pub use crate::optimizer::engine::EvalEngine;
 pub use common::{PuzzleReport, ScenarioOpts};
@@ -124,6 +125,7 @@ pub fn registry() -> Vec<Box<dyn Scenario>> {
         Box::new(multi_model::MultiModelFleet),
         Box::new(diurnal::Diurnal),
         Box::new(n_plus_k::NPlusK),
+        Box::new(retry_storm::RetryStorm),
     ]
 }
 
@@ -167,15 +169,15 @@ mod tests {
     #[test]
     fn registry_covers_all_scenarios_with_unique_keys() {
         let reg = registry();
-        assert_eq!(reg.len(), 11);
+        assert_eq!(reg.len(), 12);
         let mut ids: Vec<&str> = reg.iter().map(|s| s.id()).collect();
         let mut names: Vec<&str> = reg.iter().map(|s| s.name()).collect();
         ids.sort();
         ids.dedup();
         names.sort();
         names.dedup();
-        assert_eq!(ids.len(), 11, "duplicate scenario ids");
-        assert_eq!(names.len(), 11, "duplicate scenario names");
+        assert_eq!(ids.len(), 12, "duplicate scenario ids");
+        assert_eq!(names.len(), 12, "duplicate scenario names");
         for n in 1..=8 {
             assert!(find(&format!("puzzle{n}")).is_some());
         }
@@ -183,6 +185,8 @@ mod tests {
         assert_eq!(find("size-to-peak").unwrap().id(), "diurnal");
         assert!(find("n_plus_k").is_some());
         assert_eq!(find("n-plus-k").unwrap().id(), "n_plus_k");
+        assert!(find("retry_storm").is_some());
+        assert_eq!(find("retry-storm").unwrap().id(), "retry_storm");
     }
 
     #[test]

@@ -1,0 +1,339 @@
+//! The `retry_storm` scenario (report id 12): when do client retries
+//! turn a transient outage into a sustained one — and does a circuit
+//! breaker get the fleet back?
+//!
+//! The classic metastability failure (Bronson et al., HotOS '21;
+//! paper §2.3): a fleet sized to pass its SLO with headroom suffers a
+//! short full outage. Open-loop, the backlog drains and the fleet
+//! recovers. Closed-loop, every timed-out client retries into the
+//! already-saturated queue, the *offered* load multiplies by the
+//! retry amplification, and admitted requests that waited too long
+//! are wasted work (they hold a slot yet still miss their deadline) —
+//! so the overload outlives its trigger. The scenario contrasts three
+//! regimes on one fleet:
+//!
+//! * **A — open loop**: no deadlines, no retries, no outage. The
+//!   sizing baseline; every window passes, amplification 1.0.
+//! * **B — naive retries + outage**: deadlines and retries
+//!   ([`retry_spec`]) with no server-side protection, through a
+//!   scripted 60 s full-pool outage. Amplification stays above 1 and
+//!   the fleet is still failing windows at the end of the horizon,
+//!   long after the outage ended.
+//! * **C — retries + circuit breaker**: same clients, same outage,
+//!   plus hysteretic admission control ([`breaker_clients`]). Sheds
+//!   replace wasted work during the storm, so the queue stays bounded
+//!   and the final window passes again.
+//!
+//! Everything is deterministic — the outage is a fault script, the
+//! backoff jitter is a named substream — so the three regimes are
+//! bit-identical across engines and shard counts, and the regression
+//! test below pins the regime structure, not fragile point values.
+
+use crate::des::engine::SimPool;
+use crate::des::faults::{FaultScript, GpuFailure};
+use crate::des::metrics::DesResult;
+use crate::des::retry::{AdmissionSpec, RetryConfig, RetrySpec};
+use crate::optimizer::engine::EvalEngine;
+use crate::router::RoutingPolicy;
+use crate::scenarios::common::*;
+use crate::scenarios::{Scenario, ScenarioSpec, Topology};
+use crate::util::table::Table;
+use crate::workload::spec::{BuiltinTrace, WorkloadSpec};
+
+/// Arrival rate (req/s); with [`MIN_REQUESTS`] this gives a >= 100 s
+/// horizon, leaving 20 s of post-outage traffic to expose (non-)
+/// recovery.
+pub const LAMBDA_RPS: f64 = 100.0;
+pub const SLO_MS: f64 = 500.0;
+pub const WINDOW_MS: f64 = 5_000.0;
+/// Token cap on the Azure CDF: bounds the slowest decode so a healthy
+/// fleet never collides with the client deadline (worst hold at the
+/// batch cap ~ 1.9 s << [`retry_spec`]'s 8 s timeout).
+pub const MAX_CTX: f64 = 1_024.0;
+/// Per-instance batch cap: keeps `t_iter` (and thus worst-case hold)
+/// small enough that timeouts under regime A are impossible.
+pub const BATCH_CAP: u32 = 16;
+/// The scripted full-pool outage window.
+pub const OUTAGE_START_MS: f64 = 20_000.0;
+pub const OUTAGE_END_MS: f64 = 80_000.0;
+/// Floor on the request count: the storm needs the full
+/// outage + recovery timeline inside the horizon even under `--fast`.
+pub const MIN_REQUESTS: usize = 10_000;
+
+/// Azure trace truncated to [`MAX_CTX`] tokens at [`LAMBDA_RPS`].
+pub fn workload() -> WorkloadSpec {
+    WorkloadSpec::builtin(BuiltinTrace::Azure, LAMBDA_RPS)
+        .truncated(MAX_CTX)
+        .expect("azure CDF truncates at 1024 tokens")
+}
+
+/// The client policy shared by regimes B and C: 8 s deadlines, up to
+/// 4 attempts, exponential backoff 1 s -> 8 s with jitter.
+pub fn retry_spec() -> RetrySpec {
+    RetrySpec {
+        max_attempts: 4,
+        timeout_ms: 8_000.0,
+        backoff_base_ms: 1_000.0,
+        backoff_cap_ms: 8_000.0,
+    }
+}
+
+/// Regime B: clients retry, the server defends nothing.
+pub fn naive_clients() -> RetryConfig {
+    RetryConfig { retry: Some(retry_spec()), admission: None }
+}
+
+/// Regime C: same clients plus the hysteretic breaker (opens at queue
+/// depth 32, closes at 8) and a depth-64 queue bound backstop.
+pub fn breaker_clients() -> RetryConfig {
+    RetryConfig {
+        retry: Some(retry_spec()),
+        admission: Some(AdmissionSpec {
+            max_queue_depth: 64,
+            breaker_open_depth: 32,
+            breaker_close_depth: 8,
+        }),
+    }
+}
+
+/// The scripted outage: every one of the pool's `n_gpus` instances is
+/// down for `[OUTAGE_START_MS, OUTAGE_END_MS)`, instant re-warm (the
+/// metastability must come from the clients, not a cold start).
+pub fn outage(n_gpus: usize) -> FaultScript {
+    FaultScript {
+        failures: vec![GpuFailure {
+            pool: 0,
+            n_gpus,
+            start_ms: OUTAGE_START_MS,
+            recover_ms: OUTAGE_END_MS,
+            warm_ms: 0.0,
+            warm_factor: 1.0,
+        }],
+        stragglers: vec![],
+    }
+}
+
+/// The three regime runs on the minimal SLO-feasible fleet, or None
+/// if no fleet within `opts.max_gpus` passes every window open-loop.
+pub struct StormRuns {
+    pub n_gpus: u32,
+    /// Regime A: open loop, no outage.
+    pub baseline: DesResult,
+    /// Regime B: naive retries through the outage.
+    pub naive: DesResult,
+    /// Regime C: retries + circuit breaker through the outage.
+    pub breaker: DesResult,
+}
+
+/// Size the smallest fleet whose open-loop run passes every window,
+/// then replay the two closed-loop regimes on exactly that fleet.
+/// Minimal headroom is the point: it is what makes regime B
+/// metastable instead of merely slow to drain.
+pub fn run_storm(
+    engine: &EvalEngine,
+    opts: &ScenarioOpts,
+) -> Option<StormRuns> {
+    let w = workload();
+    let mut cfg = opts.des();
+    cfg.n_requests = opts.n_requests.max(MIN_REQUESTS);
+    if cfg.window_ms.is_none() {
+        cfg.window_ms = Some(WINDOW_MS);
+    }
+    let router = RoutingPolicy::Random { n_pools: 1 };
+    let pool = |n: u32| SimPool {
+        gpu: engine.catalog.get("H100").unwrap().clone(),
+        n_gpus: n as usize,
+        ctx_budget: w.cdf.max_len(),
+        batch_cap: Some(BATCH_CAP),
+    };
+    let mut sized: Option<(u32, DesResult)> = None;
+    for n in 2..=opts.max_gpus {
+        let mut r = engine
+            .simulate_robust(&w, &[pool(n)], &router, &cfg, None, None);
+        if r.meets_slo_in_every_window(SLO_MS) {
+            sized = Some((n, r));
+            break;
+        }
+    }
+    let (n, baseline) = sized?;
+    let script = outage(n as usize);
+    let naive = engine.simulate_robust(
+        &w, &[pool(n)], &router, &cfg, Some(&script),
+        Some(&naive_clients()),
+    );
+    let breaker = engine.simulate_robust(
+        &w, &[pool(n)], &router, &cfg, Some(&script),
+        Some(&breaker_clients()),
+    );
+    Some(StormRuns { n_gpus: n, baseline, naive, breaker })
+}
+
+/// Whether the run's final window — the last 5 s of arrivals, 15 s
+/// after the outage ended — meets the SLO. The recovery verdict.
+pub fn last_window_ok(r: &mut DesResult, slo_ms: f64) -> bool {
+    let w = r.windows.as_mut().expect("windowed run");
+    let last = w.n_windows() - 1;
+    w.meets_slo(last, slo_ms)
+}
+
+fn failed_windows(r: &mut DesResult, slo_ms: f64) -> usize {
+    let w = r.windows.as_mut().expect("windowed run");
+    (0..w.n_windows()).filter(|&i| !w.meets_slo(i, slo_ms)).count()
+}
+
+/// Registry entry for the retry-storm metastability scenario.
+pub struct RetryStorm;
+
+impl Scenario for RetryStorm {
+    fn id(&self) -> &'static str {
+        "retry_storm"
+    }
+
+    fn name(&self) -> &'static str {
+        "retry-storm"
+    }
+
+    fn title(&self) -> &'static str {
+        "Retry storm: metastable overload vs circuit-breaker recovery"
+    }
+
+    fn spec(&self) -> ScenarioSpec {
+        ScenarioSpec {
+            workloads: vec![("azure", LAMBDA_RPS)],
+            gpus: vec!["H100"],
+            thresholds: vec![],
+            lambda_sweep: vec![],
+            slo_ms: SLO_MS,
+            router: "Random",
+            topology: Topology::SinglePool,
+        }
+    }
+
+    fn run(&self, engine: &EvalEngine, opts: &ScenarioOpts) -> PuzzleReport {
+        let Some(mut runs) = run_storm(engine, opts) else {
+            return PuzzleReport {
+                id: 12,
+                title: self.title().into(),
+                tables: vec![],
+                insight: format!(
+                    "No H100 fleet within max_gpus = {} passes every \
+                     window at {LAMBDA_RPS} req/s; raise max_gpus to \
+                     stage the storm.",
+                    opts.max_gpus
+                ),
+            };
+        };
+        let mut table = Table::new(&[
+            "regime", "goodput rps", "offered rps", "amplification",
+            "abandoned", "shed", "windows failed", "last window",
+        ])
+        .with_title(format!(
+            "Retry storm on {} H100s (azure@{LAMBDA_RPS:.0}rps <= \
+             {MAX_CTX:.0} tokens, full-pool outage [{:.0}, {:.0}) s, \
+             SLO {SLO_MS:.0} ms, {WINDOW_MS:.0} ms windows)",
+            runs.n_gpus,
+            OUTAGE_START_MS / 1000.0,
+            OUTAGE_END_MS / 1000.0,
+        ));
+        let mut amp_b = 0.0;
+        for (label, r) in [
+            ("A: open loop, no outage", &mut runs.baseline),
+            ("B: naive retries + outage", &mut runs.naive),
+            ("C: retries + breaker + outage", &mut runs.breaker),
+        ] {
+            if label.starts_with('B') {
+                amp_b = r.retry_amplification();
+            }
+            table.row(&[
+                label.to_string(),
+                format!("{:.1}", r.goodput_rps()),
+                format!("{:.1}", r.throughput_rps()),
+                format!("{:.2}x", r.retry_amplification()),
+                r.n_abandoned.to_string(),
+                r.n_shed.to_string(),
+                failed_windows(r, SLO_MS).to_string(),
+                check(last_window_ok(r, SLO_MS)).to_string(),
+            ]);
+        }
+        let recovered = last_window_ok(&mut runs.breaker, SLO_MS);
+        PuzzleReport {
+            id: 12,
+            title: self.title().into(),
+            tables: vec![table],
+            insight: format!(
+                "The same fleet, the same 60 s outage: with naive \
+                 retries the offered load is {amp_b:.2}x the demand \
+                 and the fleet is {} windows past recovery — \
+                 metastable failure sustained by its own clients. The \
+                 circuit breaker converts queue waits into cheap sheds \
+                 ({} requests turned away), keeps admitted work inside \
+                 its deadline, and the final window {}. Server-side \
+                 admission control, not client patience, is what ends \
+                 a retry storm.",
+                failed_windows(&mut runs.naive, SLO_MS),
+                runs.breaker.n_shed,
+                if recovered { "passes again" } else { "still fails" },
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenarios::default_engine;
+
+    #[test]
+    fn storm_shows_three_regimes() {
+        let opts = ScenarioOpts::fast();
+        let engine = default_engine(&opts);
+        let mut runs = run_storm(&engine, &opts).expect("feasible fleet");
+        let n_req = opts.n_requests.max(MIN_REQUESTS);
+
+        // Regime A: healthy baseline. Every window passes, nothing is
+        // dropped, amplification is exactly 1 (open loop).
+        assert!(runs.baseline.meets_slo_in_every_window(SLO_MS));
+        assert_eq!(runs.baseline.retry_amplification(), 1.0);
+        assert_eq!(runs.baseline.n_abandoned + runs.baseline.n_shed, 0);
+
+        // Regime B: metastable. Retries amplify offered load well past
+        // demand, requests die of old age, and the fleet is *still*
+        // failing at the end of the horizon — 15+ s after recovery.
+        let amp_b = runs.naive.retry_amplification();
+        assert!(amp_b > 1.5, "amplification {amp_b}");
+        assert!(runs.naive.n_abandoned > 0);
+        assert!(!last_window_ok(&mut runs.naive, SLO_MS),
+                "naive retries must not have recovered by the horizon");
+        assert!(runs.naive.goodput_rps() < runs.naive.throughput_rps());
+        assert_eq!(
+            runs.naive.overall.count + runs.naive.n_abandoned
+                + runs.naive.n_shed + runs.naive.n_unserved,
+            n_req,
+            "closed-loop conservation (B)"
+        );
+
+        // Regime C: the breaker sheds instead of queueing, amplification
+        // collapses toward 1, and the final window passes again.
+        let amp_c = runs.breaker.retry_amplification();
+        assert!(runs.breaker.n_shed > 0);
+        assert!(amp_c < amp_b, "breaker must damp amplification");
+        assert!(last_window_ok(&mut runs.breaker, SLO_MS),
+                "breaker regime must recover by the final window");
+        assert_eq!(
+            runs.breaker.overall.count + runs.breaker.n_abandoned
+                + runs.breaker.n_shed + runs.breaker.n_unserved,
+            n_req,
+            "closed-loop conservation (C)"
+        );
+
+        // The report renders one row per regime.
+        let report = RetryStorm.run(&engine, &opts);
+        assert_eq!(report.id, 12);
+        assert_eq!(report.tables.len(), 1);
+        let body = report.tables[0].render();
+        assert!(body.contains("A: open loop"), "{body}");
+        assert!(body.contains("B: naive retries"), "{body}");
+        assert!(body.contains("C: retries + breaker"), "{body}");
+        assert!(report.insight.contains("circuit breaker"));
+    }
+}

@@ -14,7 +14,7 @@
 //! |---------------|----------------------------------------------|
 //! | 0             | free (tests use it ad hoc)                   |
 //! | 1             | fault-script sampling (salted seed)          |
-//! | 2             | reserved                                     |
+//! | 2             | retry backoff jitter (salted seed)           |
 //! | 3             | DES routing (all three engines)              |
 //! | 4 + 2k        | generator block `k`: arrival gaps            |
 //! | 5 + 2k        | generator block `k`: token lengths           |
@@ -41,6 +41,13 @@ pub const ROUTING: u64 = 3;
 /// (`seed.wrapping_add(FAULT_SEED_SALT)`) so fault timing never
 /// correlates with workload draws even where stream ids coincide.
 pub const FAULT_SCRIPT: u64 = 1;
+
+/// Retry backoff jitter ([`crate::des::retry`]). Paired with a salted
+/// seed mixed with the global request id and attempt number, so every
+/// engine (and every shard) derives the identical backoff schedule as
+/// a pure function of `(seed, request, attempt)` — no draw-order
+/// coupling with any other stream.
+pub const RETRY: u64 = 2;
 
 /// First stream of the generator block lattice; block `k` uses
 /// `BLOCK_BASE + 2k` (arrivals) and `BLOCK_BASE + 2k + 1` (lengths).
@@ -72,7 +79,10 @@ mod tests {
         // must sit strictly below BLOCK_BASE.
         assert!(ROUTING < BLOCK_BASE);
         assert!(FAULT_SCRIPT < BLOCK_BASE);
+        assert!(RETRY < BLOCK_BASE);
         assert_ne!(ROUTING, FAULT_SCRIPT);
+        assert_ne!(ROUTING, RETRY);
+        assert_ne!(FAULT_SCRIPT, RETRY);
     }
 
     #[test]

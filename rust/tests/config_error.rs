@@ -87,6 +87,15 @@ fn every_variant_renders_its_contract_text() {
         }),
         ..Default::default()
     });
+    let invalid_retries = {
+        let pools = a100_pools(2);
+        let router = two_pool_router();
+        let config = DesConfig::default();
+        let empty = RetryConfig::default();
+        let input = SimInput::stream(&pools, &router, &config, &[])
+            .with_retries(&empty);
+        input.validate().expect_err("empty retry config is rejected")
+    };
     let invalid_faults = {
         let pools = a100_pools(1);
         let router = RoutingPolicy::Random { n_pools: 1 };
@@ -146,6 +155,12 @@ fn every_variant_renders_its_contract_text() {
             "invalid fault script: failure #0: pool 7 out of range \
              (1 pools)",
         ),
+        (
+            "InvalidRetries",
+            invalid_retries,
+            "invalid retry config: at least one of [retry] or \
+             [admission] is required",
+        ),
     ];
     for (variant, err, want) in &table {
         let text = err.to_string();
@@ -178,6 +193,39 @@ fn every_variant_renders_its_contract_text() {
     assert!(matches!(table[4].1, ConfigError::InvalidClassProbs(_)));
     assert!(matches!(table[5].1, ConfigError::InvalidCapWindow(_)));
     assert!(matches!(table[6].1, ConfigError::InvalidFaults(_)));
+    assert!(matches!(table[7].1, ConfigError::InvalidRetries(_)));
+}
+
+/// The streaming entry points reject warmup through `SimInput`
+/// validation as a `ConfigError` — at every shard count, including
+/// the `n_shards == 1` fast path that delegates to
+/// `run_streamed_input`. Only the deprecated wrappers still panic
+/// (pinned below).
+#[test]
+fn run_sharded_input_rejects_warmup_as_config_error() {
+    let pools = a100_pools(2);
+    let router = two_pool_router();
+    let w = workload();
+    let config = DesConfig {
+        warmup_frac: 0.5,
+        n_requests: 100,
+        ..Default::default()
+    };
+    let input = SimInput::generated(&pools, &router, &config, &w);
+    for shards in [1usize, 4] {
+        let err = run_sharded_input(&input, shards, 64)
+            .map(|_| ())
+            .expect_err("sharded warmup must be a ConfigError");
+        assert!(
+            matches!(
+                err,
+                ConfigError::WarmupUnsupported { warmup_frac }
+                    if warmup_frac == 0.5
+            ),
+            "shards = {shards}: {err}"
+        );
+        assert!(err.to_string().contains("warmup_frac = 0"), "{err}");
+    }
 }
 
 /// The deprecated wrappers turn `Err(ConfigError)` into a panic whose

@@ -4,6 +4,7 @@
 //! (200+ cases per property) with failing inputs printed for replay.
 
 use fleet_sim::des::engine::{DesConfig, SimPool, Simulator};
+use fleet_sim::des::retry::{backoff_ms, RetrySpec};
 use fleet_sim::gpu::catalog::GpuCatalog;
 use fleet_sim::gpu::profile::GpuProfile;
 use fleet_sim::queueing::erlang::erlang_c;
@@ -220,6 +221,45 @@ fn prop_cdf_roundtrip() {
         assert!((total - 1.0).abs() < 1e-9, "case {case}: mass {total}");
         assert!(lens.windows(2).all(|w| w[0] < w[1]), "case {case}");
         assert!(probs.iter().all(|&p| p >= 0.0), "case {case}");
+    }
+}
+
+/// Property: `backoff_ms` is a pure function of
+/// `(seed, global_id, attempt, spec)` — re-evaluating it yields the
+/// bit-identical delay (this is what makes retry schedules independent
+/// of engine, shard count, and event interleaving) — and the jittered
+/// delay always lands in `[0.5, 1.5)` times the capped exponential
+/// nominal, for arbitrary seeds, ids, attempts (including the 2^63
+/// shift-saturation range), and specs.
+#[test]
+fn prop_backoff_is_pure_and_jitter_bounded() {
+    let mut rng = Pcg64::new(9009, 0);
+    for case in 0..300 {
+        let base = 1.0 + rng.uniform() * 2_000.0;
+        let spec = RetrySpec {
+            max_attempts: 1 + rng.below(8) as u32,
+            timeout_ms: 100.0 + rng.uniform() * 10_000.0,
+            backoff_base_ms: base,
+            backoff_cap_ms: base * (1.0 + rng.uniform() * 16.0),
+        };
+        let seed = rng.below(u64::MAX);
+        let gid = rng.below(u64::MAX);
+        let attempt = 1 + rng.below(80) as u32;
+        let d = backoff_ms(seed, gid, attempt, &spec);
+        let again = backoff_ms(seed, gid, attempt, &spec);
+        assert_eq!(
+            d.to_bits(),
+            again.to_bits(),
+            "case {case}: backoff_ms is not pure"
+        );
+        let exp = attempt.saturating_sub(1).min(63);
+        let nominal = (spec.backoff_base_ms * (1u64 << exp) as f64)
+            .min(spec.backoff_cap_ms);
+        assert!(
+            (0.5 * nominal..1.5 * nominal).contains(&d),
+            "case {case}: delay {d} outside [0.5, 1.5) x nominal \
+             {nominal} (attempt {attempt})"
+        );
     }
 }
 

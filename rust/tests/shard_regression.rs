@@ -25,15 +25,17 @@ use fleet_sim::des::engine::{CapWindow, DesConfig, SimPool, Simulator};
 use fleet_sim::des::faults::{FaultScript, GpuFailure, Straggler};
 use fleet_sim::des::input::SimInput;
 use fleet_sim::des::metrics::{DesResult, MetricsMode};
+use fleet_sim::des::retry::{AdmissionSpec, RetryConfig, RetrySpec};
 use fleet_sim::des::shard::{run_sharded, run_sharded_input, run_streamed,
                             run_streamed_input};
 use fleet_sim::router::RoutingPolicy;
 use fleet_sim::workload::spec::{BuiltinTrace, WorkloadSpec};
 
 /// Reference summary of one simulation (the `des_regression` shape plus
-/// the horizon; means are deliberately absent — merged overall stats
-/// accumulate in shard order, so float sums differ in the last ulp
-/// while every order-statistic and count is bit-identical).
+/// the horizon and the closed-loop counters; means are deliberately
+/// absent — merged overall stats accumulate in shard order, so float
+/// sums differ in the last ulp while every order-statistic and count is
+/// bit-identical).
 #[derive(Debug, PartialEq)]
 struct Summary {
     overall_p99_ttft: f64,
@@ -48,10 +50,14 @@ struct Summary {
     n_compressed: usize,
     n_events: usize,
     n_unserved: usize,
+    n_attempts: usize,
+    n_abandoned: usize,
+    n_shed: usize,
     max_unserved_wait_ms: f64,
     horizon_ms: f64,
-    /// Per-window (start, arrived, served, p99 TTFT) when windowed.
-    windows: Option<Vec<(f64, usize, usize, f64)>>,
+    /// Per-window (start, arrived, served, shed, abandoned, p99 TTFT)
+    /// when windowed.
+    windows: Option<Vec<(f64, usize, usize, usize, usize, f64)>>,
 }
 
 fn summarize(mut r: DesResult) -> Summary {
@@ -60,6 +66,7 @@ fn summarize(mut r: DesResult) -> Summary {
             .map(|i| {
                 let p99 = w.p99_ttft(i);
                 (w.start_ms(i), w.n_arrived(i), w.n_served(i),
+                 w.n_shed(i), w.n_abandoned(i),
                  if p99.is_nan() { -1.0 } else { p99 })
             })
             .collect()
@@ -79,6 +86,9 @@ fn summarize(mut r: DesResult) -> Summary {
         n_compressed: r.n_compressed,
         n_events: r.n_events,
         n_unserved: r.n_unserved,
+        n_attempts: r.n_attempts,
+        n_abandoned: r.n_abandoned,
+        n_shed: r.n_shed,
         max_unserved_wait_ms: r.max_unserved_wait_ms,
         horizon_ms: r.horizon_ms,
         windows,
@@ -388,6 +398,102 @@ fn faulted_straggler_and_cold_start_is_bit_identical_across_shards() {
     let (faulted, _) = run_sharded_input(&faulted_in, 2, 997).unwrap();
     assert_ne!(summarize(clean), summarize(faulted),
                "fault script was a no-op");
+}
+
+/// Assert a closed-loop (retry + admission) run is bit-identical across
+/// the serial engine, the streamed executor, and every shard count —
+/// from both arrival sources, in both metrics modes, and at both an
+/// aligned and a block-straddling chunk size. Retries draw backoff from
+/// the id-keyed RETRY substream, so shard order must not matter.
+fn assert_retry_sharded_matches(
+    w: &WorkloadSpec,
+    pools: Vec<SimPool>,
+    router: RoutingPolicy,
+    cfg: DesConfig,
+    clients: &RetryConfig,
+    label: &str,
+) {
+    let sampled = w.sample_requests(cfg.n_requests, cfg.seed);
+    for mode in [MetricsMode::Exact, MetricsMode::Streaming] {
+        let cfg = DesConfig { metrics: mode, ..cfg.clone() };
+        let stream_in = SimInput::stream(&pools, &router, &cfg, &sampled)
+            .with_retries(clients);
+        let gen_in = SimInput::generated(&pools, &router, &cfg, w)
+            .with_retries(clients);
+        let serial = summarize(Simulator::run_input(&stream_in).unwrap());
+        for chunk in [1_024usize, 997] {
+            let (r, _) = run_streamed_input(&gen_in, chunk).unwrap();
+            assert_eq!(
+                summarize(r), serial,
+                "{label} [{mode:?} chunk={chunk}]: streamed closed-loop \
+                 run diverged from serial"
+            );
+            for shards in shard_counts() {
+                let (r, _) =
+                    run_sharded_input(&gen_in, shards, chunk).unwrap();
+                assert_eq!(
+                    summarize(r), serial,
+                    "{label} [{mode:?} shards={shards} chunk={chunk}]: \
+                     closed-loop sharded run diverged (generator source)"
+                );
+                let (r, _) =
+                    run_sharded_input(&stream_in, shards, chunk).unwrap();
+                assert_eq!(
+                    summarize(r), serial,
+                    "{label} [{mode:?} shards={shards} chunk={chunk}]: \
+                     closed-loop sharded run diverged (stream source)"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn closed_loop_retries_are_bit_identical_across_shards_and_chunks() {
+    // A deliberately undersized fleet: waits blow past the 2 s client
+    // timeout, retries amplify the load, the bounded queue sheds, and
+    // the retry budget abandons — every closed-loop code path fires,
+    // and every executor must agree on all of it bit for bit.
+    let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 120.0);
+    let pools = vec![
+        SimPool { gpu: gpu("A100"), n_gpus: 1, ctx_budget: 4096.0,
+                  batch_cap: None },
+        SimPool { gpu: gpu("A100"), n_gpus: 1, ctx_budget: 8192.0,
+                  batch_cap: None },
+    ];
+    let router = RoutingPolicy::Length { b_short: 4096.0 };
+    let cfg = DesConfig { n_requests: 3_000, seed: 23,
+                          window_ms: Some(5_000.0), ..Default::default() };
+    let clients = RetryConfig {
+        retry: Some(RetrySpec {
+            max_attempts: 3,
+            timeout_ms: 2_000.0,
+            backoff_base_ms: 100.0,
+            backoff_cap_ms: 800.0,
+        }),
+        admission: Some(AdmissionSpec {
+            max_queue_depth: 32,
+            breaker_open_depth: 24,
+            breaker_close_depth: 4,
+        }),
+    };
+    assert_retry_sharded_matches(
+        &w, pools.clone(), router.clone(), cfg.clone(), &clients,
+        "closed-loop storm",
+    );
+    // The closed loop bites: retries amplify attempts beyond successes,
+    // the bounded queue sheds, and every request ends terminally.
+    let sampled = w.sample_requests(cfg.n_requests, cfg.seed);
+    let input = SimInput::stream(&pools, &router, &cfg, &sampled)
+        .with_retries(&clients);
+    let r = Simulator::run_input(&input).unwrap();
+    assert!(r.n_attempts > r.overall.count, "no retries fired");
+    assert!(r.n_shed > 0, "bounded queue never shed");
+    assert_eq!(
+        r.overall.count + r.n_abandoned + r.n_shed + r.n_unserved,
+        cfg.n_requests,
+        "closed-loop conservation"
+    );
 }
 
 #[test]

@@ -1,0 +1,11 @@
+//! Seeded R6 violation: real sleeps in place of simulated time.
+
+use std::thread;
+use std::time::Duration;
+
+pub fn wait_for_backoff(delay_ms: u64) {
+    // Stalls the process; the simulated clock never moves. A backoff
+    // wait must be a Retry event at `now + delay`, not a sleep.
+    thread::sleep(Duration::from_millis(delay_ms));
+    std::thread::yield_now();
+}

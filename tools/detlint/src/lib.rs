@@ -7,8 +7,9 @@
 //! eroding it: no hash-order iteration in result paths (R1), no
 //! wall-clock/thread/env input to sim state (R2), RNG stream ids from
 //! a single named registry (R3), acknowledged float-accumulation
-//! order in merge paths (R4), and `SimInput`-only public DES entry
-//! points (R5).
+//! order in merge paths (R4), `SimInput`-only public DES entry
+//! points (R5), and no real sleeps or scheduler yields where only
+//! simulated time may pass (R6).
 //!
 //! Run it over a tree:
 //!

@@ -1,4 +1,4 @@
-//! The declarative rule table (R1–R5) and each rule's matcher.
+//! The declarative rule table (R1–R6) and each rule's matcher.
 //!
 //! Every rule is scoped to a set of directory prefixes (relative to
 //! the scanned root, e.g. `des/`), runs over the blanked code view
@@ -20,7 +20,7 @@ pub struct Finding {
     pub file: String,
     /// 1-based line.
     pub line: usize,
-    /// Rule id (`R1`..`R5`, or `P0` for pragma problems).
+    /// Rule id (`R1`..`R6`, or `P0` for pragma problems).
     pub rule: &'static str,
     /// Short rule name, e.g. `hash-iter`.
     pub name: &'static str,
@@ -58,7 +58,7 @@ pub struct Rule {
 /// The determinism/soundness rule table. CONTRIBUTING.md documents
 /// each rule with its full rationale; the one-liners here feed
 /// `detlint --rules`.
-pub static RULES: [Rule; 5] = [
+pub static RULES: [Rule; 6] = [
     Rule {
         id: "R1",
         name: "hash-iter",
@@ -116,6 +116,22 @@ pub static RULES: [Rule; 5] = [
         rationale: "public DES entry points must take SimInput; the \
                     #[deprecated] wrappers are the only exceptions",
         kind: RuleKind::EntryPointSignature,
+    },
+    Rule {
+        id: "R6",
+        name: "real-sleep",
+        dirs: &["des/", "workload/"],
+        rationale: "simulated time advances only through the event \
+                    queue; real sleeps and scheduler yields stall the \
+                    process without moving the clock and make host \
+                    timing an input (closed-loop backoff waits must be \
+                    Retry events, never thread::sleep)",
+        kind: RuleKind::ForbiddenTokens(&[
+            ("thread::sleep", "schedule an event at now + delay \
+                               instead of sleeping the process"),
+            ("yield_now", "scheduler yields leak host timing into sim \
+                           code; restructure instead"),
+        ]),
     },
 ];
 
