@@ -100,10 +100,11 @@ impl Args {
 /// The simulation-input flag group shared by every DES-driving
 /// subcommand: `--requests`, `--seed`, `--shards`, `--chunk-size`,
 /// `--window`, an optional `--faults <path>` TOML fault script
-/// ([`crate::des::faults`]), and an optional `--retries <path>`
-/// closed-loop client config ([`crate::des::retry`]). Parsed once here
-/// instead of re-reading the same flags (with subtly different
-/// validation) in each command.
+/// ([`crate::des::faults`]), an optional `--retries <path>`
+/// closed-loop client config ([`crate::des::retry`]), and an optional
+/// `--memory <path>` KV-cache memory model ([`crate::des::memory`]).
+/// Parsed once here instead of re-reading the same flags (with subtly
+/// different validation) in each command.
 ///
 /// Every field is `None` when its flag was absent, so commands keep
 /// their own defaults via the `*_or` accessors; `--window` is validated
@@ -117,6 +118,7 @@ pub struct SimKnobs {
     pub window_ms: Option<f64>,
     pub faults_path: Option<String>,
     pub retries_path: Option<String>,
+    pub memory_path: Option<String>,
 }
 
 impl SimKnobs {
@@ -147,6 +149,7 @@ impl SimKnobs {
             window_ms,
             faults_path: args.get("faults").map(|s| s.to_string()),
             retries_path: args.get("retries").map(|s| s.to_string()),
+            memory_path: args.get("memory").map(|s| s.to_string()),
         })
     }
 
@@ -200,6 +203,23 @@ impl SimKnobs {
             .map_err(|e| anyhow::anyhow!("--retries {path}: {e}"))?;
         Ok(Some(cfg))
     }
+
+    /// Read and parse the `--memory` TOML KV-cache model, if one was
+    /// given. Per-pool capacity validation happens later, against the
+    /// actual layout
+    /// ([`crate::des::memory::MemoryConfig::validate`]).
+    pub fn load_memory(
+        &self,
+    ) -> anyhow::Result<Option<crate::des::memory::MemoryConfig>> {
+        let Some(path) = &self.memory_path else {
+            return Ok(None);
+        };
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("--memory {path}: {e}"))?;
+        let cfg = crate::des::memory::MemoryConfig::from_toml_str(&text)
+            .map_err(|e| anyhow::anyhow!("--memory {path}: {e}"))?;
+        Ok(Some(cfg))
+    }
 }
 
 #[cfg(test)]
@@ -246,7 +266,7 @@ mod tests {
             &sv(&["simulate", "--requests", "5000", "--seed", "7",
                   "--shards", "4", "--chunk-size", "512", "--window",
                   "1000", "--faults", "outage.toml", "--retries",
-                  "clients.toml"]),
+                  "clients.toml", "--memory", "hbm.toml"]),
             &[],
         )
         .unwrap();
@@ -258,6 +278,7 @@ mod tests {
         assert_eq!(k.window_ms, Some(1_000.0));
         assert_eq!(k.faults_path.as_deref(), Some("outage.toml"));
         assert_eq!(k.retries_path.as_deref(), Some("clients.toml"));
+        assert_eq!(k.memory_path.as_deref(), Some("hbm.toml"));
     }
 
     #[test]
@@ -271,6 +292,7 @@ mod tests {
         assert_eq!(k.window_ms, None);
         assert!(k.load_faults().unwrap().is_none());
         assert!(k.load_retries().unwrap().is_none());
+        assert!(k.load_memory().unwrap().is_none());
 
         let bad = Args::parse(&sv(&["simulate", "--window", "-3"]), &[])
             .unwrap();
@@ -297,6 +319,17 @@ mod tests {
             .load_retries()
             .unwrap_err();
         assert!(format!("{err}").contains("--retries"), "{err}");
+
+        let gone = Args::parse(
+            &sv(&["simulate", "--memory", "/no/such/hbm.toml"]),
+            &[],
+        )
+        .unwrap();
+        let err = SimKnobs::from_args(&gone)
+            .unwrap()
+            .load_memory()
+            .unwrap_err();
+        assert!(format!("{err}").contains("--memory"), "{err}");
     }
 
     #[test]

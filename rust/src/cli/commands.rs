@@ -27,7 +27,7 @@ COMMANDS:
   run         run one scenario by id or name: --scenario <id|name>
               [--fast] [--requests N] [--seed S] [--threads T]
               (registry spans puzzle1..8, multimodel, diurnal, n_plus_k,
-              retry_storm)
+              retry_storm, kv_stability)
   plan        two-phase fleet plan: --trace lmsys|azure|agent|<path.json>
               --lambda RPS [--slo MS] [--mixed] [--backend native|aot]
               [--node-avail none|soft|hard|5pct] [--top-k K] [--explain]
@@ -40,6 +40,9 @@ COMMANDS:
               [--retries PATH]  (closed-loop clients: deadlines, retries
               with deterministic backoff, admission control; TOML
               [retry]/[admission] sections; see data/retry/)
+              [--memory PATH]  (KV-cache memory model: token-granular
+              occupancy, memory-bounded admission, preemption; TOML
+              [memory] section; see data/memory/)
   whatif      λ step thresholds: --trace T --gpu NAME
               [--lambdas 25,50,...] [--slo MS]
   disagg      prefill/decode planning: --trace T --lambda RPS
@@ -247,14 +250,31 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<String> {
             .map_err(|e| anyhow::anyhow!("--faults: {e}"))?;
     }
     let retries = knobs.load_retries()?;
+    let memory = knobs.load_memory()?;
+    if let Some(m) = &memory {
+        // Per-pool capacity (and the retry-exclusion rule) must hold
+        // for this 2-pool layout before the engine panics on it.
+        let cfg = opts.des();
+        let probe =
+            crate::des::input::SimInput::stream(&pools, &router, &cfg, &[]);
+        let probe = match &retries {
+            Some(rc) => probe.with_retries(rc),
+            None => probe,
+        };
+        probe
+            .with_memory(m)
+            .validate()
+            .map_err(|e| anyhow::anyhow!("--memory: {e}"))?;
+    }
     let engine = scenarios::default_engine(&opts);
-    let mut r = engine.simulate_robust(
+    let mut r = engine.simulate_with(
         &w,
         &pools,
         &router,
         &opts.des(),
         faults.as_ref(),
         retries.as_ref(),
+        memory.as_ref(),
     );
     let mut t = Table::new(&["Pool", "requests", "util", "wait99", "TTFT99",
                              "E2E99", "max queue"]);
@@ -309,6 +329,16 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<String> {
             r.throughput_rps(),
             r.n_abandoned,
             r.n_shed,
+        ));
+    }
+    if memory.is_some() {
+        out.push_str(&format!(
+            "memory model applied: {} preempted ({} ms stalled), KV \
+             peak {:.1}% / mean {:.1}%\n",
+            r.n_preempted,
+            r.preempt_stall_ms.round(),
+            r.kv_peak_util * 100.0,
+            r.kv_mean_util * 100.0,
         ));
     }
     if let Some(wt) = crate::report::windows::windowed_table(
@@ -622,7 +652,8 @@ mod tests {
         let out = run_cmd(&["scenarios"]).unwrap();
         for key in ["puzzle1", "split-threshold", "multimodel", "gridflex",
                     "diurnal", "size-to-peak", "n_plus_k", "n-plus-k",
-                    "retry_storm", "retry-storm"] {
+                    "retry_storm", "retry-storm", "kv_stability",
+                    "kv-stability"] {
             assert!(out.contains(key), "{out}");
         }
     }
@@ -789,6 +820,88 @@ mod tests {
             "simulate", "--trace", "azure", "--lambda", "50", "--gpu",
             "H100", "--n-short", "2", "--n-long", "2", "--requests",
             "500", "--retries", "/no/such/clients.toml",
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn simulate_applies_and_validates_memory_configs() {
+        let dir = std::env::temp_dir().join("fleet_sim_cli_memory");
+        std::fs::create_dir_all(&dir).unwrap();
+        let good = dir.join("hbm.toml");
+        std::fs::write(
+            &good,
+            "# roomy KV budget\n\
+             [memory]\n\
+             weights_gb = 60\n\
+             bytes_per_token = 5e5\n\
+             policy = \"evict-recompute\"\n",
+        )
+        .unwrap();
+        let out = run_cmd(&[
+            "simulate", "--trace", "azure", "--lambda", "50", "--gpu",
+            "H100", "--n-short", "2", "--n-long", "2", "--requests",
+            "2000", "--memory", good.to_str().unwrap(),
+        ])
+        .unwrap();
+        assert!(out.contains("memory model applied"), "{out}");
+        assert!(out.contains("KV peak"), "{out}");
+
+        // A malformed config is rejected up front, naming the flag.
+        let bad = dir.join("bad.toml");
+        std::fs::write(&bad, "[memory]\nweights_gb = 60\n").unwrap();
+        let err = run_cmd(&[
+            "simulate", "--trace", "azure", "--lambda", "50", "--gpu",
+            "H100", "--n-short", "2", "--n-long", "2", "--requests",
+            "500", "--memory", bad.to_str().unwrap(),
+        ])
+        .unwrap_err();
+        assert!(format!("{err}").contains("--memory"), "{err}");
+
+        // A spec leaving less than one max-context request of capacity
+        // is rejected against the actual layout, not at parse time.
+        let tiny = dir.join("tiny.toml");
+        std::fs::write(
+            &tiny,
+            "[memory]\n\
+             weights_gb = 79.9999\n\
+             bytes_per_token = 1e6\n\
+             policy = \"none\"\n",
+        )
+        .unwrap();
+        let err = run_cmd(&[
+            "simulate", "--trace", "azure", "--lambda", "50", "--gpu",
+            "H100", "--n-short", "2", "--n-long", "2", "--requests",
+            "500", "--memory", tiny.to_str().unwrap(),
+        ])
+        .unwrap_err();
+        assert!(format!("{err}").contains("--memory"), "{err}");
+
+        // Memory + retries is rejected as a combination, up front.
+        let clients = dir.join("clients.toml");
+        std::fs::write(
+            &clients,
+            "[retry]\n\
+             max_attempts = 3\n\
+             timeout_ms = 60000\n\
+             backoff_base_ms = 250\n\
+             backoff_cap_ms = 1000\n",
+        )
+        .unwrap();
+        let err = run_cmd(&[
+            "simulate", "--trace", "azure", "--lambda", "50", "--gpu",
+            "H100", "--n-short", "2", "--n-long", "2", "--requests",
+            "500", "--memory", good.to_str().unwrap(), "--retries",
+            clients.to_str().unwrap(),
+        ])
+        .unwrap_err();
+        assert!(format!("{err}").contains("retry"), "{err}");
+
+        // A missing config file is an error, not a silent run.
+        assert!(run_cmd(&[
+            "simulate", "--trace", "azure", "--lambda", "50", "--gpu",
+            "H100", "--n-short", "2", "--n-long", "2", "--requests",
+            "500", "--memory", "/no/such/hbm.toml",
         ])
         .is_err());
     }

@@ -40,6 +40,7 @@
 use crate::des::event::{CalendarQueue, EventKind};
 use crate::des::faults::CompiledFaults;
 use crate::des::input::{ArrivalsSource, ConfigError, SimInput};
+use crate::des::memory::{self, MemState, MemoryConfig};
 use crate::des::metrics::{DesResult, MetricsCollector, MetricsMode,
                           PoolResult};
 use crate::des::pool::DesPool;
@@ -119,8 +120,14 @@ pub(crate) struct Req {
     pub(crate) l_out: f64,
 }
 
-/// Effective per-instance slot cap for `pool` at time `t`.
-fn eff_cap(cap_window: &Option<CapWindow>, pool: &DesPool, t: f64) -> u32 {
+/// Effective per-instance slot cap for `pool` at time `t`. Shared with
+/// the memory-mode admission path ([`crate::des::memory`]), which runs
+/// the identical compute scan before its occupancy test.
+pub(crate) fn eff_cap(
+    cap_window: &Option<CapWindow>,
+    pool: &DesPool,
+    t: f64,
+) -> u32 {
     let mut cap = pool.slots_per_gpu;
     if let Some(w) = cap_window {
         if t >= w.start_ms && t < w.end_ms {
@@ -473,7 +480,7 @@ impl Simulator {
         match input.arrivals {
             ArrivalsSource::Stream(sampled) => Ok(run_core(
                 input.pools, input.router, input.config, sampled,
-                faults.as_ref(), input.retries,
+                faults.as_ref(), input.retries, input.memory,
             )),
             ArrivalsSource::Generator(w) => {
                 let sampled = w.sample_requests(
@@ -481,7 +488,7 @@ impl Simulator {
                 );
                 Ok(run_core(
                     input.pools, input.router, input.config, &sampled,
-                    faults.as_ref(), input.retries,
+                    faults.as_ref(), input.retries, input.memory,
                 ))
             }
         }
@@ -514,6 +521,7 @@ fn run_core(
     sampled: &[SampledRequest],
     faults: Option<&CompiledFaults>,
     retries: Option<&RetryConfig>,
+    mem_cfg: Option<&MemoryConfig>,
 ) -> DesResult {
     {
         let n = sampled.len();
@@ -534,6 +542,10 @@ fn run_core(
                              p.batch_cap)
             })
             .collect();
+        // Memory-mode state exists iff a memory config is attached; the
+        // None path below is byte-for-byte the open-loop simulator.
+        let mut mem: Option<MemState> =
+            mem_cfg.map(|m| MemState::new(m, &pools));
 
         // Index-based request arena. Arrivals are already time-sorted, so
         // only completions (and cap-window drains) live in the calendar
@@ -624,6 +636,15 @@ fn run_core(
                         &mut pools, req, &reqs, now, &mut events,
                         &config.cap_window, faults, &mut metrics, cl,
                     );
+                } else if let Some(ms) = mem.as_mut() {
+                    let (l_in, l_out) = (r.l_in, r.l_out);
+                    ms.init_request(req, l_in, l_out, now);
+                    if !ms.try_admit(
+                        &mut pools, decision.pool, req, now, &mut events,
+                        &config.cap_window, faults,
+                    ) {
+                        pools[decision.pool].enqueue(req);
+                    }
                 } else if !try_admit(
                     &mut pools, decision.pool, req, &reqs, now, &mut events,
                     &config.cap_window, faults, &mut metrics,
@@ -662,6 +683,11 @@ fn run_core(
                             &mut events, &config.cap_window, faults,
                             &mut metrics, cl,
                         );
+                    } else if let Some(ms) = mem.as_mut() {
+                        ms.drain(
+                            &mut pools, pool as usize, now, &mut events,
+                            &config.cap_window, faults,
+                        );
                     } else {
                         drain_queue(
                             &mut pools, pool as usize, &reqs, now,
@@ -669,6 +695,26 @@ fn run_core(
                             &mut metrics,
                         );
                     }
+                }
+                EventKind::MemCompletion { req, pool, instance, gen } => {
+                    let ms = mem
+                        .as_mut()
+                        .expect("memory events exist only in memory mode");
+                    ms.on_completion(
+                        &mut pools, pool as usize, instance as usize, req,
+                        gen, now, &mut events, &config.cap_window, faults,
+                        &mut metrics,
+                    );
+                }
+                EventKind::MemPressure { pool, instance, epoch } => {
+                    let ms = mem
+                        .as_mut()
+                        .expect("memory events exist only in memory mode");
+                    ms.on_pressure(
+                        &mut pools, pool as usize, instance as usize,
+                        epoch, now, &mut events, &config.cap_window,
+                        faults, &mut metrics,
+                    );
                 }
                 EventKind::Timeout { req, pool, attempt } => {
                     let cl = closed
@@ -728,19 +774,41 @@ fn run_core(
         let (n_unserved, max_unserved_wait, pool_unserved) = metrics
             .scan_unserved(&pools, |req| reqs[req as usize].arrival_ms,
                            horizon);
+        let mem_raw = mem.as_ref().map(|m| m.raws());
+        let (kv_peak, kv_mean, n_preempted, preempt_stall) = match &mem_raw
+        {
+            Some(raws) => memory::overall_from_raw(raws, horizon),
+            None => (0.0, 0.0, 0, 0.0),
+        };
 
         DesResult {
             per_pool: pools
                 .iter()
                 .zip(metrics.per_pool)
                 .zip(pool_unserved)
-                .map(|((p, stats), n_unserved)| PoolResult {
-                    stats,
-                    utilization: p.utilization(horizon),
-                    max_queue_depth: p.max_queue_depth,
-                    slots_per_gpu: p.slots_per_gpu,
-                    n_gpus: p.instances.len(),
-                    n_unserved,
+                .enumerate()
+                .map(|(i, ((p, stats), n_unserved))| {
+                    let (pk, mn, np, st) = match &mem_raw {
+                        Some(raws) => {
+                            let (pk, mn) = memory::pool_util_from_raw(
+                                &raws[i], horizon,
+                            );
+                            (pk, mn, raws[i].n_preempted, raws[i].stall_ms)
+                        }
+                        None => (0.0, 0.0, 0, 0.0),
+                    };
+                    PoolResult {
+                        stats,
+                        utilization: p.utilization(horizon),
+                        max_queue_depth: p.max_queue_depth,
+                        slots_per_gpu: p.slots_per_gpu,
+                        n_gpus: p.instances.len(),
+                        n_unserved,
+                        n_preempted: np,
+                        preempt_stall_ms: st,
+                        kv_peak_util: pk,
+                        kv_mean_util: mn,
+                    }
                 })
                 .collect(),
             overall: metrics.overall,
@@ -754,6 +822,10 @@ fn run_core(
             n_abandoned: metrics.n_abandoned,
             n_shed: metrics.n_shed,
             windows: metrics.windows,
+            n_preempted,
+            preempt_stall_ms: preempt_stall,
+            kv_peak_util: kv_peak,
+            kv_mean_util: kv_mean,
         }
     }
 }
@@ -1290,6 +1362,193 @@ mod tests {
                 "depth = {}", r.per_pool[0].max_queue_depth);
         assert_eq!(r.overall.count + r.n_shed, 4_000);
         assert_eq!(r.n_unserved, 0);
+    }
+
+    fn tight_memory(policy: crate::des::memory::PolicyKind)
+        -> crate::des::memory::MemoryConfig
+    {
+        use crate::des::memory::{MemoryConfig, MemorySpec};
+        // A100 @ 80 GB HBM, 71 GB weights, 1 MB/token: 9000 KV
+        // token-slots per GPU — a handful of Azure requests, far below
+        // the 128-slot compute cap, so memory binds first.
+        MemoryConfig {
+            spec: MemorySpec {
+                hbm_gb: None,
+                weights_gb: 71.0,
+                bytes_per_token: 1e6,
+            },
+            policy,
+            swap_out_ms: 2.0,
+            swap_in_ms: 4.0,
+        }
+    }
+
+    #[test]
+    fn loose_memory_model_reproduces_open_loop_latencies() {
+        use crate::des::memory::{MemoryConfig, MemorySpec, PolicyKind};
+        // Capacity far beyond what the compute cap can ever make
+        // resident: admission never blocks on memory, nothing is
+        // preempted, and every request fires exactly one arrival and
+        // one MemCompletion — the same 2n event count, and identical
+        // wait/TTFT/E2E values (memory mode computes them with the
+        // same formulas, just committed at completion time).
+        let (pools, router) = two_pool(a100(), 3, 3, 4096.0, 8192.0);
+        let cfg =
+            DesConfig { n_requests: 3_000, seed: 5, ..Default::default() };
+        let w = azure(100.0);
+        let sampled = w.sample_requests(cfg.n_requests, cfg.seed);
+        let loose = MemoryConfig {
+            spec: MemorySpec {
+                hbm_gb: Some(10_000.0),
+                weights_gb: 0.0,
+                bytes_per_token: 1e3,
+            },
+            policy: PolicyKind::EvictRecompute,
+            swap_out_ms: 0.0,
+            swap_in_ms: 0.0,
+        };
+        let open = SimInput::stream(&pools, &router, &cfg, &sampled);
+        let memful = SimInput::stream(&pools, &router, &cfg, &sampled)
+            .with_memory(&loose);
+        let mut a = Simulator::run_input(&open).unwrap();
+        let mut b = Simulator::run_input(&memful).unwrap();
+        assert_eq!(a.n_events, b.n_events);
+        assert_eq!(a.horizon_ms, b.horizon_ms);
+        assert_eq!(a.overall.count, b.overall.count);
+        assert_eq!(a.overall.p99_ttft(), b.overall.p99_ttft());
+        assert_eq!(a.overall.wait.p99(), b.overall.wait.p99());
+        // E2E is committed at completion in memory mode
+        // ((admit + hold) - arrival vs (admit - arrival) + hold), so
+        // agreement is to float reassociation, not bitwise.
+        let (ae, be) = (a.overall.e2e.p99(), b.overall.e2e.p99());
+        assert!((ae - be).abs() < 1e-6, "{ae} vs {be}");
+        assert_eq!(b.n_preempted, 0);
+        assert_eq!(b.preempt_stall_ms, 0.0);
+        assert!(b.kv_peak_util > 0.0 && b.kv_peak_util < 0.1);
+        assert!(b.kv_mean_util > 0.0 && b.kv_mean_util < b.kv_peak_util);
+        assert_eq!(a.n_preempted, 0);
+        assert_eq!(a.kv_peak_util, 0.0);
+    }
+
+    #[test]
+    fn tight_memory_with_eviction_preempts_and_conserves() {
+        use crate::des::memory::PolicyKind;
+        let pools = vec![SimPool {
+            gpu: a100(), n_gpus: 2, ctx_budget: 8192.0, batch_cap: None,
+        }];
+        let router = RoutingPolicy::Random { n_pools: 1 };
+        let cfg =
+            DesConfig { n_requests: 2_000, seed: 17, ..Default::default() };
+        let w = azure(60.0);
+        let sampled = w.sample_requests(cfg.n_requests, cfg.seed);
+        for policy in
+            [PolicyKind::EvictRecompute, PolicyKind::EvictSwap]
+        {
+            let mc = tight_memory(policy);
+            let input = SimInput::stream(&pools, &router, &cfg, &sampled)
+                .with_memory(&mc);
+            let mut r = Simulator::run_input(&input).unwrap();
+            assert!(r.n_preempted > 0, "{policy:?}: no thrash");
+            assert!(r.preempt_stall_ms > 0.0, "{policy:?}");
+            assert_eq!(
+                r.per_pool[0].n_preempted, r.n_preempted,
+                "{policy:?}: single pool owns every eviction"
+            );
+            // Conservation: every request is served or stranded.
+            assert_eq!(
+                r.overall.count + r.n_unserved, 2_000,
+                "{policy:?}"
+            );
+            // Occupancy never overflows while >= 2 residents share an
+            // instance; a lone oversized resident may exceed 1.0.
+            assert!(r.kv_peak_util > 0.5, "{policy:?}");
+            assert!(
+                r.kv_mean_util > 0.0 && r.kv_mean_util <= 1.0,
+                "{policy:?}: mean {}", r.kv_mean_util
+            );
+            assert!(r.overall.p99_ttft() > 0.0);
+            // Latency ordering survives preemption accounting.
+            let (waits, ttfts, e2es) = (
+                r.overall.wait.values(),
+                r.overall.ttft.values(),
+                r.overall.e2e.values(),
+            );
+            for i in 0..r.overall.count {
+                assert!(waits[i] >= 0.0);
+                assert!(ttfts[i] >= waits[i] - 1e-9, "{policy:?}");
+                assert!(e2es[i] >= ttfts[i] - 1e-9, "{policy:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn no_preemption_policy_blocks_admission_and_never_overflows() {
+        use crate::des::memory::PolicyKind;
+        let pools = vec![SimPool {
+            gpu: a100(), n_gpus: 2, ctx_budget: 8192.0, batch_cap: None,
+        }];
+        let router = RoutingPolicy::Random { n_pools: 1 };
+        let cfg =
+            DesConfig { n_requests: 2_000, seed: 17, ..Default::default() };
+        let w = azure(60.0);
+        let sampled = w.sample_requests(cfg.n_requests, cfg.seed);
+        let mc = tight_memory(PolicyKind::None);
+        let input = SimInput::stream(&pools, &router, &cfg, &sampled)
+            .with_memory(&mc);
+        let mut r = Simulator::run_input(&input).unwrap();
+        assert_eq!(r.n_preempted, 0);
+        assert_eq!(r.preempt_stall_ms, 0.0);
+        // Peak reservation makes overflow structurally impossible.
+        assert!(
+            r.kv_peak_util <= 1.0 + 1e-12,
+            "peak {}", r.kv_peak_util
+        );
+        assert_eq!(r.overall.count + r.n_unserved, 2_000);
+        // Blocking admission queues harder than evicting: the same
+        // workload waits at least as long as under recompute's
+        // optimistic admission at the P50.
+        assert!(r.overall.wait.p99() > 0.0);
+        assert!(r.overall.p99_ttft() > 0.0);
+    }
+
+    #[test]
+    fn memory_rejects_retry_combination_and_undersized_pools() {
+        use crate::des::memory::{MemoryConfig, MemorySpec, PolicyKind};
+        use crate::des::retry::{RetryConfig, RetrySpec};
+        let (pools, router) = two_pool(a100(), 2, 2, 4096.0, 8192.0);
+        let cfg = DesConfig::default();
+        let sampled: Vec<crate::workload::spec::SampledRequest> = vec![];
+        let mc = tight_memory(PolicyKind::EvictRecompute);
+        let rc = RetryConfig {
+            retry: Some(RetrySpec {
+                max_attempts: 2,
+                timeout_ms: 1e6,
+                backoff_base_ms: 10.0,
+                backoff_cap_ms: 40.0,
+            }),
+            admission: None,
+        };
+        let both = SimInput::stream(&pools, &router, &cfg, &sampled)
+            .with_retries(&rc)
+            .with_memory(&mc);
+        let err = Simulator::run_input(&both).map(|_| ()).unwrap_err();
+        assert!(matches!(err, ConfigError::InvalidMemory(_)));
+        assert!(err.to_string().contains("retry"));
+        // Capacity below the pool's context budget is caught up front.
+        let tiny = MemoryConfig {
+            spec: MemorySpec {
+                hbm_gb: None,
+                weights_gb: 79.999,
+                bytes_per_token: 1e6,
+            },
+            policy: PolicyKind::None,
+            swap_out_ms: 0.0,
+            swap_in_ms: 0.0,
+        };
+        let input = SimInput::stream(&pools, &router, &cfg, &sampled)
+            .with_memory(&tiny);
+        let err = Simulator::run_input(&input).map(|_| ()).unwrap_err();
+        assert!(matches!(err, ConfigError::InvalidMemory(_)));
     }
 
     #[test]

@@ -36,6 +36,14 @@ pub enum EventKind {
     /// Closed-loop only: `req`'s backoff ends; start its next attempt
     /// against the same pool.
     Retry { req: u32, pool: u16 },
+    /// Memory-mode only ([`crate::des::memory`]): a request's current
+    /// service leg completes. Stale once `gen` no longer matches the
+    /// request's generation (the leg was preempted).
+    MemCompletion { req: u32, pool: u16, instance: u16, gen: u32 },
+    /// Memory-mode only: the instance's projected KV occupancy crosses
+    /// capacity. Stale once `epoch` no longer matches (any admission,
+    /// completion, or eviction bumps the instance epoch).
+    MemPressure { pool: u16, instance: u16, epoch: u64 },
 }
 
 /// A timestamped event. Earlier `time_ms` pops first; ties break on a

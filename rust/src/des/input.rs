@@ -23,6 +23,7 @@ use std::fmt;
 
 use crate::des::engine::{DesConfig, SimPool};
 use crate::des::faults::{CompiledFaults, FaultScript};
+use crate::des::memory::MemoryConfig;
 use crate::des::retry::RetryConfig;
 use crate::router::RoutingPolicy;
 use crate::workload::spec::{SampledRequest, WorkloadSpec};
@@ -47,6 +48,9 @@ pub enum ConfigError {
     /// Malformed closed-loop retry/admission config
     /// ([`crate::des::retry`]).
     InvalidRetries(String),
+    /// Malformed KV-cache memory model config
+    /// ([`crate::des::memory`]).
+    InvalidMemory(String),
 }
 
 impl fmt::Display for ConfigError {
@@ -83,6 +87,9 @@ impl fmt::Display for ConfigError {
             }
             ConfigError::InvalidRetries(msg) => {
                 write!(f, "invalid retry config: {msg}")
+            }
+            ConfigError::InvalidMemory(msg) => {
+                write!(f, "invalid memory config: {msg}")
             }
         }
     }
@@ -165,6 +172,9 @@ pub struct SimInput<'a> {
     /// [`crate::des::retry`]). `None` keeps the open-loop semantics
     /// bit-identically.
     pub retries: Option<&'a RetryConfig>,
+    /// Optional KV-cache memory model (see [`crate::des::memory`]).
+    /// `None` keeps the open-loop semantics bit-identically.
+    pub memory: Option<&'a MemoryConfig>,
 }
 
 impl<'a> SimInput<'a> {
@@ -182,6 +192,7 @@ impl<'a> SimInput<'a> {
             arrivals: ArrivalsSource::Stream(sampled),
             faults: None,
             retries: None,
+            memory: None,
         }
     }
 
@@ -200,6 +211,7 @@ impl<'a> SimInput<'a> {
             arrivals: ArrivalsSource::Generator(workload),
             faults: None,
             retries: None,
+            memory: None,
         }
     }
 
@@ -212,6 +224,13 @@ impl<'a> SimInput<'a> {
     /// Attach a closed-loop retry/admission config.
     pub fn with_retries(mut self, retries: &'a RetryConfig) -> Self {
         self.retries = Some(retries);
+        self
+    }
+
+    /// Attach a KV-cache memory model. Not attaching one keeps the
+    /// open-loop semantics byte-for-byte.
+    pub fn with_memory(mut self, memory: &'a MemoryConfig) -> Self {
+        self.memory = Some(memory);
         self
     }
 
@@ -230,6 +249,16 @@ impl<'a> SimInput<'a> {
         }
         if let Some(r) = self.retries {
             r.validate()?;
+        }
+        if let Some(m) = self.memory {
+            m.validate(self.pools)?;
+            if self.retries.is_some() {
+                return Err(ConfigError::InvalidMemory(
+                    "memory model cannot be combined with a retry \
+                     config yet"
+                        .to_string(),
+                ));
+            }
         }
         Ok(())
     }

@@ -1,0 +1,1131 @@
+//! KV-cache memory as a first-class simulated resource (ROADMAP
+//! item 3, grounded in Nie et al.'s queueing-theoretic stability
+//! analysis of LLM inference under KV memory constraints).
+//!
+//! The compute model bounds *concurrency* (KV slots at a context
+//! budget); this module additionally bounds *token-granular occupancy*:
+//! a request holds `L_in` token-slots of KV at admission and grows by
+//! one token-slot per generated token, linearly over its hold (the
+//! same service-time step model the engines already use). A fleet can
+//! be compute-feasible yet memory-unstable under heavy-tailed lengths
+//! — the "looks idle but is actually broken" failure class.
+//!
+//! # Protocol (shared bit-identically by all three engines)
+//!
+//! A [`MemoryConfig`] attaches to a `SimInput` via `with_memory`; not
+//! attaching one keeps the open-loop path byte-identical (the PR-9
+//! retries pattern). Per instance, a [`MemState`] ledger tracks
+//! resident requests, their linear occupancy ramps, and a piecewise
+//! trapezoid integral for mean-utilization reporting. Admission picks
+//! the compute instance exactly like open-loop `try_admit`, then
+//! applies the policy's memory test:
+//!
+//! * **no-preemption** reserves the projected *peak* (`L_in + L_out`)
+//!   up front: admission blocks until the peak fits, and overflow is
+//!   impossible (admission-block only, no new event kinds fire).
+//! * **evict-recompute / evict-swap** admit optimistically when the
+//!   *current* occupancy plus the request's base footprint (plus one
+//!   token-slot of headroom, which keeps crossing times strictly
+//!   positive) fits, and schedule a `MemPressure` event at the
+//!   projected capacity-crossing instant. Pressure evicts the *newest*
+//!   resident (LIFO, vLLM-style; the oldest is never evicted, which is
+//!   what guarantees progress and termination): recompute victims
+//!   requeue at the front and re-prefill from scratch; swap victims
+//!   pay a fixed swap-out + swap-in latency and resume their remaining
+//!   decode with their KV footprint restored.
+//!
+//! Stale events are cancelled by generation counters (per request, for
+//! `MemCompletion`) and epochs (per instance, for `MemPressure`) —
+//! never by deleting from the queue, so all three engines process the
+//! identical event multiset. Latencies are committed at the *final*
+//! completion: TTFT is re-staged if a victim lost its first token, so
+//! `meets_slo` judges latency inclusive of preemption stalls.
+
+use crate::des::engine::{eff_cap, CapWindow};
+use crate::des::event::{CalendarQueue, EventKind, EventQueue};
+use crate::des::faults::CompiledFaults;
+use crate::des::input::ConfigError;
+use crate::des::metrics::MetricsCollector;
+use crate::des::pool::DesPool;
+use crate::gpu::profile::GpuProfile;
+
+/// Per-GPU HBM budget for KV cache, derived from the `gpu/` model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemorySpec {
+    /// Total HBM per GPU in GB; `None` uses the pool GPU's `vram_gb`.
+    pub hbm_gb: Option<f64>,
+    /// Resident model weights in GB, subtracted from the HBM budget.
+    pub weights_gb: f64,
+    /// KV-cache bytes per token (2 x layers x kv_heads x head_dim x
+    /// dtype bytes for the served model).
+    pub bytes_per_token: f64,
+}
+
+impl MemorySpec {
+    /// KV capacity of one `gpu` instance, in token-slots.
+    pub fn capacity_tokens(&self, gpu: &GpuProfile) -> f64 {
+        let hbm = self.hbm_gb.unwrap_or(gpu.vram_gb);
+        (((hbm - self.weights_gb).max(0.0) * 1e9) / self.bytes_per_token)
+            .floor()
+    }
+}
+
+/// What happens when projected occupancy crosses capacity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Admission-block only: reserve the projected peak up front.
+    None,
+    /// Evict the newest resident; it requeues and re-prefills.
+    EvictRecompute,
+    /// Evict the newest resident; it pays a fixed swap round-trip and
+    /// resumes its remaining decode.
+    EvictSwap,
+}
+
+impl PolicyKind {
+    /// Trait-object dispatch for the policy's behavior flags — the one
+    /// sanctioned bridge from config data to policy behavior (detlint
+    /// R7 forbids string-typed policy entry points in this module).
+    pub fn as_policy(&self) -> &'static dyn PreemptionPolicy {
+        match self {
+            PolicyKind::None => &NoPreemption,
+            PolicyKind::EvictRecompute => &Recompute,
+            PolicyKind::EvictSwap => &Swap,
+        }
+    }
+}
+
+/// Behavior of a preemption policy. The engines never branch on policy
+/// *names*; they consume these flags through trait dispatch.
+pub trait PreemptionPolicy {
+    fn name(&self) -> &'static str;
+    /// Reserve the projected peak at admission (overflow impossible).
+    fn reserves_peak(&self) -> bool;
+    /// Schedule pressure events and evict on capacity crossings.
+    fn evicts(&self) -> bool;
+    /// Victims keep their generated tokens (swap) instead of
+    /// re-prefilling from scratch (recompute).
+    fn preserves_progress(&self) -> bool;
+}
+
+/// Admission-block-only policy (`PolicyKind::None`).
+pub struct NoPreemption;
+
+impl PreemptionPolicy for NoPreemption {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+    fn reserves_peak(&self) -> bool {
+        true
+    }
+    fn evicts(&self) -> bool {
+        false
+    }
+    fn preserves_progress(&self) -> bool {
+        false
+    }
+}
+
+/// Evict-and-recompute policy (`PolicyKind::EvictRecompute`).
+pub struct Recompute;
+
+impl PreemptionPolicy for Recompute {
+    fn name(&self) -> &'static str {
+        "evict-recompute"
+    }
+    fn reserves_peak(&self) -> bool {
+        false
+    }
+    fn evicts(&self) -> bool {
+        true
+    }
+    fn preserves_progress(&self) -> bool {
+        false
+    }
+}
+
+/// Evict-and-swap policy (`PolicyKind::EvictSwap`).
+pub struct Swap;
+
+impl PreemptionPolicy for Swap {
+    fn name(&self) -> &'static str {
+        "evict-swap"
+    }
+    fn reserves_peak(&self) -> bool {
+        false
+    }
+    fn evicts(&self) -> bool {
+        true
+    }
+    fn preserves_progress(&self) -> bool {
+        true
+    }
+}
+
+/// The KV-cache memory model attached to a `SimInput` via
+/// `with_memory`. `None` (not attaching) keeps the open-loop
+/// semantics bit-identically.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemoryConfig {
+    pub spec: MemorySpec,
+    pub policy: PolicyKind,
+    /// Fixed swap-out latency per eviction (evict-swap only), ms.
+    pub swap_out_ms: f64,
+    /// Fixed swap-in latency per resume (evict-swap only), ms.
+    pub swap_in_ms: f64,
+}
+
+impl MemoryConfig {
+    /// Check the config against a fleet. Run automatically by every
+    /// `SimInput`-based entry point when a config is attached.
+    pub fn validate(
+        &self,
+        pools: &[crate::des::engine::SimPool],
+    ) -> Result<(), ConfigError> {
+        let bad = |msg: String| Err(ConfigError::InvalidMemory(msg));
+        let s = &self.spec;
+        if !(s.bytes_per_token.is_finite() && s.bytes_per_token > 0.0) {
+            return bad(format!(
+                "bytes_per_token {} must be finite and > 0",
+                s.bytes_per_token
+            ));
+        }
+        if !(s.weights_gb.is_finite() && s.weights_gb >= 0.0) {
+            return bad(format!(
+                "weights_gb {} must be finite and >= 0",
+                s.weights_gb
+            ));
+        }
+        if let Some(h) = s.hbm_gb {
+            if !(h.is_finite() && h > 0.0) {
+                return bad(format!("hbm_gb {h} must be finite and > 0"));
+            }
+        }
+        for (label, v) in
+            [("swap_out_ms", self.swap_out_ms), ("swap_in_ms", self.swap_in_ms)]
+        {
+            if !(v.is_finite() && v >= 0.0) {
+                return bad(format!("{label} {v} must be finite and >= 0"));
+            }
+        }
+        for (i, p) in pools.iter().enumerate() {
+            let cap = s.capacity_tokens(&p.gpu);
+            if cap < 1.0 {
+                return bad(format!(
+                    "pool {i}: KV capacity is {cap} tokens (weights \
+                     exceed HBM?)"
+                ));
+            }
+            if cap < p.ctx_budget {
+                return bad(format!(
+                    "pool {i}: KV capacity {cap} tokens is below the \
+                     context budget {} (one max-context request cannot \
+                     fit)",
+                    p.ctx_budget
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse a memory config from the shipped TOML subset: a single
+    /// `[memory]` section with `key = value` lines and `#` comments
+    /// (see `data/memory/example.toml`). Hand-rolled like
+    /// `RetryConfig::from_toml_str` — the build is offline and vendors
+    /// no TOML crate.
+    pub fn from_toml_str(text: &str) -> Result<Self, ConfigError> {
+        enum Section {
+            None,
+            Memory,
+        }
+        let bad = |line: usize, msg: String| {
+            Err(ConfigError::InvalidMemory(format!(
+                "memory config line {line}: {msg}"
+            )))
+        };
+        let mut seen = false;
+        let mut cfg = MemoryConfig {
+            spec: MemorySpec {
+                hbm_gb: None,
+                weights_gb: f64::NAN,
+                bytes_per_token: f64::NAN,
+            },
+            policy: PolicyKind::None,
+            swap_out_ms: 0.0,
+            swap_in_ms: 0.0,
+        };
+        let mut section = Section::None;
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = match raw.split_once('#') {
+                Some((head, _)) => head.trim(),
+                None => raw.trim(),
+            };
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) =
+                line.strip_prefix('[').and_then(|l| l.strip_suffix(']'))
+            {
+                section = match name.trim() {
+                    "memory" => {
+                        if seen {
+                            return bad(
+                                lineno,
+                                "duplicate [memory] section".to_string(),
+                            );
+                        }
+                        seen = true;
+                        Section::Memory
+                    }
+                    other => {
+                        return bad(
+                            lineno,
+                            format!("unknown section [{other}]"),
+                        )
+                    }
+                };
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                return bad(lineno, format!("expected key = value: {line}"));
+            };
+            let (key, value) = (key.trim(), value.trim());
+            let num = || -> Result<f64, ConfigError> {
+                value.parse::<f64>().map_err(|_| {
+                    ConfigError::InvalidMemory(format!(
+                        "memory config line {lineno}: {key} = {value} is \
+                         not a number"
+                    ))
+                })
+            };
+            match section {
+                Section::None => {
+                    return bad(
+                        lineno,
+                        format!("{key} outside the [memory] section"),
+                    )
+                }
+                Section::Memory => match key {
+                    "hbm_gb" => cfg.spec.hbm_gb = Some(num()?),
+                    "weights_gb" => cfg.spec.weights_gb = num()?,
+                    "bytes_per_token" => cfg.spec.bytes_per_token = num()?,
+                    "policy" => {
+                        let Some(kind) = parse_policy(value) else {
+                            return bad(
+                                lineno,
+                                format!(
+                                    "unknown policy {value} (expected \
+                                     \"none\", \"evict-recompute\", or \
+                                     \"evict-swap\")"
+                                ),
+                            );
+                        };
+                        cfg.policy = kind;
+                    }
+                    "swap_out_ms" => cfg.swap_out_ms = num()?,
+                    "swap_in_ms" => cfg.swap_in_ms = num()?,
+                    other => {
+                        return bad(
+                            lineno,
+                            format!("unknown memory key {other}"),
+                        )
+                    }
+                },
+            }
+        }
+        if !seen {
+            return Err(ConfigError::InvalidMemory(
+                "a [memory] section is required".to_string(),
+            ));
+        }
+        if cfg.spec.weights_gb.is_nan() {
+            return Err(ConfigError::InvalidMemory(
+                "[memory]: weights_gb is required".to_string(),
+            ));
+        }
+        if cfg.spec.bytes_per_token.is_nan() {
+            return Err(ConfigError::InvalidMemory(
+                "[memory]: bytes_per_token is required".to_string(),
+            ));
+        }
+        Ok(cfg)
+    }
+}
+
+/// Config-string to policy mapping for the TOML loader. Quoted and
+/// bare forms are both accepted.
+fn parse_policy(value: &str) -> Option<PolicyKind> {
+    match value.trim_matches('"') {
+        "none" => Some(PolicyKind::None),
+        "evict-recompute" => Some(PolicyKind::EvictRecompute),
+        "evict-swap" => Some(PolicyKind::EvictSwap),
+        _ => Option::None,
+    }
+}
+
+/// The one scheduler operation the memory protocol needs, implemented
+/// by both the production calendar queue and the reference heap — so
+/// the whole protocol lives here once and all three engines share it
+/// bit-identically.
+pub(crate) trait EventSink {
+    fn push_event(&mut self, time_ms: f64, kind: EventKind);
+}
+
+impl EventSink for CalendarQueue {
+    fn push_event(&mut self, time_ms: f64, kind: EventKind) {
+        self.push(time_ms, kind);
+    }
+}
+
+impl EventSink for EventQueue {
+    fn push_event(&mut self, time_ms: f64, kind: EventKind) {
+        self.push(time_ms, kind);
+    }
+}
+
+/// Per-request memory-mode run state, indexed by the engine's request
+/// id (the serial arena index, or the sharded executor's recycled
+/// arena slot). `gen` is never reset — it outlives slot recycling, so
+/// a stale `MemCompletion` from a previous occupant can never match.
+#[derive(Debug, Clone)]
+struct MemRun {
+    arrival_ms: f64,
+    l_in: f64,
+    l_out: f64,
+    /// Decode tokens completed in prior legs (swap resume state).
+    g_done: f64,
+    /// First-admission wait; NaN until first admitted.
+    wait0_ms: f64,
+    /// Staged TTFT against the original arrival; NaN until the first
+    /// token is (projected to be) produced; un-staged if an eviction
+    /// lands before `first_token_ms`.
+    ttft_ms: f64,
+    first_token_ms: f64,
+    /// When the request was last evicted; NaN while resident/queued.
+    evict_ms: f64,
+    admit_ms: f64,
+    /// Occupancy at the current leg's admission, token-slots.
+    base: f64,
+    /// Occupancy growth this leg, token-slots per ms.
+    rate: f64,
+    hold_ms: f64,
+    admitted_before: bool,
+    gen: u32,
+}
+
+impl MemRun {
+    fn fresh() -> Self {
+        MemRun {
+            arrival_ms: 0.0,
+            l_in: 0.0,
+            l_out: 0.0,
+            g_done: 0.0,
+            wait0_ms: f64::NAN,
+            ttft_ms: f64::NAN,
+            first_token_ms: f64::NAN,
+            evict_ms: f64::NAN,
+            admit_ms: 0.0,
+            base: 0.0,
+            rate: 0.0,
+            hold_ms: 0.0,
+            admitted_before: false,
+            gen: 0,
+        }
+    }
+}
+
+/// Per-instance occupancy ledger: resident set (admission order),
+/// piecewise-linear occupancy, trapezoid token-ms integral, and the
+/// epoch that cancels stale pressure events.
+#[derive(Debug, Clone)]
+struct MemInstance {
+    cap: f64,
+    residents: Vec<u32>,
+    occ: f64,
+    rate: f64,
+    last_ms: f64,
+    epoch: u64,
+    token_ms: f64,
+    peak: f64,
+    /// Peak-reservation bookkeeping (no-preemption policy only).
+    reserved: f64,
+}
+
+impl MemInstance {
+    fn new(cap: f64) -> Self {
+        MemInstance {
+            cap,
+            residents: Vec::new(),
+            occ: 0.0,
+            rate: 0.0,
+            last_ms: 0.0,
+            epoch: 0,
+            token_ms: 0.0,
+            peak: 0.0,
+            reserved: 0.0,
+        }
+    }
+
+    /// Advance the ledger to `now`: occupancy is linear between
+    /// events, so the token-ms integral over the elapsed segment is
+    /// the exact trapezoid.
+    fn rebase(&mut self, now: f64) {
+        let dt = now - self.last_ms;
+        if dt > 0.0 {
+            self.token_ms += dt * (self.occ + 0.5 * self.rate * dt);
+            self.occ += self.rate * dt;
+            self.last_ms = now;
+            self.peak = self.peak.max(self.occ);
+        }
+    }
+}
+
+/// Raw per-pool memory aggregates, assembled identically by the
+/// serial, reference, and sharded result paths (the sharded merge
+/// moves each pool's values from its owner shard, so the final f64
+/// arithmetic is shared and bit-identical).
+#[derive(Debug, Clone, Default)]
+pub(crate) struct MemPoolRaw {
+    pub(crate) token_ms: f64,
+    pub(crate) peak_frac: f64,
+    pub(crate) cap_slots: f64,
+    pub(crate) n_preempted: usize,
+    pub(crate) stall_ms: f64,
+}
+
+/// Fleet-level memory metrics from per-pool raws, in pool-index order.
+/// Returns `(kv_peak_util, kv_mean_util, n_preempted,
+/// preempt_stall_ms)`. Shared by all three result paths.
+pub(crate) fn overall_from_raw(
+    raw: &[MemPoolRaw],
+    horizon_ms: f64,
+) -> (f64, f64, usize, f64) {
+    let mut peak = 0.0f64;
+    let mut token_ms = 0.0f64;
+    let mut cap_slots = 0.0f64;
+    let mut n_preempted = 0usize;
+    let mut stall = 0.0f64;
+    for r in raw {
+        peak = peak.max(r.peak_frac);
+        token_ms += r.token_ms;
+        cap_slots += r.cap_slots;
+        n_preempted += r.n_preempted;
+        stall += r.stall_ms;
+    }
+    let mean = if horizon_ms > 0.0 && cap_slots > 0.0 {
+        token_ms / (horizon_ms * cap_slots)
+    } else {
+        0.0
+    };
+    (peak, mean, n_preempted, stall)
+}
+
+/// Per-pool memory metrics from one pool's raw aggregates. Returns
+/// `(kv_peak_util, kv_mean_util)`.
+pub(crate) fn pool_util_from_raw(
+    raw: &MemPoolRaw,
+    horizon_ms: f64,
+) -> (f64, f64) {
+    let mean = if horizon_ms > 0.0 && raw.cap_slots > 0.0 {
+        raw.token_ms / (horizon_ms * raw.cap_slots)
+    } else {
+        0.0
+    };
+    (raw.peak_frac, mean)
+}
+
+/// The shared memory-protocol state machine. One per run; engines call
+/// into it at arrivals, completions, pressure events, and drains. All
+/// scheduling goes through [`EventSink`], so the production calendar
+/// queue and the reference heap execute the identical protocol.
+pub(crate) struct MemState {
+    reserves_peak: bool,
+    evicts: bool,
+    preserves_progress: bool,
+    swap_out_ms: f64,
+    swap_in_ms: f64,
+    /// `insts[pool][instance]` occupancy ledgers.
+    insts: Vec<Vec<MemInstance>>,
+    runs: Vec<MemRun>,
+    n_preempted: Vec<usize>,
+    stall_ms: Vec<f64>,
+}
+
+impl MemState {
+    pub(crate) fn new(cfg: &MemoryConfig, pools: &[DesPool]) -> Self {
+        let policy = cfg.policy.as_policy();
+        MemState {
+            reserves_peak: policy.reserves_peak(),
+            evicts: policy.evicts(),
+            preserves_progress: policy.preserves_progress(),
+            swap_out_ms: cfg.swap_out_ms,
+            swap_in_ms: cfg.swap_in_ms,
+            insts: pools
+                .iter()
+                .map(|p| {
+                    let cap = cfg.spec.capacity_tokens(&p.gpu);
+                    (0..p.instances.len())
+                        .map(|_| MemInstance::new(cap))
+                        .collect()
+                })
+                .collect(),
+            runs: Vec::new(),
+            n_preempted: vec![0; pools.len()],
+            stall_ms: vec![0.0; pools.len()],
+        }
+    }
+
+    /// Register (or re-register, on a recycled arena slot) a routed
+    /// request. Everything resets except `gen`, which must outlive
+    /// slot recycling to keep stale-event cancellation sound.
+    pub(crate) fn init_request(
+        &mut self,
+        req: u32,
+        l_in: f64,
+        l_out: f64,
+        arrival_ms: f64,
+    ) {
+        let i = req as usize;
+        if self.runs.len() <= i {
+            self.runs.resize_with(i + 1, MemRun::fresh);
+        }
+        let gen = self.runs[i].gen;
+        let mut run = MemRun::fresh();
+        run.gen = gen;
+        run.arrival_ms = arrival_ms;
+        run.l_in = l_in;
+        run.l_out = l_out;
+        self.runs[i] = run;
+    }
+
+    /// Try to admit `req` to `pool_idx` at `now`: the open-loop
+    /// compute scan (least-loaded instance under the effective cap,
+    /// skipping faulted-down instances) followed by the policy's
+    /// memory test on the chosen instance. Latencies are *not*
+    /// recorded here — they commit at the final completion.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn try_admit<E: EventSink>(
+        &mut self,
+        pools: &mut [DesPool],
+        pool_idx: usize,
+        req: u32,
+        now: f64,
+        events: &mut E,
+        cap_window: &Option<CapWindow>,
+        faults: Option<&CompiledFaults>,
+    ) -> bool {
+        let eff = eff_cap(cap_window, &pools[pool_idx], now);
+        let pool = &mut pools[pool_idx];
+        let mut best: Option<(usize, u32)> = None;
+        for (i, inst) in pool.instances.iter().enumerate() {
+            if faults.is_some_and(|f| f.is_down(pool_idx, i, now)) {
+                continue;
+            }
+            if inst.busy < eff {
+                let free = eff - inst.busy;
+                if best.map_or(true, |(_, bf)| free > bf) {
+                    best = Some((i, free));
+                }
+            }
+        }
+        let Some((inst, _)) = best else { return false };
+        let (resumed, base, need) = {
+            let run = &self.runs[req as usize];
+            let resumed = self.preserves_progress && run.admitted_before;
+            let base = if resumed {
+                run.l_in + run.g_done
+            } else {
+                run.l_in
+            };
+            (resumed, base, run.l_in + run.l_out)
+        };
+        {
+            let m = &mut self.insts[pool_idx][inst];
+            m.rebase(now);
+            let fits = if self.reserves_peak {
+                m.reserved + need <= m.cap
+            } else {
+                // One token-slot of headroom keeps the next crossing
+                // strictly after `now` (no zero-dt pressure loops).
+                m.occ + base + 1.0 <= m.cap
+            };
+            if !fits {
+                return false;
+            }
+        }
+        pool.acquire(inst, now);
+        let n_at_admit = pool.instances[inst].busy as f64;
+        let slow = faults.map_or(1.0, |f| f.slowdown(pool_idx, inst, now));
+        let t_iter = pool.gpu.t_iter(n_at_admit) * slow;
+        let gen;
+        let hold;
+        {
+            let run = &mut self.runs[req as usize];
+            let (pre_ms, leg_tokens, leg_hold) = if resumed {
+                // Swap resume: KV (prompt + produced tokens) returns
+                // via a fixed swap round-trip; only the remaining
+                // decode runs, with no re-prefill.
+                let left = (run.l_out - run.g_done).max(1.0);
+                let pre = self.swap_out_ms + self.swap_in_ms;
+                (pre, left, pre + left * t_iter)
+            } else {
+                let pre = (run.l_in / pool.gpu.chunk).ceil() * t_iter;
+                (
+                    pre,
+                    run.l_out.max(1.0),
+                    pool.gpu.iters(run.l_in, run.l_out) * t_iter,
+                )
+            };
+            if run.wait0_ms.is_nan() {
+                run.wait0_ms = now - run.arrival_ms;
+            }
+            if run.ttft_ms.is_nan() {
+                run.ttft_ms = (now - run.arrival_ms) + pre_ms + t_iter;
+                run.first_token_ms = run.arrival_ms + run.ttft_ms;
+            }
+            if run.evict_ms.is_finite() {
+                let stall = (now - run.evict_ms)
+                    + if resumed {
+                        self.swap_out_ms + self.swap_in_ms
+                    } else {
+                        0.0
+                    };
+                self.stall_ms[pool_idx] += stall;
+                run.evict_ms = f64::NAN;
+            }
+            run.admitted_before = true;
+            run.admit_ms = now;
+            run.base = base;
+            run.rate = leg_tokens / leg_hold;
+            run.hold_ms = leg_hold;
+            gen = run.gen;
+            hold = leg_hold;
+        }
+        events.push_event(
+            now + hold,
+            EventKind::MemCompletion {
+                req,
+                pool: pool_idx as u16,
+                instance: inst as u16,
+                gen,
+            },
+        );
+        {
+            let run_rate = self.runs[req as usize].rate;
+            let m = &mut self.insts[pool_idx][inst];
+            m.residents.push(req);
+            m.occ += base;
+            m.rate += run_rate;
+            m.peak = m.peak.max(m.occ);
+            if self.reserves_peak {
+                m.reserved += need;
+            }
+            m.epoch += 1;
+        }
+        self.schedule_pressure(pool_idx, inst, now, events);
+        true
+    }
+
+    /// Admit queued requests while compute *and* memory allow (FIFO:
+    /// a blocked head blocks the queue — head-of-line semantics,
+    /// matching the open-loop drain).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn drain<E: EventSink>(
+        &mut self,
+        pools: &mut [DesPool],
+        pool_idx: usize,
+        now: f64,
+        events: &mut E,
+        cap_window: &Option<CapWindow>,
+        faults: Option<&CompiledFaults>,
+    ) {
+        while let Some(&head) = pools[pool_idx].queue.front() {
+            if !self.try_admit(
+                pools, pool_idx, head, now, events, cap_window, faults,
+            ) {
+                break;
+            }
+            pools[pool_idx].queue.pop_front();
+        }
+    }
+
+    /// Commit a `MemCompletion`. Returns `false` (and touches
+    /// nothing) when the event is stale — its `gen` was invalidated by
+    /// an eviction or a recycled slot.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn on_completion<E: EventSink>(
+        &mut self,
+        pools: &mut [DesPool],
+        pool_idx: usize,
+        inst: usize,
+        req: u32,
+        gen: u32,
+        now: f64,
+        events: &mut E,
+        cap_window: &Option<CapWindow>,
+        faults: Option<&CompiledFaults>,
+        metrics: &mut MetricsCollector,
+    ) -> bool {
+        if self.runs[req as usize].gen != gen {
+            return false;
+        }
+        pools[pool_idx].release(inst, now);
+        let (arrival, wait0, ttft) = {
+            let run = &mut self.runs[req as usize];
+            let contrib = run.base + run.rate * (now - run.admit_ms);
+            let need = run.l_in + run.l_out;
+            let m = &mut self.insts[pool_idx][inst];
+            m.rebase(now);
+            m.occ -= contrib;
+            m.rate -= run.rate;
+            if let Some(pos) = m.residents.iter().position(|&r| r == req) {
+                m.residents.remove(pos);
+            }
+            if self.reserves_peak {
+                m.reserved -= need;
+            }
+            if m.residents.is_empty() {
+                // Snap to empty: keeps float drift out of the ledger.
+                m.occ = 0.0;
+                m.rate = 0.0;
+            }
+            m.epoch += 1;
+            // Pre-invalidate before any slot recycling can re-arm it.
+            run.gen = run.gen.wrapping_add(1);
+            (run.arrival_ms, run.wait0_ms, run.ttft_ms)
+        };
+        metrics.record(pool_idx, arrival, wait0, ttft, now - arrival);
+        self.schedule_pressure(pool_idx, inst, now, events);
+        self.drain(pools, pool_idx, now, events, cap_window, faults);
+        true
+    }
+
+    /// Handle a `MemPressure` crossing: stale-epoch events no-op; a
+    /// live crossing evicts the newest resident (never the sole or
+    /// oldest one — the oldest always runs to completion, which is
+    /// what rules out livelock).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn on_pressure<E: EventSink>(
+        &mut self,
+        pools: &mut [DesPool],
+        pool_idx: usize,
+        inst: usize,
+        epoch: u64,
+        now: f64,
+        events: &mut E,
+        cap_window: &Option<CapWindow>,
+        faults: Option<&CompiledFaults>,
+        metrics: &mut MetricsCollector,
+    ) {
+        {
+            let m = &self.insts[pool_idx][inst];
+            if m.epoch != epoch || m.residents.len() < 2 {
+                return;
+            }
+        }
+        let victim = *self.insts[pool_idx][inst]
+            .residents
+            .last()
+            .expect("len >= 2");
+        let arrival = {
+            let run = &mut self.runs[victim as usize];
+            let contrib = run.base + run.rate * (now - run.admit_ms);
+            let produced = (run.rate * (now - run.admit_ms)).floor().max(0.0);
+            let m = &mut self.insts[pool_idx][inst];
+            m.rebase(now);
+            m.residents.pop();
+            m.occ -= contrib;
+            m.rate -= run.rate;
+            m.epoch += 1;
+            run.g_done = if self.preserves_progress {
+                (run.g_done + produced).min(run.l_out)
+            } else {
+                0.0
+            };
+            // Cancels the victim's pending completion.
+            run.gen = run.gen.wrapping_add(1);
+            if now < run.first_token_ms {
+                // First token lost: TTFT re-stages at re-admission.
+                run.ttft_ms = f64::NAN;
+            }
+            run.evict_ms = now;
+            run.arrival_ms
+        };
+        pools[pool_idx].release(inst, now);
+        self.n_preempted[pool_idx] += 1;
+        metrics.record_preempted(arrival);
+        // Victims requeue at the *front*: they re-admit before newer
+        // queued work (FIFO fairness under preemption).
+        let pool = &mut pools[pool_idx];
+        pool.queue.push_front(victim);
+        pool.max_queue_depth = pool.max_queue_depth.max(pool.queue.len());
+        self.schedule_pressure(pool_idx, inst, now, events);
+        self.drain(pools, pool_idx, now, events, cap_window, faults);
+    }
+
+    /// Schedule the next capacity-crossing event for an instance, if a
+    /// genuine crossing can precede the instance's next completion
+    /// (later crossings are rescheduled by the completion itself, so
+    /// pushing them would only queue guaranteed-stale events and
+    /// stretch the horizon).
+    fn schedule_pressure<E: EventSink>(
+        &mut self,
+        pool_idx: usize,
+        inst: usize,
+        now: f64,
+        events: &mut E,
+    ) {
+        if !self.evicts {
+            return;
+        }
+        let runs = &self.runs;
+        let m = &self.insts[pool_idx][inst];
+        if m.residents.len() < 2 || m.rate <= 0.0 {
+            return;
+        }
+        let headroom = m.cap - m.occ;
+        let t_cross = if headroom <= 0.0 {
+            now
+        } else {
+            now + headroom / m.rate
+        };
+        let mut next_completion = f64::INFINITY;
+        for &r in &m.residents {
+            let done =
+                runs[r as usize].admit_ms + runs[r as usize].hold_ms;
+            if done < next_completion {
+                next_completion = done;
+            }
+        }
+        if t_cross >= next_completion {
+            return;
+        }
+        events.push_event(
+            t_cross.max(now),
+            EventKind::MemPressure {
+                pool: pool_idx as u16,
+                instance: inst as u16,
+                epoch: m.epoch,
+            },
+        );
+    }
+
+    /// Raw per-pool aggregates for result assembly (pool-index order).
+    pub(crate) fn pool_raw(&self, p: usize) -> MemPoolRaw {
+        let mut token_ms = 0.0;
+        let mut peak_frac = 0.0f64;
+        let mut cap_slots = 0.0;
+        for m in &self.insts[p] {
+            token_ms += m.token_ms;
+            if m.cap > 0.0 {
+                peak_frac = peak_frac.max(m.peak / m.cap);
+            }
+            cap_slots += m.cap;
+        }
+        MemPoolRaw {
+            token_ms,
+            peak_frac,
+            cap_slots,
+            n_preempted: self.n_preempted[p],
+            stall_ms: self.stall_ms[p],
+        }
+    }
+
+    /// All pools' raw aggregates, in pool-index order.
+    pub(crate) fn raws(&self) -> Vec<MemPoolRaw> {
+        (0..self.insts.len()).map(|p| self.pool_raw(p)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::des::engine::SimPool;
+    use crate::gpu::catalog::GpuCatalog;
+
+    fn a100() -> GpuProfile {
+        GpuCatalog::standard().get("A100").unwrap().clone()
+    }
+
+    fn spec() -> MemorySpec {
+        MemorySpec {
+            hbm_gb: None,
+            weights_gb: 60.0,
+            bytes_per_token: 160_000.0,
+        }
+    }
+
+    fn pools() -> Vec<SimPool> {
+        vec![SimPool {
+            gpu: a100(),
+            n_gpus: 2,
+            ctx_budget: 8192.0,
+            batch_cap: None,
+        }]
+    }
+
+    #[test]
+    fn capacity_derives_from_the_gpu_model() {
+        // A100: 80 GB - 60 GB weights = 20 GB / 160 KB per token.
+        let cap = spec().capacity_tokens(&a100());
+        assert_eq!(cap, 125_000.0);
+        // Explicit HBM overrides the catalog vram_gb.
+        let s = MemorySpec { hbm_gb: Some(100.0), ..spec() };
+        assert_eq!(s.capacity_tokens(&a100()), 250_000.0);
+        // Weights exceeding HBM clamp to zero capacity.
+        let s = MemorySpec { weights_gb: 200.0, ..spec() };
+        assert_eq!(s.capacity_tokens(&a100()), 0.0);
+    }
+
+    #[test]
+    fn policy_flags_dispatch_through_the_trait() {
+        let none = PolicyKind::None.as_policy();
+        assert_eq!(none.name(), "none");
+        assert!(none.reserves_peak() && !none.evicts());
+        let rc = PolicyKind::EvictRecompute.as_policy();
+        assert_eq!(rc.name(), "evict-recompute");
+        assert!(rc.evicts() && !rc.preserves_progress());
+        let sw = PolicyKind::EvictSwap.as_policy();
+        assert_eq!(sw.name(), "evict-swap");
+        assert!(sw.evicts() && sw.preserves_progress());
+    }
+
+    #[test]
+    fn validate_rejects_bad_specs() {
+        let fleet = pools();
+        let ok = MemoryConfig {
+            spec: spec(),
+            policy: PolicyKind::EvictRecompute,
+            swap_out_ms: 0.0,
+            swap_in_ms: 0.0,
+        };
+        assert!(ok.validate(&fleet).is_ok());
+        let mut bad = ok.clone();
+        bad.spec.bytes_per_token = 0.0;
+        assert!(matches!(
+            bad.validate(&fleet),
+            Err(ConfigError::InvalidMemory(_))
+        ));
+        let mut bad = ok.clone();
+        bad.spec.weights_gb = -1.0;
+        assert!(bad.validate(&fleet).is_err());
+        let mut bad = ok.clone();
+        bad.swap_in_ms = f64::NAN;
+        assert!(bad.validate(&fleet).is_err());
+        // Capacity below one max-context request is a config error,
+        // not a silent livelock.
+        let mut bad = ok.clone();
+        bad.spec.weights_gb = 79.9;
+        let err = bad.validate(&fleet).unwrap_err();
+        assert!(err.to_string().contains("context budget"));
+    }
+
+    #[test]
+    fn toml_round_trips_the_full_section() {
+        let text = "\
+# KV memory model\n\
+[memory]\n\
+hbm_gb = 80.0  # override\n\
+weights_gb = 60.0\n\
+bytes_per_token = 160000.0\n\
+policy = \"evict-swap\"\n\
+swap_out_ms = 3.0\n\
+swap_in_ms = 5.0\n";
+        let c = MemoryConfig::from_toml_str(text).unwrap();
+        assert_eq!(c.spec.hbm_gb, Some(80.0));
+        assert_eq!(c.spec.weights_gb, 60.0);
+        assert_eq!(c.spec.bytes_per_token, 160_000.0);
+        assert_eq!(c.policy, PolicyKind::EvictSwap);
+        assert_eq!(c.swap_out_ms, 3.0);
+        assert_eq!(c.swap_in_ms, 5.0);
+    }
+
+    #[test]
+    fn toml_defaults_policy_and_swap_latencies() {
+        let c = MemoryConfig::from_toml_str(
+            "[memory]\nweights_gb = 10\nbytes_per_token = 1e5\n",
+        )
+        .unwrap();
+        assert_eq!(c.policy, PolicyKind::None);
+        assert_eq!(c.spec.hbm_gb, None);
+        assert_eq!(c.swap_out_ms, 0.0);
+        assert_eq!(c.swap_in_ms, 0.0);
+        for p in ["none", "evict-recompute", "evict-swap"] {
+            let text = format!(
+                "[memory]\nweights_gb = 1\nbytes_per_token = 1\n\
+                 policy = {p}\n"
+            );
+            assert!(MemoryConfig::from_toml_str(&text).is_ok(), "{p}");
+        }
+    }
+
+    #[test]
+    fn toml_rejects_malformed_input() {
+        for bad in [
+            "weights_gb = 1",                       // unsectioned key
+            "[explosion]",                          // unknown section
+            "[memory]\nweights_gb = much",          // non-number
+            "[memory]\n[memory]",                   // duplicate section
+            "[memory]\nwat = 1",                    // unknown key
+            "[memory]\npolicy = \"drop-tables\"",   // unknown policy
+            "[memory]\nweights_gb = 1",             // missing bytes/token
+            "[memory]\nbytes_per_token = 1",        // missing weights
+            "",                                     // no section at all
+        ] {
+            let err = MemoryConfig::from_toml_str(bad).unwrap_err();
+            assert!(
+                matches!(err, ConfigError::InvalidMemory(_)),
+                "{bad:?} -> {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn ledger_integrates_linear_occupancy_exactly() {
+        let mut m = MemInstance::new(1000.0);
+        // One resident: base 100, rate 2 tokens/ms for 50 ms.
+        m.occ = 100.0;
+        m.rate = 2.0;
+        m.peak = 100.0;
+        m.rebase(50.0);
+        // Trapezoid: 50 * (100 + 0.5*2*50) = 50 * 150 = 7500.
+        assert_eq!(m.token_ms, 7_500.0);
+        assert_eq!(m.occ, 200.0);
+        assert_eq!(m.peak, 200.0);
+        // Zero-dt rebase is a no-op (no drift).
+        m.rebase(50.0);
+        assert_eq!(m.token_ms, 7_500.0);
+    }
+
+    #[test]
+    fn overall_raws_aggregate_in_pool_order() {
+        let raw = vec![
+            MemPoolRaw {
+                token_ms: 1_000.0,
+                peak_frac: 0.5,
+                cap_slots: 10.0,
+                n_preempted: 3,
+                stall_ms: 40.0,
+            },
+            MemPoolRaw {
+                token_ms: 3_000.0,
+                peak_frac: 0.9,
+                cap_slots: 30.0,
+                n_preempted: 1,
+                stall_ms: 2.0,
+            },
+        ];
+        let (peak, mean, n, stall) = overall_from_raw(&raw, 100.0);
+        assert_eq!(peak, 0.9);
+        assert_eq!(mean, 4_000.0 / (100.0 * 40.0));
+        assert_eq!(n, 4);
+        assert_eq!(stall, 42.0);
+        let (p0, m0) = pool_util_from_raw(&raw[0], 100.0);
+        assert_eq!(p0, 0.5);
+        assert_eq!(m0, 1.0);
+        // Degenerate horizons report zero, not NaN.
+        assert_eq!(overall_from_raw(&raw, 0.0).1, 0.0);
+        assert_eq!(overall_from_raw(&[], 100.0), (0.0, 0.0, 0, 0.0));
+    }
+}

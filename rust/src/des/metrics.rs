@@ -127,6 +127,11 @@ pub struct WindowedStats {
     shed: Vec<usize>,
     /// Closed-loop only: requests that exhausted their retry budget.
     abandoned: Vec<usize>,
+    /// Memory-mode only ([`crate::des::memory`]): evictions charged to
+    /// the victim's arrival window (all zero otherwise). A request
+    /// evicted twice counts twice — this tracks preemption *events*,
+    /// the thrash signature, not distinct victims.
+    preempted: Vec<usize>,
 }
 
 impl WindowedStats {
@@ -140,6 +145,7 @@ impl WindowedStats {
             ttft: Vec::new(),
             shed: Vec::new(),
             abandoned: Vec::new(),
+            preempted: Vec::new(),
         }
     }
 
@@ -175,6 +181,7 @@ impl WindowedStats {
             self.arrived.push(0);
             self.shed.push(0);
             self.abandoned.push(0);
+            self.preempted.push(0);
             self.ttft.push(match self.mode {
                 MetricsMode::Exact => Samples::new(),
                 MetricsMode::Streaming => Samples::streaming(),
@@ -208,6 +215,15 @@ impl WindowedStats {
     pub fn record_abandoned(&mut self, arrival_ms: f64) {
         let i = self.slot(arrival_ms);
         self.abandoned[i] += 1;
+    }
+
+    /// Count an eviction against the victim's arrival window
+    /// (memory-mode runs only). The victim is still in flight — it
+    /// stays in the window's arrival denominator and is served (or
+    /// unserved) like any other request.
+    pub fn record_preempted(&mut self, arrival_ms: f64) {
+        let i = self.slot(arrival_ms);
+        self.preempted[i] += 1;
     }
 
     pub fn n_windows(&self) -> usize {
@@ -249,6 +265,11 @@ impl WindowedStats {
     /// attempts.
     pub fn n_abandoned(&self, i: usize) -> usize {
         self.abandoned[i]
+    }
+
+    /// Evictions charged to window-`i` arrivals (memory-mode runs).
+    pub fn n_preempted(&self, i: usize) -> usize {
+        self.preempted[i]
     }
 
     /// P99 TTFT over requests that arrived in window `i`; NaN if none
@@ -333,6 +354,7 @@ impl WindowedStats {
         let mut arrived = vec![0usize; new_len];
         let mut shed = vec![0usize; new_len];
         let mut abandoned = vec![0usize; new_len];
+        let mut preempted = vec![0usize; new_len];
         let mut ttft: Vec<Samples> = (0..new_len)
             .map(|_| match self.mode {
                 MetricsMode::Exact => Samples::new(),
@@ -352,6 +374,9 @@ impl WindowedStats {
         for (i, &a) in self.abandoned.iter().enumerate() {
             abandoned[off + i] = a;
         }
+        for (i, &p) in self.preempted.iter().enumerate() {
+            preempted[off + i] = p;
+        }
         let off = other.base - new_base;
         for (i, t) in other.ttft.iter().enumerate() {
             ttft[off + i].merge(t);
@@ -365,10 +390,14 @@ impl WindowedStats {
         for (i, &a) in other.abandoned.iter().enumerate() {
             abandoned[off + i] += a;
         }
+        for (i, &p) in other.preempted.iter().enumerate() {
+            preempted[off + i] += p;
+        }
         self.base = new_base;
         self.arrived = arrived;
         self.shed = shed;
         self.abandoned = abandoned;
+        self.preempted = preempted;
         self.ttft = ttft;
     }
 }
@@ -482,6 +511,19 @@ impl MetricsCollector {
         }
     }
 
+    /// Count an eviction against the victim's arrival window
+    /// (memory-mode runs; warmup-gated like every other windowed
+    /// stat — the structural per-pool preemption counters in
+    /// [`crate::des::memory`] are *not* gated).
+    pub fn record_preempted(&mut self, arrival_ms: f64) {
+        if !self.measured(arrival_ms) {
+            return;
+        }
+        if let Some(w) = &mut self.windows {
+            w.record_preempted(arrival_ms);
+        }
+    }
+
     /// Post-run anti-censoring scan, shared by both engines: every
     /// measured request still sitting in a pool queue when the event
     /// stream drained (a dead or wedged pool — live pools always drain)
@@ -544,6 +586,20 @@ pub struct DesResult {
     pub n_shed: usize,
     /// Per-window TTFT series when `DesConfig::window_ms` was set.
     pub windows: Option<WindowedStats>,
+    /// Memory-mode only: evictions across the run (a request evicted
+    /// twice counts twice). 0 on memory-less runs.
+    pub n_preempted: usize,
+    /// Memory-mode only: total time victims spent between eviction and
+    /// re-admission (plus swap round-trips), ms. The preemption-delay
+    /// account — served latencies already include it.
+    pub preempt_stall_ms: f64,
+    /// Memory-mode only: max over instances of peak KV occupancy over
+    /// capacity. Can exceed 1.0 when a sole resident outgrows its
+    /// instance (nothing can be evicted to make room). 0 otherwise.
+    pub kv_peak_util: f64,
+    /// Memory-mode only: time-averaged KV occupancy over total
+    /// capacity across the horizon. 0 on memory-less runs.
+    pub kv_mean_util: f64,
 }
 
 /// Summary for one pool after the run.
@@ -558,6 +614,17 @@ pub struct PoolResult {
     /// Measured requests still in this pool's queue at the end of the
     /// run.
     pub n_unserved: usize,
+    /// Memory-mode only: evictions in this pool (structural — not
+    /// warmup-gated, unlike the latency stats).
+    pub n_preempted: usize,
+    /// Memory-mode only: victim stall time in this pool, ms.
+    pub preempt_stall_ms: f64,
+    /// Memory-mode only: max over this pool's instances of peak KV
+    /// occupancy over capacity.
+    pub kv_peak_util: f64,
+    /// Memory-mode only: time-averaged KV occupancy over this pool's
+    /// capacity across the horizon.
+    pub kv_mean_util: f64,
 }
 
 impl DesResult {
@@ -678,6 +745,39 @@ mod tests {
             n_abandoned: 0,
             n_shed: 0,
             windows: None,
+            n_preempted: 0,
+            preempt_stall_ms: 0.0,
+            kv_peak_util: 0.0,
+            kv_mean_util: 0.0,
+        }
+    }
+
+    #[test]
+    fn windowed_preemptions_count_events_not_victims() {
+        for mode in [MetricsMode::Exact, MetricsMode::Streaming] {
+            let mut w = WindowedStats::new(1000.0, mode);
+            w.record_arrival(100.0);
+            // The same victim evicted twice: two preemption events,
+            // still one arrival, and (eventually) one served request.
+            w.record_preempted(100.0);
+            w.record_preempted(100.0);
+            w.record_served(100.0, 250.0);
+            assert_eq!(w.n_preempted(0), 2);
+            assert_eq!(w.n_unserved(0), 0);
+            // Preemption alone does not fail the window — the stall is
+            // already inside the served TTFT, which is what's judged.
+            assert!(w.meets_slo(0, 500.0), "{mode:?}");
+            assert!(!w.meets_slo(0, 200.0), "{mode:?}");
+            // Counts survive the shard merge, including re-anchoring.
+            let mut early = WindowedStats::new(1000.0, mode);
+            early.record_arrival(50.0);
+            early.record_served(50.0, 10.0);
+            let mut m = w.clone();
+            m.merge(&early);
+            assert_eq!(m.n_preempted(0), 2);
+            let mut empty = WindowedStats::new(1000.0, mode);
+            empty.merge(&w);
+            assert_eq!(empty.n_preempted(0), 2);
         }
     }
 

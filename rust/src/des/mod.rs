@@ -11,6 +11,7 @@ pub mod engine;
 pub mod event;
 pub mod faults;
 pub mod input;
+pub mod memory;
 pub mod metrics;
 pub mod pool;
 pub mod reference;

@@ -20,6 +20,7 @@ use crate::des::engine::{CapWindow, DesConfig, SimPool};
 use crate::des::event::{EventKind, EventQueue};
 use crate::des::faults::CompiledFaults;
 use crate::des::input::{ArrivalsSource, ConfigError, SimInput};
+use crate::des::memory::{self, MemState, MemoryConfig};
 use crate::des::metrics::{DesResult, MetricsCollector, PoolResult};
 use crate::des::pool::DesPool;
 use crate::des::retry::{ClosedLoopState, Phase, RetryConfig};
@@ -316,7 +317,7 @@ pub fn run_reference_input(
     match input.arrivals {
         ArrivalsSource::Stream(sampled) => Ok(run_core(
             input.pools, input.router, input.config, sampled,
-            faults.as_ref(), input.retries,
+            faults.as_ref(), input.retries, input.memory,
         )),
         ArrivalsSource::Generator(w) => {
             let sampled = w.sample_requests(
@@ -324,7 +325,7 @@ pub fn run_reference_input(
             );
             Ok(run_core(
                 input.pools, input.router, input.config, &sampled,
-                faults.as_ref(), input.retries,
+                faults.as_ref(), input.retries, input.memory,
             ))
         }
     }
@@ -337,6 +338,7 @@ fn run_core(
     sampled: &[SampledRequest],
     faults: Option<&CompiledFaults>,
     retries: Option<&RetryConfig>,
+    mem_cfg: Option<&MemoryConfig>,
 ) -> DesResult {
     let n = sampled.len();
     let mut route_rng = Pcg64::new(config.seed, streams::ROUTING);
@@ -357,6 +359,11 @@ fn run_core(
             l_out: s.l_out,
         })
         .collect();
+    // The memory protocol lives entirely in [`crate::des::memory`],
+    // generic over the event sink — the reference heap runs the exact
+    // same state machine as the calendar-queue engine.
+    let mut mem: Option<MemState> =
+        mem_cfg.map(|m| MemState::new(m, &pools));
 
     let mut events = EventQueue::with_capacity(2 * n + 4);
     for (i, r) in reqs.iter().enumerate() {
@@ -427,6 +434,15 @@ fn run_core(
                         &mut pools, req, &reqs, now, &mut events,
                         &config.cap_window, faults, &mut metrics, cl,
                     );
+                } else if let Some(ms) = mem.as_mut() {
+                    let (l_in, l_out) = (r.l_in, r.l_out);
+                    ms.init_request(req, l_in, l_out, now);
+                    if !ms.try_admit(
+                        &mut pools, decision.pool, req, now, &mut events,
+                        &config.cap_window, faults,
+                    ) {
+                        pools[decision.pool].enqueue(req);
+                    }
                 } else if !try_admit(
                     &mut pools, decision.pool, req, &reqs, now, &mut events,
                     &config.cap_window, faults, &mut metrics,
@@ -455,12 +471,37 @@ fn run_core(
                         &mut pools, pool as usize, &reqs, now, &mut events,
                         &config.cap_window, faults, &mut metrics, cl,
                     );
+                } else if let Some(ms) = mem.as_mut() {
+                    ms.drain(
+                        &mut pools, pool as usize, now, &mut events,
+                        &config.cap_window, faults,
+                    );
                 } else {
                     drain_queue(
                         &mut pools, pool as usize, &reqs, now, &mut events,
                         &config.cap_window, faults, &mut metrics,
                     );
                 }
+            }
+            EventKind::MemCompletion { req, pool, instance, gen } => {
+                let ms = mem
+                    .as_mut()
+                    .expect("memory events exist only in memory mode");
+                ms.on_completion(
+                    &mut pools, pool as usize, instance as usize, req, gen,
+                    now, &mut events, &config.cap_window, faults,
+                    &mut metrics,
+                );
+            }
+            EventKind::MemPressure { pool, instance, epoch } => {
+                let ms = mem
+                    .as_mut()
+                    .expect("memory events exist only in memory mode");
+                ms.on_pressure(
+                    &mut pools, pool as usize, instance as usize, epoch,
+                    now, &mut events, &config.cap_window, faults,
+                    &mut metrics,
+                );
             }
             EventKind::Timeout { req, pool, attempt } => {
                 let cl = closed
@@ -512,19 +553,39 @@ fn run_core(
 
     let (n_unserved, max_unserved_wait, pool_unserved) = metrics
         .scan_unserved(&pools, |req| reqs[req as usize].arrival_ms, horizon);
+    let mem_raw = mem.as_ref().map(|m| m.raws());
+    let (kv_peak, kv_mean, n_preempted, preempt_stall) = match &mem_raw {
+        Some(raws) => memory::overall_from_raw(raws, horizon),
+        None => (0.0, 0.0, 0, 0.0),
+    };
 
     DesResult {
         per_pool: pools
             .iter()
             .zip(metrics.per_pool)
             .zip(pool_unserved)
-            .map(|((p, stats), n_unserved)| PoolResult {
-                stats,
-                utilization: p.utilization(horizon),
-                max_queue_depth: p.max_queue_depth,
-                slots_per_gpu: p.slots_per_gpu,
-                n_gpus: p.instances.len(),
-                n_unserved,
+            .enumerate()
+            .map(|(i, ((p, stats), n_unserved))| {
+                let (pk, mn, np, st) = match &mem_raw {
+                    Some(raws) => {
+                        let (pk, mn) =
+                            memory::pool_util_from_raw(&raws[i], horizon);
+                        (pk, mn, raws[i].n_preempted, raws[i].stall_ms)
+                    }
+                    None => (0.0, 0.0, 0, 0.0),
+                };
+                PoolResult {
+                    stats,
+                    utilization: p.utilization(horizon),
+                    max_queue_depth: p.max_queue_depth,
+                    slots_per_gpu: p.slots_per_gpu,
+                    n_gpus: p.instances.len(),
+                    n_unserved,
+                    n_preempted: np,
+                    preempt_stall_ms: st,
+                    kv_peak_util: pk,
+                    kv_mean_util: mn,
+                }
             })
             .collect(),
         overall: metrics.overall,
@@ -538,6 +599,10 @@ fn run_core(
         n_abandoned: metrics.n_abandoned,
         n_shed: metrics.n_shed,
         windows: metrics.windows,
+        n_preempted,
+        preempt_stall_ms: preempt_stall,
+        kv_peak_util: kv_peak,
+        kv_mean_util: kv_mean,
     }
 }
 
@@ -656,5 +721,71 @@ mod tests {
         // And the run actually exercised the closed loop.
         assert!(a.n_attempts > 3_000);
         assert!(a.n_abandoned + a.n_shed > 0);
+    }
+
+    #[test]
+    fn reference_agrees_with_production_engine_under_memory() {
+        use crate::des::memory::{MemoryConfig, MemorySpec, PolicyKind};
+        // Tight KV capacity so admissions block, pressure events fire,
+        // and victims are evicted and resumed — then pin the two serial
+        // engines against each other bit for bit on every counter.
+        let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 60.0);
+        let gpu = GpuCatalog::standard().get("A100").unwrap().clone();
+        let pools = vec![
+            SimPool { gpu: gpu.clone(), n_gpus: 2, ctx_budget: 4096.0,
+                      batch_cap: None },
+            SimPool { gpu, n_gpus: 2, ctx_budget: 8192.0, batch_cap: None },
+        ];
+        let router = RoutingPolicy::Length { b_short: 4096.0 };
+        let cfg =
+            DesConfig { n_requests: 3_000, seed: 37, ..Default::default() };
+        let sampled = w.sample_requests(cfg.n_requests, cfg.seed);
+        for policy in [
+            PolicyKind::None,
+            PolicyKind::EvictRecompute,
+            PolicyKind::EvictSwap,
+        ] {
+            let mc = MemoryConfig {
+                spec: MemorySpec {
+                    hbm_gb: None,
+                    weights_gb: 71.0,
+                    bytes_per_token: 1e6,
+                },
+                policy,
+                swap_out_ms: 2.0,
+                swap_in_ms: 4.0,
+            };
+            let input = SimInput::stream(&pools, &router, &cfg, &sampled)
+                .with_memory(&mc);
+            let a = run_reference_input(&input).unwrap();
+            let b = Simulator::run_input(&input).unwrap();
+            assert_eq!(a.overall.p99_ttft(), b.overall.p99_ttft(),
+                       "{policy:?}");
+            assert_eq!(a.overall.wait.p99(), b.overall.wait.p99());
+            assert_eq!(a.overall.e2e.p99(), b.overall.e2e.p99());
+            assert_eq!(a.overall.count, b.overall.count);
+            assert_eq!(a.horizon_ms, b.horizon_ms, "{policy:?}");
+            assert_eq!(a.n_events, b.n_events, "{policy:?}");
+            assert_eq!(a.n_unserved, b.n_unserved);
+            assert_eq!(a.n_preempted, b.n_preempted, "{policy:?}");
+            assert_eq!(a.preempt_stall_ms, b.preempt_stall_ms);
+            assert_eq!(a.kv_peak_util, b.kv_peak_util, "{policy:?}");
+            assert_eq!(a.kv_mean_util, b.kv_mean_util, "{policy:?}");
+            for (pa, pb) in a.per_pool.iter().zip(&b.per_pool) {
+                assert_eq!(pa.n_preempted, pb.n_preempted);
+                assert_eq!(pa.preempt_stall_ms, pb.preempt_stall_ms);
+                assert_eq!(pa.kv_peak_util, pb.kv_peak_util);
+                assert_eq!(pa.kv_mean_util, pb.kv_mean_util);
+                assert_eq!(pa.stats.count, pb.stats.count);
+            }
+            // The eviction policies must actually thrash here.
+            if matches!(policy, PolicyKind::EvictRecompute
+                                | PolicyKind::EvictSwap)
+            {
+                assert!(a.n_preempted > 0, "{policy:?}: no preemptions");
+            } else {
+                assert_eq!(a.n_preempted, 0);
+            }
+        }
     }
 }

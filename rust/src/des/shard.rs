@@ -58,6 +58,7 @@ use crate::des::engine::{abandon_or_retry, drain_queue_closed,
 use crate::des::event::{CalendarQueue, EventKind};
 use crate::des::faults::CompiledFaults;
 use crate::des::input::{ArrivalsSource, ConfigError, SimInput};
+use crate::des::memory::{self, MemPoolRaw, MemState, MemoryConfig};
 use crate::des::metrics::{DesResult, LatencyStats, MetricsCollector,
                           PoolResult, WindowedStats};
 use crate::des::pool::DesPool;
@@ -148,6 +149,11 @@ struct ShardSim<'a> {
     /// so this is the serial engines' stream index — the id backoff
     /// jitter is keyed on, making retry schedules shard-invariant.
     global_arrivals: u64,
+    /// KV-memory state ([`crate::des::memory`]); present iff a memory
+    /// config is attached. In memory mode arena slots are held until the
+    /// request's *final* completion commits (eviction requeues the slot
+    /// id, so recycling it early would alias two live requests).
+    mem: Option<MemState>,
 }
 
 /// What a shard hands to the merge step.
@@ -165,6 +171,10 @@ struct ShardOutput {
     n_attempts: usize,
     n_abandoned: usize,
     n_shed: usize,
+    /// Per-pool KV ledger raws (empty when no memory config is
+    /// attached). Only this shard's owned pools carry activity; the
+    /// merge picks pool `p` from shard `p % n_shards`.
+    mem_raw: Vec<MemPoolRaw>,
 }
 
 impl<'a> ShardSim<'a> {
@@ -174,6 +184,7 @@ impl<'a> ShardSim<'a> {
         config: &'a DesConfig,
         faults: Option<&'a CompiledFaults>,
         retries: Option<&'a RetryConfig>,
+        mem_cfg: Option<&'a MemoryConfig>,
         shard_id: usize,
         n_shards: usize,
     ) -> Self {
@@ -215,6 +226,7 @@ impl<'a> ShardSim<'a> {
             config.metrics, pools.len(), hint, config.window_ms, 0.0,
         );
         let n_pools = pools.len();
+        let mem = mem_cfg.map(|m| MemState::new(m, &pools));
         ShardSim {
             shard_id,
             n_shards,
@@ -232,6 +244,7 @@ impl<'a> ShardSim<'a> {
             closed: retries
                 .map(|c| ClosedLoopState::new(c, config.seed, n_pools)),
             global_arrivals: 0,
+            mem,
         }
     }
 
@@ -302,6 +315,19 @@ impl<'a> ShardSim<'a> {
             }
             return;
         }
+        if let Some(ms) = self.mem.as_mut() {
+            // The slot stays allocated until the final completion
+            // commits — eviction keeps the id live in the pool queue.
+            ms.init_request(id, decision.request.l_in,
+                            decision.request.l_out, now);
+            if !ms.try_admit(
+                &mut self.pools, decision.pool, id, now,
+                &mut self.events, &self.config.cap_window, self.faults,
+            ) {
+                self.pools[decision.pool].enqueue(id);
+            }
+            return;
+        }
         let admitted = try_admit(
             &mut self.pools, decision.pool, id, &self.arena.slots, now,
             &mut self.events, &self.config.cap_window, self.faults,
@@ -344,9 +370,41 @@ impl<'a> ShardSim<'a> {
                         now, &mut self.events, &self.config.cap_window,
                         self.faults, &mut self.metrics, cl,
                     );
+                } else if let Some(ms) = self.mem.as_mut() {
+                    ms.drain(
+                        &mut self.pools, pool as usize, now,
+                        &mut self.events, &self.config.cap_window,
+                        self.faults,
+                    );
                 } else {
                     self.drain_pool(pool as usize, now);
                 }
+            }
+            EventKind::MemCompletion { req, pool, instance, gen } => {
+                let ms = self
+                    .mem
+                    .as_mut()
+                    .expect("memory events exist only in memory mode");
+                if ms.on_completion(
+                    &mut self.pools, pool as usize, instance as usize,
+                    req, gen, now, &mut self.events,
+                    &self.config.cap_window, self.faults,
+                    &mut self.metrics,
+                ) {
+                    self.arena.release(req);
+                }
+            }
+            EventKind::MemPressure { pool, instance, epoch } => {
+                let ms = self
+                    .mem
+                    .as_mut()
+                    .expect("memory events exist only in memory mode");
+                ms.on_pressure(
+                    &mut self.pools, pool as usize, instance as usize,
+                    epoch, now, &mut self.events,
+                    &self.config.cap_window, self.faults,
+                    &mut self.metrics,
+                );
             }
             EventKind::Timeout { req, pool, attempt } => {
                 let cl = self
@@ -463,6 +521,11 @@ impl<'a> ShardSim<'a> {
             n_attempts: self.metrics.n_attempts,
             n_abandoned: self.metrics.n_abandoned,
             n_shed: self.metrics.n_shed,
+            mem_raw: self
+                .mem
+                .as_ref()
+                .map(|m| m.raws())
+                .unwrap_or_default(),
         }
     }
 }
@@ -499,10 +562,35 @@ fn merge_outputs(
     } else {
         0.0
     };
+    // Reassemble the KV ledger raws in pool order from each pool's
+    // owner shard, then aggregate with the *same* free functions (and
+    // hence the same f64 operation order) as the serial engines.
+    let mem_raw: Option<Vec<MemPoolRaw>> =
+        if outputs[0].mem_raw.is_empty() {
+            None
+        } else {
+            Some(
+                (0..n_pools)
+                    .map(|p| outputs[p % n_shards].mem_raw[p].clone())
+                    .collect(),
+            )
+        };
+    let (kv_peak, kv_mean, n_preempted, preempt_stall) = match &mem_raw {
+        Some(raws) => memory::overall_from_raw(raws, horizon),
+        None => (0.0, 0.0, 0, 0.0),
+    };
     // Each pool's state lives wholly in its owner shard; utilization is
     // evaluated against the *global* horizon, as in the serial run.
     let per_pool: Vec<PoolResult> = (0..n_pools)
         .map(|p| {
+            let (pk, mn, np, st) = match &mem_raw {
+                Some(raws) => {
+                    let (pk, mn) =
+                        memory::pool_util_from_raw(&raws[p], horizon);
+                    (pk, mn, raws[p].n_preempted, raws[p].stall_ms)
+                }
+                None => (0.0, 0.0, 0, 0.0),
+            };
             let o = &mut outputs[p % n_shards];
             let stats = std::mem::take(&mut o.per_pool_stats[p]);
             let pool = &o.pools[p];
@@ -513,6 +601,10 @@ fn merge_outputs(
                 slots_per_gpu: pool.slots_per_gpu,
                 n_gpus: pool.instances.len(),
                 n_unserved: o.per_pool_unserved[p],
+                n_preempted: np,
+                preempt_stall_ms: st,
+                kv_peak_util: pk,
+                kv_mean_util: mn,
             }
         })
         .collect();
@@ -539,6 +631,10 @@ fn merge_outputs(
         n_abandoned,
         n_shed,
         windows,
+        n_preempted,
+        preempt_stall_ms: preempt_stall,
+        kv_peak_util: kv_peak,
+        kv_mean_util: kv_mean,
     };
     (result, arena_peak)
 }
@@ -599,7 +695,7 @@ pub fn run_streamed_input(
     let n;
     let mut sim = ShardSim::new(
         input.pools, input.router, input.config, compiled.as_ref(),
-        input.retries, 0, 1,
+        input.retries, input.memory, 0, 1,
     );
     match input.arrivals {
         ArrivalsSource::Stream(sampled) => {
@@ -655,6 +751,7 @@ pub fn run_sharded_input(
     let compiled = input.compiled_faults();
     let faults = compiled.as_ref();
     let retries = input.retries;
+    let mem_cfg = input.memory;
     let chunk_size = chunk_size.max(1);
     let (pool_specs, router, config) =
         (input.pools, input.router, input.config);
@@ -667,7 +764,7 @@ pub fn run_sharded_input(
                     s.spawn(move || {
                         let mut sim = ShardSim::new(
                             pool_specs, router, config, faults, retries,
-                            sid, n_shards,
+                            mem_cfg, sid, n_shards,
                         );
                         for r in sampled {
                             sim.feed(r);
@@ -707,8 +804,8 @@ pub fn run_sharded_input(
             .map(|(sid, rx)| {
                 s.spawn(move || {
                     let mut sim = ShardSim::new(
-                        pool_specs, router, config, faults, retries, sid,
-                        n_shards,
+                        pool_specs, router, config, faults, retries,
+                        mem_cfg, sid, n_shards,
                     );
                     while let Ok(chunk) = rx.recv() {
                         for r in chunk.iter() {

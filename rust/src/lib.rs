@@ -62,6 +62,8 @@ pub mod prelude {
     pub use crate::des::faults::{FaultModel, FaultScript, GpuFailure,
                                  OutageSpec, Straggler};
     pub use crate::des::input::{ArrivalsSource, ConfigError, SimInput};
+    pub use crate::des::memory::{MemoryConfig, MemorySpec, PolicyKind,
+                                 PreemptionPolicy};
     pub use crate::des::metrics::{DesResult, MetricsMode};
     pub use crate::des::reference::run_reference_input;
     pub use crate::des::retry::{backoff_ms, AdmissionSpec, RetryConfig,

@@ -25,6 +25,7 @@ use std::sync::{Arc, Mutex};
 use crate::des::engine::{DesConfig, SimPool, Simulator};
 use crate::des::faults::{FaultScript, OutageSpec};
 use crate::des::input::SimInput;
+use crate::des::memory::MemoryConfig;
 use crate::des::retry::RetryConfig;
 use crate::des::metrics::DesResult;
 use crate::des::shard::{run_streamed_input, DEFAULT_CHUNK_SIZE};
@@ -317,6 +318,27 @@ impl EvalEngine {
         faults: Option<&FaultScript>,
         retries: Option<&RetryConfig>,
     ) -> DesResult {
+        self.simulate_with(workload, pools, router, cfg, faults, retries,
+                           None)
+    }
+
+    /// [`Self::simulate_robust`] with an optional KV-cache memory model
+    /// ([`crate::des::memory`]): token-granular occupancy, memory-bounded
+    /// admission, and preemption. `None` is bit-identical to the
+    /// memory-less run; both the cached-stream and the generator-driven
+    /// dispatch attach the same config, so the memory-policy cutoff
+    /// stays semantics-free.
+    #[allow(clippy::too_many_arguments)]
+    pub fn simulate_with(
+        &self,
+        workload: &WorkloadSpec,
+        pools: &[SimPool],
+        router: &RoutingPolicy,
+        cfg: &DesConfig,
+        faults: Option<&FaultScript>,
+        retries: Option<&RetryConfig>,
+        memory: Option<&MemoryConfig>,
+    ) -> DesResult {
         if cfg.n_requests > Self::STREAM_CACHE_MAX && cfg.warmup_frac == 0.0
         {
             let mut input =
@@ -326,6 +348,9 @@ impl EvalEngine {
             }
             if let Some(r) = retries {
                 input = input.with_retries(r);
+            }
+            if let Some(m) = memory {
+                input = input.with_memory(m);
             }
             let (r, _) = run_streamed_input(&input, DEFAULT_CHUNK_SIZE)
                 .unwrap_or_else(|e| panic!("{e}"));
@@ -338,6 +363,9 @@ impl EvalEngine {
         }
         if let Some(r) = retries {
             input = input.with_retries(r);
+        }
+        if let Some(m) = memory {
+            input = input.with_memory(m);
         }
         Simulator::run_input(&input).unwrap_or_else(|e| panic!("{e}"))
     }
@@ -482,6 +510,57 @@ impl EvalEngine {
             let mut r = self.simulate_faulted(
                 w, &pools, &RoutingPolicy::Random { n_pools: 1 }, cfg,
                 Some(&script),
+            );
+            if r.meets_slo_in_every_window(slo_ms) {
+                return Some((n, r));
+            }
+        }
+        None
+    }
+
+    /// Memory-aware sizing: smallest homogeneous fleet that meets the
+    /// SLO **in every window with the KV-cache memory model attached**
+    /// ([`crate::des::memory`]). The analytic counterpart (and
+    /// [`Self::size_to_peak`]) sizes for compute alone; on heavy-tailed
+    /// context workloads the binding constraint is KV capacity, so the
+    /// memory-aware fleet is never smaller. Same floor, same upward
+    /// walk, same every-window test; requires `cfg.window_ms`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn size_for_memory(
+        &self,
+        w: &WorkloadSpec,
+        gpu: &GpuProfile,
+        slo_ms: f64,
+        max_gpus: u32,
+        cfg: &DesConfig,
+        memory: &MemoryConfig,
+    ) -> Option<(u32, DesResult)> {
+        assert!(
+            cfg.window_ms.is_some(),
+            "size_for_memory requires DesConfig::window_ms"
+        );
+        let ctx = w.cdf.max_len();
+        let hist = WorkloadHist::from_cdf(&w.cdf, w.input_fraction);
+        let peak_rps = match &w.arrivals {
+            ArrivalSpec::Nhpp { profile_rps, .. } => profile_rps
+                .iter()
+                .map(|&(_, r)| r)
+                .fold(w.lambda_rps, f64::max),
+            _ => w.lambda_rps,
+        };
+        let start = n_min_for_slice(&hist, 0.0, ctx, peak_rps / 1000.0, gpu,
+                                    ctx)
+            .unwrap_or(1);
+        for n in start..=max_gpus {
+            let pools = [SimPool {
+                gpu: gpu.clone(),
+                n_gpus: n as usize,
+                ctx_budget: ctx,
+                batch_cap: None,
+            }];
+            let mut r = self.simulate_with(
+                w, &pools, &RoutingPolicy::Random { n_pools: 1 }, cfg,
+                None, None, Some(memory),
             );
             if r.meets_slo_in_every_window(slo_ms) {
                 return Some((n, r));
@@ -788,6 +867,44 @@ mod tests {
                 .0;
             assert_eq!(nk, n0 + k, "k = {k}");
         }
+    }
+
+    #[test]
+    fn size_for_memory_matches_compute_sizing_when_memory_is_loose() {
+        use crate::des::memory::{MemoryConfig, MemorySpec, PolicyKind};
+        // A memory model that never binds must not change the sizing
+        // walk: window TTFTs are bit-identical to the open loop, so the
+        // every-window test admits the same smallest fleet.
+        let e = EvalEngine::standard();
+        let w = azure()
+            .with_nhpp(vec![(0.0, 40.0), (10_000.0, 200.0)], 20_000.0);
+        let gpu = e.catalog.get("H100").unwrap().clone();
+        let cfg = DesConfig {
+            n_requests: 3_000,
+            window_ms: Some(5_000.0),
+            ..Default::default()
+        };
+        let loose = MemoryConfig {
+            spec: MemorySpec {
+                hbm_gb: Some(10_000.0),
+                weights_gb: 0.0,
+                bytes_per_token: 1e3,
+            },
+            policy: PolicyKind::EvictRecompute,
+            swap_out_ms: 0.0,
+            swap_in_ms: 0.0,
+        };
+        let (n0, mut r0) =
+            e.size_to_peak(&w, &gpu, 500.0, 128, &cfg).expect("feasible");
+        let (nm, mut rm) = e
+            .size_for_memory(&w, &gpu, 500.0, 128, &cfg, &loose)
+            .expect("feasible");
+        assert_eq!(nm, n0);
+        assert_eq!(rm.overall.p99_ttft(), r0.overall.p99_ttft());
+        assert_eq!(rm.n_preempted, 0);
+        assert!(rm.kv_peak_util > 0.0 && rm.kv_peak_util < 0.05,
+                "loose pool must sit near-empty, got {}", rm.kv_peak_util);
+        assert!(rm.kv_mean_util <= rm.kv_peak_util);
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Deterministic DES perf harness (the engine behind `fleet-sim bench`).
 //!
-//! Four fixed scenarios — mirroring the des_regression matrix so the
+//! Five fixed scenarios — mirroring the regression matrices so the
 //! timed code path is exactly the verified one — are replayed on a
 //! pre-sampled request stream (sampling is excluded from timing):
 //!
@@ -9,7 +9,10 @@
 //! * `lmsys_multipool_capped` — three pools, ModelRouter class mix, and a
 //!   mid-run demand-response cap window,
 //! * `azure_diurnal_nhpp` — the two-phase diurnal NHPP profile (bursty
-//!   event cadence: peak phases churn deep completion backlogs).
+//!   event cadence: peak phases churn deep completion backlogs),
+//! * `azure_two_pool_memory` — the split fleet under a KV-starved
+//!   memory model with evict-recompute preemption (occupancy tracking,
+//!   eviction, and re-prefill all on the timed path).
 //!
 //! For each scenario the harness times the **production** engine
 //! (calendar queue + streaming metrics, the configuration high-volume
@@ -26,6 +29,7 @@
 use std::time::Instant;
 
 use crate::des::engine::{CapWindow, DesConfig, SimPool, Simulator};
+use crate::des::memory::{MemoryConfig, MemorySpec, PolicyKind};
 use crate::des::metrics::MetricsMode;
 use crate::des::input::SimInput;
 use crate::des::reference::run_reference_input;
@@ -125,6 +129,8 @@ struct BenchCase {
     pools: Vec<SimPool>,
     router: RoutingPolicy,
     cfg: DesConfig,
+    /// KV-cache memory model attached to every input (None = open loop).
+    memory: Option<MemoryConfig>,
 }
 
 fn cases(n_requests: usize, seed: u64) -> Vec<BenchCase> {
@@ -152,6 +158,7 @@ fn cases(n_requests: usize, seed: u64) -> Vec<BenchCase> {
             ],
             router: RoutingPolicy::Length { b_short: 4096.0 },
             cfg: base.clone(),
+            memory: None,
         },
         BenchCase {
             name: "agent_heavy_tail",
@@ -160,6 +167,7 @@ fn cases(n_requests: usize, seed: u64) -> Vec<BenchCase> {
                                   ctx_budget: agent_ctx, batch_cap: None }],
             router: RoutingPolicy::Random { n_pools: 1 },
             cfg: base.clone(),
+            memory: None,
         },
         BenchCase {
             name: "lmsys_multipool_capped",
@@ -182,6 +190,7 @@ fn cases(n_requests: usize, seed: u64) -> Vec<BenchCase> {
                 class_probs: Some(vec![0.6, 0.3, 0.1]),
                 ..base.clone()
             },
+            memory: None,
         },
         BenchCase {
             name: "azure_diurnal_nhpp",
@@ -190,13 +199,50 @@ fn cases(n_requests: usize, seed: u64) -> Vec<BenchCase> {
             pools: vec![
                 SimPool { gpu: a100_d.clone(), n_gpus: 6,
                           ctx_budget: 4096.0, batch_cap: None },
-                SimPool { gpu: a100_d, n_gpus: 6, ctx_budget: 8192.0,
+                SimPool { gpu: a100_d.clone(), n_gpus: 6,
+                          ctx_budget: 8192.0, batch_cap: None },
+            ],
+            router: RoutingPolicy::Length { b_short: 4096.0 },
+            cfg: base.clone(),
+            memory: None,
+        },
+        BenchCase {
+            // The split fleet starved for KV (9,000 token-slots per
+            // A100): occupancy tracking, pressure scheduling, eviction,
+            // and re-prefill all land on the timed event loop.
+            name: "azure_two_pool_memory",
+            workload: WorkloadSpec::builtin(BuiltinTrace::Azure, 120.0),
+            pools: vec![
+                SimPool { gpu: a100_d.clone(), n_gpus: 4,
+                          ctx_budget: 4096.0, batch_cap: None },
+                SimPool { gpu: a100_d, n_gpus: 4, ctx_budget: 8192.0,
                           batch_cap: None },
             ],
             router: RoutingPolicy::Length { b_short: 4096.0 },
             cfg: base,
+            memory: Some(MemoryConfig {
+                spec: MemorySpec {
+                    hbm_gb: None,
+                    weights_gb: 71.0,
+                    bytes_per_token: 1e6,
+                },
+                policy: PolicyKind::EvictRecompute,
+                swap_out_ms: 0.0,
+                swap_in_ms: 0.0,
+            }),
         },
     ]
+}
+
+/// Attach a case's optional memory model to an input.
+fn attach_memory<'a>(
+    input: SimInput<'a>,
+    memory: &'a Option<MemoryConfig>,
+) -> SimInput<'a> {
+    match memory {
+        Some(m) => input.with_memory(m),
+        None => input,
+    }
 }
 
 /// Minimum wall time (ms) over `samples` runs of `f`.
@@ -234,8 +280,11 @@ pub fn run_bench(opts: &BenchOpts) -> Vec<BenchRow> {
         if opts.engine == BenchEngine::Both {
             // Untimed exact-mode cross-check: both engines, same stream,
             // must agree bit-for-bit before either timing is trusted.
-            let input = SimInput::stream(&case.pools, &case.router,
-                                         &case.cfg, &stream);
+            let input = attach_memory(
+                SimInput::stream(&case.pools, &case.router, &case.cfg,
+                                 &stream),
+                &case.memory,
+            );
             let mut prod = Simulator::run_input(&input).unwrap();
             let mut refr = run_reference_input(&input).unwrap();
             row.events = prod.n_events;
@@ -253,8 +302,10 @@ pub fn run_bench(opts: &BenchOpts) -> Vec<BenchRow> {
                 metrics: MetricsMode::Streaming,
                 ..case.cfg.clone()
             };
-            let input = SimInput::stream(&case.pools, &case.router, &cfg,
-                                         &stream);
+            let input = attach_memory(
+                SimInput::stream(&case.pools, &case.router, &cfg, &stream),
+                &case.memory,
+            );
             let (wall, events) = time_min(opts.samples, || {
                 let r = Simulator::run_input(&input).unwrap();
                 std::hint::black_box(r.n_events)
@@ -266,8 +317,11 @@ pub fn run_bench(opts: &BenchOpts) -> Vec<BenchRow> {
 
         if opts.engine.times_reference() {
             // Seed baseline: all-events heap + exact sample vectors.
-            let input = SimInput::stream(&case.pools, &case.router,
-                                         &case.cfg, &stream);
+            let input = attach_memory(
+                SimInput::stream(&case.pools, &case.router, &case.cfg,
+                                 &stream),
+                &case.memory,
+            );
             let (wall, events) = time_min(opts.samples, || {
                 let r = run_reference_input(&input).unwrap();
                 std::hint::black_box(r.n_events)
@@ -338,6 +392,7 @@ fn scale_case(seed: u64) -> BenchCase {
         ],
         router: RoutingPolicy::Length { b_short: 4096.0 },
         cfg: DesConfig { seed, ..Default::default() },
+        memory: None,
     }
 }
 
@@ -494,7 +549,7 @@ mod tests {
             ..Default::default()
         };
         let rows = run_bench(&opts);
-        assert_eq!(rows.len(), 4);
+        assert_eq!(rows.len(), 5);
         for r in &rows {
             assert_eq!(r.bit_identical, Some(true), "{}", r.name);
             assert!(r.events >= 2 * 1_500, "{}: {}", r.name, r.events);
@@ -503,6 +558,7 @@ mod tests {
             assert!(r.speedup_vs_reference.unwrap() > 0.0);
         }
         assert!(rows.iter().any(|r| r.name == "azure_diurnal_nhpp"));
+        assert!(rows.iter().any(|r| r.name == "azure_two_pool_memory"));
         // The capped multi-pool case processes its drain events too.
         let capped = rows.iter().find(|r| r.name == "lmsys_multipool_capped")
             .unwrap();

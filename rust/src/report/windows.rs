@@ -30,15 +30,18 @@ pub fn window_verdict(
 }
 
 /// One window's rendered row: `[t0, t0+w) | arrivals | unserved |
-/// dropped | P99 | attainment | SLO`. "dropped" counts closed-loop
-/// terminal failures — shed by admission control plus abandoned after
-/// the retry budget — among the window's arrivals (0 on open-loop runs).
+/// dropped | preempted | P99 | attainment | SLO`. "dropped" counts
+/// closed-loop terminal failures — shed by admission control plus
+/// abandoned after the retry budget — among the window's arrivals (0 on
+/// open-loop runs). "preempted" counts KV-cache eviction events in the
+/// window (0 without a memory model).
 fn window_row(w: &mut WindowedStats, i: usize, slo_ms: f64) -> Vec<String> {
     vec![
         window_label(w, i),
         w.n_arrived(i).to_string(),
         w.n_unserved(i).to_string(),
         (w.n_shed(i) + w.n_abandoned(i)).to_string(),
+        w.n_preempted(i).to_string(),
         millis(w.p99_ttft(i)),
         percent(w.attainment(i, slo_ms)),
         window_verdict(w, i, slo_ms),
@@ -51,8 +54,8 @@ fn window_row(w: &mut WindowedStats, i: usize, slo_ms: f64) -> Vec<String> {
 pub fn windowed_table(r: &mut DesResult, slo_ms: f64) -> Option<Table> {
     let w = r.windows.as_mut()?;
     let mut t = Table::new(&[
-        "window", "arrivals", "unserved", "dropped", "P99 TTFT",
-        "attainment", "SLO",
+        "window", "arrivals", "unserved", "dropped", "preempted",
+        "P99 TTFT", "attainment", "SLO",
     ])
     .with_title(format!(
         "Windowed SLO evaluation ({} ms windows, SLO {} ms)",

@@ -1,0 +1,322 @@
+//! The `kv_stability` scenario (report id 13): when is a fleet that
+//! passes its compute SLO still unstable, because the binding resource
+//! is KV-cache memory?
+//!
+//! The M/G/c analytic model (and the memory-less DES it is verified
+//! against) prices compute only: a request holds a batch slot for its
+//! service time, and capacity planning reduces to slots and iteration
+//! latency. But on heavy-tailed context workloads the scarcer resource
+//! is KV-cache HBM — every resident request pins its prompt tokens and
+//! one token-slot per generated token until it completes ([`crate::
+//! des::memory`]). The scenario sizes the smallest compute-feasible
+//! fleet on the LMSYS trace, then replays the same fleet under three
+//! memory regimes:
+//!
+//! * **A — stable**: a loose memory model (capacity far above the
+//!   working set). Zero preemptions; the run is the compute baseline
+//!   and every window passes — memory exists but never binds.
+//! * **B — preemption thrash**: a tight model with `evict-recompute`.
+//!   Optimistic admission overcommits, occupancy crosses capacity,
+//!   victims lose their KV state and re-prefill from scratch — wasted
+//!   work that re-inflates occupancy, the memory analogue of a retry
+//!   storm ([`crate::scenarios::retry_storm`]).
+//! * **C — admission-stable**: the same tight model with the blocking
+//!   `none` policy: admission reserves peak occupancy up front, so the
+//!   pool never overcommits and never preempts. Latency moves into the
+//!   queue, where it is visible to sizing, instead of into eviction
+//!   churn.
+//!
+//! The punchline is the divergence: [`EvalEngine::size_for_memory`]
+//! re-runs the sizing walk with the memory model attached and lands on
+//! a fleet at least as large as the compute answer — the gap is the
+//! capacity the analytic model cannot see.
+
+use crate::des::engine::SimPool;
+use crate::des::memory::{MemoryConfig, MemorySpec, PolicyKind};
+use crate::des::metrics::DesResult;
+use crate::optimizer::engine::EvalEngine;
+use crate::router::RoutingPolicy;
+use crate::scenarios::common::*;
+use crate::scenarios::{Scenario, ScenarioSpec, Topology};
+use crate::util::table::Table;
+use crate::workload::spec::{BuiltinTrace, WorkloadSpec};
+
+/// Arrival rate (req/s) on the truncated LMSYS trace.
+pub const LAMBDA_RPS: f64 = 60.0;
+pub const SLO_MS: f64 = 500.0;
+pub const WINDOW_MS: f64 = 5_000.0;
+/// Token cap on the LMSYS CDF: keeps the per-request KV footprint
+/// within one A100's tight-regime capacity (capacity must cover the
+/// largest admissible request; see [`tight_memory`]).
+pub const MAX_CTX: f64 = 8_192.0;
+/// Floor on the request count: enough horizon for several SLO windows
+/// even under `--fast`.
+pub const MIN_REQUESTS: usize = 3_000;
+
+/// LMSYS trace truncated to [`MAX_CTX`] tokens at [`LAMBDA_RPS`].
+pub fn workload() -> WorkloadSpec {
+    WorkloadSpec::builtin(BuiltinTrace::Lmsys, LAMBDA_RPS)
+        .truncated(MAX_CTX)
+        .expect("lmsys CDF truncates at 8192 tokens")
+}
+
+/// Regime A: memory modeled but never binding — ~7M token-slots per
+/// GPU, three orders of magnitude above the working set.
+pub fn loose_memory() -> MemoryConfig {
+    MemoryConfig {
+        spec: MemorySpec {
+            hbm_gb: None,
+            weights_gb: 10.0,
+            bytes_per_token: 1e4,
+        },
+        policy: PolicyKind::EvictRecompute,
+        swap_out_ms: 0.0,
+        swap_in_ms: 0.0,
+    }
+}
+
+/// Regimes B and C: 10 GB of KV HBM at 1 MB per token — 10,000
+/// token-slots per A100, barely above the [`MAX_CTX`] footprint of the
+/// largest admissible request, so concurrent decodes fight for cache.
+pub fn tight_memory(policy: PolicyKind) -> MemoryConfig {
+    MemoryConfig {
+        spec: MemorySpec {
+            hbm_gb: None,
+            weights_gb: 70.0,
+            bytes_per_token: 1e6,
+        },
+        policy,
+        swap_out_ms: 2.0,
+        swap_in_ms: 4.0,
+    }
+}
+
+/// The three regime runs on the minimal compute-feasible fleet, plus
+/// the memory-aware sizing answer; None if no fleet within
+/// `opts.max_gpus` passes every window compute-only.
+pub struct KvRuns {
+    /// Smallest fleet passing every window with no memory model.
+    pub n_compute: u32,
+    /// Smallest fleet passing every window with [`tight_memory`]
+    /// attached (None if not feasible within `max_gpus`).
+    pub n_mem: Option<u32>,
+    /// Regime A: loose memory on the compute-sized fleet.
+    pub stable: DesResult,
+    /// Regime B: tight memory + evict-recompute on the same fleet.
+    pub thrash: DesResult,
+    /// Regime C: tight memory + blocking admission on the same fleet.
+    pub blocked: DesResult,
+}
+
+/// Size the smallest compute-feasible fleet, replay the three memory
+/// regimes on exactly that fleet, then re-size memory-aware.
+pub fn run_regimes(
+    engine: &EvalEngine,
+    opts: &ScenarioOpts,
+) -> Option<KvRuns> {
+    let w = workload();
+    let mut cfg = opts.des();
+    cfg.n_requests = opts.n_requests.max(MIN_REQUESTS);
+    if cfg.window_ms.is_none() {
+        cfg.window_ms = Some(WINDOW_MS);
+    }
+    let gpu = engine.catalog.get("A100").unwrap().clone();
+    let (n_compute, _) =
+        engine.size_to_peak(&w, &gpu, SLO_MS, opts.max_gpus, &cfg)?;
+    let pools = [SimPool {
+        gpu: gpu.clone(),
+        n_gpus: n_compute as usize,
+        ctx_budget: w.cdf.max_len(),
+        batch_cap: None,
+    }];
+    let router = RoutingPolicy::Random { n_pools: 1 };
+    let loose = loose_memory();
+    let evict = tight_memory(PolicyKind::EvictRecompute);
+    let block = tight_memory(PolicyKind::None);
+    let stable = engine
+        .simulate_with(&w, &pools, &router, &cfg, None, None, Some(&loose));
+    let thrash = engine
+        .simulate_with(&w, &pools, &router, &cfg, None, None, Some(&evict));
+    let blocked = engine
+        .simulate_with(&w, &pools, &router, &cfg, None, None, Some(&block));
+    let n_mem = engine
+        .size_for_memory(&w, &gpu, SLO_MS, opts.max_gpus, &cfg, &evict)
+        .map(|(n, _)| n);
+    Some(KvRuns { n_compute, n_mem, stable, thrash, blocked })
+}
+
+fn failed_windows(r: &mut DesResult, slo_ms: f64) -> usize {
+    let w = r.windows.as_mut().expect("windowed run");
+    (0..w.n_windows()).filter(|&i| !w.meets_slo(i, slo_ms)).count()
+}
+
+/// Registry entry for the KV-cache memory-stability scenario.
+pub struct KvStability;
+
+impl Scenario for KvStability {
+    fn id(&self) -> &'static str {
+        "kv_stability"
+    }
+
+    fn name(&self) -> &'static str {
+        "kv-stability"
+    }
+
+    fn title(&self) -> &'static str {
+        "KV-cache stability: admission blocking vs preemption thrash"
+    }
+
+    fn spec(&self) -> ScenarioSpec {
+        ScenarioSpec {
+            workloads: vec![("lmsys", LAMBDA_RPS)],
+            gpus: vec!["A100"],
+            thresholds: vec![],
+            lambda_sweep: vec![],
+            slo_ms: SLO_MS,
+            router: "Random",
+            topology: Topology::SinglePool,
+        }
+    }
+
+    fn run(&self, engine: &EvalEngine, opts: &ScenarioOpts) -> PuzzleReport {
+        let Some(mut runs) = run_regimes(engine, opts) else {
+            return PuzzleReport {
+                id: 13,
+                title: self.title().into(),
+                tables: vec![],
+                insight: format!(
+                    "No A100 fleet within max_gpus = {} passes every \
+                     window at {LAMBDA_RPS} req/s; raise max_gpus to \
+                     stage the regimes.",
+                    opts.max_gpus
+                ),
+            };
+        };
+        let mut table = Table::new(&[
+            "regime", "served", "preempted", "stall ms", "kv peak",
+            "kv mean", "p99 ttft ms", "windows failed",
+        ])
+        .with_title(format!(
+            "KV-cache regimes on {} A100s (lmsys@{LAMBDA_RPS:.0}rps <= \
+             {MAX_CTX:.0} tokens, SLO {SLO_MS:.0} ms, {WINDOW_MS:.0} ms \
+             windows)",
+            runs.n_compute,
+        ));
+        for (label, r) in [
+            ("A: loose memory (stable)", &mut runs.stable),
+            ("B: tight + evict-recompute", &mut runs.thrash),
+            ("C: tight + admission block", &mut runs.blocked),
+        ] {
+            let failed = failed_windows(r, SLO_MS);
+            table.row(&[
+                label.to_string(),
+                r.overall.count.to_string(),
+                r.n_preempted.to_string(),
+                format!("{:.0}", r.preempt_stall_ms),
+                format!("{:.3}", r.kv_peak_util),
+                format!("{:.3}", r.kv_mean_util),
+                format!("{:.0}", r.overall.p99_ttft()),
+                failed.to_string(),
+            ]);
+        }
+        let sizing = match runs.n_mem {
+            Some(nm) => format!(
+                "re-sizing with the memory model attached lands on \
+                 {nm} GPUs vs {} compute-only — the gap is the \
+                 capacity M/G/c cannot see",
+                runs.n_compute
+            ),
+            None => format!(
+                "no fleet within max_gpus passes every window with the \
+                 tight memory model — the compute answer ({} GPUs) was \
+                 never the real capacity",
+                runs.n_compute
+            ),
+        };
+        PuzzleReport {
+            id: 13,
+            title: self.title().into(),
+            tables: vec![table],
+            insight: format!(
+                "The same compute-sized fleet, three memory regimes: \
+                 loose memory reproduces the compute baseline (0 \
+                 preemptions); tight memory with eviction preempts {} \
+                 times and burns {:.0} ms of progress re-prefilling — \
+                 occupancy-driven wasted work, the memory analogue of \
+                 a retry storm; blocking admission holds occupancy at \
+                 or under capacity (peak {:.3}) with zero preemptions, \
+                 trading churn for visible queueing. And {sizing}.",
+                runs.thrash.n_preempted,
+                runs.thrash.preempt_stall_ms,
+                runs.blocked.kv_peak_util,
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenarios::default_engine;
+
+    #[test]
+    fn kv_stability_shows_three_regimes() {
+        let opts = ScenarioOpts::fast();
+        let engine = default_engine(&opts);
+        let mut runs = run_regimes(&engine, &opts).expect("feasible fleet");
+        let n_req = opts.n_requests.max(MIN_REQUESTS);
+
+        // Regime A: memory modeled, never binding. The ledger runs (a
+        // nonzero peak) but nothing is preempted and every window
+        // passes, exactly like the compute-only baseline.
+        assert_eq!(runs.stable.n_preempted, 0);
+        assert_eq!(runs.stable.preempt_stall_ms, 0.0);
+        assert!(runs.stable.meets_slo_in_every_window(SLO_MS));
+        assert!(runs.stable.kv_peak_util > 0.0);
+        assert!(runs.stable.kv_peak_util < 0.5,
+                "loose pool must not bind, got {}",
+                runs.stable.kv_peak_util);
+        assert_eq!(runs.stable.overall.count + runs.stable.n_unserved,
+                   n_req, "conservation (A)");
+
+        // Regime B: tight memory + eviction thrashes — victims lose
+        // their KV state, re-prefill, and the tail inflates.
+        assert!(runs.thrash.n_preempted > 0, "tight memory must preempt");
+        assert!(runs.thrash.preempt_stall_ms > 0.0);
+        assert!(runs.thrash.kv_peak_util > 0.5,
+                "eviction fires only near capacity, got {}",
+                runs.thrash.kv_peak_util);
+        assert!(runs.thrash.overall.p99_ttft()
+                    > runs.stable.overall.p99_ttft(),
+                "preemption churn must inflate the served tail");
+        assert_eq!(runs.thrash.overall.count + runs.thrash.n_unserved,
+                   n_req, "conservation (B)");
+
+        // Regime C: blocking admission never overcommits — zero
+        // preemptions and occupancy capped by the reservation ledger.
+        assert_eq!(runs.blocked.n_preempted, 0);
+        assert_eq!(runs.blocked.preempt_stall_ms, 0.0);
+        assert!(runs.blocked.kv_peak_util <= 1.0 + 1e-12,
+                "reservations must cap occupancy, got {}",
+                runs.blocked.kv_peak_util);
+        assert_eq!(runs.blocked.overall.count + runs.blocked.n_unserved,
+                   n_req, "conservation (C)");
+
+        // The divergence: memory-aware sizing never under-sizes the
+        // compute answer.
+        if let Some(nm) = runs.n_mem {
+            assert!(nm >= runs.n_compute,
+                    "memory-aware {nm} < compute {}", runs.n_compute);
+        }
+
+        // The report renders one row per regime.
+        let report = KvStability.run(&engine, &opts);
+        assert_eq!(report.id, 13);
+        assert_eq!(report.tables.len(), 1);
+        let body = report.tables[0].render();
+        assert!(body.contains("A: loose memory"), "{body}");
+        assert!(body.contains("B: tight + evict-recompute"), "{body}");
+        assert!(body.contains("C: tight + admission block"), "{body}");
+        assert!(report.insight.contains("retry storm"));
+    }
+}

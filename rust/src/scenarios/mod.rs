@@ -18,6 +18,7 @@
 
 pub mod common;
 pub mod diurnal;
+pub mod kv_stability;
 pub mod multi_model;
 pub mod n_plus_k;
 pub mod puzzle1_split;
@@ -126,6 +127,7 @@ pub fn registry() -> Vec<Box<dyn Scenario>> {
         Box::new(diurnal::Diurnal),
         Box::new(n_plus_k::NPlusK),
         Box::new(retry_storm::RetryStorm),
+        Box::new(kv_stability::KvStability),
     ]
 }
 
@@ -169,15 +171,15 @@ mod tests {
     #[test]
     fn registry_covers_all_scenarios_with_unique_keys() {
         let reg = registry();
-        assert_eq!(reg.len(), 12);
+        assert_eq!(reg.len(), 13);
         let mut ids: Vec<&str> = reg.iter().map(|s| s.id()).collect();
         let mut names: Vec<&str> = reg.iter().map(|s| s.name()).collect();
         ids.sort();
         ids.dedup();
         names.sort();
         names.dedup();
-        assert_eq!(ids.len(), 12, "duplicate scenario ids");
-        assert_eq!(names.len(), 12, "duplicate scenario names");
+        assert_eq!(ids.len(), 13, "duplicate scenario ids");
+        assert_eq!(names.len(), 13, "duplicate scenario names");
         for n in 1..=8 {
             assert!(find(&format!("puzzle{n}")).is_some());
         }
@@ -187,6 +189,8 @@ mod tests {
         assert_eq!(find("n-plus-k").unwrap().id(), "n_plus_k");
         assert!(find("retry_storm").is_some());
         assert_eq!(find("retry-storm").unwrap().id(), "retry_storm");
+        assert!(find("kv_stability").is_some());
+        assert_eq!(find("kv-stability").unwrap().id(), "kv_stability");
     }
 
     #[test]

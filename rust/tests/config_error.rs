@@ -96,6 +96,26 @@ fn every_variant_renders_its_contract_text() {
             .with_retries(&empty);
         input.validate().expect_err("empty retry config is rejected")
     };
+    let invalid_memory = {
+        let pools = a100_pools(2);
+        let router = two_pool_router();
+        let config = DesConfig::default();
+        let bad = MemoryConfig {
+            spec: MemorySpec {
+                hbm_gb: None,
+                weights_gb: 0.0,
+                bytes_per_token: 0.0,
+            },
+            policy: PolicyKind::EvictRecompute,
+            swap_out_ms: 0.0,
+            swap_in_ms: 0.0,
+        };
+        let input = SimInput::stream(&pools, &router, &config, &[])
+            .with_memory(&bad);
+        input
+            .validate()
+            .expect_err("bytes_per_token = 0 must be rejected")
+    };
     let invalid_faults = {
         let pools = a100_pools(1);
         let router = RoutingPolicy::Random { n_pools: 1 };
@@ -161,6 +181,12 @@ fn every_variant_renders_its_contract_text() {
             "invalid retry config: at least one of [retry] or \
              [admission] is required",
         ),
+        (
+            "InvalidMemory",
+            invalid_memory,
+            "invalid memory config: bytes_per_token 0 must be finite \
+             and > 0",
+        ),
     ];
     for (variant, err, want) in &table {
         let text = err.to_string();
@@ -194,6 +220,7 @@ fn every_variant_renders_its_contract_text() {
     assert!(matches!(table[5].1, ConfigError::InvalidCapWindow(_)));
     assert!(matches!(table[6].1, ConfigError::InvalidFaults(_)));
     assert!(matches!(table[7].1, ConfigError::InvalidRetries(_)));
+    assert!(matches!(table[8].1, ConfigError::InvalidMemory(_)));
 }
 
 /// The streaming entry points reject warmup through `SimInput`

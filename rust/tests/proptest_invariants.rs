@@ -4,6 +4,8 @@
 //! (200+ cases per property) with failing inputs printed for replay.
 
 use fleet_sim::des::engine::{DesConfig, SimPool, Simulator};
+use fleet_sim::des::input::SimInput;
+use fleet_sim::des::memory::{MemoryConfig, MemorySpec, PolicyKind};
 use fleet_sim::des::retry::{backoff_ms, RetrySpec};
 use fleet_sim::gpu::catalog::GpuCatalog;
 use fleet_sim::gpu::profile::GpuProfile;
@@ -261,6 +263,149 @@ fn prop_backoff_is_pure_and_jitter_bounded() {
              {nominal} (attempt {attempt})"
         );
     }
+}
+
+/// Property: with KV memory attached, resident occupancy never exceeds
+/// pool capacity — the recorded per-pool peak utilization stays <= 1
+/// under every preemption policy (blocking reserves peak footprints;
+/// the evict policies preempt exactly at the projected crossing) — and
+/// accounting conserves requests, for arbitrary workloads, layouts,
+/// and capacities.
+#[test]
+fn prop_kv_occupancy_never_exceeds_capacity() {
+    let mut rng = Pcg64::new(7007, 0);
+    for case in 0..20 {
+        let cdf = random_cdf(&mut rng);
+        let max_len = cdf.max_len();
+        let w = WorkloadSpec::new(
+            format!("case{case}"),
+            cdf,
+            0.3 + rng.uniform() * 0.6,
+            5.0 + rng.uniform() * 120.0,
+        );
+        let b = max_len * (0.2 + rng.uniform() * 0.6);
+        let pools = vec![
+            SimPool {
+                gpu: random_gpu(&mut rng),
+                n_gpus: 1 + rng.below(4) as usize,
+                ctx_budget: b,
+                batch_cap: None,
+            },
+            SimPool {
+                gpu: random_gpu(&mut rng),
+                n_gpus: 1 + rng.below(4) as usize,
+                ctx_budget: max_len,
+                batch_cap: None,
+            },
+        ];
+        // Capacity between one and a handful of max-context requests
+        // per GPU: tight enough to come under pressure, always valid
+        // (the +2 margin keeps floor(capacity) above every ctx budget).
+        let cap_tokens = (max_len + 2.0)
+            * (1.0 + rng.below(4) as f64)
+            + rng.uniform() * max_len;
+        let policy = match rng.below(3) {
+            0 => PolicyKind::None,
+            1 => PolicyKind::EvictRecompute,
+            _ => PolicyKind::EvictSwap,
+        };
+        let mem = MemoryConfig {
+            spec: MemorySpec {
+                hbm_gb: Some(80.0),
+                weights_gb: 0.0,
+                bytes_per_token: 80.0e9 / cap_tokens,
+            },
+            policy,
+            swap_out_ms: rng.uniform() * 5.0,
+            swap_in_ms: rng.uniform() * 5.0,
+        };
+        let n = 1_200;
+        let cfg = DesConfig {
+            n_requests: n,
+            seed: 9_100 + case,
+            ..Default::default()
+        };
+        let router = RoutingPolicy::Length { b_short: b };
+        let sampled = w.sample_requests(n, cfg.seed);
+        let input = SimInput::stream(&pools, &router, &cfg, &sampled)
+            .with_memory(&mem);
+        let r = Simulator::run_input(&input).unwrap();
+        assert_eq!(
+            r.overall.count + r.n_unserved,
+            n,
+            "case {case} ({policy:?}): conservation"
+        );
+        for (i, p) in r.per_pool.iter().enumerate() {
+            assert!(
+                p.kv_peak_util <= 1.0 + 1e-6,
+                "case {case} ({policy:?}): pool {i} KV peak {} > capacity",
+                p.kv_peak_util
+            );
+            assert!(
+                (0.0..=p.kv_peak_util + 1e-9).contains(&p.kv_mean_util),
+                "case {case} ({policy:?}): pool {i} mean {} vs peak {}",
+                p.kv_mean_util,
+                p.kv_peak_util
+            );
+        }
+        if policy == PolicyKind::None {
+            assert_eq!(
+                r.n_preempted, 0,
+                "case {case}: the blocking policy must never preempt"
+            );
+        }
+    }
+}
+
+/// Property: evict-recompute victims always terminate. LIFO
+/// newest-victim selection means an evicted request can only be
+/// displaced by requests admitted after its own re-admission, so every
+/// request either completes or is still waiting when the stream ends —
+/// none is lost to an eviction loop — across a sweep of loads.
+#[test]
+fn prop_evict_recompute_victims_terminate() {
+    let mem = MemoryConfig {
+        spec: MemorySpec {
+            hbm_gb: None,
+            weights_gb: 71.0,
+            bytes_per_token: 1e6,
+        },
+        policy: PolicyKind::EvictRecompute,
+        swap_out_ms: 0.0,
+        swap_in_ms: 0.0,
+    };
+    let gpu = GpuCatalog::standard().get("A100").unwrap().clone();
+    let pools = vec![
+        SimPool { gpu: gpu.clone(), n_gpus: 2, ctx_budget: 4096.0,
+                  batch_cap: None },
+        SimPool { gpu, n_gpus: 2, ctx_budget: 8192.0, batch_cap: None },
+    ];
+    let router = RoutingPolicy::Length { b_short: 4096.0 };
+    let mut total_preempted = 0usize;
+    for case in 0..12 {
+        let lambda = 20.0 + 15.0 * case as f64;
+        let w = WorkloadSpec::builtin(
+            fleet_sim::workload::spec::BuiltinTrace::Azure,
+            lambda,
+        );
+        let n = 1_500;
+        let cfg = DesConfig {
+            n_requests: n,
+            seed: 9_500 + case,
+            ..Default::default()
+        };
+        let sampled = w.sample_requests(n, cfg.seed);
+        let input = SimInput::stream(&pools, &router, &cfg, &sampled)
+            .with_memory(&mem);
+        let r = Simulator::run_input(&input).unwrap();
+        assert_eq!(
+            r.overall.count + r.n_unserved,
+            n,
+            "case {case} (lambda {lambda}): a victim vanished"
+        );
+        total_preempted += r.n_preempted;
+    }
+    assert!(total_preempted > 0, "the sweep never triggered eviction");
 }
 
 /// Property: batch caps only ever reduce DES slot capacity, and capped

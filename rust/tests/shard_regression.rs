@@ -24,7 +24,9 @@
 use fleet_sim::des::engine::{CapWindow, DesConfig, SimPool, Simulator};
 use fleet_sim::des::faults::{FaultScript, GpuFailure, Straggler};
 use fleet_sim::des::input::SimInput;
+use fleet_sim::des::memory::{MemoryConfig, MemorySpec, PolicyKind};
 use fleet_sim::des::metrics::{DesResult, MetricsMode};
+use fleet_sim::des::reference::run_reference_input;
 use fleet_sim::des::retry::{AdmissionSpec, RetryConfig, RetrySpec};
 use fleet_sim::des::shard::{run_sharded, run_sharded_input, run_streamed,
                             run_streamed_input};
@@ -53,11 +55,15 @@ struct Summary {
     n_attempts: usize,
     n_abandoned: usize,
     n_shed: usize,
+    n_preempted: usize,
+    preempt_stall_ms: f64,
+    kv_peak_util: f64,
+    kv_mean_util: f64,
     max_unserved_wait_ms: f64,
     horizon_ms: f64,
-    /// Per-window (start, arrived, served, shed, abandoned, p99 TTFT)
-    /// when windowed.
-    windows: Option<Vec<(f64, usize, usize, usize, usize, f64)>>,
+    /// Per-window (start, arrived, served, shed, abandoned, preempted,
+    /// p99 TTFT) when windowed.
+    windows: Option<Vec<(f64, usize, usize, usize, usize, usize, f64)>>,
 }
 
 fn summarize(mut r: DesResult) -> Summary {
@@ -66,7 +72,7 @@ fn summarize(mut r: DesResult) -> Summary {
             .map(|i| {
                 let p99 = w.p99_ttft(i);
                 (w.start_ms(i), w.n_arrived(i), w.n_served(i),
-                 w.n_shed(i), w.n_abandoned(i),
+                 w.n_shed(i), w.n_abandoned(i), w.n_preempted(i),
                  if p99.is_nan() { -1.0 } else { p99 })
             })
             .collect()
@@ -89,6 +95,10 @@ fn summarize(mut r: DesResult) -> Summary {
         n_attempts: r.n_attempts,
         n_abandoned: r.n_abandoned,
         n_shed: r.n_shed,
+        n_preempted: r.n_preempted,
+        preempt_stall_ms: r.preempt_stall_ms,
+        kv_peak_util: r.kv_peak_util,
+        kv_mean_util: r.kv_mean_util,
         max_unserved_wait_ms: r.max_unserved_wait_ms,
         horizon_ms: r.horizon_ms,
         windows,
@@ -494,6 +504,124 @@ fn closed_loop_retries_are_bit_identical_across_shards_and_chunks() {
         cfg.n_requests,
         "closed-loop conservation"
     );
+}
+
+/// Assert a memory-bounded run is bit-identical across the serial
+/// engine, the all-events reference heap, the streamed executor, and
+/// every shard count — from both arrival sources, in both metrics
+/// modes, and at both an aligned and a block-straddling chunk size.
+/// The KV counters (preemptions, stall time, peak/mean utilization,
+/// per-window preempted series) are part of the compared summary.
+fn assert_memory_sharded_matches(
+    w: &WorkloadSpec,
+    pools: Vec<SimPool>,
+    router: RoutingPolicy,
+    cfg: DesConfig,
+    memory: &MemoryConfig,
+    label: &str,
+) {
+    let sampled = w.sample_requests(cfg.n_requests, cfg.seed);
+    for mode in [MetricsMode::Exact, MetricsMode::Streaming] {
+        let cfg = DesConfig { metrics: mode, ..cfg.clone() };
+        let stream_in = SimInput::stream(&pools, &router, &cfg, &sampled)
+            .with_memory(memory);
+        let gen_in = SimInput::generated(&pools, &router, &cfg, w)
+            .with_memory(memory);
+        let serial = summarize(Simulator::run_input(&stream_in).unwrap());
+        let reference =
+            summarize(run_reference_input(&stream_in).unwrap());
+        assert_eq!(
+            reference, serial,
+            "{label} [{mode:?}]: reference heap diverged under memory"
+        );
+        for chunk in [1_024usize, 997] {
+            let (r, _) = run_streamed_input(&gen_in, chunk).unwrap();
+            assert_eq!(
+                summarize(r), serial,
+                "{label} [{mode:?} chunk={chunk}]: streamed \
+                 memory-bounded run diverged from serial"
+            );
+            for shards in shard_counts() {
+                let (r, _) =
+                    run_sharded_input(&gen_in, shards, chunk).unwrap();
+                assert_eq!(
+                    summarize(r), serial,
+                    "{label} [{mode:?} shards={shards} chunk={chunk}]: \
+                     memory-bounded sharded run diverged (generator \
+                     source)"
+                );
+                let (r, _) =
+                    run_sharded_input(&stream_in, shards, chunk).unwrap();
+                assert_eq!(
+                    summarize(r), serial,
+                    "{label} [{mode:?} shards={shards} chunk={chunk}]: \
+                     memory-bounded sharded run diverged (stream source)"
+                );
+            }
+        }
+    }
+}
+
+fn tight_memory(policy: PolicyKind) -> MemoryConfig {
+    // 9,000 token-slots per A100 (80 GB HBM, 71 GB weights, 1 MB per
+    // token): barely above one max-context request, so admission
+    // pressure and preemption both fire at moderate load.
+    MemoryConfig {
+        spec: MemorySpec {
+            hbm_gb: None,
+            weights_gb: 71.0,
+            bytes_per_token: 1e6,
+        },
+        policy,
+        swap_out_ms: 2.0,
+        swap_in_ms: 4.0,
+    }
+}
+
+#[test]
+fn memory_bounded_runs_are_bit_identical_across_shards_and_chunks() {
+    // A KV-starved fleet under every preemption policy: admission
+    // blocking, evict-recompute requeues, and evict-swap stalls all
+    // fire, and every executor must agree on all of it bit for bit —
+    // including the new preemption/utilization counters.
+    let w = WorkloadSpec::builtin(BuiltinTrace::Azure, 60.0);
+    let pools = vec![
+        SimPool { gpu: gpu("A100"), n_gpus: 2, ctx_budget: 4096.0,
+                  batch_cap: None },
+        SimPool { gpu: gpu("A100"), n_gpus: 2, ctx_budget: 8192.0,
+                  batch_cap: None },
+    ];
+    let router = RoutingPolicy::Length { b_short: 4096.0 };
+    let cfg = DesConfig { n_requests: 3_000, seed: 37,
+                          window_ms: Some(5_000.0), ..Default::default() };
+    for policy in [
+        PolicyKind::None,
+        PolicyKind::EvictRecompute,
+        PolicyKind::EvictSwap,
+    ] {
+        assert_memory_sharded_matches(
+            &w, pools.clone(), router.clone(), cfg.clone(),
+            &tight_memory(policy), &format!("kv-bounded {policy:?}"),
+        );
+    }
+    // The memory model bites (it is not a no-op against the open
+    // loop), preemptions really fire, and accounting conserves: every
+    // request either completes or is left in flight at stream end.
+    let sampled = w.sample_requests(cfg.n_requests, cfg.seed);
+    let open_in = SimInput::stream(&pools, &router, &cfg, &sampled);
+    let open = summarize(Simulator::run_input(&open_in).unwrap());
+    let mem_in = SimInput::stream(&pools, &router, &cfg, &sampled)
+        .with_memory(&tight_memory(PolicyKind::EvictRecompute));
+    let r = Simulator::run_input(&mem_in).unwrap();
+    assert!(r.n_preempted > 0, "tight memory never preempted");
+    assert!(r.preempt_stall_ms > 0.0, "preemptions cost no time");
+    assert!(r.kv_peak_util > 0.5, "pool never came under KV pressure");
+    assert_eq!(
+        r.overall.count + r.n_unserved,
+        cfg.n_requests,
+        "memory-bounded conservation"
+    );
+    assert_ne!(summarize(r), open, "memory model was a no-op");
 }
 
 #[test]

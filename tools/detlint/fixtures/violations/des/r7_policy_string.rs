@@ -1,0 +1,13 @@
+//! Seeded R7 violation: a public DES function that takes the
+//! preemption policy as a string instead of the typed PolicyKind,
+//! pushing parsing (and divergence risk) below the config boundary.
+
+use crate::des::engine::DesPool;
+
+pub fn apply_preemption(pools: &mut [DesPool], policy: &str) {
+    unimplemented!("parse policies once at the config boundary")
+}
+
+pub(crate) fn resolve_policy_name(policy: String) -> u8 {
+    unimplemented!("dispatch through the PreemptionPolicy trait")
+}

@@ -8,8 +8,9 @@
 //! wall-clock/thread/env input to sim state (R2), RNG stream ids from
 //! a single named registry (R3), acknowledged float-accumulation
 //! order in merge paths (R4), `SimInput`-only public DES entry
-//! points (R5), and no real sleeps or scheduler yields where only
-//! simulated time may pass (R6).
+//! points (R5), no real sleeps or scheduler yields where only
+//! simulated time may pass (R6), and no string-typed preemption
+//! policies past the config boundary (R7).
 //!
 //! Run it over a tree:
 //!

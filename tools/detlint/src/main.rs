@@ -9,7 +9,7 @@ const USAGE: &str = "\
 usage: detlint [--rules] <source-root>...
 
 Lints every .rs file under each source root (e.g. rust/src) against
-the repo determinism/soundness rules R1-R6. Exits nonzero iff any
+the repo determinism/soundness rules R1-R7. Exits nonzero iff any
 finding is reported. --rules prints the rule table and exits.";
 
 fn print_rules() {

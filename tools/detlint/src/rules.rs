@@ -1,4 +1,4 @@
-//! The declarative rule table (R1–R6) and each rule's matcher.
+//! The declarative rule table (R1–R7) and each rule's matcher.
 //!
 //! Every rule is scoped to a set of directory prefixes (relative to
 //! the scanned root, e.g. `des/`), runs over the blanked code view
@@ -20,7 +20,7 @@ pub struct Finding {
     pub file: String,
     /// 1-based line.
     pub line: usize,
-    /// Rule id (`R1`..`R6`, or `P0` for pragma problems).
+    /// Rule id (`R1`..`R7`, or `P0` for pragma problems).
     pub rule: &'static str,
     /// Short rule name, e.g. `hash-iter`.
     pub name: &'static str,
@@ -43,6 +43,7 @@ pub enum RuleKind {
     RngStreamLiteral,
     FloatMergeAccumulation,
     EntryPointSignature,
+    MemPolicyString,
 }
 
 /// One row of the rule table.
@@ -58,7 +59,7 @@ pub struct Rule {
 /// The determinism/soundness rule table. CONTRIBUTING.md documents
 /// each rule with its full rationale; the one-liners here feed
 /// `detlint --rules`.
-pub static RULES: [Rule; 6] = [
+pub static RULES: [Rule; 7] = [
     Rule {
         id: "R1",
         name: "hash-iter",
@@ -133,6 +134,17 @@ pub static RULES: [Rule; 6] = [
                            code; restructure instead"),
         ]),
     },
+    Rule {
+        id: "R7",
+        name: "mem-policy-entry",
+        dirs: &["des/"],
+        rationale: "public DES functions must take preemption policies \
+                    as the typed PreemptionPolicy/PolicyKind values, \
+                    never as strings; string dispatch at call depth \
+                    invites per-engine divergence (parse once at the \
+                    config boundary)",
+        kind: RuleKind::MemPolicyString,
+    },
 ];
 
 fn is_ident(b: u8) -> bool {
@@ -189,6 +201,9 @@ pub fn apply_rules(rel: &str, scanned: &Scanned) -> Vec<Finding> {
             }
             RuleKind::EntryPointSignature => {
                 entry_points(rel, scanned, rule)
+            }
+            RuleKind::MemPolicyString => {
+                mem_policy_string(rel, scanned, rule)
             }
         };
         out.extend(found);
@@ -590,6 +605,81 @@ fn entry_points(
                 "`pub fn {name}` takes the legacy pools/router \
                  argument shape without SimInput; route through \
                  SimInput or mark the wrapper #[deprecated]"
+            ),
+        });
+    }
+    out
+}
+
+/// R7: a `pub fn` in `des/` must not take a preemption policy as a
+/// string (`policy: &str` / `policy: String`). Policies are parsed
+/// exactly once at the config boundary (`MemoryConfig::from_toml_str`)
+/// into `PolicyKind`, and every engine dispatches through the
+/// `PreemptionPolicy` trait; string dispatch below that boundary is
+/// how per-engine behavioural drift starts.
+fn mem_policy_string(
+    rel: &str,
+    scanned: &Scanned,
+    rule: &'static Rule,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let code = &scanned.code;
+    let bytes = code.as_bytes();
+    for off in token_offsets(code, "pub") {
+        let mut i = off + 3;
+        while i < bytes.len() && bytes[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        // Accept `pub fn` and `pub(crate) fn` alike.
+        if code[i..].starts_with('(') {
+            let Some(close) = code[i..].find(')') else { continue };
+            i += close + 1;
+            while i < bytes.len() && bytes[i].is_ascii_whitespace() {
+                i += 1;
+            }
+        }
+        if !code[i..].starts_with("fn") {
+            continue;
+        }
+        i += 2;
+        while i < bytes.len() && bytes[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        let name_start = i;
+        while i < bytes.len() && is_ident(bytes[i]) {
+            i += 1;
+        }
+        let name = &code[name_start..i];
+        if name.is_empty() {
+            continue;
+        }
+        let sig_end = bytes[i..]
+            .iter()
+            .position(|&b| b == b'{' || b == b';')
+            .map(|p| p + i)
+            .unwrap_or(bytes.len());
+        let sig: String = code[i..sig_end]
+            .chars()
+            .filter(|c| !c.is_whitespace())
+            .collect();
+        if !sig.contains("policy:&str") && !sig.contains("policy:String")
+        {
+            continue;
+        }
+        let line = scanned.line_of(off);
+        if scanned.allows(rule.id, line) {
+            continue;
+        }
+        out.push(Finding {
+            file: rel.to_string(),
+            line,
+            rule: rule.id,
+            name: rule.name,
+            msg: format!(
+                "`pub fn {name}` takes a preemption policy as a \
+                 string; parse it once at the config boundary and \
+                 pass PolicyKind / dispatch through the \
+                 PreemptionPolicy trait"
             ),
         });
     }

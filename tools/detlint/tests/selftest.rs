@@ -2,7 +2,7 @@
 //!
 //! Three properties gate CI:
 //!   1. the real simulator tree (`rust/src`) lints clean,
-//!   2. the seeded fixture tree trips every rule R1-R6 plus P0,
+//!   2. the seeded fixture tree trips every rule R1-R7 plus P0,
 //!   3. the clean fixture tree (every sanctioned escape hatch)
 //!      produces no findings.
 
@@ -42,7 +42,7 @@ fn violations_tree_trips_every_rule() {
         lint_tree(&fixture("violations")).expect("lint fixtures");
     let tripped: BTreeSet<&str> =
         findings.iter().map(|f| f.rule).collect();
-    for rule in ["R1", "R2", "R3", "R4", "R5", "R6", "P0"] {
+    for rule in ["R1", "R2", "R3", "R4", "R5", "R6", "R7", "P0"] {
         assert!(
             tripped.contains(rule),
             "fixture tree must trip {rule}, only saw {tripped:?}"
@@ -65,6 +65,7 @@ fn violations_are_attributed_to_the_seeded_files() {
     assert!(has("R4", "des/r4_float_merge.rs"));
     assert!(has("R5", "des/r5_entry_point.rs"));
     assert!(has("R6", "des/r6_sleep.rs"));
+    assert!(has("R7", "des/r7_policy_string.rs"));
     assert!(has("P0", "des/p0_bad_pragma.rs"));
     // The unjustified pragma must not suppress its rule.
     assert!(has("R1", "des/p0_bad_pragma.rs"));
